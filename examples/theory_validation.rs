@@ -1,0 +1,75 @@
+//! Theory validation: train the §4 analytical MoE and verify both
+//! theoretical results end to end:
+//!
+//! - **Lemma 4.1** — experts specialized on the frequent task-relevant
+//!   tokens end up with strictly larger MaxNNScore;
+//! - **Theorem 4.2** — placing the top-γ MaxNNScore experts on the
+//!   digital accelerator raises the tolerable programming-noise magnitude
+//!   by a factor that grows like (1−α)/α.
+//!
+//! ```bash
+//! cargo run --release --example theory_validation
+//! ```
+
+use anyhow::Result;
+use hetmoe::theory::{lemma41_experiment, theorem42_experiment, RelToken, TheoryConfig};
+use hetmoe::util::table::Table;
+
+fn main() -> Result<()> {
+    println!("=== Lemma 4.1: MaxNNScore separates frequent vs rare specialists ===");
+    let mut t = Table::new(
+        "per-α MaxNNScore of specialists (analytic MoE, k=8, l=4)",
+        &["α", "mean score (frequent)", "mean score (rare)", "Lemma 4.1 holds"],
+    );
+    for alpha in [0.0625, 0.125, 0.1875, 0.25] {
+        let cfg = TheoryConfig { alpha, seed: 1, ..Default::default() };
+        let r = lemma41_experiment(&cfg);
+        t.row(vec![
+            format!("{alpha}"),
+            format!("{:.3}", r.mean_freq),
+            format!("{:.3}", r.mean_rare),
+            format!("{}", r.holds),
+        ]);
+    }
+    t.print();
+
+    // show one specialization matrix for intuition
+    let cfg = TheoryConfig { alpha: 0.125, seed: 1, ..Default::default() };
+    let r = lemma41_experiment(&cfg);
+    println!("\nspecialization p_v^(s) @ α=0.125 (rows: v, cols: experts):");
+    for (vi, v) in RelToken::ALL.iter().enumerate() {
+        let row: Vec<String> = r.spec[vi].iter().map(|p| format!("{p:4.2}")).collect();
+        println!("  {v:?}: [{}]", row.join(" "));
+    }
+    println!(
+        "MaxNNScore per expert: [{}]",
+        r.scores.iter().map(|s| format!("{s:5.2}")).collect::<Vec<_>>().join(" ")
+    );
+
+    println!("\n=== Theorem 4.2: tolerable noise ratio grows like (1-α)/α ===");
+    let c_grid: Vec<f64> = (0..=24)
+        .map(|i| 0.01 * (3.0f64 / 0.01).powf(i as f64 / 24.0))
+        .collect();
+    let mut t = Table::new(
+        "max tolerable c (accuracy ≥ 0.95), analog vs heterogeneous (γ=0.5)",
+        &["α", "c_analog", "c_het", "measured ratio", "(1-α)/α"],
+    );
+    for alpha in [0.0625, 0.125, 0.25] {
+        let cfg = TheoryConfig { alpha, seed: 1, ..Default::default() };
+        let r = theorem42_experiment(&cfg, 0.5, &c_grid, 0.95, 4);
+        t.row(vec![
+            format!("{alpha}"),
+            format!("{:.3}", r.c_analog),
+            format!("{:.3}", r.c_het),
+            format!("{:.2}×", r.c_het / r.c_analog.max(1e-9)),
+            format!("{:.2}×", (1.0 - alpha) / alpha),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nThe measured ratio increases as α decreases — the Ω((1-α)/α) \
+         improvement of Theorem 4.2 (the bound is asymptotic; the trend, \
+         not the constant, is the claim)."
+    );
+    Ok(())
+}

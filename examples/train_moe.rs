@@ -1,0 +1,106 @@
+//! End-to-end driver: train a mini MoE transformer from scratch, from the
+//! Rust coordinator, through the AOT-compiled `train_step` HLO — then
+//! evaluate the result on the benchmark suite and deploy it
+//! heterogeneously. Proves all three layers compose:
+//!
+//!   L3 (this binary) drives batches + the SGD loop,
+//!   L2 (train_step.hlo.txt) computes fwd/bwd/update,
+//!   L1 (the Pallas AIMC kernel) serves the analog experts at eval time.
+//!
+//! The loss curve and final accuracies are recorded in EXPERIMENTS.md
+//! §End-to-end.
+//!
+//! ```bash
+//! cargo run --release --example train_moe -- [steps]
+//! ```
+
+use anyhow::Result;
+use hetmoe::aimc::program::NoiseModel;
+use hetmoe::config::Meta;
+use hetmoe::eval::data::load_tasks;
+use hetmoe::eval::Evaluator;
+use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
+use hetmoe::moe::score::SelectionMetric;
+use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
+use hetmoe::train::{load_corpus, TrainOptions, Trainer};
+use hetmoe::util::table::Table;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let artifacts = hetmoe::artifacts_dir();
+    let meta = Meta::load(&artifacts)?;
+    let cfg = meta.config("olmoe_mini")?.clone();
+    let paths = ArtifactPaths::new(&artifacts, &cfg.name);
+
+    let mut rt = Runtime::cpu()?;
+    // start from the *untrained* init checkpoint
+    let mut store = ParamStore::load(&paths.manifest(), &paths.init_params_bin())?;
+    let corpus = load_corpus(&artifacts, cfg.seq_len)?;
+    println!(
+        "training {} ({} params) for {steps} steps on {} corpus rows",
+        cfg.name,
+        cfg.n_params,
+        corpus.len() / cfg.seq_len
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(&mut rt, &paths, cfg.clone(), &mut store)?;
+    let opts = TrainOptions { steps, log_every: steps.div_ceil(15), ..Default::default() };
+    let curve = trainer.run(&rt, &corpus, meta.data.pad, &opts)?;
+    let train_time = t0.elapsed();
+    println!("loss curve:");
+    for p in &curve {
+        let bar = "#".repeat((p.nll * 8.0) as usize);
+        println!("  step {:4}  nll {:.4}  {}", p.step, p.nll, bar);
+    }
+    println!(
+        "trained in {:.1}s ({:.0} tokens/s through train_step)",
+        train_time.as_secs_f64(),
+        (steps * cfg.batch * cfg.seq_len) as f64 / train_time.as_secs_f64()
+    );
+    let first = curve.first().unwrap().nll;
+    let last = curve.last().unwrap().nll;
+    assert!(last < first, "training must reduce loss ({first} → {last})");
+
+    // pull the trained weights back and evaluate
+    trainer.download_into(&mut store)?;
+    let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc)?;
+    let tasks = load_tasks(&artifacts)?;
+    let digital = Placement::all_digital(&cfg);
+    let (accs, avg) = ev.eval_suite(&rt, &mut store, &tasks, &digital.to_flags(&cfg), 48)?;
+
+    let mut t = Table::new(
+        &format!("{} after {steps} Rust-driven steps (digital)", cfg.name),
+        &["task", "accuracy", "chance"],
+    );
+    for (task, acc) in tasks.iter().zip(&accs) {
+        t.row(vec![
+            task.name.clone(),
+            format!("{:.1}%", acc * 100.0),
+            format!("{:.0}%", task.chance() * 100.0),
+        ]);
+    }
+    t.row(vec!["AVG".into(), format!("{:.1}%", avg * 100.0), String::new()]);
+    t.print();
+
+    // heterogeneous deployment of the freshly trained model
+    let placement = plan_placement(
+        &cfg,
+        &store,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )?;
+    apply_placement(&cfg, &mut store, &placement, &NoiseModel::with_scale(1.0), 0)?;
+    let (_, avg_het) =
+        ev.eval_suite(&rt, &mut store, &tasks, &placement.to_flags(&cfg), 48)?;
+    println!(
+        "\nheterogeneous (Γ=1/4 MaxNNScore digital, prog-noise 1.0): avg {:.1}% \
+         (digital: {:.1}%)",
+        avg_het * 100.0,
+        avg * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,254 @@
+"""AOT build: train the mini models, lower every entry point to HLO text,
+write weights + datasets. Runs ONCE at `make artifacts`; Python is never
+on the request path.
+
+Interchange format is HLO *text* (not serialized HloModuleProto): jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Artifacts layout (ABI documented in artifacts/meta.json):
+
+  artifacts/
+    meta.json                     — configs, flag layout, file formats
+    data/corpus.bin  calib.bin    — i32 LE rows [n, seq_len]
+    data/freq.json                — token frequencies (Fig 6 analysis)
+    data/tasks/<task>.json        — multiple-choice items
+    <cfg>/model_fwd.hlo.txt       — monolithic scoring forward
+    <cfg>/train_step.hlo.txt      — SGD-momentum step (digital)
+    <cfg>/attn_block.<l>.hlo.txt  — serving units (one per layer shape)
+    <cfg>/expert_ffn_digital.hlo.txt / expert_ffn_analog.hlo.txt
+    <cfg>/lm_head.hlo.txt
+    <cfg>/params.bin manifest.json — trained weights, flat f32 LE
+    <cfg>/init_params.bin          — untrained weights (for train_moe demo)
+    <cfg>/train_log.json           — loss curve of the build-time training
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from .configs import CONFIGS, DEFAULT_AIMC
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def write_params(path, plist):
+    flat = np.concatenate([np.asarray(p, np.float32).ravel() for p in plist])
+    flat.astype("<f4").tofile(path)
+
+
+def manifest_for(cfg):
+    specs = M.param_specs(cfg)
+    out, off = [], 0
+    for name, shape in specs:
+        n = int(np.prod(shape))
+        out.append({"name": name, "shape": list(shape), "offset": off, "len": n})
+        off += n
+    return {"tensors": out, "total_f32": off}
+
+
+# ---------------------------------------------------------------------------
+# build-time training
+# ---------------------------------------------------------------------------
+
+def train(cfg, rows, log_every=100):
+    plist = [jnp.asarray(p) for p in M.init_params(cfg)]
+    mlist = [jnp.zeros_like(p) for p in plist]
+    step_fn = jax.jit(
+        lambda ps, ms, t, y, mk, lr: M.train_step(cfg, ps, ms, t, y, mk, lr)
+    )
+    rng = np.random.default_rng(cfg.seed + 77)
+    n = rows.shape[0]
+    log = []
+    t0 = time.time()
+    for step in range(cfg.train_steps):
+        idx = rng.integers(0, n, cfg.batch)
+        tokens, targets, mask = D.rows_to_batch(rows[idx])
+        # cosine decay with short warmup
+        warm = min(1.0, (step + 1) / 50)
+        lr = cfg.lr * warm * 0.5 * (1 + np.cos(np.pi * step / cfg.train_steps))
+        plist, mlist, nll = step_fn(plist, mlist, jnp.asarray(tokens),
+                                    jnp.asarray(targets), jnp.asarray(mask),
+                                    jnp.float32(lr))
+        if step % log_every == 0 or step == cfg.train_steps - 1:
+            v = float(nll)
+            log.append({"step": step, "nll": v})
+            print(f"  [{cfg.name}] step {step:5d} nll {v:.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return [np.asarray(p) for p in plist], log
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def lower_all(cfg, out_dir, serve_cap):
+    specs = M.param_specs(cfg)
+    pspecs = [f32(s) for _, s in specs]
+    B, T, d = cfg.batch, cfg.seq_len, cfg.d_model
+    F = M.flags_len(cfg)
+    scalar = f32(())
+
+    entries = {}
+
+    entries["model_fwd"] = jax.jit(
+        lambda *a: M.model_fwd(cfg, list(a[:len(pspecs)]), *a[len(pspecs):])
+    ).lower(*pspecs, i32((B, T)), i32((B, T)), f32((B, T)), f32((F,)),
+            scalar, scalar)
+
+    n_p = len(pspecs)
+    entries["train_step"] = jax.jit(
+        lambda *a: M.train_step(cfg, list(a[:n_p]), list(a[n_p:2 * n_p]),
+                                *a[2 * n_p:])
+    ).lower(*pspecs, *pspecs, i32((B, T)), i32((B, T)), f32((B, T)), scalar)
+
+    entries["attn_block"] = jax.jit(
+        lambda x, s, b, wq, wk, wv, wo, fl, ka, la: M.attn_block(
+            cfg, x, s, b, wq, wk, wv, wo, fl, ka, la)
+    ).lower(f32((B, T, d)), f32((d,)), f32((d,)), f32((d, d)), f32((d, d)),
+            f32((d, d)), f32((d, d)), scalar, scalar, scalar)
+
+    m = cfg.d_expert
+    # Two capacity tiers per expert-FFN variant: the serving engine picks
+    # the smallest tier that fits a dispatch chunk, cutting padded compute
+    # ~8x for small batches (EXPERIMENTS.md §Perf iteration 2).
+    small_cap = max(serve_cap // 8, 8)
+    for cap, suffix in ((serve_cap, ""), (small_cap, f".c{small_cap}")):
+        entries[f"expert_ffn_digital{suffix}"] = jax.jit(
+            M.expert_ffn_digital
+        ).lower(f32((cap, d)), f32((d, m)), f32((d, m)), f32((m, d)))
+
+        entries[f"expert_ffn_analog{suffix}"] = jax.jit(
+            lambda x, u, g, w, ka, la: M.expert_ffn_analog(x, u, g, w, ka, la)
+        ).lower(f32((cap, d)), f32((d, m)), f32((d, m)), f32((m, d)),
+                scalar, scalar)
+
+    entries["lm_head"] = jax.jit(
+        lambda h, s, b, w, t, fl, ka, la: M.lm_head_score(
+            cfg, h, s, b, w, t, fl, ka, la)
+    ).lower(f32((B * T, d)), f32((d,)), f32((d,)), f32((d, cfg.vocab)),
+            i32((B * T,)), scalar, scalar, scalar)
+
+    for name, lowered in entries.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text)//1024} KiB)", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-rows", type=int, default=20000)
+    ap.add_argument("--calib-rows", type=int, default=512)
+    ap.add_argument("--task-items", type=int, default=128)
+    ap.add_argument("--serve-cap", type=int, default=256,
+                    help="max tokens per expert dispatch in the serving path")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="override train steps (0 = config default)")
+    ap.add_argument("--configs", default="olmoe_mini,dsmoe_mini")
+    ap.add_argument("--lower-only", action="store_true",
+                    help="re-lower HLO entry points; keep existing "
+                         "params/data (used when only graph code changed)")
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "data", "tasks"), exist_ok=True)
+
+    if args.lower_only:
+        for name in args.configs.split(","):
+            cfg = CONFIGS[name]
+            cdir = os.path.join(out, cfg.name)
+            os.makedirs(cdir, exist_ok=True)
+            print(f"[{cfg.name}] re-lowering HLO entry points...", flush=True)
+            lower_all(cfg, cdir, args.serve_cap)
+        print("lower-only complete", flush=True)
+        return
+
+    cfg0 = next(iter(CONFIGS.values()))
+    lang, train_rows, calib_rows, tasks = D.generate_all(
+        cfg0.vocab, cfg0.seq_len, args.train_rows, args.calib_rows,
+        args.task_items)
+    train_rows.astype("<i4").tofile(os.path.join(out, "data", "corpus.bin"))
+    calib_rows.astype("<i4").tofile(os.path.join(out, "data", "calib.bin"))
+    for t in tasks:
+        with open(os.path.join(out, "data", "tasks", t["name"] + ".json"), "w") as f:
+            json.dump(t, f)
+    freq = D.token_frequencies(train_rows, cfg0.vocab)
+    with open(os.path.join(out, "data", "freq.json"), "w") as f:
+        json.dump({"freq": freq.tolist(),
+                   "succ": lang.succ.tolist(), "word0": D.WORD0}, f)
+    print(f"data: {train_rows.shape[0]} train rows, {len(tasks)} tasks", flush=True)
+
+    meta = {"aimc": {"bits_dac": DEFAULT_AIMC.bits_dac,
+                     "bits_adc": DEFAULT_AIMC.bits_adc,
+                     "tile_size": DEFAULT_AIMC.tile_size,
+                     "kappa": DEFAULT_AIMC.kappa, "lam": DEFAULT_AIMC.lam},
+            "serve_cap": args.serve_cap,
+            "data": {"seq_len": cfg0.seq_len, "vocab": cfg0.vocab,
+                     "n_train_rows": int(train_rows.shape[0]),
+                     "n_calib_rows": int(calib_rows.shape[0]),
+                     "pad": D.PAD, "bos": D.BOS},
+            "configs": {}}
+
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        if args.steps:
+            cfg = type(cfg)(**{**cfg.to_dict(), "train_steps": args.steps})
+        cdir = os.path.join(out, cfg.name)
+        os.makedirs(cdir, exist_ok=True)
+
+        print(f"[{cfg.name}] lowering HLO entry points...", flush=True)
+        lower_all(cfg, cdir, args.serve_cap)
+
+        write_params(os.path.join(cdir, "init_params.bin"), M.init_params(cfg))
+        print(f"[{cfg.name}] training {cfg.train_steps} steps...", flush=True)
+        plist, log = train(cfg, train_rows)
+        write_params(os.path.join(cdir, "params.bin"), plist)
+        with open(os.path.join(cdir, "manifest.json"), "w") as f:
+            json.dump(manifest_for(cfg), f)
+        with open(os.path.join(cdir, "train_log.json"), "w") as f:
+            json.dump(log, f)
+
+        meta["configs"][cfg.name] = {
+            **cfg.to_dict(),
+            "flags_len": M.flags_len(cfg),
+            "n_params": manifest_for(cfg)["total_f32"],
+        }
+
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("artifacts complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

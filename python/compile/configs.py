@@ -1,0 +1,90 @@
+"""Mini MoE model configurations.
+
+Two configs mirror the paper's two evaluation models (DeepSeekMoE-16B and
+OLMoE-7B) at a CPU-trainable scale; see DESIGN.md §2 for the substitution
+argument. Architectural *family* features are preserved:
+
+- ``olmoe_mini``: every layer is an MoE layer; no shared expert
+  (OLMoE: 16 layers all-MoE, 64 experts).
+- ``dsmoe_mini``: layer 0 uses a dense FFN, subsequent layers are MoE with
+  one always-on shared expert (DeepSeekMoE: dense first FFN + shared
+  expert per MoE block).
+
+Both use gated-MLP experts and token-choice top-2 routing, as the paper's
+models do.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 512
+    seq_len: int = 32
+    d_model: int = 48
+    n_heads: int = 4
+    n_layers: int = 4
+    n_experts: int = 16
+    top_k: int = 2
+    d_expert: int = 64          # m, per-expert hidden width (gated MLP)
+    # DeepSeek-style extras (0 / False disables):
+    d_shared: int = 0           # shared-expert hidden width
+    dense_first_layer: bool = False
+    d_dense_ffn: int = 192      # dense FFN width used when a layer is dense
+    # training
+    lr: float = 0.05
+    momentum: float = 0.9
+    batch: int = 32
+    train_steps: int = 600
+    aux_loss_coef: float = 0.01
+    init_scale: float = 0.08
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def is_moe_layer(self, layer: int) -> bool:
+        return not (self.dense_first_layer and layer == 0)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+OLMOE_MINI = ModelConfig(name="olmoe_mini")
+
+DSMOE_MINI = ModelConfig(
+    name="dsmoe_mini",
+    d_expert=56,
+    d_shared=32,
+    dense_first_layer=True,
+    d_dense_ffn=192,
+    seed=1,
+)
+
+CONFIGS = {c.name: c for c in (OLMOE_MINI, DSMOE_MINI)}
+
+
+# ---------------------------------------------------------------------------
+# AIMC / quantization defaults (paper §2.2, §5.1)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AimcConfig:
+    """DAC-ADC quantization settings for the analog compute path.
+
+    The paper uses 8-bit DAC and ADC (§5.2) and NVM tile size 512 (§5.1).
+    ``kappa``/``lam`` are the global calibration hyper-parameters of
+    eqs (4)-(5); the values here are the post-calibration defaults
+    (Appendix B finds an interior optimum for both).
+    """
+
+    bits_dac: int = 8
+    bits_adc: int = 8
+    tile_size: int = 512
+    kappa: float = 8.0
+    lam: float = 1.0
+
+
+DEFAULT_AIMC = AimcConfig()

@@ -1,0 +1,296 @@
+"""Synthetic structured corpus + the 8 benchmark-task analogs.
+
+The paper evaluates on PIQA/ARC-e/ARC-c/BoolQ/HellaSwag/WinoGrande/MathQA/
+MMLU through log-prob choice scoring. We build 8 synthetic multiple-choice
+tasks with the *same protocol* over a synthetic language the mini models
+are trained on (DESIGN.md §2). The language mixes five template families;
+each task is a held-out probe of one family:
+
+  chain       — a fixed random successor table over Zipf-distributed word
+                tokens ("bigram grammar"); start-word frequency follows
+                the Zipf law, so experts specializing in frequent chain
+                tokens emerge — the mechanism behind MaxNNScore.
+  arithmetic  — mod-10 "a op b = c" facts, op in {+, x}.
+  containment — "ctx SEP Q x SEP -> YES/NO" (is x in ctx?).
+  recall      — "w1 w2 w3 SEP Q d_k -> w_k" positional recall.
+  filler      — raw Zipf unigram stream (frequency signal).
+
+Tasks (chance level in parens):
+  syn-piqa  (50%) chain continuation, 2 choices x 3 tokens
+  syn-arce  (25%) chain cloze, frequent start words, 4 single-token choices
+  syn-arcc  (25%) chain cloze, rare start words (the "challenge" split)
+  syn-boolq (50%) containment YES/NO
+  syn-hella (25%) chain continuation, 4 choices x 4 tokens
+  syn-wino  (50%) positional recall, 2 choices
+  syn-mathqa(25%) arithmetic result, 4 digit choices
+  syn-mmlu  (25%) mixed cloze over all families
+
+All randomness is seeded; `make artifacts` is reproducible bit-for-bit.
+"""
+
+import json
+import numpy as np
+
+# ---- token ids (ABI with Rust; written to data/meta.json) ----
+PAD, BOS, SEP, Q, YES, NO = 0, 1, 2, 3, 4, 5
+DIGIT0 = 6                      # digits d0..d9 = 6..15
+OP_PLUS, OP_TIMES, EQ = 16, 17, 18
+WORD0 = 20                      # word tokens 20..vocab-1
+
+ZIPF_EXP = 1.1
+ZIPF_SHIFT = 2.7
+
+
+class Language:
+    """The deterministic synthetic language: Zipf words + successor table."""
+
+    def __init__(self, vocab=512, seed=1234):
+        self.vocab = vocab
+        self.n_words = vocab - WORD0
+        rng = np.random.default_rng(seed)
+        ranks = np.arange(self.n_words)
+        w = 1.0 / (ranks + ZIPF_SHIFT) ** ZIPF_EXP
+        self.zipf_p = w / w.sum()
+        # successor table: random permutation => every word has a unique
+        # successor, making chains unambiguous and learnable
+        self.succ = rng.permutation(self.n_words)
+
+    def word(self, i):
+        return WORD0 + int(i)
+
+    def sample_word(self, rng, lo=0, hi=None):
+        """Zipf-sample a word index restricted to rank range [lo, hi)."""
+        hi = self.n_words if hi is None else hi
+        p = self.zipf_p[lo:hi]
+        return lo + rng.choice(hi - lo, p=p / p.sum())
+
+    def chain(self, start, length):
+        out, cur = [], start
+        for _ in range(length):
+            out.append(self.word(cur))
+            cur = int(self.succ[cur])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# sentence templates
+# ---------------------------------------------------------------------------
+
+def sent_chain(lang, rng, max_len):
+    start = lang.sample_word(rng)
+    n = int(rng.integers(8, max_len - 1))
+    return [BOS] + lang.chain(start, n)
+
+
+def sent_arith(lang, rng, max_len):
+    toks = [BOS]
+    for _ in range(int(rng.integers(2, 4))):
+        a, b = int(rng.integers(10)), int(rng.integers(10))
+        if rng.random() < 0.5:
+            op, c = OP_PLUS, (a + b) % 10
+        else:
+            op, c = OP_TIMES, (a * b) % 10
+        toks += [Q, DIGIT0 + a, op, DIGIT0 + b, EQ, DIGIT0 + c]
+        if len(toks) + 6 > max_len:
+            break
+    return toks
+
+
+def sent_contain(lang, rng, max_len):
+    n_ctx = int(rng.integers(6, 11))
+    ctx = [lang.word(lang.sample_word(rng)) for _ in range(n_ctx)]
+    if rng.random() < 0.5:
+        x = ctx[int(rng.integers(n_ctx))]
+        ans = YES
+    else:
+        while True:
+            xi = lang.sample_word(rng)
+            if lang.word(xi) not in ctx:
+                break
+        x, ans = lang.word(xi), NO
+    return [BOS] + ctx + [SEP, Q, x, SEP, ans]
+
+
+def sent_recall(lang, rng, max_len):
+    ws = []
+    while len(ws) < 3:
+        w = lang.word(lang.sample_word(rng))
+        if w not in ws:
+            ws.append(w)
+    k = int(rng.integers(3))
+    return [BOS] + ws + [SEP, Q, DIGIT0 + k + 1, ws[k]]
+
+
+def sent_filler(lang, rng, max_len):
+    n = int(rng.integers(8, max_len - 1))
+    return [BOS] + [lang.word(lang.sample_word(rng)) for _ in range(n)]
+
+
+TEMPLATES = [
+    (sent_chain, 0.40),
+    (sent_arith, 0.15),
+    (sent_contain, 0.15),
+    (sent_recall, 0.15),
+    (sent_filler, 0.15),
+]
+
+
+def make_rows(lang, rng, n_rows, seq_len):
+    """Sample sentences, one per row, PAD-padded to seq_len. i32 [n, T]."""
+    fns = [t[0] for t in TEMPLATES]
+    ps = np.array([t[1] for t in TEMPLATES])
+    rows = np.zeros((n_rows, seq_len), np.int32)
+    for i in range(n_rows):
+        fn = fns[rng.choice(len(fns), p=ps)]
+        s = fn(lang, rng, seq_len)[:seq_len]
+        rows[i, :len(s)] = s
+    return rows
+
+
+def rows_to_batch(rows):
+    """(tokens, targets, mask): next-token prediction within the sentence."""
+    tokens = rows
+    targets = np.zeros_like(rows)
+    targets[:, :-1] = rows[:, 1:]
+    mask = ((tokens != PAD) & (targets != PAD)).astype(np.float32)
+    mask[:, -1] = 0.0
+    return tokens, targets, mask
+
+
+# ---------------------------------------------------------------------------
+# eval tasks
+# ---------------------------------------------------------------------------
+
+def _distinct_words(lang, rng, n, lo=0, hi=None, exclude=()):
+    out = []
+    while len(out) < n:
+        w = lang.word(lang.sample_word(rng, lo, hi))
+        if w not in out and w not in exclude:
+            out.append(w)
+    return out
+
+
+def task_piqa(lang, rng):
+    start = lang.sample_word(rng)
+    full = lang.chain(start, 9)
+    ctx, gold = [BOS] + full[:6], full[6:9]
+    wrong = gold
+    while wrong == gold:
+        wrong = lang.chain(lang.sample_word(rng), 3)
+    return ctx, [gold, wrong]
+
+
+def _cloze(lang, rng, lo, hi):
+    start = lang.sample_word(rng, lo, hi)
+    full = lang.chain(start, 6)
+    ctx = [BOS] + full[:5]
+    gold = [full[5]]
+    distract = [[w] for w in _distinct_words(lang, rng, 3, exclude=(gold[0],))]
+    return ctx, [gold] + distract
+
+
+def task_arce(lang, rng):
+    return _cloze(lang, rng, 0, max(8, lang.n_words // 16))
+
+
+def task_arcc(lang, rng):
+    return _cloze(lang, rng, lang.n_words // 4, lang.n_words)
+
+
+def task_boolq(lang, rng):
+    s = sent_contain(lang, rng, 32)
+    ctx, ans = s[:-1], s[-1]
+    return ctx, [[ans], [NO if ans == YES else YES]]
+
+
+def task_hella(lang, rng):
+    start = lang.sample_word(rng)
+    full = lang.chain(start, 10)
+    ctx, gold = [BOS] + full[:6], full[6:10]
+    choices = [gold]
+    while len(choices) < 4:
+        o = lang.sample_word(rng)
+        c = lang.chain(o, 4)
+        if c != gold:
+            choices.append(c)
+    return ctx, choices
+
+
+def task_wino(lang, rng):
+    s = sent_recall(lang, rng, 32)
+    ctx, ans = s[:-1], s[-1]
+    ws = s[1:4]
+    wrong = ws[(ws.index(ans) + 1) % 3]
+    return ctx, [[ans], [wrong]]
+
+
+def task_mathqa(lang, rng):
+    a, b = int(rng.integers(10)), int(rng.integers(10))
+    if rng.random() < 0.5:
+        op, c = OP_PLUS, (a + b) % 10
+    else:
+        op, c = OP_TIMES, (a * b) % 10
+    ctx = [BOS, Q, DIGIT0 + a, op, DIGIT0 + b, EQ]
+    wrong = rng.permutation([d for d in range(10) if d != c])[:3]
+    return ctx, [[DIGIT0 + c]] + [[DIGIT0 + int(w)] for w in wrong]
+
+
+def task_mmlu(lang, rng):
+    r = rng.random()
+    if r < 0.34:
+        return _cloze(lang, rng, 0, lang.n_words)
+    if r < 0.67:
+        return task_mathqa(lang, rng)
+    ctx, choices = task_wino(lang, rng)
+    while len(choices) < 4:
+        w = lang.word(lang.sample_word(rng))
+        if [w] not in choices:
+            choices.append([w])
+    return ctx, choices
+
+
+TASKS = [
+    ("syn-piqa", task_piqa),
+    ("syn-arce", task_arce),
+    ("syn-arcc", task_arcc),
+    ("syn-boolq", task_boolq),
+    ("syn-hella", task_hella),
+    ("syn-wino", task_wino),
+    ("syn-mathqa", task_mathqa),
+    ("syn-mmlu", task_mmlu),
+]
+
+
+def make_task(lang, rng, name, fn, n_items, seq_len):
+    items = []
+    for _ in range(n_items):
+        ctx, choices = fn(lang, rng)
+        gold = 0
+        # shuffle choices, track gold
+        order = rng.permutation(len(choices))
+        choices = [choices[int(i)] for i in order]
+        gold = int(np.argwhere(order == 0)[0][0])
+        longest = max(len(c) for c in choices)
+        if len(ctx) + longest > seq_len:
+            ctx = ctx[-(seq_len - longest):]
+        items.append({"ctx": [int(t) for t in ctx],
+                      "choices": [[int(t) for t in c] for c in choices],
+                      "gold": gold})
+    return {"name": name, "n_choices": len(items[0]["choices"]), "items": items}
+
+
+def generate_all(vocab, seq_len, n_train_rows, n_calib_rows, n_items,
+                 seed=1234):
+    lang = Language(vocab=vocab, seed=seed)
+    rng_train = np.random.default_rng(seed + 1)
+    rng_calib = np.random.default_rng(seed + 2)
+    rng_task = np.random.default_rng(seed + 3)
+    train = make_rows(lang, rng_train, n_train_rows, seq_len)
+    calib = make_rows(lang, rng_calib, n_calib_rows, seq_len)
+    tasks = [make_task(lang, rng_task, name, fn, n_items, seq_len)
+             for name, fn in TASKS]
+    return lang, train, calib, tasks
+
+
+def token_frequencies(rows, vocab):
+    return np.bincount(rows.flatten(), minlength=vocab)

@@ -1,0 +1,1 @@
+from . import aimc_mvm, ref  # noqa: F401

@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: tiled analog in-memory MVM (DAC -> crossbar -> ADC).
+
+Hardware adaptation (DESIGN.md §4): the paper's compute substrate is a PCM
+crossbar, not a GPU, so the Pallas grid is laid out to mirror the *tile*
+decomposition of an AIMC chip rather than a threadblock decomposition:
+
+- grid = (col_tiles, row_tiles) over the weight matrix; each grid step is
+  one crossbar array (``tile x tile``, paper uses 512).
+- the input BlockSpec slice entering a tile is DAC-quantized (eq (4)) —
+  on real hardware this is the HBM->VMEM boundary where the DAC sits.
+- ``jnp.dot`` over the (rows, cols) block plays the crossbar MVM; on TPU
+  this block shape feeds the MXU systolic array directly.
+- the output block is ADC-quantized per column (eq (5)) and *accumulated
+  digitally* across row tiles — matching the multi-tile partial-sum
+  dataflow of the chip (ADC before accumulate, not after).
+
+Numerical contract: identical results to ``ref.aimc_mvm_ref`` (pytest
+enforces allclose at 1e-6). ``interpret=True`` always — the CPU PJRT
+plugin cannot execute Mosaic custom-calls; TPU perf is estimated
+analytically in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import beta_out_for, dac_quant
+
+DEFAULT_TILE = 512
+
+
+def _aimc_kernel(x_ref, w_ref, beta_ref, o_ref, *, bits_dac, bits_adc):
+    """One (col_tile, row_tile) grid step = one crossbar array.
+
+    x_ref:   [t, R]   input slice for this row tile (wordline segment)
+    w_ref:   [R, C]   crossbar conductances (weight tile)
+    beta_ref:[1, 2]   (beta_in, lam): DAC input range (calibrated
+                      kappa * std) and the ADC range hyper-parameter.
+                      Passed as a ref because both may be traced values
+                      at lowering time (calibration varies them).
+    o_ref:   [t, C]   output columns; accumulated across row tiles
+    """
+    row_tile = pl.program_id(1)
+    beta_in = beta_ref[0, 0]
+    lam = beta_ref[0, 1]
+
+    # --- DAC: quantize the digital input entering the tile (eq 4) ---
+    x_blk = dac_quant(x_ref[...], beta_in, bits_dac)
+
+    # --- crossbar MVM: the analog dot product over this tile ---
+    part = jnp.dot(x_blk, w_ref[...], preferred_element_type=jnp.float32)
+
+    # --- ADC: per-column quantization of the tile's output currents (eq 5) ---
+    bo = beta_out_for(w_ref[...], beta_in, lam)
+    levels = float(2 ** (bits_adc - 1) - 1)
+    scale = levels / bo
+    part = jnp.clip(jnp.round(part * scale) / scale, -bo, bo)
+
+    # --- digital accumulate across row tiles ---
+    @pl.when(row_tile == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(row_tile != 0)
+    def _accum():
+        o_ref[...] += part
+
+
+def aimc_mvm(x, w, beta_in, lam=1.0, bits_dac=8, bits_adc=8, tile=DEFAULT_TILE):
+    """Analog MVM ``y = ADC(DAC(x) @ W)`` tiled over NVM crossbars.
+
+    x: [t, d] f32, w: [d, n] f32 (programming-noised upstream if analog),
+    beta_in: scalar f32 (traced — calibration varies it at runtime).
+    Returns [t, n] f32.
+    """
+    t, d = x.shape
+    d2, n = w.shape
+    assert d == d2, f"shape mismatch {x.shape} @ {w.shape}"
+    # Clamp the tile to the actual dims: at mini-model scale a whole
+    # projection matrix fits a single 512x512 crossbar (DESIGN.md §2).
+    tile_r = min(tile, d)
+    tile_c = min(tile, n)
+    # Pad to tile multiples: interpret-mode pallas fills out-of-bounds
+    # block reads with NaN, so ragged edges must be zero-padded here.
+    # Zero rows/cols are exact no-ops for the analog math (zero columns
+    # hit the beta_out floor guard and quantize to zero).
+    d_pad = pl.cdiv(d, tile_r) * tile_r
+    n_pad = pl.cdiv(n, tile_c) * tile_c
+    if d_pad != d:
+        x = jnp.pad(x, ((0, 0), (0, d_pad - d)))
+        w = jnp.pad(w, ((0, d_pad - d), (0, 0)))
+    if n_pad != n:
+        w = jnp.pad(w, ((0, 0), (0, n_pad - n)))
+    grid = (n_pad // tile_c, d_pad // tile_r)
+    beta_arr = jnp.stack([
+        jnp.asarray(beta_in, jnp.float32).reshape(()),
+        jnp.asarray(lam, jnp.float32).reshape(()),
+    ]).reshape(1, 2)
+
+    kernel = functools.partial(
+        _aimc_kernel, bits_dac=bits_dac, bits_adc=bits_adc
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # input rows follow the row tile; full token batch per step
+            pl.BlockSpec((t, tile_r), lambda i, j: (0, j)),
+            # weight tile (j-th row block, i-th col block) = one crossbar
+            pl.BlockSpec((tile_r, tile_c), lambda i, j: (j, i)),
+            # (beta_in, lam) scalars broadcast to every tile
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, tile_c), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, n_pad), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, beta_arr)[:, :n]
+
+
+def gated_ffn_analog(x, w_up, w_gate, w_down, beta_in_up, beta_in_down,
+                     lam=1.0, bits_dac=8, bits_adc=8, tile=DEFAULT_TILE):
+    """Gated-MLP expert on the analog accelerator (eq (2) body).
+
+    Three crossbar-mapped projections; SiLU and the Hadamard product run
+    in the digital periphery between tiles, as on the paper's chip.
+    """
+    up = aimc_mvm(x, w_up, beta_in_up, lam, bits_dac, bits_adc, tile)
+    gate = aimc_mvm(x, w_gate, beta_in_up, lam, bits_dac, bits_adc, tile)
+    act = up * (1.0 / (1.0 + jnp.exp(-up))) * gate
+    return aimc_mvm(act, w_down, beta_in_down, lam, bits_dac, bits_adc, tile)

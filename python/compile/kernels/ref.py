@@ -1,0 +1,172 @@
+"""Pure-jnp correctness oracle for the AIMC compute path.
+
+These functions define the *semantics* of analog matrix-vector
+multiplication on an NVM crossbar tile (paper §2.2):
+
+- eq (4): DAC quantization of the digital input to ``bits_dac`` levels in
+  a fixed range ``beta_in``.
+- eq (5): ADC quantization of the analog column currents to ``bits_adc``
+  levels in a per-column range ``beta_out = lam * beta_in * max|W_:,i|``.
+- tiling: a weight matrix larger than the crossbar is split into
+  ``tile x tile`` sub-arrays; each row-tile is a separate analog MVM whose
+  output passes through its own ADC, and partial sums are accumulated
+  digitally.
+
+The Pallas kernel in ``aimc_mvm.py`` must match these functions bit-for-
+bit at f32 (pytest asserts allclose with tight tolerances), and the L2
+model's in-graph fake-quant path reuses these functions directly, so the
+serving path (Pallas) and the eval path (ref) are provably consistent.
+
+The weight-programming noise model (eq (3), the Le Gallo 2023 PCM fit) is
+also implemented here in numpy as the oracle for the Rust
+``aimc::program`` implementation — programming noise is a *program-time*
+effect applied to weights before they reach either compute path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# eq (4): DAC input quantization
+# ---------------------------------------------------------------------------
+
+def dac_quant(x, beta_in, bits_dac):
+    """Quantize activations to ``bits_dac``-bit signed levels in [-beta_in, beta_in].
+
+    x_q = beta/(2^{b-1}-1) * round( clamp(x, -beta, beta) * (2^{b-1}-1)/beta )
+    """
+    levels = float(2 ** (bits_dac - 1) - 1)
+    scale = levels / beta_in
+    return jnp.round(jnp.clip(x, -beta_in, beta_in) * scale) / scale
+
+
+# ---------------------------------------------------------------------------
+# eq (5): ADC output quantization (per column)
+# ---------------------------------------------------------------------------
+
+def adc_quant(y, beta_out, bits_adc):
+    """Quantize column currents to ``bits_adc``-bit levels, clamped to beta_out.
+
+    ``beta_out`` broadcasts over the last (column) axis.
+    """
+    levels = float(2 ** (bits_adc - 1) - 1)
+    scale = levels / beta_out
+    return jnp.clip(jnp.round(y * scale) / scale, -beta_out, beta_out)
+
+
+def beta_out_for(w_tile, beta_in, lam):
+    """eq (5) output range: lam * beta_in * max|W_:,i| per column of a tile.
+
+    Guarded away from zero so all-zero columns don't produce NaNs.
+    """
+    col_max = jnp.max(jnp.abs(w_tile), axis=0)
+    return lam * beta_in * jnp.maximum(col_max, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Analog tiled MVM (the oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def aimc_mvm_ref(x, w, beta_in, lam, bits_dac=8, bits_adc=8, tile=512):
+    """Analog MVM y = x @ w through DAC -> crossbar tiles -> ADC.
+
+    x: [t, d] activations, w: [d, n] weights (already programming-noised
+    if the expert lives on the analog accelerator), beta_in: scalar input
+    range (kappa * std of the tile input, calibrated), lam: ADC range
+    hyper-parameter.
+
+    The d axis is split into row tiles (wordlines), the n axis into column
+    tiles (bitlines); every (row, col) tile is one crossbar array with its
+    own DAC on the input slice and ADC on the output slice. Partial sums
+    across row tiles accumulate digitally *after* the ADC, exactly as a
+    multi-tile AIMC mapping does.
+    """
+    t, d = x.shape
+    d2, n = w.shape
+    assert d == d2
+    y = jnp.zeros((t, n), dtype=x.dtype)
+    for r0 in range(0, d, tile):
+        r1 = min(r0 + tile, d)
+        x_blk = dac_quant(x[:, r0:r1], beta_in, bits_dac)
+        for c0 in range(0, n, tile):
+            c1 = min(c0 + tile, n)
+            w_blk = w[r0:r1, c0:c1]
+            part = x_blk @ w_blk
+            bo = beta_out_for(w_blk, beta_in, lam)
+            part = adc_quant(part, bo, bits_adc)
+            y = y.at[:, c0:c1].add(part)
+    return y
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def gated_ffn_ref(x, w_up, w_gate, w_down, beta_in_up, beta_in_down, lam,
+                  bits_dac=8, bits_adc=8, tile=512, analog=True):
+    """Gated-MLP expert (eq (2) body, routing weight applied by caller).
+
+    analog=True runs all three projections through the AIMC path; the
+    SiLU + Hadamard product happens digitally between tiles (the paper's
+    accelerators do nonlinearities in the digital periphery).
+    """
+    if analog:
+        up = aimc_mvm_ref(x, w_up, beta_in_up, lam, bits_dac, bits_adc, tile)
+        gate = aimc_mvm_ref(x, w_gate, beta_in_up, lam, bits_dac, bits_adc, tile)
+        act = silu(up) * gate
+        return aimc_mvm_ref(act, w_down, beta_in_down, lam, bits_dac, bits_adc, tile)
+    act = silu(x @ w_up) * (x @ w_gate)
+    return act @ w_down
+
+
+# ---------------------------------------------------------------------------
+# eq (3): weight-programming noise (numpy oracle; applied program-time)
+# ---------------------------------------------------------------------------
+
+# PCM coefficient fits from Le Gallo et al. 2023 (64-core PCM chip), as
+# quoted in the paper §2.2: branch HI for |W| > 0.292 * Wmax, else LO.
+PCM_SPLIT = 0.292
+PCM_COEF_HI = (0.012, 0.245, -0.54, 0.40)
+PCM_COEF_LO = (0.014, 0.224, -0.72, 0.952)
+
+
+def programming_sigma(w, w_max):
+    """Per-element noise std sigma_ij of eq (3).
+
+    sigma = c0*Wmax + sum_{u=1..3} c_u |W|^u / Wmax^{u-1}, with the
+    coefficient set chosen per element by the |W| / Wmax split.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    w_max = float(max(w_max, 1e-12))
+    aw = np.abs(w)
+    r = aw / w_max
+    sig = np.empty_like(w)
+    for coef, mask in ((PCM_COEF_HI, r > PCM_SPLIT), (PCM_COEF_LO, r <= PCM_SPLIT)):
+        c0, c1, c2, c3 = coef
+        s = c0 * w_max + c1 * aw + c2 * aw**2 / w_max + c3 * aw**3 / w_max**2
+        sig[mask] = s[mask]
+    # the fitted cubic can dip below zero for mid-range |W|; a std is >= 0
+    return np.maximum(sig, 0.0)
+
+
+def program_weights_ref(w, rng, noise_scale=1.0, tile=512):
+    """Program a weight matrix onto NVM tiles: W_hat = W + N(0, (scale*sigma)^2).
+
+    Wmax is *per column per tile* (the paper defines Wmax as the maximum
+    weight magnitude of the column in the NVM tile). ``noise_scale``
+    multiplies sigma and is the x-axis of Figs 3-5.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    out = w.copy()
+    d, n = w.shape
+    for r0 in range(0, d, tile):
+        r1 = min(r0 + tile, d)
+        for c in range(n):
+            col = w[r0:r1, c]
+            w_max = np.max(np.abs(col))
+            if w_max <= 0:
+                continue
+            sig = programming_sigma(col, w_max) * noise_scale
+            out[r0:r1, c] = col + rng.standard_normal(col.shape) * sig
+    return out.astype(np.float32)

@@ -1,0 +1,401 @@
+"""L2: mini MoE transformer in JAX — forward, heterogeneous forward, train step.
+
+This module defines everything that is AOT-lowered to HLO text and later
+executed from the Rust coordinator via PJRT (see aot.py):
+
+- ``model_fwd``      — monolithic scoring forward with per-module
+  ``analog_flags`` controlling the in-graph DAC-ADC fake-quant path
+  (eqs 4-5 via kernels.ref). Weight-programming noise (eq 3) is NOT in
+  the graph: it is a program-time effect the Rust ``aimc`` module applies
+  to the parameter buffers of analog-placed experts before execution.
+- ``train_step``     — digital fwd/bwd + SGD-momentum update. The paper's
+  method is retraining-free; training exists only to *create* the mini
+  models at artifact-build time (DESIGN.md §2).
+- per-sublayer entry points (``attn_block``, ``expert_ffn_digital``,
+  ``expert_ffn_analog``, ``lm_head_score``) for the Rust serving engine,
+  which owns embedding lookup, LayerNorm, routing and expert
+  scatter/gather and dispatches these units to the two accelerators.
+  ``expert_ffn_analog`` routes through the L1 Pallas kernel.
+
+Parameters cross the boundary as a flat, canonically-ordered list (see
+``param_specs``); aot.py writes the same order into manifest.json so the
+Rust side can address tensors by name.
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import aimc_mvm as pk
+from .kernels.ref import adc_quant, dac_quant, silu
+
+LN_EPS = 1e-5
+BETA_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Parameter manifest (canonical flat ordering shared with Rust)
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    """Ordered list of (name, shape). This order IS the ABI with Rust."""
+    d, e, m = cfg.d_model, cfg.n_experts, cfg.d_expert
+    specs = [
+        ("embed", (cfg.vocab, d)),
+        ("pos_emb", (cfg.seq_len, d)),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        specs += [
+            (p + "ln1.s", (d,)), (p + "ln1.b", (d,)),
+            (p + "attn.wq", (d, d)), (p + "attn.wk", (d, d)),
+            (p + "attn.wv", (d, d)), (p + "attn.wo", (d, d)),
+            (p + "ln2.s", (d,)), (p + "ln2.b", (d,)),
+        ]
+        if cfg.is_moe_layer(l):
+            specs += [
+                (p + "router", (d, e)),
+                (p + "experts.up", (e, d, m)),
+                (p + "experts.gate", (e, d, m)),
+                (p + "experts.down", (e, m, d)),
+            ]
+            if cfg.d_shared:
+                ms = cfg.d_shared
+                specs += [
+                    (p + "shared.up", (d, ms)),
+                    (p + "shared.gate", (d, ms)),
+                    (p + "shared.down", (ms, d)),
+                ]
+        else:
+            mf = cfg.d_dense_ffn
+            specs += [
+                (p + "ffn.up", (d, mf)),
+                (p + "ffn.gate", (d, mf)),
+                (p + "ffn.down", (mf, d)),
+            ]
+    specs += [("ln_f.s", (d,)), ("ln_f.b", (d,)), ("lm_head", (cfg.d_model, cfg.vocab))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed=None):
+    """Deterministic init matching param_specs order. Returns list of np f32."""
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    out = []
+    for name, shape in param_specs(cfg):
+        if name.endswith(".s"):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith(".b"):
+            arr = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            std = cfg.init_scale if len(shape) < 2 else min(cfg.init_scale, 1.0 / math.sqrt(fan_in))
+            arr = (rng.standard_normal(shape) * std).astype(np.float32)
+        out.append(arr)
+    return out
+
+
+class ParamView:
+    """Name-addressed view over the flat param list."""
+
+    def __init__(self, cfg, plist):
+        self.idx = {name: i for i, (name, _) in enumerate(param_specs(cfg))}
+        self.plist = plist
+
+    def __getitem__(self, name):
+        return self.plist[self.idx[name]]
+
+
+# ---------------------------------------------------------------------------
+# analog_flags layout (ABI with Rust; see aot.py meta.json)
+# ---------------------------------------------------------------------------
+# [ L*E expert flags (row-major layer, expert) ]
+# [ L   attn flags   ]  (wq/wk/wv/wo of layer l)
+# [ L   dense-ffn / shared-expert flags ]
+# [ 1   lm_head flag ]
+
+def flags_len(cfg):
+    return cfg.n_layers * cfg.n_experts + 2 * cfg.n_layers + 1
+
+
+def split_flags(cfg, flags):
+    le = cfg.n_layers * cfg.n_experts
+    expert = flags[:le].reshape(cfg.n_layers, cfg.n_experts)
+    attn = flags[le:le + cfg.n_layers]
+    dense = flags[le + cfg.n_layers:le + 2 * cfg.n_layers]
+    lm = flags[le + 2 * cfg.n_layers]
+    return expert, attn, dense, lm
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, s, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * s + b
+
+
+def batch_beta_in(x, kappa):
+    """Calibrated DAC input range: beta_in = kappa * std(x).
+
+    The paper calibrates beta_in = kappa * EMA-std over a calibration set;
+    we use the batch std of the tile input, which tracks the same scale at
+    our batch sizes (DESIGN.md §2) and keeps kappa/lam the only calibrated
+    hyper-parameters — exactly the knobs Appendix B sweeps.
+    """
+    return kappa * jnp.std(x) + BETA_EPS
+
+
+def maybe_analog_linear(x, w, flag, kappa, lam, bits_dac, bits_adc):
+    """y = x @ w, with the DAC-ADC path blended in where flag > 0.
+
+    Single matmul: the input is DAC-quantized pre-matmul and the output
+    ADC-quantized post-matmul only when the module is flagged analog, so
+    the digital path pays no extra FLOPs.
+    """
+    beta_in = batch_beta_in(x, kappa)
+    xin = jnp.where(flag > 0, dac_quant(x, beta_in, bits_dac), x)
+    y = xin @ w
+    bo = lam * beta_in * jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-12)
+    return jnp.where(flag > 0, adc_quant(y, bo, bits_adc), y)
+
+
+def attention(cfg, x, wq, wk, wv, wo, flag, kappa, lam, bits_dac, bits_adc):
+    """Causal MHSA over x [B, T, d]; the four projections share one flag."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x2 = x.reshape(b * t, d)
+    lin = partial(maybe_analog_linear, kappa=kappa, lam=lam,
+                  bits_dac=bits_dac, bits_adc=bits_adc)
+    q = lin(x2, wq, flag).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = lin(x2, wk, flag).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = lin(x2, wv, flag).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b * t, d)
+    return lin(o, wo, flag).reshape(b, t, d)
+
+
+def router_gates(cfg, u, router_w):
+    """Token-choice top-k routing (§2.1). Returns dense gate matrix [N, E].
+
+    Gates are the softmax over the top-k routing scores (renormalized),
+    scattered back to a dense [N, E] matrix so expert compute can run as a
+    dense einsum over stacked expert weights at mini-model scale.
+
+    top-k is computed by iterative masked argmax rather than
+    ``jax.lax.top_k``: jax >= 0.7 lowers top_k to an HLO ``topk(...)
+    largest=true`` instruction whose text form the xla_extension 0.5.1
+    parser (behind the rust `xla` crate) rejects. Iterative max lowers to
+    plain reduce/select ops that round-trip cleanly, and for k=2 costs
+    two O(E) passes — cheaper than a sort at E=16 anyway.
+    """
+    scores = u @ router_w                             # [N, E]
+    probs = jax.nn.softmax(scores, axis=-1)
+    masked = scores
+    sel_masks, sel_vals = [], []
+    for _ in range(cfg.top_k):
+        mx = jnp.max(masked, axis=-1, keepdims=True)   # [N, 1]
+        hit = masked >= mx
+        # break ties toward the lowest index (matches lax.top_k)
+        first = jnp.cumsum(hit.astype(jnp.float32), axis=-1) <= 1.0
+        hit = hit & first
+        sel_masks.append(hit.astype(scores.dtype))
+        sel_vals.append(mx)
+        masked = jnp.where(hit, -1e30, masked)
+    vals = jnp.concatenate(sel_vals, axis=-1)          # [N, k]
+    gates = jax.nn.softmax(vals, axis=-1)              # [N, k]
+    gmat = sum(gates[:, i:i + 1] * sel_masks[i] for i in range(cfg.top_k))
+    return gmat, probs
+
+
+def moe_experts(u, w_up, w_gate, w_down, gmat, eflags, kappa, lam,
+                bits_dac, bits_adc):
+    """All-experts dense compute with per-expert analog fake-quant blend.
+
+    u [N, d]; stacked weights [E, d, m] / [E, m, d]; gmat [N, E] dense
+    gates (zero for unrouted experts); eflags [E].
+
+    Per-expert analog selection happens on the *input* side (select the
+    DAC-quantized input for flagged experts, exact input otherwise) so
+    every projection costs exactly one batched einsum — no duplicated
+    FLOPs for the blended graph (important on this 1-core testbed; see
+    EXPERIMENTS.md §Perf).
+    """
+    ef = eflags[None, :, None]                         # [1, E, 1]
+    beta_u = batch_beta_in(u, kappa)
+    uq = dac_quant(u, beta_u, bits_dac)
+    # [N, E, d] per-expert input view: quantized where the expert is analog
+    xin = jnp.where(ef > 0, uq[:, None, :], u[:, None, :])
+
+    def proj_in(w):                                    # w [E, d, m]
+        y = jnp.einsum("ned,edm->nem", xin, w)
+        bo = lam * beta_u * jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-12)  # [E, m]
+        return jnp.where(ef > 0, adc_quant(y, bo[None], bits_adc), y)
+
+    up = proj_in(w_up)
+    gate = proj_in(w_gate)
+    act = silu(up) * gate                              # [N, E, m]
+
+    beta_a = kappa * jnp.std(act, axis=(0, 2)) + BETA_EPS   # [E]
+    act_q = dac_quant(act, beta_a[None, :, None], bits_dac)
+    act_in = jnp.where(ef > 0, act_q, act)
+    y_e = jnp.einsum("nem,emd->ned", act_in, w_down)
+    bo_d = lam * beta_a[:, None] * jnp.maximum(jnp.max(jnp.abs(w_down), axis=1), 1e-12)  # [E, d]
+    y_e = jnp.where(ef > 0, adc_quant(y_e, bo_d[None], bits_adc), y_e)
+    return jnp.einsum("ne,ned->nd", gmat, y_e)
+
+
+def gated_mlp(x, w_up, w_gate, w_down, flag, kappa, lam, bits_dac, bits_adc):
+    """Dense gated FFN / shared expert with a single analog flag."""
+    lin = partial(maybe_analog_linear, kappa=kappa, lam=lam,
+                  bits_dac=bits_dac, bits_adc=bits_adc)
+    act = silu(lin(x, w_up, flag)) * lin(x, w_gate, flag)
+    return lin(act, w_down, flag)
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def backbone(cfg, pv, tokens, flags, kappa, lam, bits_dac=8, bits_adc=8,
+             collect_router=False):
+    """Shared trunk: tokens [B, T] -> hidden [B, T, d] (+ router stats)."""
+    eflags, aflags, dflags, _ = split_flags(cfg, flags)
+    b, t = tokens.shape
+    d = cfg.d_model
+    x = pv["embed"][tokens] + pv["pos_emb"][None, :t]
+    router_stats = []
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        a = layer_norm(x, pv[p + "ln1.s"], pv[p + "ln1.b"])
+        x = x + attention(cfg, a, pv[p + "attn.wq"], pv[p + "attn.wk"],
+                          pv[p + "attn.wv"], pv[p + "attn.wo"],
+                          aflags[l], kappa, lam, bits_dac, bits_adc)
+        u3 = layer_norm(x, pv[p + "ln2.s"], pv[p + "ln2.b"])
+        u = u3.reshape(b * t, d)
+        if cfg.is_moe_layer(l):
+            gmat, probs = router_gates(cfg, u, pv[p + "router"])
+            y = moe_experts(u, pv[p + "experts.up"], pv[p + "experts.gate"],
+                            pv[p + "experts.down"], gmat, eflags[l],
+                            kappa, lam, bits_dac, bits_adc)
+            if cfg.d_shared:
+                y = y + gated_mlp(u, pv[p + "shared.up"], pv[p + "shared.gate"],
+                                  pv[p + "shared.down"], dflags[l],
+                                  kappa, lam, bits_dac, bits_adc)
+            if collect_router:
+                router_stats.append((gmat, probs))
+        else:
+            y = gated_mlp(u, pv[p + "ffn.up"], pv[p + "ffn.gate"],
+                          pv[p + "ffn.down"], dflags[l],
+                          kappa, lam, bits_dac, bits_adc)
+        x = x + y.reshape(b, t, d)
+    return x, router_stats
+
+
+def token_logprobs(cfg, pv, x, targets, lm_flag, kappa, lam,
+                   bits_dac=8, bits_adc=8):
+    """log p(target_t | ...) per position. x [B, T, d] -> [B, T]."""
+    b, t, d = x.shape
+    h = layer_norm(x, pv["ln_f.s"], pv["ln_f.b"]).reshape(b * t, d)
+    logits = maybe_analog_linear(h, pv["lm_head"], lm_flag, kappa, lam,
+                                 bits_dac, bits_adc)
+    logp = jax.nn.log_softmax(logits, axis=-1).reshape(b, t, cfg.vocab)
+    return jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+def model_fwd(cfg, plist, tokens, targets, mask, flags, kappa, lam,
+              bits_dac=8, bits_adc=8):
+    """Scoring forward: per-sequence sum of masked target log-probs [B].
+
+    This is the eval hot path: choice scoring (argmax over per-choice
+    scores) and perplexity (exp(-sum(scores)/sum(mask))) both derive from
+    the returned vector, keeping the PJRT transfer tiny.
+    """
+    pv = ParamView(cfg, plist)
+    x, _ = backbone(cfg, pv, tokens, flags, kappa, lam, bits_dac, bits_adc)
+    lm_flag = split_flags(cfg, flags)[3]
+    logp = token_logprobs(cfg, pv, x, targets, lm_flag, kappa, lam,
+                          bits_dac, bits_adc)
+    return jnp.sum(logp * mask, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# training (digital only — the paper's deployment is retraining-free)
+# ---------------------------------------------------------------------------
+
+def train_loss(cfg, plist, tokens, targets, mask):
+    pv = ParamView(cfg, plist)
+    zero_flags = jnp.zeros((flags_len(cfg),), jnp.float32)
+    x, stats = backbone(cfg, pv, tokens, zero_flags, 1.0, 1.0,
+                        collect_router=True)
+    logp = token_logprobs(cfg, pv, x, targets, 0.0, 1.0, 1.0)
+    nll = -jnp.sum(logp * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    # Switch-transformer load-balance auxiliary: E * sum_e f_e * P_e
+    aux = 0.0
+    for gmat, probs in stats:
+        f_e = jnp.mean((gmat > 0).astype(jnp.float32), axis=0)
+        p_e = jnp.mean(probs, axis=0)
+        aux = aux + cfg.n_experts * jnp.sum(f_e * p_e)
+    n_moe = max(sum(cfg.is_moe_layer(l) for l in range(cfg.n_layers)), 1)
+    return nll + cfg.aux_loss_coef * aux / n_moe, nll
+
+
+def train_step(cfg, plist, mlist, tokens, targets, mask, lr):
+    """One SGD-momentum step. Returns (plist', mlist', nll)."""
+    (loss, nll), grads = jax.value_and_grad(
+        lambda ps: train_loss(cfg, ps, tokens, targets, mask), has_aux=True
+    )(list(plist))
+    new_p, new_m = [], []
+    for p, m, g in zip(plist, mlist, grads):
+        m2 = cfg.momentum * m + g
+        new_p.append(p - lr * m2)
+        new_m.append(m2)
+    return new_p, new_m, nll
+
+
+# ---------------------------------------------------------------------------
+# per-sublayer entry points for the Rust serving engine
+# ---------------------------------------------------------------------------
+
+def attn_block(cfg, x, ln1_s, ln1_b, wq, wk, wv, wo, flag, kappa, lam):
+    """y = x + MHSA(LN(x)); the attention sublayer as one dispatchable unit."""
+    a = layer_norm(x, ln1_s, ln1_b)
+    return x + attention(cfg, a, wq, wk, wv, wo, flag, kappa, lam, 8, 8)
+
+
+def expert_ffn_digital(x, w_up, w_gate, w_down):
+    """Exact gated-MLP expert for the digital accelerator. x [cap, d]."""
+    act = silu(x @ w_up) * (x @ w_gate)
+    return act @ w_down
+
+
+def expert_ffn_analog(x, w_up, w_gate, w_down, kappa, lam,
+                      bits_dac=8, bits_adc=8, tile=512):
+    """Analog gated-MLP expert via the L1 Pallas crossbar kernel.
+
+    beta_in for the up/gate tiles comes from the live input batch std; the
+    down tile's beta_in from the intermediate activation std — the same
+    rule the monolithic graph uses, so serving == eval numerics.
+    """
+    beta_up = batch_beta_in(x, kappa)
+    up = pk.aimc_mvm(x, w_up, beta_up, lam, bits_dac, bits_adc, tile)
+    gate = pk.aimc_mvm(x, w_gate, beta_up, lam, bits_dac, bits_adc, tile)
+    act = silu(up) * gate
+    beta_dn = batch_beta_in(act, kappa)
+    return pk.aimc_mvm(act, w_down, beta_dn, lam, bits_dac, bits_adc, tile)
+
+
+def lm_head_score(cfg, h, ln_s, ln_b, w, targets, flag, kappa, lam):
+    """Final-norm + LM head + target log-prob, as one unit. h [N, d]."""
+    hh = layer_norm(h, ln_s, ln_b)
+    logits = maybe_analog_linear(hh, w, flag, kappa, lam, 8, 8)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]

@@ -1,0 +1,118 @@
+"""Synthetic language + task generation tests."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+@pytest.fixture(scope="module")
+def lang():
+    return D.Language(vocab=512, seed=1234)
+
+
+def test_zipf_distribution_is_heavy_tailed(lang):
+    p = lang.zipf_p
+    assert abs(p.sum() - 1.0) < 1e-12
+    # head words much more likely than tail
+    assert p[0] > 50 * p[-1]
+
+
+def test_successor_table_is_permutation(lang):
+    s = np.sort(lang.succ)
+    assert (s == np.arange(lang.n_words)).all()
+
+
+def test_chain_follows_successors(lang):
+    c = lang.chain(5, 4)
+    assert c[0] == lang.word(5)
+    assert c[1] == lang.word(int(lang.succ[5]))
+
+
+def test_rows_shape_and_padding(lang):
+    rng = np.random.default_rng(0)
+    rows = D.make_rows(lang, rng, 50, 32)
+    assert rows.shape == (50, 32)
+    assert (rows[:, 0] == D.BOS).all()
+    # PAD only as suffix
+    for r in rows:
+        nz = np.nonzero(r == D.PAD)[0]
+        if len(nz):
+            assert (r[nz[0]:] == D.PAD).all()
+
+
+def test_rows_to_batch_masks():
+    rows = np.array([[1, 10, 11, 0, 0]], np.int32)
+    tk, tg, mk = D.rows_to_batch(rows)
+    assert (tg[0, :2] == [10, 11]).all()
+    assert mk[0].sum() == 2.0
+
+
+def test_generate_all_deterministic():
+    _, t1, c1, tasks1 = D.generate_all(512, 32, 100, 16, 8, seed=7)
+    _, t2, c2, tasks2 = D.generate_all(512, 32, 100, 16, 8, seed=7)
+    assert (t1 == t2).all() and (c1 == c2).all()
+    assert tasks1[0]["items"] == tasks2[0]["items"]
+    _, t3, _, _ = D.generate_all(512, 32, 100, 16, 8, seed=8)
+    assert not (t1 == t3).all()
+
+
+@pytest.mark.parametrize("name,fn", D.TASKS)
+def test_task_items_well_formed(lang, name, fn):
+    rng = np.random.default_rng(42)
+    task = D.make_task(lang, rng, name, fn, 16, 32)
+    assert task["name"] == name
+    nc = task["n_choices"]
+    assert nc in (2, 4)
+    golds = []
+    for item in task["items"]:
+        assert len(item["choices"]) == nc
+        assert 0 <= item["gold"] < nc
+        # all tokens in range
+        for t in item["ctx"]:
+            assert 0 <= t < 512
+        for c in item["choices"]:
+            assert len(c) >= 1
+            for t in c:
+                assert 0 <= t < 512
+        # fits the sequence length
+        longest = max(len(c) for c in item["choices"])
+        assert len(item["ctx"]) + longest <= 32
+        golds.append(item["gold"])
+    # gold positions shuffled (not all identical)
+    assert len(set(golds)) > 1
+
+
+def test_task_gold_choices_are_correct_continuations(lang):
+    """The gold chain continuation must actually follow the grammar."""
+    rng = np.random.default_rng(3)
+    task = D.make_task(lang, rng, "syn-hella", D.task_hella, 8, 32)
+    for item in task["items"]:
+        ctx = item["ctx"]
+        gold = item["choices"][item["gold"]]
+        last = ctx[-1] - D.WORD0
+        want = lang.chain(int(lang.succ[last]), len(gold))
+        assert gold == want
+
+
+def test_mathqa_answers_correct(lang):
+    rng = np.random.default_rng(4)
+    task = D.make_task(lang, rng, "syn-mathqa", D.task_mathqa, 32, 32)
+    for item in task["items"]:
+        ctx = item["ctx"]
+        a = ctx[2] - D.DIGIT0
+        op = ctx[3]
+        b = ctx[4] - D.DIGIT0
+        want = (a + b) % 10 if op == D.OP_PLUS else (a * b) % 10
+        gold_tok = item["choices"][item["gold"]][0]
+        assert gold_tok == D.DIGIT0 + want
+
+
+def test_token_frequencies_zipfian():
+    _, rows, _, _ = D.generate_all(512, 32, 500, 16, 4, seed=1)
+    freq = D.token_frequencies(rows, 512)
+    words = freq[D.WORD0:]
+    # head of the Zipf word range is far denser than the tail
+    head_rate = words[:20].mean()
+    tail_rate = words[-200:].mean()
+    assert head_rate > 5 * tail_rate, (head_rate, tail_rate)

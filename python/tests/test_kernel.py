@@ -1,0 +1,144 @@
+"""L1 correctness: the Pallas AIMC crossbar kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the analog compute path — the
+serving engine's analog expert FFN executes exactly this kernel (lowered
+into expert_ffn_analog.hlo.txt), so kernel == ref means serving == eval.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aimc_mvm as K
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("t,d,n", [(1, 8, 8), (8, 48, 64), (4, 64, 48), (16, 33, 17)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_kernel_matches_ref_single_tile(t, d, n, bits):
+    x = rand((t, d), 1)
+    w = rand((d, n), 2, 0.1)
+    r = ref.aimc_mvm_ref(jnp.asarray(x), jnp.asarray(w), 2.5, 1.0, bits, bits)
+    k = K.aimc_mvm(jnp.asarray(x), jnp.asarray(w), 2.5, 1.0, bits, bits)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r), atol=1e-6)
+
+
+@pytest.mark.parametrize("t,d,n,tile", [
+    (2, 600, 300, 512),   # ragged rows
+    (2, 300, 600, 512),   # ragged cols
+    (3, 700, 700, 512),   # both ragged
+    (2, 128, 96, 32),     # many small tiles
+])
+def test_kernel_matches_ref_multi_tile(t, d, n, tile):
+    x = rand((t, d), 3)
+    w = rand((d, n), 4, 0.05)
+    r = ref.aimc_mvm_ref(jnp.asarray(x), jnp.asarray(w), 3.0, 1.2, tile=tile)
+    k = K.aimc_mvm(jnp.asarray(x), jnp.asarray(w), 3.0, 1.2, tile=tile)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 8),
+    d=st.integers(2, 96),
+    n=st.integers(2, 96),
+    beta=st.floats(0.5, 8.0),
+    lam=st.floats(0.5, 2.5),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_hypothesis(t, d, n, beta, lam, seed):
+    """Property: kernel == oracle across random shapes and quant ranges."""
+    x = rand((t, d), seed)
+    w = rand((d, n), seed + 1, 0.1)
+    r = ref.aimc_mvm_ref(jnp.asarray(x), jnp.asarray(w), beta, lam)
+    k = K.aimc_mvm(jnp.asarray(x), jnp.asarray(w), beta, lam)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r), atol=1e-5)
+
+
+def test_gated_ffn_analog_matches_ref():
+    x = rand((8, 48), 5)
+    wu, wg = rand((48, 64), 6, 0.1), rand((48, 64), 7, 0.1)
+    wd = rand((64, 48), 8, 0.1)
+    beta_up = 8.0 * float(np.std(x)) + 1e-6
+    up = ref.aimc_mvm_ref(jnp.asarray(x), jnp.asarray(wu), beta_up, 1.0)
+    gate = ref.aimc_mvm_ref(jnp.asarray(x), jnp.asarray(wg), beta_up, 1.0)
+    act = np.asarray(ref.silu(up) * gate)
+    beta_dn = 8.0 * float(np.std(act)) + 1e-6
+    want = ref.aimc_mvm_ref(jnp.asarray(act), jnp.asarray(wd), beta_dn, 1.0)
+    from compile.model import expert_ffn_analog
+    got = expert_ffn_analog(jnp.asarray(x), jnp.asarray(wu), jnp.asarray(wg),
+                            jnp.asarray(wd), 8.0, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantization semantics (eqs 4-5)
+# ---------------------------------------------------------------------------
+
+def test_dac_quant_clamps_and_rounds():
+    x = jnp.asarray([0.0, 0.5, 5.0, -5.0], jnp.float32)
+    q = np.asarray(ref.dac_quant(x, 1.0, 8))
+    assert q[0] == 0.0
+    assert abs(q[1] - round(0.5 * 127) / 127) < 1e-7
+    assert q[2] == 1.0 and q[3] == -1.0
+
+
+def test_dac_error_bounded():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-2, 2, 1000).astype(np.float32)
+    q = np.asarray(ref.dac_quant(jnp.asarray(x), 2.0, 8))
+    step = 2.0 / 127
+    assert np.max(np.abs(q - x)) <= step / 2 + 1e-6
+
+
+def test_higher_adc_bits_reduce_error():
+    rng = np.random.default_rng(1)
+    y = rng.standard_normal(2000).astype(np.float32)
+    e8 = np.abs(np.asarray(ref.adc_quant(jnp.asarray(y), 4.0, 8)) - y).mean()
+    e12 = np.abs(np.asarray(ref.adc_quant(jnp.asarray(y), 4.0, 12)) - y).mean()
+    assert e12 < e8 / 8
+
+
+def test_beta_out_guards_zero_columns():
+    w = jnp.zeros((4, 3), jnp.float32)
+    bo = np.asarray(ref.beta_out_for(w, 1.0, 1.0))
+    assert (bo > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# programming noise (eq 3) — oracle for the Rust implementation
+# ---------------------------------------------------------------------------
+
+def test_programming_sigma_branches():
+    # |W| = Wmax → HI branch: (0.012 + 0.245 - 0.54 + 0.40) * Wmax
+    s = ref.programming_sigma(np.array([1.0]), 1.0)
+    assert abs(s[0] - 0.117) < 1e-12
+    s0 = ref.programming_sigma(np.array([0.0]), 1.0)
+    assert abs(s0[0] - 0.014) < 1e-12
+
+
+def test_programming_sigma_nonnegative():
+    w = np.linspace(0, 1, 1001)
+    assert (ref.programming_sigma(w, 1.0) >= 0).all()
+
+
+def test_program_weights_statistics():
+    rng = np.random.default_rng(2)
+    w = np.full((4000, 1), 0.5, np.float32)
+    noisy = ref.program_weights_ref(w, rng, 1.0)
+    sigma = ref.programming_sigma(np.array([0.5]), 0.5)[0]
+    emp = np.std(noisy - w)
+    assert abs(emp - sigma) / sigma < 0.08
+
+
+def test_program_weights_scale_zero_is_identity():
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((16, 8)).astype(np.float32)
+    out = ref.program_weights_ref(w, rng, 0.0)
+    np.testing.assert_array_equal(out, w)

@@ -1,0 +1,145 @@
+"""L2 model tests: shapes, flag semantics, training dynamics, ABI."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile.configs import CONFIGS, ModelConfig
+
+TINY = ModelConfig(
+    name="tiny", vocab=64, seq_len=12, d_model=16, n_heads=2, n_layers=2,
+    n_experts=4, top_k=2, d_expert=8, batch=4, train_steps=2,
+)
+TINY_DS = ModelConfig(
+    name="tiny_ds", vocab=64, seq_len=12, d_model=16, n_heads=2, n_layers=2,
+    n_experts=4, top_k=2, d_expert=8, d_shared=6, dense_first_layer=True,
+    d_dense_ffn=20, batch=4, train_steps=2, seed=1,
+)
+
+
+def make_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(1, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    targets = rng.integers(1, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    mask = np.ones((cfg.batch, cfg.seq_len), np.float32)
+    return jnp.asarray(tokens), jnp.asarray(targets), jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_DS], ids=["olmoe-style", "dsmoe-style"])
+def test_param_specs_and_init_consistent(cfg):
+    specs = M.param_specs(cfg)
+    params = M.init_params(cfg)
+    assert len(specs) == len(params)
+    for (name, shape), arr in zip(specs, params):
+        assert arr.shape == tuple(shape), name
+    # names unique
+    names = [n for n, _ in specs]
+    assert len(names) == len(set(names))
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_DS], ids=["olmoe-style", "dsmoe-style"])
+def test_model_fwd_shape_and_finite(cfg):
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    tk, tg, mk = make_batch(cfg)
+    flags = jnp.zeros((M.flags_len(cfg),), jnp.float32)
+    out = M.model_fwd(cfg, params, tk, tg, mk, flags, 8.0, 1.0)
+    assert out.shape == (cfg.batch,)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_digital_flags_are_exact():
+    """flags=0 must be bit-identical to a quant-free forward."""
+    cfg = TINY
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    tk, tg, mk = make_batch(cfg)
+    z = jnp.zeros((M.flags_len(cfg),), jnp.float32)
+    a = M.model_fwd(cfg, params, tk, tg, mk, z, 8.0, 1.0)
+    b = M.model_fwd(cfg, params, tk, tg, mk, z, 40.0, 2.0)  # kappa/lam unused
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_analog_flags_change_output_only_for_flagged_modules():
+    cfg = TINY
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    tk, tg, mk = make_batch(cfg)
+    z = np.zeros((M.flags_len(cfg),), np.float32)
+    base = np.asarray(M.model_fwd(cfg, params, tk, tg, mk, jnp.asarray(z), 8.0, 1.0))
+    # flag one expert analog → output changes (DAC-ADC error)
+    f = z.copy()
+    f[0] = 1.0
+    out = np.asarray(M.model_fwd(cfg, params, tk, tg, mk, jnp.asarray(f), 8.0, 1.0))
+    assert not np.allclose(out, base, atol=1e-9)
+    # with very aggressive low-bit quant, the change is larger
+    out4 = np.asarray(M.model_fwd(cfg, params, tk, tg, mk, jnp.asarray(f), 8.0, 1.0,
+                                  bits_dac=3, bits_adc=3))
+    assert np.abs(out4 - base).mean() > np.abs(out - base).mean()
+
+
+def test_router_gates_topk_structure():
+    cfg = TINY
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.standard_normal((10, cfg.d_model)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((cfg.d_model, cfg.n_experts)).astype(np.float32))
+    gmat, probs = M.router_gates(cfg, u, w)
+    g = np.asarray(gmat)
+    # exactly top_k nonzero per row, gates sum to 1
+    assert ((g > 0).sum(axis=1) == cfg.top_k).all()
+    np.testing.assert_allclose(g.sum(axis=1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(probs).sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_router_gates_match_lax_topk_selection():
+    """The iterative masked-argmax must select the same experts as
+    jax.lax.top_k (the XLA-0.5.1-parser-safe replacement; see model.py)."""
+    cfg = TINY
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.standard_normal((32, cfg.d_model)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((cfg.d_model, cfg.n_experts)).astype(np.float32))
+    gmat, _ = M.router_gates(cfg, u, w)
+    scores = np.asarray(u @ w)
+    _, want = jax.lax.top_k(jnp.asarray(scores), cfg.top_k)
+    got = np.argsort(-np.asarray(gmat), axis=1)[:, :cfg.top_k]
+    assert (np.sort(got, axis=1) == np.sort(np.asarray(want), axis=1)).all()
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_DS], ids=["olmoe-style", "dsmoe-style"])
+def test_train_step_reduces_loss(cfg):
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    moms = [jnp.zeros_like(p) for p in params]
+    lang = D.Language(vocab=cfg.vocab, seed=9)
+    rng = np.random.default_rng(9)
+    rows = D.make_rows(lang, rng, 64, cfg.seq_len)
+    step = jax.jit(lambda p, m, t, y, mk, lr: M.train_step(cfg, p, m, t, y, mk, lr))
+    first = None
+    for i in range(30):
+        idx = rng.integers(0, rows.shape[0], cfg.batch)
+        tk, tg, mk = D.rows_to_batch(rows[idx])
+        params, moms, nll = step(params, moms, jnp.asarray(tk), jnp.asarray(tg),
+                                 jnp.asarray(mk), jnp.float32(0.1))
+        if first is None:
+            first = float(nll)
+    assert float(nll) < first, f"{first} → {float(nll)}"
+
+
+def test_flags_split_layout():
+    cfg = TINY
+    F = M.flags_len(cfg)
+    assert F == cfg.n_layers * cfg.n_experts + 2 * cfg.n_layers + 1
+    flags = jnp.arange(F, dtype=jnp.float32)
+    e, a, d, lm = M.split_flags(cfg, flags)
+    assert e.shape == (cfg.n_layers, cfg.n_experts)
+    assert float(e[1, 2]) == cfg.n_experts + 2
+    assert float(a[0]) == cfg.n_layers * cfg.n_experts
+    assert float(lm) == F - 1
+
+
+def test_real_configs_have_positive_dims():
+    for cfg in CONFIGS.values():
+        assert cfg.d_model % cfg.n_heads == 0
+        assert 0 < cfg.top_k <= cfg.n_experts
+        specs = M.param_specs(cfg)
+        assert specs[0][0] == "embed"
+        assert specs[-1][0] == "lm_head"

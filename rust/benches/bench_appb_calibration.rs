@@ -1,0 +1,54 @@
+//! Appendix B (Tables 3-10) — κ and λ calibration vs perplexity.
+//!
+//! For each model and each noise scope (experts only / experts+dense):
+//! sweep κ at λ=1 on the calibration split, then sweep λ at the best κ —
+//! exactly the two-stage procedure of §2.2. Shape: κ has an interior
+//! optimum (small κ clips activations hard, large κ wastes DAC
+//! resolution); λ is flatter with an interior optimum.
+
+use hetmoe::aimc::calib::Calibrator;
+use hetmoe::bench::{bench_models, env_usize, BenchCtx};
+use hetmoe::moe::placement::Placement;
+use hetmoe::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let max_rows = env_usize("HETMOE_BENCH_CALIB_ROWS", 96);
+    for model in bench_models() {
+        let mut ctx = BenchCtx::new(&model)?;
+        let cfg = ctx.cfg.clone();
+        for (scope, placement) in [
+            ("experts", Placement::all_experts_analog(&cfg)),
+            ("experts+dense", Placement::all_analog(&cfg)),
+        ] {
+            let cal = Calibrator {
+                kappa_grid: vec![2.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0],
+                lam_grid: vec![0.75, 0.9, 1.0, 1.125, 1.25, 1.5, 2.0],
+            };
+            let res = cal.run(|k, l| {
+                ctx.ppl(&placement, k as f32, l as f32, max_rows)
+                    .unwrap_or(f64::INFINITY)
+            });
+            let mut t = Table::new(
+                &format!("App. B — {model}, DAC-ADC on {scope}: κ vs PPL (λ=1)"),
+                &["κ", "PPL"],
+            );
+            for (k, p) in &res.kappa_sweep {
+                t.row(vec![format!("{k}"), format!("{p:.3}")]);
+            }
+            t.print();
+            let mut t = Table::new(
+                &format!("App. B — {model}, {scope}: λ vs PPL (κ={})", res.kappa),
+                &["λ", "PPL"],
+            );
+            for (l, p) in &res.lam_sweep {
+                t.row(vec![format!("{l}"), format!("{p:.3}")]);
+            }
+            t.print();
+            println!(
+                "calibrated: κ={} λ={} → PPL {:.3}\n",
+                res.kappa, res.lam, res.ppl
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Figures 4 & 5 — digital expert selection methods under programming
+//! noise, for OLMoE-mini (Fig 4) and DeepSeekMoE-mini (Fig 5).
+//!
+//! Series: MaxNNScore (ours), Activation Frequency, Activation Weight,
+//! Router Norm, Random — each at Γ ∈ {1/8, 1/4} across noise magnitudes,
+//! plus the Γ=0 (all experts analog) reference.
+
+use hetmoe::bench::{bench_items, bench_models, bench_seeds, BenchCtx};
+use hetmoe::moe::placement::{plan_placement, Placement, PlacementOptions};
+use hetmoe::moe::score::SelectionMetric;
+use hetmoe::util::table::{pm, Table};
+
+fn main() -> anyhow::Result<()> {
+    let items = bench_items();
+    let seeds = bench_seeds();
+    let noises = [2.0, 5.0, 8.0]; // mini-scale mapping of the paper's 1.0/1.75/2.5
+    let gammas = [0.125, 0.25];
+    let metrics = [
+        SelectionMetric::MaxNNScore,
+        SelectionMetric::ActivationFrequency,
+        SelectionMetric::ActivationWeight,
+        SelectionMetric::RouterNorm,
+        SelectionMetric::Random,
+    ];
+    for model in bench_models() {
+        let fig = if model.starts_with("olmoe") { "Fig 4" } else { "Fig 5" };
+        let mut ctx = BenchCtx::new(&model)?;
+        let cfg = ctx.cfg.clone();
+        let stats = ctx.collect_router_stats(128)?;
+
+        let mut header: Vec<String> = vec!["Γ".into(), "method".into()];
+        header.extend(noises.iter().map(|n| format!("acc @ noise {n}")));
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("{fig} — {model}: digital expert selection (mean ± se, {seeds} seeds)"),
+            &header_refs,
+        );
+
+        // digital reference
+        let digital = Placement::all_digital(&cfg);
+        let (_, dig_avg) = ctx.eval_cell(&digital, 0.0, 0, items)?;
+        let mut row = vec!["1.0".to_string(), "digital (FP)".to_string()];
+        row.extend(noises.iter().map(|_| format!("{:.2}", dig_avg * 100.0)));
+        t.row(row);
+
+        // Γ=0 reference: all experts analog
+        let all_analog = Placement::all_experts_analog(&cfg);
+        let mut row = vec!["0".to_string(), "none".to_string()];
+        for &n in &noises {
+            let (m, s) = ctx.eval_seeds(&all_analog, n, seeds, items)?;
+            row.push(pm(m * 100.0, s * 100.0));
+        }
+        t.row(row);
+
+        for &gamma in &gammas {
+            for &metric in &metrics {
+                let placement = plan_placement(
+                    &cfg,
+                    &ctx.params,
+                    &PlacementOptions { metric, gamma, seed: 0 },
+                    Some(&stats),
+                )?;
+                let mut row = vec![format!("{gamma}"), metric.name().to_string()];
+                for &n in &noises {
+                    let (m, s) = ctx.eval_seeds(&placement, n, seeds, items)?;
+                    row.push(pm(m * 100.0, s * 100.0));
+                }
+                t.row(row);
+            }
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "shape targets (paper Figs 4-5): MaxNNScore ≥ every baseline with a \
+         widening gap in noise; Γ=1/8 recovers ≥⅓ of the Γ=0 drop and \
+         Γ=1/4 about half."
+    );
+    Ok(())
+}

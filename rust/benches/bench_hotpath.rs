@@ -1,0 +1,157 @@
+//! Hot-path performance benchmarks — the §Perf baseline/after numbers in
+//! EXPERIMENTS.md. Measures every stage the request path exercises:
+//!
+//! - `model_fwd` scoring latency + throughput (the eval hot path)
+//! - weight-programming throughput (noise application, per-seed cost)
+//! - serving-engine end-to-end throughput (digital vs heterogeneous)
+//! - batcher + router overhead in isolation
+
+use std::time::Instant;
+
+use hetmoe::aimc::program::{program_matrix, NoiseModel};
+use hetmoe::bench::{env_usize, BenchCtx};
+use hetmoe::coordinator::{Batcher, Engine, Request};
+use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
+use hetmoe::moe::score::SelectionMetric;
+use hetmoe::util::table::Table;
+use hetmoe::util::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let reps = env_usize("HETMOE_BENCH_REPS", 8);
+    let mut ctx = BenchCtx::new("olmoe_mini")?;
+    let cfg = ctx.cfg.clone();
+    let mut t = Table::new("hot-path microbenchmarks", &["stage", "metric", "value"]);
+
+    // --- eval hot path: model_fwd batch scoring ---
+    let digital = Placement::all_digital(&cfg);
+    let flags = digital.to_flags(&cfg);
+    let tokens = vec![1i32; cfg.batch * cfg.seq_len];
+    let targets = vec![2i32; cfg.batch * cfg.seq_len];
+    let mask = vec![1f32; cfg.batch * cfg.seq_len];
+    // warm-up (compile+upload)
+    let (rt_tokens, kappa, lam) = (tokens.clone(), ctx.aimc.kappa, ctx.aimc.lam);
+    {
+        let (rt, params, ev) = (&ctx.rt, &mut ctx.params, &mut ctx.ev);
+        ev.score_rows(rt, params, &rt_tokens, &targets, &mask, &flags, kappa, lam)?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            ev.score_rows(rt, params, &tokens, &targets, &mask, &flags, kappa, lam)?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        t.row(vec![
+            "model_fwd".into(),
+            "batch latency".into(),
+            format!("{:.1} ms ({} seqs)", dt * 1e3, cfg.batch),
+        ]);
+        t.row(vec![
+            "model_fwd".into(),
+            "throughput".into(),
+            format!("{:.0} tokens/s", (cfg.batch * cfg.seq_len) as f64 / dt),
+        ]);
+    }
+
+    // --- programming-noise application ---
+    let (d, m) = (512usize, 512usize);
+    let mut w = vec![0.1f32; d * m];
+    let model = NoiseModel::default();
+    let mut rng = Prng::new(0);
+    let t0 = Instant::now();
+    let n_prog = 20;
+    for _ in 0..n_prog {
+        program_matrix(&mut w, d, m, &model, &mut rng);
+    }
+    let per = t0.elapsed().as_secs_f64() / n_prog as f64;
+    t.row(vec![
+        "aimc::program".into(),
+        "512×512 tile".into(),
+        format!("{:.2} ms ({:.1} Mweights/s)", per * 1e3, d as f64 * m as f64 / per / 1e6),
+    ]);
+
+    // full-model re-program cost (the per-seed cost of noise sweeps)
+    let placement = plan_placement(
+        &cfg,
+        &ctx.params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.0, seed: 0 },
+        None,
+    )?;
+    let snap = ctx.params.snapshot();
+    let t0 = Instant::now();
+    apply_placement(&cfg, &mut ctx.params, &placement, &model, 0)?;
+    let dt = t0.elapsed().as_secs_f64();
+    ctx.params.restore(&snap)?;
+    t.row(vec![
+        "apply_placement".into(),
+        "all experts".into(),
+        format!("{:.1} ms / seed", dt * 1e3),
+    ]);
+
+    // --- serving engine ---
+    for (label, gamma) in [("digital", 1.0f64), ("heterogeneous Γ=0.25", 0.25)] {
+        let placement = if gamma >= 1.0 {
+            Placement::all_digital(&cfg)
+        } else {
+            plan_placement(
+                &cfg,
+                &ctx.params,
+                &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma, seed: 0 },
+                None,
+            )?
+        };
+        let mut engine = Engine::new(
+            &mut ctx.rt,
+            &ctx.paths,
+            cfg.clone(),
+            ctx.aimc,
+            ctx.serve_cap,
+            placement,
+            &ctx.params,
+        )?;
+        let reqs: Vec<Request> = (0..cfg.batch)
+            .map(|i| Request {
+                id: i as u64,
+                tokens: vec![1; cfg.seq_len],
+                targets: vec![2; cfg.seq_len],
+                mask: vec![1.0; cfg.seq_len],
+                arrived: 0,
+            })
+            .collect();
+        engine.serve_batch(&ctx.rt, &reqs)?; // warm-up
+        let t0 = Instant::now();
+        let n = 4;
+        for _ in 0..n {
+            engine.serve_batch(&ctx.rt, &reqs)?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / n as f64;
+        t.row(vec![
+            format!("engine ({label})"),
+            "batch latency".into(),
+            format!("{:.1} ms → {:.0} tokens/s", dt * 1e3,
+                    (cfg.batch * cfg.seq_len) as f64 / dt),
+        ]);
+    }
+
+    // --- batcher in isolation ---
+    let mut b = Batcher::new(cfg.batch, 8, cfg.batch * 4);
+    let t0 = Instant::now();
+    let n_ops = 100_000;
+    for i in 0..n_ops {
+        b.submit(Request {
+            id: i as u64,
+            tokens: Vec::new(),
+            targets: Vec::new(),
+            mask: Vec::new(),
+            arrived: 0,
+        });
+        b.tick(1);
+        while b.next_batch(false).is_some() {}
+    }
+    let per = t0.elapsed().as_secs_f64() / n_ops as f64;
+    t.row(vec![
+        "batcher".into(),
+        "submit+poll".into(),
+        format!("{:.0} ns/op", per * 1e9),
+    ]);
+
+    t.print();
+    Ok(())
+}

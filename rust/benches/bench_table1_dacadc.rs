@@ -1,0 +1,44 @@
+//! Table 1 — accuracy under DAC-ADC noise (no programming noise).
+//!
+//! Rows per model: Digital (FP) baseline, DAC-ADC on experts only,
+//! DAC-ADC on experts + dense modules. Paper shape: experts-only is a
+//! tiny drop (calibrated DAC-ADC is nearly free); adding the dense
+//! modules degrades clearly.
+
+use hetmoe::bench::{bench_items, bench_models, BenchCtx};
+use hetmoe::moe::placement::Placement;
+use hetmoe::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let items = bench_items();
+    for model in bench_models() {
+        let mut ctx = BenchCtx::new(&model)?;
+        let cfg = ctx.cfg.clone();
+        let mut t = Table::new(
+            &format!("Table 1 — {model}: DAC-ADC noise (8-bit, κ={}, λ={})",
+                     ctx.aimc.kappa, ctx.aimc.lam),
+            &["noise", "modules", "PIQA", "ARC-e", "ARC-c", "BoolQ", "HellaS.",
+              "Wino.", "MathQA", "MMLU", "Avg."],
+        );
+        // programming noise disabled throughout (scale 0); the flags
+        // alone switch the in-graph DAC-ADC path per module group.
+        let cells: [(&str, &str, Placement); 3] = [
+            ("Digital (FP)", "—", Placement::all_digital(&cfg)),
+            ("DAC-ADC", "Experts", Placement::all_experts_analog(&cfg)),
+            ("DAC-ADC", "Experts+Dense", Placement::all_analog(&cfg)),
+        ];
+        for (noise_lbl, modules, placement) in cells {
+            let (accs, avg) = ctx.eval_cell(&placement, 0.0, 0, items)?;
+            let mut row = vec![noise_lbl.to_string(), modules.to_string()];
+            row.extend(accs.iter().map(|a| format!("{:.2}", a * 100.0)));
+            row.push(format!("{:.2}", avg * 100.0));
+            t.row(row);
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "shape target (paper Table 1): Digital ≈ Experts-only ≫ Experts+Dense."
+    );
+    Ok(())
+}

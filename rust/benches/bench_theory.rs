@@ -1,0 +1,56 @@
+//! Lemma 4.1 + Theorem 4.2 — the theory experiments across α.
+//!
+//! Regenerates the paper's theoretical claims empirically on the §4
+//! analytical setup: (i) frequent-token specialists carry larger
+//! MaxNNScore; (ii) the tolerable programming-noise magnitude under the
+//! heterogeneous scheme exceeds the all-analog one by a factor that
+//! grows like (1−α)/α.
+
+use hetmoe::bench::env_usize;
+use hetmoe::theory::{lemma41_experiment, theorem42_experiment, TheoryConfig};
+use hetmoe::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let steps = env_usize("HETMOE_BENCH_THEORY_STEPS", 400);
+    let seeds = env_usize("HETMOE_BENCH_SEEDS", 3);
+
+    let mut t41 = Table::new(
+        "Lemma 4.1 — MaxNNScore of frequent vs rare specialists",
+        &["α", "score (frequent)", "score (rare)", "ratio", "holds"],
+    );
+    let mut t42 = Table::new(
+        "Theorem 4.2 — tolerable noise c (acc ≥ 0.95), γ=0.5 digital",
+        &["α", "c_analog", "c_het", "ratio", "(1-α)/α"],
+    );
+    let c_grid: Vec<f64> = (0..=24)
+        .map(|i| 0.01 * (3.0f64 / 0.01).powf(i as f64 / 24.0))
+        .collect();
+    for alpha in [0.0625, 0.125, 0.1875, 0.25] {
+        let cfg = TheoryConfig { alpha, steps, seed: 1, ..Default::default() };
+        let r41 = lemma41_experiment(&cfg);
+        t41.row(vec![
+            format!("{alpha}"),
+            format!("{:.3}", r41.mean_freq),
+            format!("{:.3}", r41.mean_rare),
+            format!("{:.2}×", r41.mean_freq / r41.mean_rare.max(1e-9)),
+            format!("{}", r41.holds),
+        ]);
+        let r42 = theorem42_experiment(&cfg, 0.5, &c_grid, 0.95, seeds);
+        t42.row(vec![
+            format!("{alpha}"),
+            format!("{:.3}", r42.c_analog),
+            format!("{:.3}", r42.c_het),
+            format!("{:.2}×", r42.c_het / r42.c_analog.max(1e-9)),
+            format!("{:.2}×", (1.0 - alpha) / alpha),
+        ]);
+    }
+    t41.print();
+    println!();
+    t42.print();
+    println!(
+        "\nshape targets: Lemma 4.1 holds at every α; the Thm 4.2 ratio \
+         increases as α decreases (the Ω((1-α)/α) bound is asymptotic — \
+         the monotone trend is the claim)."
+    );
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! DAC-ADC calibration (§2.2 "DAC-ADC calibration" + Appendix B).
+//!
+//! Per tile the paper sets `β_in = κ · std(x)` with an exponential moving
+//! average of the input std over a calibration set, then grid-searches
+//! the *global* hyper-parameters κ and λ against perplexity. This module
+//! provides both pieces:
+//!
+//! - [`EmaStd`] — the running EMA std estimator;
+//! - [`Calibrator`] — the two-stage κ→λ grid search over any
+//!   perplexity oracle (the eval harness provides the real one; tests
+//!   use synthetic convex oracles).
+
+/// Exponential-moving-average estimator of an activation stream's std.
+#[derive(Clone, Debug)]
+pub struct EmaStd {
+    pub decay: f64,
+    ema_var: f64,
+    initialized: bool,
+}
+
+impl EmaStd {
+    pub fn new(decay: f64) -> EmaStd {
+        assert!((0.0..1.0).contains(&decay));
+        EmaStd { decay, ema_var: 0.0, initialized: false }
+    }
+
+    /// Fold one batch of activations into the EMA.
+    pub fn update(&mut self, xs: &[f32]) {
+        if xs.is_empty() {
+            return;
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        if self.initialized {
+            self.ema_var = self.decay * self.ema_var + (1.0 - self.decay) * var;
+        } else {
+            self.ema_var = var;
+            self.initialized = true;
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.ema_var.sqrt()
+    }
+
+    /// β_in = κ · EMA-std(x).
+    pub fn beta_in(&self, kappa: f64) -> f64 {
+        kappa * self.std()
+    }
+}
+
+/// Result of one calibration run.
+#[derive(Clone, Debug)]
+pub struct CalibResult {
+    pub kappa: f64,
+    pub lam: f64,
+    pub ppl: f64,
+    /// full (κ, ppl) sweep at λ = λ₀ — the rows of Appendix B tables 3/5/7/9
+    pub kappa_sweep: Vec<(f64, f64)>,
+    /// full (λ, ppl) sweep at the chosen κ — tables 4/6/8/10
+    pub lam_sweep: Vec<(f64, f64)>,
+}
+
+/// Two-stage grid calibration: sweep κ at λ=1, fix the argmin, then
+/// sweep λ. `ppl` is any oracle mapping (κ, λ) → perplexity.
+pub struct Calibrator {
+    pub kappa_grid: Vec<f64>,
+    pub lam_grid: Vec<f64>,
+}
+
+impl Default for Calibrator {
+    fn default() -> Self {
+        // the paper's Appendix B grids (union of the OLMoE/DeepSeek rows)
+        Calibrator {
+            kappa_grid: vec![4.0, 6.0, 8.0, 10.0, 15.0, 20.0, 25.0, 30.0, 35.0, 40.0],
+            lam_grid: vec![0.75, 0.9, 1.0, 1.125, 1.25, 1.5, 1.75, 2.0, 2.5],
+        }
+    }
+}
+
+impl Calibrator {
+    pub fn run<F: FnMut(f64, f64) -> f64>(&self, mut ppl: F) -> CalibResult {
+        let mut kappa_sweep = Vec::new();
+        let mut best_k = self.kappa_grid[0];
+        let mut best_ppl = f64::INFINITY;
+        for &k in &self.kappa_grid {
+            let p = ppl(k, 1.0);
+            kappa_sweep.push((k, p));
+            if p < best_ppl {
+                best_ppl = p;
+                best_k = k;
+            }
+        }
+        let mut lam_sweep = Vec::new();
+        let mut best_l = 1.0;
+        let mut best_ppl2 = f64::INFINITY;
+        for &l in &self.lam_grid {
+            let p = ppl(best_k, l);
+            lam_sweep.push((l, p));
+            if p < best_ppl2 {
+                best_ppl2 = p;
+                best_l = l;
+            }
+        }
+        CalibResult {
+            kappa: best_k,
+            lam: best_l,
+            ppl: best_ppl2,
+            kappa_sweep,
+            lam_sweep,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn ema_tracks_std() {
+        let mut e = EmaStd::new(0.9);
+        let mut rng = Prng::new(0);
+        for _ in 0..50 {
+            let batch: Vec<f32> = (0..512).map(|_| rng.gaussian_f32() * 2.0).collect();
+            e.update(&batch);
+        }
+        assert!((e.std() - 2.0).abs() < 0.15, "std {}", e.std());
+        assert!((e.beta_in(8.0) - 16.0).abs() < 1.2);
+    }
+
+    #[test]
+    fn ema_empty_update_noop() {
+        let mut e = EmaStd::new(0.9);
+        e.update(&[]);
+        assert_eq!(e.std(), 0.0);
+    }
+
+    #[test]
+    fn calibrator_finds_convex_optimum() {
+        // synthetic oracle with optimum at kappa=20, lam=1.25
+        let cal = Calibrator::default();
+        let res = cal.run(|k, l| (k - 20.0).powi(2) * 0.01 + (l - 1.25).powi(2) + 5.0);
+        assert_eq!(res.kappa, 20.0);
+        assert_eq!(res.lam, 1.25);
+        assert_eq!(res.kappa_sweep.len(), cal.kappa_grid.len());
+        assert_eq!(res.lam_sweep.len(), cal.lam_grid.len());
+    }
+
+    #[test]
+    fn calibrator_interior_optimum_shape() {
+        // the Appendix-B signature shape: too-small kappa clips hard
+        // (huge ppl), too-large kappa wastes resolution (mildly worse)
+        let cal = Calibrator::default();
+        let res = cal.run(|k, _l| {
+            if k < 8.0 {
+                50.0 / k
+            } else {
+                7.0 + 0.01 * k
+            }
+        });
+        assert!(res.kappa >= 8.0 && res.kappa <= 15.0, "kappa {}", res.kappa);
+    }
+}

@@ -1,0 +1,33 @@
+//! Analog in-memory computing (AIMC) substrate.
+//!
+//! The paper's analog accelerator is a grid of non-volatile-memory (PCM)
+//! crossbar tiles (Fig 1c). This module owns everything that is a
+//! *device* property rather than a *graph* property:
+//!
+//! - [`program`] — weight-programming noise, eq (3), the Le Gallo 2023
+//!   PCM fit with both coefficient branches. Programming noise is applied
+//!   to the host weight tensors of analog-placed modules (it happens once
+//!   at deployment, cannot be calibrated away, and varies per device —
+//!   the reason the paper selects experts by *programming-noise*
+//!   sensitivity).
+//! - [`quant`] — DAC/ADC quantization, eqs (4)-(5), as a host-side
+//!   implementation used for unit testing and for the tile-level
+//!   simulator; the request path's DAC-ADC runs inside the HLO graph
+//!   (identical math, see `python/compile/kernels/ref.py`).
+//! - [`calib`] — κ/λ calibration à la §2.2 + Appendix B.
+//! - [`tiles`] — crossbar tile geometry and the tile allocator mapping
+//!   weight matrices onto 512×512 arrays.
+//! - [`energy`] — per-operation latency/energy model of the analog
+//!   accelerator (Appendix A; constants in the style of Büchel 2025b).
+
+pub mod calib;
+pub mod energy;
+pub mod program;
+pub mod quant;
+pub mod tiles;
+
+pub use calib::Calibrator;
+pub use energy::AnalogCost;
+pub use program::{program_matrix, programming_sigma, NoiseModel};
+pub use quant::{adc_quant, dac_quant};
+pub use tiles::{TileAllocator, TileMap};

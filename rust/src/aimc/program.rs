@@ -1,0 +1,221 @@
+//! Weight-programming noise — eq (3) of the paper.
+//!
+//! `Ŵ_ij = W_ij + N(0, σ_ij²)`, with
+//! `σ_ij = c₀·Wmax + Σ_{u=1..3} c_u |W_ij|^u / Wmax^{u-1}`.
+//!
+//! Coefficients are the Le Gallo et al. 2023 fits from a 64-core PCM
+//! chip, quoted in the paper §2.2: one set for `|W| > 0.292·Wmax`, one
+//! below. `Wmax` is the maximum weight magnitude *per column of the NVM
+//! tile* (the paper's convention), so programming is tile-aware: a matrix
+//! taller than the tile is split into row tiles, each with its own
+//! per-column Wmax.
+//!
+//! The sweep axis of Figs 3-5 ("Prog. noise magnitude") is a scalar
+//! multiplier on σ, reproduced here as [`NoiseModel::scale`].
+
+use crate::util::Prng;
+
+/// |W|/Wmax split point between the two PCM coefficient branches.
+pub const PCM_SPLIT: f64 = 0.292;
+/// c0..c3 for |W| > split.
+pub const PCM_COEF_HI: [f64; 4] = [0.012, 0.245, -0.54, 0.40];
+/// c0..c3 for |W| <= split.
+pub const PCM_COEF_LO: [f64; 4] = [0.014, 0.224, -0.72, 0.952];
+
+/// Programming-noise configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseModel {
+    /// Scalar multiplier on σ (the x-axis of Figs 3-5). 1.0 = the
+    /// as-fitted PCM chip; 0.0 disables programming noise.
+    pub scale: f64,
+    /// NVM tile size (rows per tile for per-column Wmax computation).
+    pub tile: usize,
+    /// If true, use only the first term σ = c₀·Wmax — the simplified
+    /// model of eq (10) used by the theory (§4.2).
+    pub simplified: bool,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel { scale: 1.0, tile: 512, simplified: false }
+    }
+}
+
+impl NoiseModel {
+    pub fn with_scale(scale: f64) -> NoiseModel {
+        NoiseModel { scale, ..Default::default() }
+    }
+}
+
+/// σ_ij of eq (3) for a single weight given its column's Wmax.
+pub fn programming_sigma(w: f64, w_max: f64) -> f64 {
+    let w_max = w_max.max(1e-12);
+    let aw = w.abs();
+    let c = if aw / w_max > PCM_SPLIT { &PCM_COEF_HI } else { &PCM_COEF_LO };
+    let sigma = c[0] * w_max + c[1] * aw + c[2] * aw * aw / w_max
+        + c[3] * aw * aw * aw / (w_max * w_max);
+    // the fitted cubic can dip below zero mid-range; a std must be >= 0
+    sigma.max(0.0)
+}
+
+/// Program a row-major `[d, n]` weight matrix onto NVM tiles, adding
+/// eq (3) noise in place. Each (row-tile, column) pair gets its own Wmax.
+///
+/// This matches `kernels/ref.py::program_weights_ref` (pytest cross-
+/// checks the Gaussian-σ statistics between the two implementations).
+pub fn program_matrix(w: &mut [f32], d: usize, n: usize, model: &NoiseModel, rng: &mut Prng) {
+    assert_eq!(w.len(), d * n, "matrix buffer size mismatch");
+    if model.scale == 0.0 {
+        return;
+    }
+    let tile = model.tile.max(1);
+    let mut r0 = 0;
+    while r0 < d {
+        let r1 = (r0 + tile).min(d);
+        for c in 0..n {
+            // column slice within this row tile
+            let mut w_max = 0f64;
+            for r in r0..r1 {
+                w_max = w_max.max((w[r * n + c] as f64).abs());
+            }
+            if w_max <= 0.0 {
+                continue;
+            }
+            for r in r0..r1 {
+                let v = w[r * n + c] as f64;
+                let sigma = if model.simplified {
+                    PCM_COEF_HI[0] * w_max
+                } else {
+                    programming_sigma(v, w_max)
+                } * model.scale;
+                w[r * n + c] = (v + rng.gaussian() * sigma) as f32;
+            }
+        }
+        r0 = r1;
+    }
+}
+
+/// Program a stacked `[E, d, n]` expert tensor: only the experts whose
+/// index is in `analog` get noise (digital experts keep exact weights).
+pub fn program_expert_stack(
+    w: &mut [f32],
+    n_experts: usize,
+    d: usize,
+    n: usize,
+    analog: &[bool],
+    model: &NoiseModel,
+    rng: &mut Prng,
+) {
+    assert_eq!(w.len(), n_experts * d * n);
+    assert_eq!(analog.len(), n_experts);
+    for (e, &is_analog) in analog.iter().enumerate() {
+        if is_analog {
+            let sl = &mut w[e * d * n..(e + 1) * d * n];
+            let mut sub = rng.fork(e as u64);
+            program_matrix(sl, d, n, model, &mut sub);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_branches() {
+        // |W| = Wmax → HI branch: 0.012 + 0.245 - 0.54 + 0.40 = 0.117 (x Wmax)
+        let s = programming_sigma(1.0, 1.0);
+        assert!((s - 0.117).abs() < 1e-12, "{s}");
+        // |W| = 0 → LO branch: just c0 * Wmax
+        let s0 = programming_sigma(0.0, 1.0);
+        assert!((s0 - 0.014).abs() < 1e-12);
+        // scales linearly with Wmax at fixed ratio
+        assert!((programming_sigma(2.0, 2.0) - 2.0 * 0.117).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigma_nonnegative_everywhere() {
+        for i in 0..=1000 {
+            let w = i as f64 / 1000.0;
+            assert!(programming_sigma(w, 1.0) >= 0.0, "w={w}");
+        }
+    }
+
+    #[test]
+    fn zero_scale_is_identity() {
+        let mut w: Vec<f32> = (0..12).map(|x| x as f32 / 7.0).collect();
+        let orig = w.clone();
+        let mut rng = Prng::new(0);
+        program_matrix(&mut w, 3, 4, &NoiseModel::with_scale(0.0), &mut rng);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn noise_statistics_match_sigma() {
+        // program many copies of a constant column and check the
+        // empirical std against eq (3)
+        let d = 4000;
+        let w0 = 0.5f32;
+        let mut w = vec![w0; d];
+        let mut rng = Prng::new(1);
+        let model = NoiseModel { scale: 1.0, tile: d, simplified: false };
+        program_matrix(&mut w, d, 1, &model, &mut rng);
+        let mean: f64 = w.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var: f64 =
+            w.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / (d - 1) as f64;
+        let sigma_expect = programming_sigma(0.5, 0.5);
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!(
+            (var.sqrt() - sigma_expect).abs() / sigma_expect < 0.08,
+            "std {} vs {}",
+            var.sqrt(),
+            sigma_expect
+        );
+    }
+
+    #[test]
+    fn tile_local_wmax() {
+        // two row tiles with very different magnitudes: the small-weight
+        // tile must receive small noise (its own Wmax), not the global one
+        let tile = 8;
+        let d = 16;
+        let mut w = vec![0.01f32; d];
+        for v in &mut w[..tile] {
+            *v = 10.0;
+        }
+        let mut rng = Prng::new(2);
+        let model = NoiseModel { scale: 1.0, tile, simplified: true };
+        program_matrix(&mut w, d, 1, &model, &mut rng);
+        // simplified sigma = c0 * Wmax_tile: top tile sigma=0.12, bottom 0.00012
+        let bot_dev: f64 = w[tile..]
+            .iter()
+            .map(|&v| (v as f64 - 0.01).abs())
+            .fold(0.0, f64::max);
+        assert!(bot_dev < 0.001, "bottom tile contaminated: {bot_dev}");
+    }
+
+    #[test]
+    fn expert_stack_respects_placement() {
+        let (e, d, n) = (4, 6, 5);
+        let mut w = vec![0.3f32; e * d * n];
+        let orig = w.clone();
+        let analog = [true, false, true, false];
+        let mut rng = Prng::new(3);
+        program_expert_stack(&mut w, e, d, n, &analog, &NoiseModel::default(), &mut rng);
+        for ei in 0..e {
+            let sl = &w[ei * d * n..(ei + 1) * d * n];
+            let osl = &orig[ei * d * n..(ei + 1) * d * n];
+            let changed = sl.iter().zip(osl).any(|(a, b)| a != b);
+            assert_eq!(changed, analog[ei], "expert {ei}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = vec![0.5f32; 64];
+        let mut b = vec![0.5f32; 64];
+        program_matrix(&mut a, 8, 8, &NoiseModel::default(), &mut Prng::new(7));
+        program_matrix(&mut b, 8, 8, &NoiseModel::default(), &mut Prng::new(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,186 @@
+//! DAC/ADC quantization — eqs (4) and (5) of the paper, host-side.
+//!
+//! On the request path this math runs *inside the HLO graph* (the flag-
+//! gated fake-quant in `model.py` / the Pallas kernel); the host
+//! implementation here is the unit-test oracle for that graph, the
+//! engine for the pure-Rust tile simulator used in property tests, and
+//! the reference the calibrator sweeps.
+
+/// eq (4): clamp to ±beta_in, quantize to `bits`-bit signed levels.
+pub fn dac_quant(x: f32, beta_in: f32, bits: u32) -> f32 {
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let scale = levels / beta_in;
+    (x.clamp(-beta_in, beta_in) * scale).round() / scale
+}
+
+/// eq (5): quantize to `bits`-bit levels in ±beta_out, clamped.
+pub fn adc_quant(y: f32, beta_out: f32, bits: u32) -> f32 {
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let scale = levels / beta_out;
+    ((y * scale).round() / scale).clamp(-beta_out, beta_out)
+}
+
+/// eq (5) output range for one tile column: `λ · β_in · max|W_:,i|`.
+pub fn beta_out_for(col_abs_max: f32, beta_in: f32, lam: f32) -> f32 {
+    lam * beta_in * col_abs_max.max(1e-12)
+}
+
+/// Full analog MVM through one crossbar tile (host simulator):
+/// `y = ADC(DAC(x) @ W)` for `x: [d]`, `w: [d, n]` row-major.
+/// Mirrors `kernels/ref.py::aimc_mvm_ref` for a single tile.
+pub fn tile_mvm(
+    x: &[f32],
+    w: &[f32],
+    d: usize,
+    n: usize,
+    beta_in: f32,
+    lam: f32,
+    bits_dac: u32,
+    bits_adc: u32,
+) -> Vec<f32> {
+    assert_eq!(x.len(), d);
+    assert_eq!(w.len(), d * n);
+    let xq: Vec<f32> = x.iter().map(|&v| dac_quant(v, beta_in, bits_dac)).collect();
+    let mut y = vec![0f32; n];
+    for r in 0..d {
+        let xr = xq[r];
+        if xr == 0.0 {
+            continue;
+        }
+        let row = &w[r * n..(r + 1) * n];
+        for (yj, wj) in y.iter_mut().zip(row) {
+            *yj += xr * wj;
+        }
+    }
+    let mut col_max = vec![0f32; n];
+    for r in 0..d {
+        for c in 0..n {
+            col_max[c] = col_max[c].max(w[r * n + c].abs());
+        }
+    }
+    for c in 0..n {
+        let bo = beta_out_for(col_max[c], beta_in, lam);
+        y[c] = adc_quant(y[c], bo, bits_adc);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn dac_quantizes_to_levels() {
+        let b = 1.0;
+        // 8-bit: 127 levels per side; quantization step = 1/127
+        let q = dac_quant(0.5, b, 8);
+        assert!((q - (0.5f32 * 127.0).round() / 127.0).abs() < 1e-7);
+        // clamping
+        assert_eq!(dac_quant(5.0, b, 8), 1.0);
+        assert_eq!(dac_quant(-5.0, b, 8), -1.0);
+        // zero is exact
+        assert_eq!(dac_quant(0.0, b, 8), 0.0);
+    }
+
+    #[test]
+    fn dac_error_bounded_by_half_step() {
+        let b = 2.0f32;
+        let step = b / 127.0;
+        let mut rng = Prng::new(1);
+        for _ in 0..1000 {
+            let x = (rng.uniform_f32() * 2.0 - 1.0) * b;
+            let q = dac_quant(x, b, 8);
+            assert!((q - x).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn adc_clamps_to_beta_out() {
+        assert_eq!(adc_quant(10.0, 1.0, 8), 1.0);
+        assert_eq!(adc_quant(-10.0, 1.0, 8), -1.0);
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = Prng::new(2);
+        let mut err8 = 0.0f64;
+        let mut err12 = 0.0f64;
+        for _ in 0..2000 {
+            let x = rng.uniform_f32() * 2.0 - 1.0;
+            err8 += (dac_quant(x, 1.0, 8) - x).abs() as f64;
+            err12 += (dac_quant(x, 1.0, 12) - x).abs() as f64;
+        }
+        assert!(err12 < err8 / 8.0, "8-bit {err8} vs 12-bit {err12}");
+    }
+
+    #[test]
+    fn tile_mvm_close_to_exact_with_generous_ranges() {
+        let (d, n) = (32, 8);
+        let mut rng = Prng::new(3);
+        let x: Vec<f32> = (0..d).map(|_| rng.gaussian_f32() * 0.5).collect();
+        let w: Vec<f32> = (0..d * n).map(|_| rng.gaussian_f32() * 0.1).collect();
+        let y = tile_mvm(&x, &w, d, n, 4.0, 2.0, 12, 12);
+        // exact
+        let mut ye = vec![0f32; n];
+        for r in 0..d {
+            for c in 0..n {
+                ye[c] += x[r] * w[r * n + c];
+            }
+        }
+        for c in 0..n {
+            assert!((y[c] - ye[c]).abs() < 0.05, "col {c}: {} vs {}", y[c], ye[c]);
+        }
+    }
+
+    #[test]
+    fn beta_out_guards_zero_columns() {
+        assert!(beta_out_for(0.0, 1.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn prop_quant_idempotent_and_bounded() {
+        // properties of eqs (4)-(5): quantization is idempotent on its
+        // own grid and never leaves the clamp range
+        crate::util::proptest::check("quant idempotent+bounded", 200, |rng| {
+            let beta = 0.1 + rng.uniform_f32() * 8.0;
+            let bits = 2 + (rng.below(11) as u32);
+            let x = (rng.uniform_f32() * 4.0 - 2.0) * beta;
+            let q = dac_quant(x, beta, bits);
+            crate::prop_assert!(q.abs() <= beta + 1e-6, "out of range: {q} vs {beta}");
+            let qq = dac_quant(q, beta, bits);
+            crate::prop_assert!((qq - q).abs() < 1e-6, "not idempotent: {q} -> {qq}");
+            let a = adc_quant(x, beta, bits);
+            crate::prop_assert!(a.abs() <= beta + 1e-6, "adc out of range");
+            let aa = adc_quant(a, beta, bits);
+            crate::prop_assert!((aa - a).abs() < 1e-6, "adc not idempotent");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tile_mvm_error_shrinks_with_bits() {
+        // property: more ADC/DAC bits never increase the MVM error
+        crate::util::proptest::check("tile mvm error vs bits", 20, |rng| {
+            let (d, n) = (16usize, 4usize);
+            let x: Vec<f32> = (0..d).map(|_| rng.gaussian_f32() * 0.5).collect();
+            let w: Vec<f32> = (0..d * n).map(|_| rng.gaussian_f32() * 0.1).collect();
+            let mut exact = vec![0f32; n];
+            for r in 0..d {
+                for c in 0..n {
+                    exact[c] += x[r] * w[r * n + c];
+                }
+            }
+            let err = |bits: u32| -> f64 {
+                let y = tile_mvm(&x, &w, d, n, 4.0, 2.0, bits, bits);
+                y.iter()
+                    .zip(&exact)
+                    .map(|(a, b)| ((a - b) as f64).abs())
+                    .sum::<f64>()
+            };
+            let (e6, e12) = (err(6), err(12));
+            crate::prop_assert!(e12 <= e6 + 1e-6, "12-bit {e12} > 6-bit {e6}");
+            Ok(())
+        });
+    }
+}

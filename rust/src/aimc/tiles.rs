@@ -1,0 +1,137 @@
+//! NVM crossbar tile geometry and allocation.
+//!
+//! An AIMC chip exposes a pool of `tile × tile` crossbar arrays (512 in
+//! the paper, §5.1). Deploying a model heterogeneously means mapping each
+//! analog-placed weight matrix onto a set of tiles; the allocator tracks
+//! how many tiles each module consumes, which feeds the energy/latency
+//! model (a module mapped across T tiles pays T parallel tile-MVMs plus
+//! a digital accumulate) and the capacity accounting in Table 2.
+
+use std::collections::BTreeMap;
+
+/// Mapping of one weight matrix onto crossbar tiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileMap {
+    /// matrix dims
+    pub d: usize,
+    pub n: usize,
+    /// tile side
+    pub tile: usize,
+    /// tiles along rows (wordlines) and columns (bitlines)
+    pub row_tiles: usize,
+    pub col_tiles: usize,
+}
+
+impl TileMap {
+    pub fn new(d: usize, n: usize, tile: usize) -> TileMap {
+        let t = tile.max(1);
+        TileMap {
+            d,
+            n,
+            tile: t,
+            row_tiles: d.div_ceil(t),
+            col_tiles: n.div_ceil(t),
+        }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.row_tiles * self.col_tiles
+    }
+
+    /// Fraction of allocated crossbar cells actually used by the matrix.
+    pub fn utilization(&self) -> f64 {
+        (self.d * self.n) as f64 / (self.n_tiles() * self.tile * self.tile) as f64
+    }
+}
+
+/// Tracks tile allocations per named module on a chip with finite tiles.
+#[derive(Debug)]
+pub struct TileAllocator {
+    pub tile: usize,
+    pub capacity: usize,
+    allocated: BTreeMap<String, TileMap>,
+}
+
+impl TileAllocator {
+    pub fn new(tile: usize, capacity: usize) -> TileAllocator {
+        TileAllocator { tile, capacity, allocated: BTreeMap::new() }
+    }
+
+    /// Allocate tiles for a `[d, n]` matrix under `name`. Fails when the
+    /// chip is out of tiles (returns None without modifying state).
+    pub fn allocate(&mut self, name: &str, d: usize, n: usize) -> Option<TileMap> {
+        let map = TileMap::new(d, n, self.tile);
+        if self.used() + map.n_tiles() > self.capacity {
+            return None;
+        }
+        self.allocated.insert(name.to_string(), map.clone());
+        Some(map)
+    }
+
+    pub fn release(&mut self, name: &str) -> bool {
+        self.allocated.remove(name).is_some()
+    }
+
+    pub fn used(&self) -> usize {
+        self.allocated.values().map(|m| m.n_tiles()).sum()
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.used()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TileMap> {
+        self.allocated.get(name)
+    }
+
+    /// Mean cell utilization across allocations (1.0 = perfectly packed).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.allocated.is_empty() {
+            return 0.0;
+        }
+        self.allocated.values().map(|m| m.utilization()).sum::<f64>()
+            / self.allocated.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_counts() {
+        let m = TileMap::new(48, 64, 512);
+        assert_eq!((m.row_tiles, m.col_tiles, m.n_tiles()), (1, 1, 1));
+        let m2 = TileMap::new(600, 700, 512);
+        assert_eq!((m2.row_tiles, m2.col_tiles, m2.n_tiles()), (2, 2, 4));
+    }
+
+    #[test]
+    fn utilization() {
+        let m = TileMap::new(512, 512, 512);
+        assert_eq!(m.utilization(), 1.0);
+        let m2 = TileMap::new(256, 512, 512);
+        assert_eq!(m2.utilization(), 0.5);
+    }
+
+    #[test]
+    fn allocator_capacity() {
+        let mut a = TileAllocator::new(512, 3);
+        assert!(a.allocate("w1", 600, 512).is_some()); // 2 tiles
+        assert_eq!(a.free(), 1);
+        assert!(a.allocate("w2", 600, 600).is_none()); // needs 4
+        assert!(a.allocate("w3", 100, 100).is_some()); // 1 tile
+        assert_eq!(a.free(), 0);
+        assert!(a.release("w1"));
+        assert_eq!(a.free(), 2);
+        assert!(!a.release("w1"));
+    }
+
+    #[test]
+    fn get_returns_map() {
+        let mut a = TileAllocator::new(512, 10);
+        a.allocate("x", 48, 64).unwrap();
+        assert_eq!(a.get("x").unwrap().n_tiles(), 1);
+        assert!(a.get("y").is_none());
+    }
+}

@@ -1,0 +1,181 @@
+//! Shared harness for the paper-reproduction benches (`rust/benches/`).
+//!
+//! Every bench regenerates one table or figure of the paper; this module
+//! provides the common machinery: artifact loading, placement → noise →
+//! eval-suite → restore cycles, router-stat collection for the
+//! calibration-based baselines, and environment knobs so `cargo bench`
+//! stays affordable on the single-core testbed:
+//!
+//! - `HETMOE_BENCH_ITEMS`  — items per task (default 48)
+//! - `HETMOE_BENCH_SEEDS`  — programming-noise seeds (default 3; paper: 32)
+//! - `HETMOE_BENCH_MODELS` — comma list (default both models)
+
+use anyhow::Result;
+
+use crate::aimc::program::NoiseModel;
+use crate::config::{AimcConfig, Meta, ModelConfig};
+use crate::coordinator::{Engine, Request};
+use crate::eval::data::{load_rows, load_tasks, Task};
+use crate::eval::Evaluator;
+use crate::moe::placement::{apply_placement, Placement};
+use crate::moe::score::RouterStats;
+use crate::runtime::{ArtifactPaths, ParamStore, Runtime};
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn bench_items() -> usize {
+    env_usize("HETMOE_BENCH_ITEMS", 48)
+}
+
+pub fn bench_seeds() -> usize {
+    env_usize("HETMOE_BENCH_SEEDS", 3)
+}
+
+pub fn bench_models() -> Vec<String> {
+    std::env::var("HETMOE_BENCH_MODELS")
+        .unwrap_or_else(|_| "olmoe_mini,dsmoe_mini".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Everything a bench needs for one model.
+pub struct BenchCtx {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    pub aimc: AimcConfig,
+    pub paths: ArtifactPaths,
+    pub params: ParamStore,
+    pub ev: Evaluator,
+    pub tasks: Vec<Task>,
+    pub calib: Vec<i32>,
+    pub serve_cap: usize,
+    pristine: Vec<f32>,
+}
+
+impl BenchCtx {
+    pub fn new(model: &str) -> Result<BenchCtx> {
+        let artifacts = crate::artifacts_dir();
+        let meta = Meta::load(&artifacts)?;
+        let cfg = meta.config(model)?.clone();
+        let paths = ArtifactPaths::new(&artifacts, model);
+        let mut rt = Runtime::cpu()?;
+        let params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
+        let ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc)?;
+        let tasks = load_tasks(&artifacts)?;
+        let calib = load_rows(&artifacts.join("data/calib.bin"), cfg.seq_len)?;
+        let pristine = params.snapshot();
+        Ok(BenchCtx {
+            rt,
+            cfg,
+            aimc: meta.aimc,
+            paths,
+            params,
+            ev,
+            tasks,
+            calib,
+            serve_cap: meta.serve_cap,
+            pristine,
+        })
+    }
+
+    /// One (placement, noise, seed) cell: program noise, run the suite,
+    /// restore pristine weights. Returns (per-task, average).
+    pub fn eval_cell(
+        &mut self,
+        placement: &Placement,
+        noise_scale: f64,
+        seed: u64,
+        items: usize,
+    ) -> Result<(Vec<f64>, f64)> {
+        apply_placement(
+            &self.cfg,
+            &mut self.params,
+            placement,
+            &NoiseModel::with_scale(noise_scale),
+            seed,
+        )?;
+        let flags = placement.to_flags(&self.cfg);
+        let out =
+            self.ev
+                .eval_suite(&self.rt, &mut self.params, &self.tasks, &flags, items);
+        self.params.restore(&self.pristine)?;
+        out
+    }
+
+    /// Average accuracy over `seeds` noise seeds (mean, stderr).
+    pub fn eval_seeds(
+        &mut self,
+        placement: &Placement,
+        noise_scale: f64,
+        seeds: usize,
+        items: usize,
+    ) -> Result<(f64, f64)> {
+        let mut avgs = Vec::with_capacity(seeds);
+        for s in 0..seeds {
+            let (_, avg) = self.eval_cell(placement, noise_scale, s as u64, items)?;
+            avgs.push(avg);
+        }
+        Ok(crate::util::stats::mean_stderr(&avgs))
+    }
+
+    /// Perplexity on the calibration split under `flags` and (κ, λ).
+    pub fn ppl(
+        &mut self,
+        placement: &Placement,
+        kappa: f32,
+        lam: f32,
+        max_rows: usize,
+    ) -> Result<f64> {
+        let flags = placement.to_flags(&self.cfg);
+        let calib = self.calib.clone();
+        self.ev.perplexity(
+            &self.rt,
+            &mut self.params,
+            &calib,
+            &flags,
+            kappa,
+            lam,
+            max_rows,
+        )
+    }
+
+    /// Router statistics over the calibration split, collected through
+    /// the serving pipeline (needed by the ActFreq / ActWeight baselines
+    /// — the calibration-*free* metrics never call this).
+    pub fn collect_router_stats(&mut self, max_rows: usize) -> Result<RouterStats> {
+        let placement = Placement::all_digital(&self.cfg);
+        let mut engine = Engine::new(
+            &mut self.rt,
+            &self.paths,
+            self.cfg.clone(),
+            self.aimc,
+            self.serve_cap,
+            placement,
+            &self.params,
+        )?;
+        let t = self.cfg.seq_len;
+        let n_rows = (self.calib.len() / t).min(max_rows);
+        let mut batch = Vec::new();
+        for r in 0..n_rows {
+            batch.push(Request {
+                id: r as u64,
+                tokens: self.calib[r * t..(r + 1) * t].to_vec(),
+                targets: vec![0; t],
+                mask: vec![0.0; t],
+                arrived: 0,
+            });
+            if batch.len() == self.cfg.batch {
+                engine.serve_batch(&self.rt, &batch)?;
+                batch.clear();
+            }
+        }
+        if !batch.is_empty() {
+            engine.serve_batch(&self.rt, &batch)?;
+        }
+        Ok(engine.router_stats)
+    }
+}

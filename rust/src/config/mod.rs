@@ -1,0 +1,309 @@
+//! Configuration: model architecture (mirrors `python/compile/configs.py`),
+//! AIMC noise/quantization settings, and the flag-vector ABI shared with
+//! the lowered HLO graphs.
+//!
+//! All configs load from `artifacts/meta.json`, which aot.py writes from
+//! the same dataclasses — a single source of truth for both languages.
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use crate::util::Json;
+
+/// Mini MoE model architecture (one of `olmoe_mini` / `dsmoe_mini`).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_expert: usize,
+    pub d_shared: usize,
+    pub dense_first_layer: bool,
+    pub d_dense_ffn: usize,
+    pub batch: usize,
+    pub train_steps: usize,
+    pub flags_len: usize,
+    pub n_params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(name: &str, j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_experts: j.get("n_experts")?.as_usize()?,
+            top_k: j.get("top_k")?.as_usize()?,
+            d_expert: j.get("d_expert")?.as_usize()?,
+            d_shared: j.get("d_shared")?.as_usize()?,
+            dense_first_layer: j.get("dense_first_layer")?.as_bool()?,
+            d_dense_ffn: j.get("d_dense_ffn")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            train_steps: j.get("train_steps")?.as_usize()?,
+            flags_len: j.get("flags_len")?.as_usize()?,
+            n_params: j.get("n_params")?.as_usize()?,
+        })
+    }
+
+    /// Is layer `l` an MoE layer (vs the DeepSeek-style dense first FFN)?
+    pub fn is_moe_layer(&self, l: usize) -> bool {
+        !(self.dense_first_layer && l == 0)
+    }
+
+    pub fn n_moe_layers(&self) -> usize {
+        (0..self.n_layers).filter(|&l| self.is_moe_layer(l)).count()
+    }
+
+    /// Total routed experts across layers (the units the placement
+    /// planner ranks).
+    pub fn total_experts(&self) -> usize {
+        self.n_moe_layers() * self.n_experts
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// AIMC quantization / tile settings (paper §2.2, §5.1; Appendix B for
+/// the calibrated kappa/lambda).
+#[derive(Clone, Copy, Debug)]
+pub struct AimcConfig {
+    pub bits_dac: u32,
+    pub bits_adc: u32,
+    pub tile_size: usize,
+    pub kappa: f32,
+    pub lam: f32,
+}
+
+impl Default for AimcConfig {
+    fn default() -> Self {
+        AimcConfig { bits_dac: 8, bits_adc: 8, tile_size: 512, kappa: 8.0, lam: 1.0 }
+    }
+}
+
+impl AimcConfig {
+    pub fn from_json(j: &Json) -> Result<AimcConfig> {
+        Ok(AimcConfig {
+            bits_dac: j.get("bits_dac")?.as_usize()? as u32,
+            bits_adc: j.get("bits_adc")?.as_usize()? as u32,
+            tile_size: j.get("tile_size")?.as_usize()?,
+            kappa: j.get("kappa")?.as_f64()? as f32,
+            lam: j.get("lam")?.as_f64()? as f32,
+        })
+    }
+}
+
+/// Dataset-side constants from meta.json.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_train_rows: usize,
+    pub n_calib_rows: usize,
+    pub pad: i32,
+    pub bos: i32,
+}
+
+/// The whole artifacts tree metadata.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub aimc: AimcConfig,
+    pub serve_cap: usize,
+    pub data: DataConfig,
+    pub configs: Vec<ModelConfig>,
+}
+
+impl Meta {
+    pub fn load(artifacts: &Path) -> Result<Meta> {
+        let j = Json::parse_file(&artifacts.join("meta.json"))?;
+        let d = j.get("data")?;
+        let data = DataConfig {
+            seq_len: d.get("seq_len")?.as_usize()?,
+            vocab: d.get("vocab")?.as_usize()?,
+            n_train_rows: d.get("n_train_rows")?.as_usize()?,
+            n_calib_rows: d.get("n_calib_rows")?.as_usize()?,
+            pad: d.get("pad")?.as_i64()? as i32,
+            bos: d.get("bos")?.as_i64()? as i32,
+        };
+        let mut configs = Vec::new();
+        for (name, cj) in j.get("configs")?.as_obj()? {
+            configs.push(ModelConfig::from_json(name, cj)?);
+        }
+        Ok(Meta {
+            aimc: AimcConfig::from_json(j.get("aimc")?)?,
+            serve_cap: j.get("serve_cap")?.as_usize()?,
+            data,
+            configs,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("no config '{name}' in meta.json"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// analog_flags ABI (must mirror model.split_flags in python)
+// ---------------------------------------------------------------------------
+
+/// Builder for the `analog_flags` vector consumed by `model_fwd`:
+/// `[L*E expert flags][L attn flags][L dense-ffn/shared flags][1 lm_head]`.
+/// A flag > 0 routes that module's MVMs through the DAC-ADC fake-quant
+/// path in-graph (compute-time noise); programming noise is separate and
+/// applied to weights by [`crate::aimc::program`].
+#[derive(Clone, Debug)]
+pub struct AnalogFlags {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub flags: Vec<f32>,
+}
+
+impl AnalogFlags {
+    /// All-digital (every flag zero).
+    pub fn digital(cfg: &ModelConfig) -> AnalogFlags {
+        AnalogFlags {
+            n_layers: cfg.n_layers,
+            n_experts: cfg.n_experts,
+            flags: vec![0.0; cfg.flags_len],
+        }
+    }
+
+    fn expert_idx(&self, layer: usize, expert: usize) -> usize {
+        assert!(layer < self.n_layers && expert < self.n_experts);
+        layer * self.n_experts + expert
+    }
+
+    pub fn set_expert(&mut self, layer: usize, expert: usize, analog: bool) {
+        let i = self.expert_idx(layer, expert);
+        self.flags[i] = analog as u8 as f32;
+    }
+
+    pub fn expert(&self, layer: usize, expert: usize) -> bool {
+        self.flags[self.expert_idx(layer, expert)] > 0.0
+    }
+
+    pub fn set_all_experts(&mut self, analog: bool) {
+        for f in &mut self.flags[..self.n_layers * self.n_experts] {
+            *f = analog as u8 as f32;
+        }
+    }
+
+    pub fn set_attn(&mut self, layer: usize, analog: bool) {
+        let i = self.n_layers * self.n_experts + layer;
+        self.flags[i] = analog as u8 as f32;
+    }
+
+    pub fn set_all_attn(&mut self, analog: bool) {
+        for l in 0..self.n_layers {
+            self.set_attn(l, analog);
+        }
+    }
+
+    /// Dense FFN (dsmoe layer 0) or shared expert of a layer.
+    pub fn set_dense_ffn(&mut self, layer: usize, analog: bool) {
+        let i = self.n_layers * self.n_experts + self.n_layers + layer;
+        self.flags[i] = analog as u8 as f32;
+    }
+
+    pub fn set_all_dense_ffn(&mut self, analog: bool) {
+        for l in 0..self.n_layers {
+            self.set_dense_ffn(l, analog);
+        }
+    }
+
+    pub fn set_lm_head(&mut self, analog: bool) {
+        let i = self.n_layers * self.n_experts + 2 * self.n_layers;
+        self.flags[i] = analog as u8 as f32;
+    }
+
+    pub fn lm_head(&self) -> bool {
+        self.flags[self.n_layers * self.n_experts + 2 * self.n_layers] > 0.0
+    }
+
+    pub fn attn(&self, layer: usize) -> bool {
+        self.flags[self.n_layers * self.n_experts + layer] > 0.0
+    }
+
+    pub fn n_analog_experts(&self) -> usize {
+        self.flags[..self.n_layers * self.n_experts]
+            .iter()
+            .filter(|&&f| f > 0.0)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 512,
+            seq_len: 32,
+            d_model: 48,
+            n_heads: 4,
+            n_layers: 4,
+            n_experts: 16,
+            top_k: 2,
+            d_expert: 64,
+            d_shared: 0,
+            dense_first_layer: false,
+            d_dense_ffn: 192,
+            batch: 32,
+            train_steps: 1,
+            flags_len: 4 * 16 + 2 * 4 + 1,
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn flags_layout_matches_python() {
+        let c = cfg();
+        let mut f = AnalogFlags::digital(&c);
+        assert_eq!(f.flags.len(), 73);
+        f.set_expert(1, 3, true);
+        assert_eq!(f.flags[19], 1.0); // 1*16 + 3
+        f.set_attn(2, true);
+        assert_eq!(f.flags[64 + 2], 1.0);
+        f.set_dense_ffn(0, true);
+        assert_eq!(f.flags[64 + 4], 1.0);
+        f.set_lm_head(true);
+        assert_eq!(f.flags[72], 1.0);
+        assert!(f.expert(1, 3) && f.attn(2) && f.lm_head());
+        assert_eq!(f.n_analog_experts(), 1);
+    }
+
+    #[test]
+    fn moe_layer_logic() {
+        let mut c = cfg();
+        assert!(c.is_moe_layer(0));
+        assert_eq!(c.total_experts(), 64);
+        c.dense_first_layer = true;
+        assert!(!c.is_moe_layer(0));
+        assert!(c.is_moe_layer(1));
+        assert_eq!(c.total_experts(), 48);
+    }
+
+    #[test]
+    fn set_all_experts_counts() {
+        let c = cfg();
+        let mut f = AnalogFlags::digital(&c);
+        f.set_all_experts(true);
+        assert_eq!(f.n_analog_experts(), 64);
+        f.set_all_experts(false);
+        assert_eq!(f.n_analog_experts(), 0);
+    }
+}

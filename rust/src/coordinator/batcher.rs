@@ -1,0 +1,205 @@
+//! Admission queue + dynamic batcher.
+//!
+//! vLLM-router-style policy adapted to scoring workloads: requests are
+//! admitted up to a bounded queue depth (backpressure beyond that),
+//! batches form when either the compiled batch size is reached or the
+//! oldest admitted request has waited `max_wait` (here expressed in
+//! arrival ticks, so the policy is deterministic and testable — the
+//! serve example maps ticks to wall time).
+
+use std::collections::VecDeque;
+
+/// One scoring request: a packed sequence row plus its target mask
+/// (produced by `eval::pack_choice` or the caller).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// arrival tick (for wait accounting)
+    pub arrived: u64,
+}
+
+/// The engine's answer: summed target log-prob of the masked positions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub score: f64,
+}
+
+/// Why a batch was released.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReleaseReason {
+    Full,
+    Deadline,
+    Drained,
+}
+
+/// Bounded-queue dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait_ticks: u64,
+    pub max_queue: usize,
+    queue: VecDeque<Request>,
+    /// requests rejected due to backpressure
+    pub rejected: u64,
+    /// running tick (monotone; advanced by the caller)
+    pub now: u64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait_ticks: u64, max_queue: usize) -> Batcher {
+        assert!(max_batch > 0 && max_queue >= max_batch);
+        Batcher {
+            max_batch,
+            max_wait_ticks,
+            max_queue,
+            queue: VecDeque::new(),
+            rejected: 0,
+            now: 0,
+        }
+    }
+
+    /// Admit a request; returns false (and counts a rejection) when the
+    /// queue is full — the backpressure signal.
+    pub fn submit(&mut self, mut req: Request) -> bool {
+        if self.queue.len() >= self.max_queue {
+            self.rejected += 1;
+            return false;
+        }
+        req.arrived = self.now;
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn tick(&mut self, dt: u64) {
+        self.now += dt;
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Release a batch if the policy says so: full batch available, or
+    /// the oldest request has waited out, or `drain` forces a flush.
+    pub fn next_batch(&mut self, drain: bool) -> Option<(Vec<Request>, ReleaseReason)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = self.now - self.queue.front().unwrap().arrived;
+        let reason = if self.queue.len() >= self.max_batch {
+            ReleaseReason::Full
+        } else if oldest_wait >= self.max_wait_ticks {
+            ReleaseReason::Deadline
+        } else if drain {
+            ReleaseReason::Drained
+        } else {
+            return None;
+        };
+        let take = self.queue.len().min(self.max_batch);
+        let batch = self.queue.drain(..take).collect();
+        Some((batch, reason))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    fn req(id: u64) -> Request {
+        Request { id, tokens: vec![0; 4], targets: vec![0; 4], mask: vec![0.0; 4], arrived: 0 }
+    }
+
+    #[test]
+    fn releases_on_full() {
+        let mut b = Batcher::new(2, 100, 10);
+        b.submit(req(1));
+        assert!(b.next_batch(false).is_none());
+        b.submit(req(2));
+        let (batch, reason) = b.next_batch(false).unwrap();
+        assert_eq!(reason, ReleaseReason::Full);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id, 1);
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let mut b = Batcher::new(8, 5, 10);
+        b.submit(req(1));
+        b.tick(4);
+        assert!(b.next_batch(false).is_none());
+        b.tick(1);
+        let (batch, reason) = b.next_batch(false).unwrap();
+        assert_eq!(reason, ReleaseReason::Deadline);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn drain_flushes() {
+        let mut b = Batcher::new(8, 1000, 10);
+        b.submit(req(1));
+        let (batch, reason) = b.next_batch(true).unwrap();
+        assert_eq!(reason, ReleaseReason::Drained);
+        assert_eq!(batch.len(), 1);
+        assert!(b.next_batch(true).is_none());
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut b = Batcher::new(2, 100, 3);
+        assert!(b.submit(req(1)));
+        assert!(b.submit(req(2)));
+        assert!(b.submit(req(3)));
+        assert!(!b.submit(req(4)));
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.depth(), 3);
+    }
+
+    #[test]
+    fn prop_conservation_and_order() {
+        // property: every admitted request is released exactly once, in
+        // FIFO order, and batches never exceed max_batch
+        check("batcher conservation", 50, |rng| {
+            let max_batch = rng.range(1, 8);
+            let max_queue = max_batch + rng.range(0, 8);
+            let mut b = Batcher::new(max_batch, rng.range(1, 10) as u64, max_queue);
+            let n = rng.range(1, 60);
+            let mut admitted = Vec::new();
+            let mut released = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..n {
+                match rng.below(3) {
+                    0 => {
+                        if b.submit(req(next_id)) {
+                            admitted.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 => b.tick(rng.range(0, 4) as u64),
+                    _ => {
+                        if let Some((batch, _)) = b.next_batch(false) {
+                            prop_assert!(
+                                batch.len() <= max_batch,
+                                "batch {} > max {max_batch}",
+                                batch.len()
+                            );
+                            released.extend(batch.iter().map(|r| r.id));
+                        }
+                    }
+                }
+            }
+            while let Some((batch, _)) = b.next_batch(true) {
+                released.extend(batch.iter().map(|r| r.id));
+            }
+            prop_assert!(
+                released == admitted,
+                "released {released:?} != admitted {admitted:?}"
+            );
+            Ok(())
+        });
+    }
+}

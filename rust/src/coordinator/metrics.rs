@@ -1,0 +1,148 @@
+//! Serving metrics: real wall time per pipeline stage + the simulated
+//! per-accelerator clocks (Appendix-A cost models) that produce the
+//! Table 2 style throughput / energy-efficiency numbers.
+
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    // request accounting
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens: u64,
+
+    // expert dispatch accounting
+    pub digital_dispatches: u64,
+    pub analog_dispatches: u64,
+    pub dispatched_tokens: u64,
+    /// padding waste in expert batches (cap - occupancy)
+    pub padded_tokens: u64,
+
+    // real wall time per stage
+    pub total_wall: Duration,
+    pub attn_wall: Duration,
+    pub route_wall: Duration,
+    pub digital_wall: Duration,
+    pub analog_wall: Duration,
+    pub shared_wall: Duration,
+    pub lm_wall: Duration,
+
+    // simulated accelerator clocks (paper cost models, paper-scale arch)
+    pub digital_busy_s: f64,
+    pub digital_energy_j: f64,
+    pub analog_busy_s: f64,
+    pub analog_energy_j: f64,
+}
+
+impl Metrics {
+    /// Real measured throughput on this testbed.
+    pub fn wall_tokens_per_s(&self) -> f64 {
+        let s = self.total_wall.as_secs_f64();
+        if s > 0.0 {
+            self.tokens as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// Simulated heterogeneous throughput: the paper takes the
+    /// upper bound (max) of the two accelerators' latencies.
+    pub fn simulated_tokens_per_s(&self) -> f64 {
+        let t = self.digital_busy_s.max(self.analog_busy_s);
+        if t > 0.0 {
+            self.tokens as f64 / t
+        } else {
+            0.0
+        }
+    }
+
+    /// Simulated energy efficiency (tokens per joule = tokens/(W·s)).
+    pub fn simulated_tokens_per_joule(&self) -> f64 {
+        let e = self.digital_energy_j + self.analog_energy_j;
+        if e > 0.0 {
+            self.tokens as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    /// Expert-batch occupancy (1.0 = no padding waste).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.dispatched_tokens + self.padded_tokens;
+        if total > 0 {
+            self.dispatched_tokens as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} tokens={}\n\
+             dispatches: digital={} analog={} occupancy={:.2}\n\
+             wall: total={:.3}s attn={:.3}s route={:.3}s dig-ffn={:.3}s \
+             ana-ffn={:.3}s shared={:.3}s lm={:.3}s → {:.0} tok/s\n\
+             simulated accelerator clocks (Appendix-A cost model, this \
+             model's dims): digital busy={:.4}s analog busy={:.4}s \
+             → {:.0} tok/s, {:.1} tok/J",
+            self.requests,
+            self.batches,
+            self.tokens,
+            self.digital_dispatches,
+            self.analog_dispatches,
+            self.occupancy(),
+            self.total_wall.as_secs_f64(),
+            self.attn_wall.as_secs_f64(),
+            self.route_wall.as_secs_f64(),
+            self.digital_wall.as_secs_f64(),
+            self.analog_wall.as_secs_f64(),
+            self.shared_wall.as_secs_f64(),
+            self.lm_wall.as_secs_f64(),
+            self.wall_tokens_per_s(),
+            self.digital_busy_s,
+            self.analog_busy_s,
+            self.simulated_tokens_per_s(),
+            self.simulated_tokens_per_joule(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let m = Metrics {
+            dispatched_tokens: 75,
+            padded_tokens: 25,
+            ..Default::default()
+        };
+        assert!((m.occupancy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simulated_throughput_takes_max_latency() {
+        let m = Metrics {
+            tokens: 100,
+            digital_busy_s: 2.0,
+            analog_busy_s: 0.5,
+            ..Default::default()
+        };
+        assert!((m.simulated_tokens_per_s() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.wall_tokens_per_s(), 0.0);
+        assert_eq!(m.simulated_tokens_per_joule(), 0.0);
+        assert_eq!(m.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::default();
+        assert!(m.report().contains("requests=0"));
+    }
+}

@@ -1,0 +1,298 @@
+//! Digital accelerator cost model — eq (16) of Appendix A.
+//!
+//! The paper assumes the digital accelerator is an NVIDIA A100 at 100%
+//! MFU: 624 TOP/s (FP16 tensor core), 400 W, 1555 GB/s HBM. Throughput
+//! is the roofline
+//!
+//! ```text
+//! tokens/s = n_tokens / max(total_TOPs / 624e12, total_bytes / 1555e9)
+//! ```
+//!
+//! and energy efficiency is `throughput / 400 W`. [`ArchSpec`] carries
+//! the *paper-scale* model dimensions (OLMoE-7B, DeepSeekMoE-16B) so
+//! Table 2 can be regenerated with the original arithmetic, plus our
+//! mini-model dimensions for cross-checking against wall-clock.
+
+/// A100-like accelerator constants (Appendix A).
+#[derive(Clone, Copy, Debug)]
+pub struct DigitalSpec {
+    pub tops: f64,
+    pub power_w: f64,
+    pub mem_bw: f64,
+    /// bytes per weight (FP16 deployment)
+    pub bytes_per_param: f64,
+}
+
+impl Default for DigitalSpec {
+    fn default() -> Self {
+        DigitalSpec { tops: 624e12, power_w: 400.0, mem_bw: 1555e9, bytes_per_param: 2.0 }
+    }
+}
+
+/// Transformer-MoE architecture dimensions for cost accounting.
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub n_moe_layers: usize,
+    pub d_model: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_expert: usize,
+    pub d_shared: usize,
+    pub d_dense_ffn: usize,
+    pub vocab: usize,
+}
+
+impl ArchSpec {
+    /// OLMoE-7B (Muennighoff et al. 2025): 16 layers all-MoE, 64 experts,
+    /// top-8, d=2048, gated experts m=1024, vocab 50304.
+    pub fn olmoe_7b() -> ArchSpec {
+        ArchSpec {
+            name: "OLMoE-7B".into(),
+            n_layers: 16,
+            n_moe_layers: 16,
+            d_model: 2048,
+            n_experts: 64,
+            top_k: 8,
+            d_expert: 1024,
+            d_shared: 0,
+            d_dense_ffn: 0,
+            vocab: 50304,
+        }
+    }
+
+    /// DeepSeekMoE-16B (Dai et al. 2024): 28 layers, first FFN dense,
+    /// 64 routed experts top-6 + 2 shared, d=2048, m=1408 fine-grained.
+    pub fn deepseek_16b() -> ArchSpec {
+        ArchSpec {
+            name: "DeepSeekMoE-16B".into(),
+            n_layers: 28,
+            n_moe_layers: 27,
+            d_model: 2048,
+            n_experts: 64,
+            top_k: 6,
+            d_expert: 1408,
+            d_shared: 2816,
+            d_dense_ffn: 10944,
+            vocab: 102400,
+        }
+    }
+
+    /// Build from a mini-model config (for wall-clock cross-checks).
+    pub fn from_model(cfg: &crate::config::ModelConfig) -> ArchSpec {
+        ArchSpec {
+            name: cfg.name.clone(),
+            n_layers: cfg.n_layers,
+            n_moe_layers: cfg.n_moe_layers(),
+            d_model: cfg.d_model,
+            n_experts: cfg.n_experts,
+            top_k: cfg.top_k,
+            d_expert: cfg.d_expert,
+            d_shared: cfg.d_shared,
+            d_dense_ffn: if cfg.dense_first_layer { cfg.d_dense_ffn } else { 0 },
+            vocab: cfg.vocab,
+        }
+    }
+
+    /// Parameters in one routed expert (gated MLP: up + gate + down).
+    pub fn params_per_expert(&self) -> f64 {
+        3.0 * self.d_model as f64 * self.d_expert as f64
+    }
+
+    /// Parameters in the dense modules: attention + LN + shared experts +
+    /// dense FFN + LM head + embeddings.
+    pub fn dense_params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let attn = self.n_layers as f64 * (4.0 * d * d + 4.0 * d);
+        let shared = self.n_moe_layers as f64 * 3.0 * d * self.d_shared as f64;
+        let dense_ffn =
+            (self.n_layers - self.n_moe_layers) as f64 * 3.0 * d * self.d_dense_ffn as f64;
+        let head = d * self.vocab as f64;
+        let embed = d * self.vocab as f64;
+        attn + shared + dense_ffn + head + embed
+    }
+
+    pub fn expert_params_total(&self) -> f64 {
+        self.n_moe_layers as f64 * self.n_experts as f64 * self.params_per_expert()
+    }
+
+    pub fn total_params(&self) -> f64 {
+        self.dense_params() + self.expert_params_total()
+    }
+
+    /// FLOPs per token through the dense modules (fwd only, 2·params).
+    pub fn dense_flops_per_token(&self) -> f64 {
+        2.0 * (self.dense_params() - self.d_model as f64 * self.vocab as f64) // embed is a gather
+    }
+
+    /// FLOPs per token through routed experts (top-k active).
+    pub fn expert_flops_per_token(&self) -> f64 {
+        2.0 * self.n_moe_layers as f64 * self.top_k as f64 * self.params_per_expert()
+    }
+}
+
+/// Per-batch digital cost under eq (16)'s roofline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DigitalCost {
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// Which module families run digitally.
+#[derive(Clone, Copy, Debug)]
+pub struct DigitalPlacement {
+    /// fraction of routed experts in digital (Γ of Fig 2)
+    pub expert_fraction: f64,
+    /// dense modules (attention, shared experts, LM head) digital?
+    pub dense_digital: bool,
+}
+
+/// Roofline cost of one batch of `batch` tokens through the digital share.
+///
+/// Weight traffic: every digitally-placed parameter is streamed once per
+/// batch (weights don't fit in SRAM at these scales); for routed experts
+/// only the experts actually hit by the batch are streamed — with
+/// `batch·top_k` draws over `E` experts, the expected fraction touched is
+/// `1 - (1 - 1/E)^(batch·top_k)`.
+pub fn digital_batch_cost(
+    arch: &ArchSpec,
+    spec: &DigitalSpec,
+    place: &DigitalPlacement,
+    batch: usize,
+) -> DigitalCost {
+    let b = batch as f64;
+    let mut flops = 0.0;
+    let mut bytes = 0.0;
+
+    if place.dense_digital {
+        flops += b * arch.dense_flops_per_token();
+        bytes += spec.bytes_per_param * (arch.dense_params());
+    }
+    if place.expert_fraction > 0.0 {
+        // tokens whose routed expert lives on the digital side
+        flops += b * arch.expert_flops_per_token() * place.expert_fraction;
+        let digital_experts = arch.n_experts as f64 * place.expert_fraction;
+        let hit_frac =
+            1.0 - (1.0 - 1.0 / arch.n_experts as f64).powf(b * arch.top_k as f64);
+        bytes += spec.bytes_per_param
+            * arch.n_moe_layers as f64
+            * digital_experts
+            * hit_frac
+            * arch.params_per_expert();
+    }
+
+    let t_compute = flops / spec.tops;
+    let t_mem = bytes / spec.mem_bw;
+    let latency = t_compute.max(t_mem);
+    DigitalCost { latency_s: latency, energy_j: spec.power_w * latency, flops, bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn olmoe_param_count_matches_7b() {
+        let a = ArchSpec::olmoe_7b();
+        let total = a.total_params();
+        assert!(
+            (6.0e9..8.0e9).contains(&total),
+            "OLMoE params {total:.2e} not ~7B"
+        );
+    }
+
+    #[test]
+    fn deepseek_param_count_matches_16b() {
+        let a = ArchSpec::deepseek_16b();
+        let total = a.total_params();
+        assert!(
+            (14.0e9..18.5e9).contains(&total),
+            "DeepSeekMoE params {total:.2e} not ~16B"
+        );
+    }
+
+    #[test]
+    fn dense_share_is_small() {
+        // paper: dense modules are ~5-6% of parameters in these MoEs
+        let a = ArchSpec::olmoe_7b();
+        let frac = a.dense_params() / a.total_params();
+        assert!((0.02..0.12).contains(&frac), "dense fraction {frac:.3}");
+    }
+
+    #[test]
+    fn full_digital_matches_paper_throughput() {
+        // paper Table 2: full digital OLMoE at batch 32 → 4220 tokens/s,
+        // 10.55 tokens/(W·s). Memory-bound regime.
+        let a = ArchSpec::olmoe_7b();
+        let c = digital_batch_cost(
+            &a,
+            &DigitalSpec::default(),
+            &DigitalPlacement { expert_fraction: 1.0, dense_digital: true },
+            32,
+        );
+        let tput = 32.0 / c.latency_s;
+        let eff = tput / 400.0;
+        assert!((3000.0..6000.0).contains(&tput), "throughput {tput:.0}");
+        assert!((7.5..15.0).contains(&eff), "efficiency {eff:.2}");
+        assert!(c.bytes / 1555e9 > c.flops / 624e12, "memory-bound");
+    }
+
+    #[test]
+    fn dense_only_digital_much_faster() {
+        // paper: 5.37% digital (dense only) → ~49781 tokens/s
+        let a = ArchSpec::olmoe_7b();
+        let c = digital_batch_cost(
+            &a,
+            &DigitalSpec::default(),
+            &DigitalPlacement { expert_fraction: 0.0, dense_digital: true },
+            32,
+        );
+        let tput = 32.0 / c.latency_s;
+        assert!((20_000.0..120_000.0).contains(&tput), "throughput {tput:.0}");
+    }
+
+    #[test]
+    fn expert_fraction_monotone_in_bytes() {
+        let a = ArchSpec::olmoe_7b();
+        let sp = DigitalSpec::default();
+        let mut last = 0.0;
+        for f in [0.0, 0.125, 0.25, 0.5, 1.0] {
+            let c = digital_batch_cost(
+                &a,
+                &sp,
+                &DigitalPlacement { expert_fraction: f, dense_digital: true },
+                32,
+            );
+            assert!(c.bytes >= last);
+            last = c.bytes;
+        }
+    }
+
+    #[test]
+    fn mini_model_spec_roundtrip() {
+        let cfg = crate::config::ModelConfig {
+            name: "t".into(),
+            vocab: 512,
+            seq_len: 32,
+            d_model: 48,
+            n_heads: 4,
+            n_layers: 4,
+            n_experts: 16,
+            top_k: 2,
+            d_expert: 64,
+            d_shared: 0,
+            dense_first_layer: false,
+            d_dense_ffn: 192,
+            batch: 32,
+            train_steps: 1,
+            flags_len: 73,
+            n_params: 0,
+        };
+        let a = ArchSpec::from_model(&cfg);
+        assert_eq!(a.n_moe_layers, 4);
+        assert!(a.total_params() > 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Task dataset and corpus loading (written by aot.py at build time).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Json;
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub ctx: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub gold: usize,
+}
+
+/// One benchmark task (a synthetic analog of PIQA/ARC/... — DESIGN.md §2).
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    pub n_choices: usize,
+    pub items: Vec<TaskItem>,
+}
+
+impl Task {
+    pub fn load(path: &Path) -> Result<Task> {
+        let j = Json::parse_file(path)?;
+        let mut items = Vec::new();
+        for it in j.get("items")?.as_arr()? {
+            let choices = it
+                .get("choices")?
+                .as_arr()?
+                .iter()
+                .map(|c| c.as_i32_vec())
+                .collect::<Result<Vec<_>>>()?;
+            items.push(TaskItem {
+                ctx: it.get("ctx")?.as_i32_vec()?,
+                choices,
+                gold: it.get("gold")?.as_usize()?,
+            });
+        }
+        Ok(Task {
+            name: j.get("name")?.as_str()?.to_string(),
+            n_choices: j.get("n_choices")?.as_usize()?,
+            items,
+        })
+    }
+
+    /// Chance-level accuracy for reporting.
+    pub fn chance(&self) -> f64 {
+        1.0 / self.n_choices as f64
+    }
+}
+
+/// The paper's 8 benchmark tasks, in its table order.
+pub const TASK_NAMES: [&str; 8] = [
+    "syn-piqa",
+    "syn-arce",
+    "syn-arcc",
+    "syn-boolq",
+    "syn-hella",
+    "syn-wino",
+    "syn-mathqa",
+    "syn-mmlu",
+];
+
+/// Load all 8 tasks from `artifacts/data/tasks/`.
+pub fn load_tasks(artifacts: &Path) -> Result<Vec<Task>> {
+    TASK_NAMES
+        .iter()
+        .map(|name| Task::load(&artifacts.join("data/tasks").join(format!("{name}.json"))))
+        .collect()
+}
+
+/// Load a packed i32 row file (`corpus.bin` / `calib.bin`): little-endian
+/// i32, row-major `[n_rows, seq_len]`.
+pub fn load_rows(path: &Path, seq_len: usize) -> Result<Vec<i32>> {
+    let bytes =
+        std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("{}: size not a multiple of 4", path.display()));
+    }
+    let n = bytes.len() / 4;
+    if n % seq_len != 0 {
+        return Err(anyhow!(
+            "{}: {} i32s not a multiple of seq_len {}",
+            path.display(),
+            n,
+            seq_len
+        ));
+    }
+    let mut out = vec![0i32; n];
+    for (i, ch) in bytes.chunks_exact(4).enumerate() {
+        out[i] = i32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+    }
+    Ok(out)
+}
+
+/// Token-frequency table + successor table (Fig 6 analysis).
+#[derive(Clone, Debug)]
+pub struct FreqTable {
+    pub freq: Vec<u64>,
+    pub succ: Vec<usize>,
+    pub word0: usize,
+}
+
+impl FreqTable {
+    pub fn load(artifacts: &Path) -> Result<FreqTable> {
+        let j = Json::parse_file(&artifacts.join("data/freq.json"))?;
+        Ok(FreqTable {
+            freq: j
+                .get("freq")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_usize()? as u64))
+                .collect::<Result<Vec<_>>>()?,
+            succ: j.get("succ")?.as_usize_vec()?,
+            word0: j.get("word0")?.as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn task_parses() {
+        let dir = std::env::temp_dir().join(format!("hetmoe-task-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        std::fs::write(
+            &p,
+            r#"{"name":"t","n_choices":2,"items":[{"ctx":[1,2],"choices":[[3],[4]],"gold":1}]}"#,
+        )
+        .unwrap();
+        let t = Task::load(&p).unwrap();
+        assert_eq!(t.items.len(), 1);
+        assert_eq!(t.items[0].gold, 1);
+        assert_eq!(t.chance(), 0.5);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hetmoe-rows-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rows.bin");
+        let mut f = std::fs::File::create(&p).unwrap();
+        for v in [1i32, 2, 3, 4, 5, 6] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let rows = load_rows(&p, 3).unwrap();
+        assert_eq!(rows, vec![1, 2, 3, 4, 5, 6]);
+        assert!(load_rows(&p, 4).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

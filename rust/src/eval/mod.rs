@@ -1,0 +1,282 @@
+//! Evaluation harness: the 8 benchmark-task analogs + perplexity.
+//!
+//! Mirrors the lm-eval-harness protocol the paper uses: a multiple-choice
+//! item is scored by running each `context ⧺ choice` sequence through the
+//! model and taking the argmax of the length-normalized choice log-prob.
+//! All heavy compute happens in the AOT `model_fwd` executable; this
+//! module owns batching, masking and accuracy/perplexity accounting.
+
+pub mod data;
+
+pub use data::{load_rows, Task, TaskItem};
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{AimcConfig, AnalogFlags, ModelConfig};
+use crate::runtime::{ArtifactPaths, Executable, ParamStore, Runtime};
+
+/// Scoring engine over the monolithic `model_fwd` entry point.
+pub struct Evaluator {
+    pub cfg: ModelConfig,
+    pub aimc: AimcConfig,
+    exe: Rc<Executable>,
+    /// number of `model_fwd` invocations so far (perf accounting)
+    pub n_calls: u64,
+    /// tokens pushed through the model so far
+    pub n_tokens: u64,
+}
+
+impl Evaluator {
+    pub fn new(
+        rt: &mut Runtime,
+        paths: &ArtifactPaths,
+        cfg: ModelConfig,
+        aimc: AimcConfig,
+    ) -> Result<Evaluator> {
+        let exe = rt
+            .load(&paths.hlo("model_fwd"))
+            .context("loading model_fwd")?;
+        Ok(Evaluator { cfg, aimc, exe, n_calls: 0, n_tokens: 0 })
+    }
+
+    /// Score a batch of packed rows: returns the per-sequence sum of
+    /// masked target log-probs. Rows beyond `tokens.len()/T` are absent;
+    /// the batch is padded to the compiled batch size internally.
+    pub fn score_rows(
+        &mut self,
+        rt: &Runtime,
+        params: &mut ParamStore,
+        tokens: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+        flags: &AnalogFlags,
+        kappa: f32,
+        lam: f32,
+    ) -> Result<Vec<f32>> {
+        let (b, t) = (self.cfg.batch, self.cfg.seq_len);
+        let n_rows = tokens.len() / t;
+        assert!(n_rows <= b, "batch overflow: {n_rows} > {b}");
+        let mut tk = vec![0i32; b * t];
+        let mut tg = vec![0i32; b * t];
+        let mut mk = vec![0f32; b * t];
+        tk[..tokens.len()].copy_from_slice(tokens);
+        tg[..targets.len()].copy_from_slice(targets);
+        mk[..mask.len()].copy_from_slice(mask);
+
+        let pbufs = params.device_buffers(rt)?;
+        let tk_b = rt.upload_i32(&tk, &[b, t])?;
+        let tg_b = rt.upload_i32(&tg, &[b, t])?;
+        let mk_b = rt.upload_f32(&mk, &[b, t])?;
+        let fl_b = rt.upload_f32(&flags.flags, &[flags.flags.len()])?;
+        let ka_b = rt.upload_scalar(kappa)?;
+        let la_b = rt.upload_scalar(lam)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = pbufs;
+        args.extend([&tk_b, &tg_b, &mk_b, &fl_b, &ka_b, &la_b]);
+        let outs = self.exe.run(&args)?;
+        self.n_calls += 1;
+        self.n_tokens += (n_rows * t) as u64;
+        let scores = outs[0].to_vec::<f32>()?;
+        Ok(scores[..n_rows].to_vec())
+    }
+
+    /// Accuracy of one task under a placement's flags.
+    pub fn eval_task(
+        &mut self,
+        rt: &Runtime,
+        params: &mut ParamStore,
+        task: &Task,
+        flags: &AnalogFlags,
+        max_items: usize,
+    ) -> Result<f64> {
+        let t = self.cfg.seq_len;
+        let items: Vec<&TaskItem> = task.items.iter().take(max_items).collect();
+        // flatten every (item, choice) into a packed row
+        let mut rows_tok = Vec::new();
+        let mut rows_tgt = Vec::new();
+        let mut rows_msk = Vec::new();
+        let mut choice_len = Vec::new();
+        for item in &items {
+            for choice in &item.choices {
+                let (tk, tg, mk) = pack_choice(&item.ctx, choice, t);
+                rows_tok.extend(tk);
+                rows_tgt.extend(tg);
+                rows_msk.extend(mk);
+                choice_len.push(choice.len().max(1) as f32);
+            }
+        }
+        let n_rows = choice_len.len();
+        let mut scores = Vec::with_capacity(n_rows);
+        let b = self.cfg.batch;
+        let mut r = 0;
+        while r < n_rows {
+            let take = (n_rows - r).min(b);
+            let s = self.score_rows(
+                rt,
+                params,
+                &rows_tok[r * t..(r + take) * t],
+                &rows_tgt[r * t..(r + take) * t],
+                &rows_msk[r * t..(r + take) * t],
+                flags,
+                self.aimc.kappa,
+                lam_or(self.aimc.lam),
+            )?;
+            scores.extend(s);
+            r += take;
+        }
+        // argmax of length-normalized log-prob per item
+        let mut correct = 0usize;
+        let mut k = 0usize;
+        for item in &items {
+            let nc = item.choices.len();
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for c in 0..nc {
+                let v = scores[k + c] / choice_len[k + c];
+                if v > best_v {
+                    best_v = v;
+                    best = c;
+                }
+            }
+            if best == item.gold {
+                correct += 1;
+            }
+            k += nc;
+        }
+        Ok(correct as f64 / items.len() as f64)
+    }
+
+    /// Accuracy on every task; returns (per-task, average) in task order.
+    pub fn eval_suite(
+        &mut self,
+        rt: &Runtime,
+        params: &mut ParamStore,
+        tasks: &[Task],
+        flags: &AnalogFlags,
+        max_items: usize,
+    ) -> Result<(Vec<f64>, f64)> {
+        let mut accs = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            accs.push(self.eval_task(rt, params, task, flags, max_items)?);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+        Ok((accs, avg))
+    }
+
+    /// Perplexity over pre-packed next-token rows (the calibration set).
+    /// Matches the paper's Appendix B protocol (Wikitext → our calib split).
+    pub fn perplexity(
+        &mut self,
+        rt: &Runtime,
+        params: &mut ParamStore,
+        rows: &[i32],
+        flags: &AnalogFlags,
+        kappa: f32,
+        lam: f32,
+        max_rows: usize,
+    ) -> Result<f64> {
+        let t = self.cfg.seq_len;
+        let pad = 0i32;
+        let n_rows = (rows.len() / t).min(max_rows);
+        let b = self.cfg.batch;
+        let mut total_lp = 0f64;
+        let mut total_toks = 0f64;
+        let mut r = 0;
+        while r < n_rows {
+            let take = (n_rows - r).min(b);
+            let mut tk = Vec::with_capacity(take * t);
+            let mut tg = vec![0i32; take * t];
+            let mut mk = vec![0f32; take * t];
+            tk.extend_from_slice(&rows[r * t..(r + take) * t]);
+            for i in 0..take {
+                for j in 0..t - 1 {
+                    let cur = tk[i * t + j];
+                    let nxt = tk[i * t + j + 1];
+                    if cur != pad && nxt != pad {
+                        tg[i * t + j] = nxt;
+                        mk[i * t + j] = 1.0;
+                        total_toks += 1.0;
+                    }
+                }
+            }
+            let s = self.score_rows(rt, params, &tk, &tg, &mk, flags, kappa, lam)?;
+            total_lp += s.iter().map(|&v| v as f64).sum::<f64>();
+            r += take;
+        }
+        Ok((-total_lp / total_toks.max(1.0)).exp())
+    }
+}
+
+fn lam_or(l: f32) -> f32 {
+    if l > 0.0 {
+        l
+    } else {
+        1.0
+    }
+}
+
+/// Pack `ctx ⧺ choice` into fixed-length (tokens, targets, mask) with the
+/// mask covering exactly the choice positions (the lm-eval protocol).
+pub fn pack_choice(ctx: &[i32], choice: &[i32], t: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let mut full: Vec<i32> = Vec::with_capacity(ctx.len() + choice.len());
+    full.extend_from_slice(ctx);
+    full.extend_from_slice(choice);
+    // keep the tail if too long (context truncates from the left)
+    if full.len() > t {
+        let overflow = full.len() - t;
+        full.drain(..overflow);
+    }
+    let start = full.len() - choice.len();
+    let mut tokens = vec![0i32; t];
+    let mut targets = vec![0i32; t];
+    let mut mask = vec![0f32; t];
+    tokens[..full.len()].copy_from_slice(&full);
+    for pos in start..full.len() {
+        if pos == 0 {
+            continue; // cannot predict the first token
+        }
+        targets[pos - 1] = full[pos];
+        mask[pos - 1] = 1.0;
+    }
+    (tokens, targets, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_choice_masks_choice_positions() {
+        let ctx = [1, 10, 11];
+        let choice = [20, 21];
+        let (tk, tg, mk) = pack_choice(&ctx, &choice, 8);
+        assert_eq!(&tk[..5], &[1, 10, 11, 20, 21]);
+        // predictions: pos2→20, pos3→21
+        assert_eq!(tg[2], 20);
+        assert_eq!(tg[3], 21);
+        assert_eq!(mk[2], 1.0);
+        assert_eq!(mk[3], 1.0);
+        assert_eq!(mk.iter().sum::<f32>(), 2.0);
+    }
+
+    #[test]
+    fn pack_choice_truncates_left() {
+        let ctx: Vec<i32> = (1..=10).collect();
+        let choice = [99, 98];
+        let (tk, _tg, mk) = pack_choice(&ctx, &choice, 8);
+        // kept: last 6 ctx tokens + 2 choice tokens
+        assert_eq!(&tk[..8], &[5, 6, 7, 8, 9, 10, 99, 98]);
+        assert_eq!(mk.iter().sum::<f32>(), 2.0);
+    }
+
+    #[test]
+    fn pack_choice_single_token() {
+        let (tk, tg, mk) = pack_choice(&[1, 2], &[7], 4);
+        assert_eq!(&tk[..3], &[1, 2, 7]);
+        assert_eq!(tg[1], 7);
+        assert_eq!(mk[1], 1.0);
+        assert_eq!(mk.iter().sum::<f32>(), 1.0);
+    }
+}

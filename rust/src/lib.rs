@@ -1,0 +1,57 @@
+//! # hetmoe — Robust Heterogeneous Analog-Digital Computing for MoE
+//!
+//! Rust/JAX/Pallas reproduction of *"Robust Heterogeneous Analog-Digital
+//! Computing for Mixture-of-Experts Models with Theoretical Generalization
+//! Guarantees"* (CS.LG 2026).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! - **L3 (this crate)** — the coordinator: heterogeneous placement of MoE
+//!   experts across a digital accelerator and a simulated analog in-memory
+//!   compute (AIMC) accelerator, a serving engine, the AIMC noise
+//!   substrate, the evaluation harness, and the paper's §4 theory
+//!   substrate.
+//! - **L2 (`python/compile/model.py`)** — mini MoE transformers lowered
+//!   once to HLO text at `make artifacts`; executed here via PJRT.
+//! - **L1 (`python/compile/kernels/aimc_mvm.py`)** — the Pallas crossbar
+//!   MVM kernel (DAC → tile dot → ADC), inside the analog expert HLO.
+//!
+//! The public API is organized per subsystem:
+//!
+//! - [`util`] — PRNG, JSON, statistics, tables, mini property testing
+//! - [`config`] — model/system/noise configuration
+//! - [`tensor`] — host tensors + the small dense math the coordinator owns
+//! - [`runtime`] — PJRT executable loading and execution, parameter store
+//! - [`aimc`] — NVM tiles, programming noise (eq 3), DAC/ADC (eqs 4-5),
+//!   calibration, energy/latency model
+//! - [`digital`] — digital accelerator roofline model (eq 16)
+//! - [`moe`] — expert scoring metrics (MaxNNScore eq 6-7 + baselines) and
+//!   the Γ-fraction placement planner (Fig 2)
+//! - [`eval`] — benchmark task suite and perplexity evaluation
+//! - [`train`] — Rust-driven training through the AOT `train_step`
+//! - [`coordinator`] — the heterogeneous serving engine
+//! - [`theory`] — §4 analytical setup (Lemma 4.1, Theorem 4.2)
+
+pub mod aimc;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod digital;
+pub mod eval;
+pub mod moe;
+pub mod runtime;
+pub mod tensor;
+pub mod theory;
+pub mod train;
+pub mod util;
+
+/// Default location of the AOT artifacts tree relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$HETMOE_ARTIFACTS` overrides the
+/// default `artifacts/` (used by tests and benches to point at a fixture).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("HETMOE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(ARTIFACTS_DIR))
+}

@@ -1,0 +1,280 @@
+//! `hetmoe` CLI — the leader entry point.
+//!
+//! Subcommands map onto the library's subsystems:
+//!
+//! ```text
+//! hetmoe info                         artifact + model inventory
+//! hetmoe eval   [--model M] [...]     task-suite accuracy for a placement
+//! hetmoe serve  [--model M] [...]     run the heterogeneous serving engine
+//! hetmoe train  [--model M] [...]     Rust-driven AOT training demo
+//! hetmoe theory [...]                 Lemma 4.1 / Theorem 4.2 experiments
+//! ```
+//!
+//! (Vendored environment has no clap; args are parsed by the tiny
+//! `cli` helper below — `--key value` pairs only.)
+
+use anyhow::{bail, Result};
+
+use hetmoe::aimc::program::NoiseModel;
+use hetmoe::config::Meta;
+use hetmoe::coordinator::{Batcher, Engine, Request};
+use hetmoe::eval::data::load_tasks;
+use hetmoe::eval::{pack_choice, Evaluator};
+use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
+use hetmoe::moe::score::SelectionMetric;
+use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
+use hetmoe::theory::{lemma41_experiment, theorem42_experiment, TheoryConfig};
+use hetmoe::train::{load_corpus, TrainOptions, Trainer};
+use hetmoe::util::table::Table;
+
+/// `--key value` argument map.
+struct Cli {
+    cmd: String,
+    kv: std::collections::HashMap<String, String>,
+}
+
+impl Cli {
+    fn parse() -> Cli {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let cmd = args.first().cloned().unwrap_or_else(|| "info".into());
+        let mut kv = std::collections::HashMap::new();
+        let mut i = 1;
+        while i + 1 < args.len() + 1 {
+            if let Some(k) = args.get(i).and_then(|a| a.strip_prefix("--")) {
+                let v = args.get(i + 1).cloned().unwrap_or_default();
+                kv.insert(k.to_string(), v);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Cli { cmd, kv }
+    }
+
+    fn get(&self, k: &str, default: &str) -> String {
+        self.kv.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_f64(&self, k: &str, default: f64) -> f64 {
+        self.kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_usize(&self, k: &str, default: usize) -> usize {
+        self.kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn metric_by_name(name: &str) -> Result<SelectionMetric> {
+    Ok(match name {
+        "maxnn" | "MaxNNScore" => SelectionMetric::MaxNNScore,
+        "actfreq" => SelectionMetric::ActivationFrequency,
+        "actweight" => SelectionMetric::ActivationWeight,
+        "routernorm" => SelectionMetric::RouterNorm,
+        "random" => SelectionMetric::Random,
+        _ => bail!("unknown metric '{name}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::parse();
+    let artifacts = hetmoe::artifacts_dir();
+    match cli.cmd.as_str() {
+        "info" => cmd_info(&cli),
+        "eval" => cmd_eval(&cli),
+        "serve" => cmd_serve(&cli),
+        "train" => cmd_train(&cli),
+        "theory" => cmd_theory(&cli),
+        other => bail!(
+            "unknown command '{other}' (try: info, eval, serve, train, theory); \
+             artifacts dir = {}",
+            artifacts.display()
+        ),
+    }
+}
+
+fn cmd_info(_cli: &Cli) -> Result<()> {
+    let artifacts = hetmoe::artifacts_dir();
+    let meta = Meta::load(&artifacts)?;
+    println!("hetmoe — heterogeneous analog-digital MoE serving");
+    println!("artifacts: {}", artifacts.display());
+    println!(
+        "aimc: {}-bit DAC / {}-bit ADC, tile {}, kappa={}, lam={}",
+        meta.aimc.bits_dac, meta.aimc.bits_adc, meta.aimc.tile_size, meta.aimc.kappa, meta.aimc.lam
+    );
+    let mut t = Table::new("models", &["name", "layers", "experts", "top-k", "d", "params"]);
+    for c in &meta.configs {
+        t.row(vec![
+            c.name.clone(),
+            c.n_layers.to_string(),
+            c.n_experts.to_string(),
+            c.top_k.to_string(),
+            c.d_model.to_string(),
+            c.n_params.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_eval(cli: &Cli) -> Result<()> {
+    let artifacts = hetmoe::artifacts_dir();
+    let meta = Meta::load(&artifacts)?;
+    let model = cli.get("model", "olmoe_mini");
+    let cfg = meta.config(&model)?.clone();
+    let paths = ArtifactPaths::new(&artifacts, &model);
+    let mut rt = Runtime::cpu()?;
+    let mut params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
+    let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc)?;
+    let tasks = load_tasks(&artifacts)?;
+    let max_items = cli.get_usize("items", 128);
+
+    let gamma = cli.get_f64("gamma", 0.0);
+    let noise = cli.get_f64("noise", 0.0);
+    let metric = metric_by_name(&cli.get("metric", "maxnn"))?;
+    let seed = cli.get_usize("seed", 0) as u64;
+
+    let placement = if gamma >= 1.0 {
+        Placement::all_digital(&cfg)
+    } else {
+        plan_placement(
+            &cfg,
+            &params,
+            &PlacementOptions { metric, gamma, seed },
+            None,
+        )?
+    };
+    let snap = params.snapshot();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(noise), seed)?;
+    let flags = placement.to_flags(&cfg);
+    let (accs, avg) = ev.eval_suite(&rt, &mut params, &tasks, &flags, max_items)?;
+    params.restore(&snap)?;
+
+    let mut t = Table::new(
+        &format!(
+            "{model} — Γ={gamma} metric={} prog-noise={noise} seed={seed}",
+            metric.name()
+        ),
+        &["task", "accuracy", "chance"],
+    );
+    for (task, acc) in tasks.iter().zip(&accs) {
+        t.row(vec![
+            task.name.clone(),
+            format!("{:.2}%", acc * 100.0),
+            format!("{:.0}%", task.chance() * 100.0),
+        ]);
+    }
+    t.row(vec!["AVG".into(), format!("{:.2}%", avg * 100.0), "".into()]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let artifacts = hetmoe::artifacts_dir();
+    let meta = Meta::load(&artifacts)?;
+    let model = cli.get("model", "olmoe_mini");
+    let cfg = meta.config(&model)?.clone();
+    let paths = ArtifactPaths::new(&artifacts, &model);
+    let mut rt = Runtime::cpu()?;
+    let mut params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
+    let tasks = load_tasks(&artifacts)?;
+    let gamma = cli.get_f64("gamma", 0.25);
+    let noise = cli.get_f64("noise", 1.0);
+    let n_requests = cli.get_usize("requests", 64);
+
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma, seed: 0 },
+        None,
+    )?;
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(noise), 0)?;
+    let mut engine = Engine::new(
+        &mut rt,
+        &paths,
+        cfg.clone(),
+        meta.aimc,
+        meta.serve_cap,
+        placement,
+        &params,
+    )?;
+
+    // build a request stream from task items
+    let mut batcher = Batcher::new(cfg.batch, 4, cfg.batch * 4);
+    let mut id = 0u64;
+    let mut served = 0usize;
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let choice = &item.choices[item.gold];
+            let (tk, tg, mk) = pack_choice(&item.ctx, choice, cfg.seq_len);
+            batcher.submit(Request { id, tokens: tk, targets: tg, mask: mk, arrived: 0 });
+            id += 1;
+            batcher.tick(1);
+            while let Some((batch, _)) = batcher.next_batch(false) {
+                served += engine.serve_batch(&rt, &batch)?.len();
+            }
+            if id as usize >= n_requests {
+                break 'outer;
+            }
+        }
+    }
+    while let Some((batch, _)) = batcher.next_batch(true) {
+        served += engine.serve_batch(&rt, &batch)?.len();
+    }
+    println!("served {served} scoring requests (Γ={gamma}, prog-noise={noise})");
+    println!("{}", engine.metrics.report());
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let artifacts = hetmoe::artifacts_dir();
+    let meta = Meta::load(&artifacts)?;
+    let model = cli.get("model", "olmoe_mini");
+    let cfg = meta.config(&model)?.clone();
+    let paths = ArtifactPaths::new(&artifacts, &model);
+    let mut rt = Runtime::cpu()?;
+    let mut store = ParamStore::load(&paths.manifest(), &paths.init_params_bin())?;
+    let corpus = load_corpus(&artifacts, cfg.seq_len)?;
+    let opts = TrainOptions {
+        steps: cli.get_usize("steps", 100),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&mut rt, &paths, cfg, &mut store)?;
+    let curve = trainer.run(&rt, &corpus, meta.data.pad, &opts)?;
+    for p in &curve {
+        println!("step {:4}  nll {:.4}", p.step, p.nll);
+    }
+    Ok(())
+}
+
+fn cmd_theory(cli: &Cli) -> Result<()> {
+    let alpha = cli.get_f64("alpha", 0.125);
+    let cfg = TheoryConfig { alpha, ..Default::default() };
+    let r41 = lemma41_experiment(&cfg);
+    println!(
+        "Lemma 4.1 @ alpha={alpha}: mean MaxNNScore frequent-specialists={:.3} \
+         rare-specialists={:.3} → holds={}",
+        r41.mean_freq, r41.mean_rare, r41.holds
+    );
+    let thresh = cli.get_f64("thresh", 0.95);
+    // log-spaced: the tolerable-c boundary sits well below 1 for analog
+    let c_grid: Vec<f64> = (0..=20)
+        .map(|i| 0.02 * (2.0f64 / 0.02).powf(i as f64 / 20.0))
+        .collect();
+    let r42 = theorem42_experiment(&cfg, 0.5, &c_grid, thresh, 3);
+    println!("c sweep (all-analog vs heterogeneous):");
+    for (i, &(c, a)) in r42.analog_curve.iter().enumerate() {
+        println!(
+            "  c={c:4.2}  analog acc={:.3}  het acc={:.3}",
+            a, r42.het_curve[i].1
+        );
+    }
+    println!(
+        "Theorem 4.2 @ alpha={alpha}: c_analog={:.2} c_het={:.2} ratio={:.2} \
+         ((1-a)/a = {:.2})",
+        r42.c_analog,
+        r42.c_het,
+        r42.c_het / r42.c_analog.max(1e-9),
+        (1.0 - alpha) / alpha
+    );
+    Ok(())
+}

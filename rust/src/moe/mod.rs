@@ -1,0 +1,16 @@
+//! MoE expert scoring and heterogeneous placement — the paper's core
+//! contribution (§3, Fig 2).
+//!
+//! - [`score`] — the **maximum neuron norm score** (eqs 6-7) and the
+//!   baseline selection metrics it is compared against in Figs 4-5
+//!   (activation frequency, activation weight, router norm, random).
+//! - [`placement`] — the Fig 2 three-step placement algorithm: dense
+//!   modules digital, experts ranked per block, top-Γ to digital, rest
+//!   to AIMC; plus the weight-programming step that applies eq (3) noise
+//!   to the analog-placed tensors in a [`ParamStore`].
+
+pub mod placement;
+pub mod score;
+
+pub use placement::{apply_placement, plan_placement, Placement, PlacementOptions};
+pub use score::{expert_scores, SelectionMetric};

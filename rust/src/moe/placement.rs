@@ -1,0 +1,384 @@
+//! The Fig 2 heterogeneous placement algorithm + weight programming.
+//!
+//! 1. All densely activated modules → digital accelerator.
+//! 2. Rank the experts of each MoE block by the selection metric.
+//! 3. Top-Γ fraction → digital; remaining experts' linear modules → AIMC.
+//!
+//! A [`Placement`] is then *applied* to a [`ParamStore`]: analog-placed
+//! expert weights receive eq (3) programming noise (per seed), and the
+//! matching `analog_flags` vector enables the in-graph DAC-ADC path. The
+//! two noise sources can be toggled independently, which is how Table 1
+//! (DAC-ADC only) and Figs 3-5 (programming only) are produced.
+
+use anyhow::Result;
+
+use super::score::{expert_scores, RouterStats, SelectionMetric};
+use crate::aimc::program::{program_expert_stack, program_matrix, NoiseModel};
+use crate::config::{AnalogFlags, ModelConfig};
+use crate::runtime::ParamStore;
+use crate::util::Prng;
+
+/// Full placement decision for one model.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// `analog[l][e]` — expert e of layer l runs on the AIMC chip
+    pub analog: Vec<Vec<bool>>,
+    /// attention (+LN projections) of each layer in analog (Fig 3 only;
+    /// the paper's method always keeps these digital)
+    pub attn_analog: Vec<bool>,
+    /// shared expert / dense FFN of each layer in analog
+    pub dense_ffn_analog: Vec<bool>,
+    /// LM head in analog
+    pub lm_head_analog: bool,
+    /// the metric and Γ that produced this placement (for reporting)
+    pub metric: Option<SelectionMetric>,
+    pub gamma: f64,
+}
+
+impl Placement {
+    /// Everything digital (the FP-16 baseline row of Table 1/2).
+    pub fn all_digital(cfg: &ModelConfig) -> Placement {
+        Placement {
+            analog: vec![vec![false; cfg.n_experts]; cfg.n_layers],
+            attn_analog: vec![false; cfg.n_layers],
+            dense_ffn_analog: vec![false; cfg.n_layers],
+            lm_head_analog: false,
+            metric: None,
+            gamma: 1.0,
+        }
+    }
+
+    /// All routed experts analog, dense modules digital (Γ = 0; the
+    /// "0% digital experts" curves of Figs 3-5).
+    pub fn all_experts_analog(cfg: &ModelConfig) -> Placement {
+        let mut p = Placement::all_digital(cfg);
+        for l in 0..cfg.n_layers {
+            if cfg.is_moe_layer(l) {
+                p.analog[l] = vec![true; cfg.n_experts];
+            }
+        }
+        p.gamma = 0.0;
+        p
+    }
+
+    /// Everything analog including dense modules (the worst case of
+    /// Table 1 "Experts+Dense" / Fig 3 "all").
+    pub fn all_analog(cfg: &ModelConfig) -> Placement {
+        let mut p = Placement::all_experts_analog(cfg);
+        p.attn_analog = vec![true; cfg.n_layers];
+        p.dense_ffn_analog = vec![true; cfg.n_layers];
+        p.lm_head_analog = true;
+        p
+    }
+
+    pub fn n_analog_experts(&self) -> usize {
+        self.analog.iter().map(|l| l.iter().filter(|&&a| a).count()).sum()
+    }
+
+    /// The `analog_flags` vector for the DAC-ADC in-graph path.
+    pub fn to_flags(&self, cfg: &ModelConfig) -> AnalogFlags {
+        let mut f = AnalogFlags::digital(cfg);
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                if self.analog[l][e] {
+                    f.set_expert(l, e, true);
+                }
+            }
+            if self.attn_analog[l] {
+                f.set_attn(l, true);
+            }
+            if self.dense_ffn_analog[l] {
+                f.set_dense_ffn(l, true);
+            }
+        }
+        if self.lm_head_analog {
+            f.set_lm_head(true);
+        }
+        f
+    }
+
+    /// Fraction of total model parameters placed on the digital side —
+    /// the "Param. in Digital" column of Table 2.
+    pub fn digital_param_fraction(&self, cfg: &ModelConfig, params: &ParamStore) -> f64 {
+        let mut digital = 0usize;
+        let mut total = 0usize;
+        let per_expert = 3 * cfg.d_model * cfg.d_expert;
+        for spec in &params.manifest.tensors {
+            total += spec.len;
+            let name = &spec.name;
+            if let Some(l) = parse_layer(name) {
+                if name.contains(".experts.") {
+                    // stacked [E, ...]: count per-expert placement
+                    let analog_n =
+                        self.analog[l].iter().filter(|&&a| a).count();
+                    digital += spec.len
+                        - analog_n * spec.len / cfg.n_experts;
+                    continue;
+                }
+                let analog = if name.contains(".attn.") || name.contains(".ln1.") {
+                    self.attn_analog[l]
+                } else if name.contains(".shared.") || name.contains(".ffn.") {
+                    self.dense_ffn_analog[l]
+                } else {
+                    false // router, ln2 always digital
+                };
+                if !analog {
+                    digital += spec.len;
+                }
+            } else if name == "lm_head" {
+                if !self.lm_head_analog {
+                    digital += spec.len;
+                }
+            } else {
+                digital += spec.len; // embed, pos_emb, ln_f
+            }
+        }
+        let _ = per_expert;
+        digital as f64 / total as f64
+    }
+}
+
+fn parse_layer(name: &str) -> Option<usize> {
+    name.strip_prefix("layers.")?
+        .split('.')
+        .next()?
+        .parse()
+        .ok()
+}
+
+/// Options for [`plan_placement`].
+#[derive(Clone, Debug)]
+pub struct PlacementOptions {
+    pub metric: SelectionMetric,
+    /// Γ — fraction of experts per MoE block placed digital (Fig 2 step 3)
+    pub gamma: f64,
+    /// seed for the Random baseline
+    pub seed: u64,
+}
+
+/// The Fig 2 algorithm: rank experts per block by the metric, put the
+/// top-Γ fraction digital, the rest analog. Dense modules stay digital.
+pub fn plan_placement(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    opts: &PlacementOptions,
+    stats: Option<&RouterStats>,
+) -> Result<Placement> {
+    let scores = expert_scores(cfg, params, opts.metric, stats, opts.seed)?;
+    let mut p = Placement::all_experts_analog(cfg);
+    p.metric = Some(opts.metric);
+    p.gamma = opts.gamma;
+    let k_digital = ((cfg.n_experts as f64) * opts.gamma).round() as usize;
+    for l in 0..cfg.n_layers {
+        if !cfg.is_moe_layer(l) {
+            continue;
+        }
+        // rank high → low; top-k_digital become digital
+        let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
+        idx.sort_by(|&a, &b| scores[l][b].partial_cmp(&scores[l][a]).unwrap());
+        for &e in idx.iter().take(k_digital) {
+            p.analog[l][e] = false;
+        }
+    }
+    Ok(p)
+}
+
+/// Apply programming noise (eq 3) to every analog-placed tensor in the
+/// store. DAC-ADC flags are separate (see [`Placement::to_flags`]).
+///
+/// Each (layer, module) gets an independent PRNG stream forked from
+/// `seed`, so placements of different Γ on the same seed share the noise
+/// realisation of their common analog experts — matching the paper's
+/// "same chip, different placement" comparison.
+pub fn apply_placement(
+    cfg: &ModelConfig,
+    params: &mut ParamStore,
+    placement: &Placement,
+    noise: &NoiseModel,
+    seed: u64,
+) -> Result<()> {
+    if noise.scale == 0.0 {
+        return Ok(());
+    }
+    let (d, m) = (cfg.d_model, cfg.d_expert);
+    for l in 0..cfg.n_layers {
+        if cfg.is_moe_layer(l) {
+            let analog = &placement.analog[l];
+            if analog.iter().any(|&a| a) {
+                for (mat, rows, cols) in [("up", d, m), ("gate", d, m), ("down", m, d)] {
+                    let name = format!("layers.{l}.experts.{mat}");
+                    let mut rng = Prng::new(seed ^ hash_name(&name));
+                    let w = params.tensor_mut(&name)?;
+                    program_expert_stack(w, cfg.n_experts, rows, cols, analog, noise, &mut rng);
+                }
+            }
+            if placement.dense_ffn_analog[l] && cfg.d_shared > 0 {
+                for (mat, rows, cols) in
+                    [("up", d, cfg.d_shared), ("gate", d, cfg.d_shared), ("down", cfg.d_shared, d)]
+                {
+                    let name = format!("layers.{l}.shared.{mat}");
+                    let mut rng = Prng::new(seed ^ hash_name(&name));
+                    let w = params.tensor_mut(&name)?;
+                    program_matrix(w, rows, cols, noise, &mut rng);
+                }
+            }
+        } else if placement.dense_ffn_analog[l] {
+            let mf = cfg.d_dense_ffn;
+            for (mat, rows, cols) in [("up", d, mf), ("gate", d, mf), ("down", mf, d)] {
+                let name = format!("layers.{l}.ffn.{mat}");
+                let mut rng = Prng::new(seed ^ hash_name(&name));
+                let w = params.tensor_mut(&name)?;
+                program_matrix(w, rows, cols, noise, &mut rng);
+            }
+        }
+        if placement.attn_analog[l] {
+            for mat in ["wq", "wk", "wv", "wo"] {
+                let name = format!("layers.{l}.attn.{mat}");
+                let mut rng = Prng::new(seed ^ hash_name(&name));
+                let w = params.tensor_mut(&name)?;
+                program_matrix(w, d, d, noise, &mut rng);
+            }
+        }
+    }
+    if placement.lm_head_analog {
+        let mut rng = Prng::new(seed ^ hash_name("lm_head"));
+        let vocab = cfg.vocab;
+        let w = params.tensor_mut("lm_head")?;
+        program_matrix(w, d, vocab, noise, &mut rng);
+    }
+    Ok(())
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a — stable across runs, distinct per tensor name
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 32,
+            seq_len: 8,
+            d_model: 4,
+            n_heads: 2,
+            n_layers: 2,
+            n_experts: 4,
+            top_k: 2,
+            d_expert: 3,
+            d_shared: 0,
+            dense_first_layer: false,
+            d_dense_ffn: 8,
+            batch: 2,
+            train_steps: 1,
+            flags_len: 2 * 4 + 2 * 2 + 1,
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn canned_placements() {
+        let c = cfg();
+        let p = Placement::all_digital(&c);
+        assert_eq!(p.n_analog_experts(), 0);
+        let p = Placement::all_experts_analog(&c);
+        assert_eq!(p.n_analog_experts(), 8);
+        assert!(!p.attn_analog.iter().any(|&a| a));
+        let p = Placement::all_analog(&c);
+        assert!(p.lm_head_analog && p.attn_analog.iter().all(|&a| a));
+    }
+
+    #[test]
+    fn flags_roundtrip() {
+        let c = cfg();
+        let mut p = Placement::all_experts_analog(&c);
+        p.analog[1][2] = false;
+        p.attn_analog[0] = true;
+        let f = p.to_flags(&c);
+        assert!(f.expert(0, 0));
+        assert!(!f.expert(1, 2));
+        assert!(f.attn(0));
+        assert!(!f.attn(1));
+        assert_eq!(f.n_analog_experts(), 7);
+    }
+
+    #[test]
+    fn parse_layer_names() {
+        assert_eq!(parse_layer("layers.3.attn.wq"), Some(3));
+        assert_eq!(parse_layer("lm_head"), None);
+        assert_eq!(parse_layer("embed"), None);
+    }
+
+    #[test]
+    fn hash_distinct() {
+        assert_ne!(hash_name("layers.0.experts.up"), hash_name("layers.0.experts.gate"));
+    }
+
+    #[test]
+    fn prop_flags_roundtrip_placement() {
+        // property: Placement → AnalogFlags preserves every bit
+        crate::util::proptest::check("placement flags roundtrip", 100, |rng| {
+            let c = cfg();
+            let mut p = Placement::all_digital(&c);
+            for l in 0..c.n_layers {
+                for e in 0..c.n_experts {
+                    p.analog[l][e] = rng.uniform() < 0.5;
+                }
+                p.attn_analog[l] = rng.uniform() < 0.5;
+                p.dense_ffn_analog[l] = rng.uniform() < 0.5;
+            }
+            p.lm_head_analog = rng.uniform() < 0.5;
+            let f = p.to_flags(&c);
+            for l in 0..c.n_layers {
+                for e in 0..c.n_experts {
+                    crate::prop_assert!(
+                        f.expert(l, e) == p.analog[l][e],
+                        "expert ({l},{e})"
+                    );
+                }
+                crate::prop_assert!(f.attn(l) == p.attn_analog[l], "attn {l}");
+            }
+            crate::prop_assert!(f.lm_head() == p.lm_head_analog, "lm head");
+            crate::prop_assert!(
+                f.n_analog_experts() == p.n_analog_experts(),
+                "counts differ"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_gamma_placement_counts() {
+        // property: plan-like per-block top-Γ selection always leaves
+        // exactly round(Γ·E) experts digital per MoE block
+        crate::util::proptest::check("gamma placement counts", 50, |rng| {
+            let c = cfg();
+            let gamma = rng.uniform();
+            let k_digital = ((c.n_experts as f64) * gamma).round() as usize;
+            // synthesize random scores and apply the same ranking rule
+            let mut p = Placement::all_experts_analog(&c);
+            for l in 0..c.n_layers {
+                let scores: Vec<f64> = (0..c.n_experts).map(|_| rng.uniform()).collect();
+                let mut idx: Vec<usize> = (0..c.n_experts).collect();
+                idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+                for &e in idx.iter().take(k_digital) {
+                    p.analog[l][e] = false;
+                }
+                let digital = p.analog[l].iter().filter(|&&a| !a).count();
+                crate::prop_assert!(
+                    digital == k_digital,
+                    "layer {l}: {digital} digital, want {k_digital}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! Expert selection metrics.
+//!
+//! The paper's metric (eqs 6-7): for each projection matrix the
+//! **maximum neuron norm** is the largest column ℓ2 norm; an expert's
+//! **MaxNNScore** is the product of the maximum neuron norms of its
+//! up/gate/down projections. Experts with large MaxNNScore are provably
+//! (Lemma 4.1) the ones specialized on frequent tokens and the most
+//! sensitive to programming noise — they go to the digital accelerator.
+//!
+//! Baselines from the MoE-compression literature (§5.3):
+//! - *Activation frequency* — fraction of tokens routed to the expert
+//!   over a calibration set (Koishekenov 2023, Chowdhury 2024);
+//! - *Activation weight* — mean routing weight over the calibration set
+//!   (Li 2024b, Huang 2025);
+//! - *Router norm* — ℓ2 norm of the expert's routing-matrix column
+//!   (calibration-free, like MaxNNScore);
+//! - *Random* — uniform random ranking (control).
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::runtime::ParamStore;
+use crate::tensor::col_norms;
+use crate::util::Prng;
+
+/// Which metric ranks experts for digital placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SelectionMetric {
+    MaxNNScore,
+    ActivationFrequency,
+    ActivationWeight,
+    RouterNorm,
+    Random,
+}
+
+impl SelectionMetric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionMetric::MaxNNScore => "MaxNNScore",
+            SelectionMetric::ActivationFrequency => "ActFreq",
+            SelectionMetric::ActivationWeight => "ActWeight",
+            SelectionMetric::RouterNorm => "RouterNorm",
+            SelectionMetric::Random => "Random",
+        }
+    }
+
+    pub fn needs_calibration_data(&self) -> bool {
+        matches!(
+            self,
+            SelectionMetric::ActivationFrequency | SelectionMetric::ActivationWeight
+        )
+    }
+
+    pub const ALL: [SelectionMetric; 5] = [
+        SelectionMetric::MaxNNScore,
+        SelectionMetric::ActivationFrequency,
+        SelectionMetric::ActivationWeight,
+        SelectionMetric::RouterNorm,
+        SelectionMetric::Random,
+    ];
+}
+
+/// Router statistics gathered over a calibration pass (per MoE layer,
+/// per expert). Collected by the serving pipeline
+/// (`coordinator::Engine::collect_router_stats`).
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    /// tokens routed to (layer, expert), indexed `[layer][expert]`
+    pub counts: Vec<Vec<u64>>,
+    /// summed routing weights per (layer, expert)
+    pub weight_sums: Vec<Vec<f64>>,
+    /// total routed tokens per layer
+    pub totals: Vec<u64>,
+}
+
+impl RouterStats {
+    pub fn new(n_layers: usize, n_experts: usize) -> RouterStats {
+        RouterStats {
+            counts: vec![vec![0; n_experts]; n_layers],
+            weight_sums: vec![vec![0.0; n_experts]; n_layers],
+            totals: vec![0; n_layers],
+        }
+    }
+
+    pub fn record(&mut self, layer: usize, expert: usize, weight: f64) {
+        self.counts[layer][expert] += 1;
+        self.weight_sums[layer][expert] += weight;
+        self.totals[layer] += 1;
+    }
+}
+
+/// MaxNNorm of eq (6) for a `[d, m]` row-major matrix: max column ℓ2 norm.
+pub fn max_neuron_norm(w: &[f32], d: usize, m: usize) -> f64 {
+    col_norms(w, d, m).into_iter().fold(0.0, f64::max)
+}
+
+/// MaxNNScore of eq (7) for every (moe-layer, expert), shape
+/// `[n_layers][n_experts]` (non-MoE layers get an empty row).
+pub fn maxnn_scores(cfg: &ModelConfig, params: &ParamStore) -> Result<Vec<Vec<f64>>> {
+    let (d, m) = (cfg.d_model, cfg.d_expert);
+    let mut out = vec![Vec::new(); cfg.n_layers];
+    for l in 0..cfg.n_layers {
+        if !cfg.is_moe_layer(l) {
+            continue;
+        }
+        let up = params.tensor(&format!("layers.{l}.experts.up"))?;
+        let gate = params.tensor(&format!("layers.{l}.experts.gate"))?;
+        let down = params.tensor(&format!("layers.{l}.experts.down"))?;
+        let mut scores = Vec::with_capacity(cfg.n_experts);
+        for e in 0..cfg.n_experts {
+            let s_up = max_neuron_norm(&up[e * d * m..(e + 1) * d * m], d, m);
+            let s_gate = max_neuron_norm(&gate[e * d * m..(e + 1) * d * m], d, m);
+            let s_down = max_neuron_norm(&down[e * m * d..(e + 1) * m * d], m, d);
+            scores.push(s_up * s_gate * s_down);
+        }
+        out[l] = scores;
+    }
+    Ok(out)
+}
+
+/// Router-norm baseline: ℓ2 norm of each expert's column of the routing
+/// matrix `[d, E]`.
+pub fn router_norm_scores(cfg: &ModelConfig, params: &ParamStore) -> Result<Vec<Vec<f64>>> {
+    let mut out = vec![Vec::new(); cfg.n_layers];
+    for l in 0..cfg.n_layers {
+        if !cfg.is_moe_layer(l) {
+            continue;
+        }
+        let router = params.tensor(&format!("layers.{l}.router"))?;
+        out[l] = col_norms(router, cfg.d_model, cfg.n_experts);
+    }
+    Ok(out)
+}
+
+/// Scores per (layer, expert) for `metric`. Calibration-based metrics
+/// need `stats`; `Random` needs a seed for reproducibility.
+pub fn expert_scores(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    metric: SelectionMetric,
+    stats: Option<&RouterStats>,
+    seed: u64,
+) -> Result<Vec<Vec<f64>>> {
+    match metric {
+        SelectionMetric::MaxNNScore => maxnn_scores(cfg, params),
+        SelectionMetric::RouterNorm => router_norm_scores(cfg, params),
+        SelectionMetric::ActivationFrequency => {
+            let s = stats.expect("ActivationFrequency needs router stats");
+            Ok((0..cfg.n_layers)
+                .map(|l| {
+                    if !cfg.is_moe_layer(l) {
+                        return Vec::new();
+                    }
+                    let tot = s.totals[l].max(1) as f64;
+                    s.counts[l].iter().map(|&c| c as f64 / tot).collect()
+                })
+                .collect())
+        }
+        SelectionMetric::ActivationWeight => {
+            let s = stats.expect("ActivationWeight needs router stats");
+            Ok((0..cfg.n_layers)
+                .map(|l| {
+                    if !cfg.is_moe_layer(l) {
+                        return Vec::new();
+                    }
+                    s.weight_sums[l]
+                        .iter()
+                        .zip(&s.counts[l])
+                        .map(|(&w, &c)| if c > 0 { w / c as f64 } else { 0.0 })
+                        .collect()
+                })
+                .collect())
+        }
+        SelectionMetric::Random => {
+            let mut rng = Prng::new(seed ^ 0xD161_7A1);
+            Ok((0..cfg.n_layers)
+                .map(|l| {
+                    if !cfg.is_moe_layer(l) {
+                        return Vec::new();
+                    }
+                    (0..cfg.n_experts).map(|_| rng.uniform()).collect()
+                })
+                .collect())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_neuron_norm_picks_largest_column() {
+        // 2x3 matrix, columns [1,0], [0,2], [2,2] → norms 1, 2, 2.83
+        let w = [1.0f32, 0.0, 2.0, 0.0, 2.0, 2.0];
+        let n = max_neuron_norm(&w, 2, 3);
+        assert!((n - (8.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn router_stats_record() {
+        let mut s = RouterStats::new(2, 4);
+        s.record(0, 1, 0.7);
+        s.record(0, 1, 0.3);
+        s.record(1, 3, 1.0);
+        assert_eq!(s.counts[0][1], 2);
+        assert!((s.weight_sums[0][1] - 1.0).abs() < 1e-12);
+        assert_eq!(s.totals[0], 2);
+        assert_eq!(s.totals[1], 1);
+    }
+
+    #[test]
+    fn metric_metadata() {
+        assert!(SelectionMetric::ActivationFrequency.needs_calibration_data());
+        assert!(!SelectionMetric::MaxNNScore.needs_calibration_data());
+        assert_eq!(SelectionMetric::ALL.len(), 5);
+    }
+}

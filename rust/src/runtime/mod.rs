@@ -1,0 +1,152 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
+//!
+//! This is the only boundary between the Rust request path and the
+//! build-time Python world. Artifacts are HLO *text* (not serialized
+//! protos — jax >= 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Perf-relevant design (EXPERIMENTS.md §Perf): model parameters are
+//! uploaded to the device once as [`xla::PjRtBuffer`]s and reused across
+//! calls via `execute_b`; only small data tensors (token batches, flags)
+//! are transferred per call. Re-programming an expert (noise injection)
+//! invalidates just that tensor's buffer.
+
+pub mod params;
+
+pub use params::{Manifest, ParamStore, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled HLO entry point plus its metadata.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client + executable cache.
+///
+/// Not `Send`: PJRT handles are raw pointers. The coordinator runs a
+/// single-threaded event loop with *simulated* per-accelerator clocks
+/// (this testbed is single-core; see DESIGN.md §5 `coordinator`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, Rc<Executable>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file, memoized by path.
+    pub fn load(&mut self, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let rc = Rc::new(Executable { name, exe });
+        self.cache.insert(path.to_path_buf(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an f32 scalar (rank-0).
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+}
+
+impl Executable {
+    /// Execute with device-resident inputs. All lowered computations use
+    /// `return_tuple=True`, so the single output buffer is a tuple; this
+    /// returns the decomposed elements as host literals.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and return device buffers without host transfer (for
+    /// chaining: e.g. the train loop feeds outputs back as inputs).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        Ok(std::mem::take(&mut outs[0]))
+    }
+}
+
+/// Read a whole f32 literal into a Vec.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+/// The per-config artifact paths.
+#[derive(Clone, Debug)]
+pub struct ArtifactPaths {
+    pub dir: PathBuf,
+}
+
+impl ArtifactPaths {
+    pub fn new(artifacts: &Path, config: &str) -> ArtifactPaths {
+        ArtifactPaths { dir: artifacts.join(config) }
+    }
+
+    pub fn hlo(&self, entry: &str) -> PathBuf {
+        self.dir.join(format!("{entry}.hlo.txt"))
+    }
+
+    pub fn params_bin(&self) -> PathBuf {
+        self.dir.join("params.bin")
+    }
+
+    pub fn init_params_bin(&self) -> PathBuf {
+        self.dir.join("init_params.bin")
+    }
+
+    pub fn manifest(&self) -> PathBuf {
+        self.dir.join("manifest.json")
+    }
+}

@@ -1,0 +1,278 @@
+//! Parameter store: the trained weights of a mini MoE model, addressable
+//! by name, mutable for noise programming, and mirrored on the device as
+//! PJRT buffers in the canonical manifest order (the HLO input ABI).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::Runtime;
+use crate::util::Json;
+
+/// One tensor's layout within the flat parameter file.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// The ordered tensor manifest written by aot.py.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tensors: Vec<TensorSpec>,
+    pub total_f32: usize,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(path)?;
+        let mut tensors = Vec::new();
+        for t in j.get("tensors")?.as_arr()? {
+            tensors.push(TensorSpec {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t.get("shape")?.as_usize_vec()?,
+                offset: t.get("offset")?.as_usize()?,
+                len: t.get("len")?.as_usize()?,
+            });
+        }
+        let total = j.get("total_f32")?.as_usize()?;
+        let by_name = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        Ok(Manifest { tensors, total_f32: total, by_name })
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("no tensor '{name}' in manifest"))
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&TensorSpec> {
+        Ok(&self.tensors[self.index_of(name)?])
+    }
+}
+
+/// Host-side parameter values + lazily maintained device mirrors.
+pub struct ParamStore {
+    pub manifest: Manifest,
+    data: Vec<f32>,
+    /// device mirror per tensor; None = stale / not yet uploaded
+    buffers: Vec<Option<xla::PjRtBuffer>>,
+}
+
+impl ParamStore {
+    /// Load the flat little-endian f32 file described by the manifest.
+    pub fn load(manifest_path: &Path, params_path: &Path) -> Result<ParamStore> {
+        let manifest = Manifest::load(manifest_path)?;
+        let bytes = std::fs::read(params_path)
+            .map_err(|e| anyhow!("reading {}: {e}", params_path.display()))?;
+        if bytes.len() != manifest.total_f32 * 4 {
+            bail!(
+                "param file {} has {} bytes, manifest wants {}",
+                params_path.display(),
+                bytes.len(),
+                manifest.total_f32 * 4
+            );
+        }
+        let mut data = vec![0f32; manifest.total_f32];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        let n = manifest.tensors.len();
+        Ok(ParamStore { manifest, data, buffers: (0..n).map(|_| None).collect() })
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.manifest.tensors.len()
+    }
+
+    /// Immutable view of a tensor's values.
+    pub fn tensor(&self, name: &str) -> Result<&[f32]> {
+        let s = self.manifest.spec(name)?;
+        Ok(&self.data[s.offset..s.offset + s.len])
+    }
+
+    pub fn tensor_shape(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self.manifest.spec(name)?.shape)
+    }
+
+    /// Mutable view; marks the device mirror stale.
+    pub fn tensor_mut(&mut self, name: &str) -> Result<&mut [f32]> {
+        let i = self.manifest.index_of(name)?;
+        self.buffers[i] = None;
+        let s = &self.manifest.tensors[i];
+        Ok(&mut self.data[s.offset..s.offset + s.len])
+    }
+
+    /// Replace a tensor's values wholesale (e.g. restore a pristine copy
+    /// after a noise experiment).
+    pub fn set_tensor(&mut self, name: &str, values: &[f32]) -> Result<()> {
+        let dst = self.tensor_mut(name)?;
+        if dst.len() != values.len() {
+            bail!("set_tensor '{name}': length mismatch");
+        }
+        dst.copy_from_slice(values);
+        Ok(())
+    }
+
+    /// Snapshot all values (for checkpoint/restore around noise sweeps).
+    pub fn snapshot(&self) -> Vec<f32> {
+        self.data.clone()
+    }
+
+    /// Restore a snapshot; invalidates every device mirror.
+    pub fn restore(&mut self, snap: &[f32]) -> Result<()> {
+        if snap.len() != self.data.len() {
+            bail!("snapshot length mismatch");
+        }
+        self.data.copy_from_slice(snap);
+        for b in &mut self.buffers {
+            *b = None;
+        }
+        Ok(())
+    }
+
+    /// Restore only the tensors whose device mirror is stale *and* whose
+    /// values differ — cheap undo for per-seed noise loops.
+    pub fn restore_tensor(&mut self, name: &str, snap: &[f32]) -> Result<()> {
+        let s = self.manifest.spec(name)?.clone();
+        let src = &snap[s.offset..s.offset + s.len];
+        let i = self.manifest.index_of(&s.name)?;
+        self.buffers[i] = None;
+        self.data[s.offset..s.offset + s.len].copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Ensure every tensor has a fresh device mirror; returns them in
+    /// manifest order (the HLO parameter ABI).
+    pub fn device_buffers(&mut self, rt: &Runtime) -> Result<Vec<&xla::PjRtBuffer>> {
+        for (i, spec) in self.manifest.tensors.iter().enumerate() {
+            if self.buffers[i].is_none() {
+                let vals = &self.data[spec.offset..spec.offset + spec.len];
+                self.buffers[i] = Some(rt.upload_f32(vals, &spec.shape)?);
+            }
+        }
+        Ok(self.buffers.iter().map(|b| b.as_ref().unwrap()).collect())
+    }
+
+    /// Count of stale (to-be-uploaded) tensors — used by perf metrics.
+    pub fn stale_count(&self) -> usize {
+        self.buffers.iter().filter(|b| b.is_none()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fixture() -> (tempdir::TempDir, ParamStore) {
+        let dir = tempdir::TempDir::new();
+        let manifest = r#"{"tensors": [
+            {"name": "a", "shape": [2, 2], "offset": 0, "len": 4},
+            {"name": "b", "shape": [3], "offset": 4, "len": 3}
+        ], "total_f32": 7}"#;
+        std::fs::write(dir.path().join("manifest.json"), manifest).unwrap();
+        let vals: Vec<f32> = (0..7).map(|x| x as f32).collect();
+        let mut f = std::fs::File::create(dir.path().join("params.bin")).unwrap();
+        for v in &vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        let ps = ParamStore::load(
+            &dir.path().join("manifest.json"),
+            &dir.path().join("params.bin"),
+        )
+        .unwrap();
+        (dir, ps)
+    }
+
+    // minimal tempdir (no external crate)
+    mod tempdir {
+        use std::path::{Path, PathBuf};
+        pub struct TempDir(PathBuf);
+        impl TempDir {
+            pub fn new() -> TempDir {
+                let p = std::env::temp_dir().join(format!(
+                    "hetmoe-test-{}-{:x}",
+                    std::process::id(),
+                    std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .unwrap()
+                        .as_nanos()
+                ));
+                std::fs::create_dir_all(&p).unwrap();
+                TempDir(p)
+            }
+            pub fn path(&self) -> &Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDir {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let (_d, ps) = fixture();
+        assert_eq!(ps.n_tensors(), 2);
+        assert_eq!(ps.tensor("a").unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ps.tensor("b").unwrap(), &[4.0, 5.0, 6.0]);
+        assert_eq!(ps.tensor_shape("a").unwrap(), &[2, 2]);
+        assert!(ps.tensor("missing").is_err());
+    }
+
+    #[test]
+    fn mutation_and_snapshot() {
+        let (_d, mut ps) = fixture();
+        let snap = ps.snapshot();
+        ps.tensor_mut("b").unwrap()[0] = 99.0;
+        assert_eq!(ps.tensor("b").unwrap()[0], 99.0);
+        assert_eq!(ps.stale_count(), 2); // nothing uploaded yet
+        ps.restore(&snap).unwrap();
+        assert_eq!(ps.tensor("b").unwrap()[0], 4.0);
+    }
+
+    #[test]
+    fn set_tensor_validates_len() {
+        let (_d, mut ps) = fixture();
+        assert!(ps.set_tensor("b", &[1.0]).is_err());
+        ps.set_tensor("b", &[7.0, 8.0, 9.0]).unwrap();
+        assert_eq!(ps.tensor("b").unwrap(), &[7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn restore_single_tensor() {
+        let (_d, mut ps) = fixture();
+        let snap = ps.snapshot();
+        ps.tensor_mut("a").unwrap().fill(-1.0);
+        ps.restore_tensor("a", &snap).unwrap();
+        assert_eq!(ps.tensor("a").unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        let dir = tempdir::TempDir::new();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"tensors": [{"name":"a","shape":[4],"offset":0,"len":4}], "total_f32": 4}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.path().join("params.bin"), [0u8; 8]).unwrap();
+        assert!(ParamStore::load(
+            &dir.path().join("manifest.json"),
+            &dir.path().join("params.bin")
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,309 @@
+//! Host tensors and the small dense math the L3 coordinator owns.
+//!
+//! The heavy compute (attention, expert FFNs, LM head) runs in AOT-
+//! compiled XLA executables; the coordinator still needs embedding
+//! gathers, LayerNorm, router softmax/top-k, residual adds and norm
+//! computations (MaxNNScore) on the host. Row-major `f32` throughout.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows × cols view of a rank-2 tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] => Ok((*r, *c)),
+            s => bail!("expected rank-2, got {:?}", s),
+        }
+    }
+
+    pub fn dims3(&self) -> Result<(usize, usize, usize)> {
+        match self.shape.as_slice() {
+            [a, b, c] => Ok((*a, *b, *c)),
+            s => bail!("expected rank-3, got {:?}", s),
+        }
+    }
+
+    /// Immutable row of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.dims2().expect("row() on rank-2");
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, c) = self.dims2().expect("row_mut() on rank-2");
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Slice of the s-th rank-2 plane of a rank-3 tensor [S, R, C].
+    pub fn plane(&self, s: usize) -> &[f32] {
+        let (_, r, c) = self.dims3().expect("plane() on rank-3");
+        &self.data[s * r * c..(s + 1) * r * c]
+    }
+
+    pub fn plane_mut(&mut self, s: usize) -> &mut [f32] {
+        let (_, r, c) = self.dims3().expect("plane_mut() on rank-3");
+        &mut self.data[s * r * c..(s + 1) * r * c]
+    }
+
+    /// y = x @ self for a single row vector x (len = rows). Used for the
+    /// router scores on the serving path.
+    pub fn vecmat(&self, x: &[f32]) -> Vec<f32> {
+        let (r, c) = self.dims2().expect("vecmat on rank-2");
+        assert_eq!(x.len(), r);
+        let mut y = vec![0.0f32; c];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * c..(i + 1) * c];
+            for (yj, wj) in y.iter_mut().zip(row) {
+                *yj += xi * wj;
+            }
+        }
+        y
+    }
+}
+
+// ---------------------------------------------------------------------------
+// free functions over slices (the coordinator hot path works on &[f32])
+// ---------------------------------------------------------------------------
+
+/// LayerNorm over the last axis of a [n, d] buffer, writing into `out`.
+/// Matches the L2 model exactly (eps = 1e-5, scale+shift).
+pub fn layer_norm(x: &[f32], scale: &[f32], bias: &[f32], d: usize, out: &mut [f32]) {
+    assert_eq!(x.len() % d, 0);
+    assert_eq!(x.len(), out.len());
+    let eps = 1e-5f32;
+    for (xr, or) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mean = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for j in 0..d {
+            or[j] = (xr[j] - mean) * inv * scale[j] + bias[j];
+        }
+    }
+}
+
+/// In-place softmax over a slice.
+pub fn softmax(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in xs.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Indices of the k largest values (descending by value; stable on ties
+/// by lower index first — matches jax.lax.top_k).
+pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// ℓ2 norm of a slice.
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// axpy: y += a * x.
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Row-major matmul: `c[n,m] = a[n,k] @ b[k,m]`. The coordinator uses
+/// this only for small host-side modules (shared experts / dense FFN at
+/// mini scale); all large matmuls run in XLA executables.
+pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(b.len(), k * m);
+    let mut c = vec![0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * m..(i + 1) * m];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * m..(kk + 1) * m];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// SiLU activation (matches the L2 model).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Gated MLP `silu(x@up) * (x@gate) @ down` on the host — the serving
+/// path for shared experts / the DeepSeek dense FFN (always digital).
+pub fn gated_mlp(x: &[f32], up: &[f32], gate: &[f32], down: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    let u = matmul(x, up, n, d, m);
+    let g = matmul(x, gate, n, d, m);
+    let mut act = vec![0f32; n * m];
+    for i in 0..n * m {
+        act[i] = silu(u[i]) * g[i];
+    }
+    matmul(&act, down, n, m, d)
+}
+
+/// Column ℓ2 norms of a [d, m] row-major matrix — the neuron norms of
+/// eq (6): neuron i of W is the column W_{:,i}.
+pub fn col_norms(w: &[f32], d: usize, m: usize) -> Vec<f64> {
+    assert_eq!(w.len(), d * m);
+    let mut acc = vec![0.0f64; m];
+    for r in 0..d {
+        let row = &w[r * m..(r + 1) * m];
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += (v as f64) * (v as f64);
+        }
+    }
+    for a in acc.iter_mut() {
+        *a = a.sqrt();
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shapes() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dims2().unwrap(), (2, 3));
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn rows_and_planes() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        let t3 = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t3.plane(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn vecmat_matches_manual() {
+        // W = [[1,2],[3,4],[5,6]] (3x2), x = [1, 0, -1] → [-4, -4]
+        let w = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(w.vecmat(&[1.0, 0.0, -1.0]), vec![-4.0, -4.0]);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let s = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        layer_norm(&x, &s, &b, 4, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = [1.0f32, 2.0, 3.0];
+        softmax(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut xs = [1000.0f32, 1001.0];
+        softmax(&mut xs);
+        assert!(xs.iter().all(|v| v.is_finite()));
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_orders() {
+        let xs = [0.1f32, 0.9, 0.5, 0.9];
+        assert_eq!(top_k(&xs, 2), vec![1, 3]); // ties → lower index first
+        assert_eq!(top_k(&xs, 1), vec![1]);
+    }
+
+    #[test]
+    fn col_norms_match() {
+        // W (2x2) rows: [3, 0], [4, 1] → col norms [5, 1]
+        let w = [3.0f32, 0.0, 4.0, 1.0];
+        let n = col_norms(&w, 2, 2);
+        assert!((n[0] - 5.0).abs() < 1e-9);
+        assert!((n[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        // a = [[1,2],[3,4]], b = [[5,6],[7,8]] → [[19,22],[43,50]]
+        let c = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        assert_eq!(c, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn gated_mlp_zero_input_is_zero() {
+        let y = gated_mlp(&[0.0; 4], &[1.0; 4], &[1.0; 4], &[1.0; 4], 2, 2, 2);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0)).abs() < 1e-9);
+        assert!(silu(10.0) > 9.99);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn l2_and_axpy() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        let mut y = [1.0f32, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut y);
+        assert_eq!(y, [3.0, 5.0]);
+    }
+}

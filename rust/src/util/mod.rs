@@ -1,0 +1,17 @@
+//! Shared substrates: deterministic PRNG, JSON, statistics, table
+//! rendering and a miniature property-testing driver.
+//!
+//! The execution environment is fully offline with a minimal vendored
+//! crate set, so these are built from scratch rather than pulled in
+//! (rand/serde_json/proptest are not available); each is small, tested,
+//! and exactly as deep as the rest of the system needs.
+
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use prng::Prng;
+pub use stats::{mean, mean_stderr, stddev};

@@ -1,0 +1,65 @@
+//! Miniature property-testing driver (proptest is not in the vendored
+//! crate set). Runs a property over many seeded random cases and, on
+//! failure, reports the seed so the case can be replayed exactly.
+//!
+//! Used for the coordinator invariants (token conservation, batching
+//! bounds, placement determinism) and the AIMC noise-statistics checks.
+
+use super::prng::Prng;
+
+/// Run `prop` for `cases` seeded cases. Each case gets its own
+/// deterministic [`Prng`]; a returned `Err(msg)` fails the run with the
+/// offending seed in the panic message.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    let base = std::env::var("HETMOE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Prng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 HETMOE_PROP_SEED={base} and case offset {case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assert for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 below bound", 50, |rng| {
+            let n = rng.range(1, 100);
+            let k = rng.below(n);
+            if k < n {
+                Ok(())
+            } else {
+                Err(format!("{k} >= {n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,139 @@
+//! Summary statistics for experiment reporting.
+//!
+//! The paper reports "average and standard error of the results of 32
+//! different random seeds" (§5.1); [`mean_stderr`] is that estimator.
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// (mean, standard error of the mean).
+pub fn mean_stderr(xs: &[f64]) -> (f64, f64) {
+    let m = mean(xs);
+    if xs.len() < 2 {
+        return (m, 0.0);
+    }
+    (m, stddev(xs) / (xs.len() as f64).sqrt())
+}
+
+/// q-quantile (0 <= q <= 1) with linear interpolation; slice need not be
+/// sorted. Used for latency percentiles in the serving metrics.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Pearson correlation coefficient; 0 when undefined. Used to check that
+/// MaxNNScore rankings correlate with empirical noise sensitivity.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let (mx, my) = (mean(xs), mean(ys));
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..n {
+        let a = xs[i] - mx;
+        let b = ys[i] - my;
+        num += a * b;
+        dx += a * a;
+        dy += b * b;
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+/// Spearman rank correlation (ties broken by index; adequate for scores
+/// that are continuous). Used for ranking-agreement checks between expert
+/// selection metrics.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    let rx = ranks(xs);
+    let ry = ranks(ys);
+    pearson(&rx, &ry)
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut r = vec![0.0; xs.len()];
+    for (rank, &i) in idx.iter().enumerate() {
+        r[i] = rank as f64;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stddev(&xs) - 1.2909944).abs() < 1e-6);
+        let (m, se) = mean_stderr(&xs);
+        assert_eq!(m, 2.5);
+        assert!((se - 1.2909944 / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[5.0]), 0.0);
+        assert_eq!(mean_stderr(&[5.0]), (5.0, 0.0));
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yn = [6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &yn) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [10.0, 100.0, 1000.0, 10000.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+}

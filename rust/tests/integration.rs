@@ -1,0 +1,348 @@
+//! Integration tests over the real AOT artifacts.
+//!
+//! These exercise the full L3→L2→L1 stack: PJRT loading, the parameter
+//! ABI, the analog-vs-reference numerics, and the serving/eval
+//! equivalence. They require `make artifacts` to have run; if the
+//! artifacts tree is missing they fail with a clear message rather than
+//! silently passing.
+
+use hetmoe::aimc::program::NoiseModel;
+use hetmoe::aimc::quant::{adc_quant, dac_quant};
+use hetmoe::config::Meta;
+use hetmoe::coordinator::{Engine, Request};
+use hetmoe::eval::data::load_tasks;
+use hetmoe::eval::{pack_choice, Evaluator};
+use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
+use hetmoe::moe::score::{maxnn_scores, SelectionMetric};
+use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
+use hetmoe::tensor;
+use hetmoe::util::Prng;
+
+fn artifacts_ready() -> bool {
+    hetmoe::artifacts_dir().join("meta.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            panic!(
+                "artifacts/ missing — run `make artifacts` before `cargo test` \
+                 (see README quickstart)"
+            );
+        }
+    };
+}
+
+fn setup(model: &str) -> (Runtime, Meta, ArtifactPaths, ParamStore) {
+    let artifacts = hetmoe::artifacts_dir();
+    let meta = Meta::load(&artifacts).expect("meta.json");
+    let paths = ArtifactPaths::new(&artifacts, model);
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let params = ParamStore::load(&paths.manifest(), &paths.params_bin()).expect("params");
+    (rt, meta, paths, params)
+}
+
+#[test]
+fn expert_ffn_digital_matches_host_matmul() {
+    require_artifacts!();
+    let (mut rt, meta, paths, params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let exe = rt.load(&paths.hlo("expert_ffn_digital")).unwrap();
+    let (d, m, cap) = (cfg.d_model, cfg.d_expert, meta.serve_cap);
+
+    // expert 0 of layer 0
+    let up = &params.tensor("layers.0.experts.up").unwrap()[..d * m];
+    let gate = &params.tensor("layers.0.experts.gate").unwrap()[..d * m];
+    let down = &params.tensor("layers.0.experts.down").unwrap()[..m * d];
+    let mut rng = Prng::new(0);
+    let x: Vec<f32> = (0..cap * d).map(|_| rng.gaussian_f32() * 0.5).collect();
+
+    let xb = rt.upload_f32(&x, &[cap, d]).unwrap();
+    let ub = rt.upload_f32(up, &[d, m]).unwrap();
+    let gb = rt.upload_f32(gate, &[d, m]).unwrap();
+    let db = rt.upload_f32(down, &[m, d]).unwrap();
+    let outs = exe.run(&[&xb, &ub, &gb, &db]).unwrap();
+    let got = outs[0].to_vec::<f32>().unwrap();
+
+    let want = tensor::gated_mlp(&x, up, gate, down, cap, d, m);
+    let max_diff = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "digital expert FFN mismatch: {max_diff}");
+}
+
+#[test]
+fn expert_ffn_analog_matches_rust_tile_simulator() {
+    // The Pallas crossbar kernel (inside expert_ffn_analog.hlo.txt) and
+    // the pure-Rust aimc::quant tile simulator implement the same
+    // eqs (4)-(5); cross-language agreement closes the L1↔L3 loop.
+    require_artifacts!();
+    let (mut rt, meta, paths, params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let exe = rt.load(&paths.hlo("expert_ffn_analog")).unwrap();
+    let (d, m, cap) = (cfg.d_model, cfg.d_expert, meta.serve_cap);
+    let (kappa, lam) = (meta.aimc.kappa, meta.aimc.lam);
+
+    let up = &params.tensor("layers.0.experts.up").unwrap()[..d * m];
+    let gate = &params.tensor("layers.0.experts.gate").unwrap()[..d * m];
+    let down = &params.tensor("layers.0.experts.down").unwrap()[..m * d];
+    let mut rng = Prng::new(1);
+    let x: Vec<f32> = (0..cap * d).map(|_| rng.gaussian_f32() * 0.5).collect();
+
+    let xb = rt.upload_f32(&x, &[cap, d]).unwrap();
+    let ub = rt.upload_f32(up, &[d, m]).unwrap();
+    let gb = rt.upload_f32(gate, &[d, m]).unwrap();
+    let db = rt.upload_f32(down, &[m, d]).unwrap();
+    let kb = rt.upload_scalar(kappa).unwrap();
+    let lb = rt.upload_scalar(lam).unwrap();
+    let outs = exe.run(&[&xb, &ub, &gb, &db, &kb, &lb]).unwrap();
+    let got = outs[0].to_vec::<f32>().unwrap();
+
+    // host simulator: same beta rule (kappa * batch std) + tile math
+    let std = {
+        let mean = x.iter().sum::<f32>() / x.len() as f32;
+        (x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / x.len() as f32).sqrt()
+    };
+    let beta_up = kappa * std + 1e-6;
+    let mvm = |inp: &[f32], w: &[f32], rows: usize, cols: usize, beta: f32| -> Vec<f32> {
+        let mut out = vec![0f32; cap * cols];
+        for i in 0..cap {
+            let y = hetmoe::aimc::quant::tile_mvm(
+                &inp[i * rows..(i + 1) * rows],
+                w,
+                rows,
+                cols,
+                beta,
+                lam,
+                8,
+                8,
+            );
+            out[i * cols..(i + 1) * cols].copy_from_slice(&y);
+        }
+        out
+    };
+    let u = mvm(&x, up, d, m, beta_up);
+    let g = mvm(&x, gate, d, m, beta_up);
+    let mut act = vec![0f32; cap * m];
+    for i in 0..cap * m {
+        act[i] = tensor::silu(u[i]) * g[i];
+    }
+    let std_a = {
+        let mean = act.iter().sum::<f32>() / act.len() as f32;
+        (act.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / act.len() as f32).sqrt()
+    };
+    let want = mvm(&act, down, m, d, kappa * std_a + 1e-6);
+
+    let mut max_diff = 0f32;
+    for (a, b) in got.iter().zip(&want) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    // quantized grids can disagree by one LSB on round-to-even edges
+    assert!(max_diff < 2e-2, "analog FFN vs Rust tile simulator: {max_diff}");
+}
+
+#[test]
+fn serving_pipeline_matches_monolithic_forward() {
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = Placement::all_digital(&cfg);
+    let mut engine = Engine::new(
+        &mut rt,
+        &paths,
+        cfg.clone(),
+        meta.aimc,
+        meta.serve_cap,
+        placement.clone(),
+        &params,
+    )
+    .unwrap();
+
+    let mut reqs = Vec::new();
+    let mut tk_all = Vec::new();
+    let mut tg_all = Vec::new();
+    let mut mk_all = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            tk_all.extend_from_slice(&tk);
+            tg_all.extend_from_slice(&tg);
+            mk_all.extend_from_slice(&mk);
+            reqs.push(Request {
+                id: reqs.len() as u64,
+                tokens: tk,
+                targets: tg,
+                mask: mk,
+                arrived: 0,
+            });
+            if reqs.len() == cfg.batch {
+                break 'outer;
+            }
+        }
+    }
+    let responses = engine.serve_batch(&rt, &reqs).unwrap();
+
+    let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc).unwrap();
+    let flags = placement.to_flags(&cfg);
+    let mono = ev
+        .score_rows(&rt, &mut params, &tk_all, &tg_all, &mk_all, &flags,
+                    meta.aimc.kappa, meta.aimc.lam)
+        .unwrap();
+    for (r, m) in responses.iter().zip(&mono) {
+        assert!(
+            (r.score - *m as f64).abs() < 2e-3,
+            "pipelined {} vs monolithic {}",
+            r.score,
+            m
+        );
+    }
+}
+
+#[test]
+fn digital_accuracy_beats_chance_and_noise_degrades() {
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc).unwrap();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+
+    let digital = Placement::all_digital(&cfg);
+    let (accs, avg) = ev
+        .eval_suite(&rt, &mut params, &tasks, &digital.to_flags(&cfg), 24)
+        .unwrap();
+    let chance: f64 =
+        tasks.iter().map(|t| t.chance()).sum::<f64>() / tasks.len() as f64;
+    assert!(avg > chance + 0.15, "digital avg {avg:.3} vs chance {chance:.3}");
+    assert_eq!(accs.len(), 8);
+
+    // heavy programming noise on all experts must hurt
+    let analog = Placement::all_experts_analog(&cfg);
+    let snap = params.snapshot();
+    apply_placement(&cfg, &mut params, &analog, &NoiseModel::with_scale(4.0), 0).unwrap();
+    let (_, avg_noisy) = ev
+        .eval_suite(&rt, &mut params, &tasks, &analog.to_flags(&cfg), 24)
+        .unwrap();
+    params.restore(&snap).unwrap();
+    assert!(
+        avg_noisy < avg - 0.02,
+        "noise 4.0 did not degrade: {avg:.3} → {avg_noisy:.3}"
+    );
+}
+
+#[test]
+fn maxnn_placement_recovers_accuracy() {
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc).unwrap();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    // mini-scale noise: the 4-layer models need ~4x the sigma multiplier
+    // of the paper's 16-layer models for comparable degradation
+    // (EXPERIMENTS.md, noise-scale mapping). At scale 8 the Γ=0.25
+    // recovery is ~+2 points on the full suite.
+    let noise = NoiseModel::with_scale(8.0);
+    let snap = params.snapshot();
+
+    let avg_for = |gamma: f64, params: &mut ParamStore, ev: &mut Evaluator| {
+        let placement = if gamma == 0.0 {
+            Placement::all_experts_analog(&cfg)
+        } else {
+            plan_placement(
+                &cfg,
+                params,
+                &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma, seed: 0 },
+                None,
+            )
+            .unwrap()
+        };
+        let mut accs = Vec::new();
+        for seed in 0..3 {
+            apply_placement(&cfg, params, &placement, &noise, seed).unwrap();
+            let (_, a) = ev
+                .eval_suite(&rt, params, &tasks, &placement.to_flags(&cfg), 64)
+                .unwrap();
+            params.restore(&snap).unwrap();
+            accs.push(a);
+        }
+        accs.iter().sum::<f64>() / accs.len() as f64
+    };
+    let a0 = avg_for(0.0, &mut params, &mut ev);
+    let a25 = avg_for(0.25, &mut params, &mut ev);
+    assert!(
+        a25 >= a0 - 0.005,
+        "Γ=0.25 MaxNNScore ({a25:.3}) should not fall below Γ=0 ({a0:.3})"
+    );
+}
+
+#[test]
+fn perplexity_finite_and_calibration_sensitive() {
+    require_artifacts!();
+    // olmoe_mini: no shared expert to mask the damage when the routed
+    // experts' DAC clips everything
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc).unwrap();
+    let calib = hetmoe::eval::data::load_rows(
+        &hetmoe::artifacts_dir().join("data/calib.bin"),
+        cfg.seq_len,
+    )
+    .unwrap();
+    let analog = Placement::all_analog(&cfg); // experts + dense under DAC-ADC
+    let flags = analog.to_flags(&cfg);
+    let good = ev
+        .perplexity(&rt, &mut params, &calib, &flags, 8.0, 1.0, 64)
+        .unwrap();
+    let tiny_kappa = ev
+        .perplexity(&rt, &mut params, &calib, &flags, 0.1, 1.0, 64)
+        .unwrap();
+    assert!(good.is_finite() && good > 1.0 && good < 100.0, "ppl {good}");
+    assert!(
+        tiny_kappa > good * 1.05,
+        "κ=0.1 should clip activations and hurt ppl: {tiny_kappa} vs {good}"
+    );
+}
+
+#[test]
+fn maxnn_scores_positive_and_distinct() {
+    require_artifacts!();
+    let (_rt, meta, _paths, params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let scores = maxnn_scores(&cfg, &params).unwrap();
+    for l in 0..cfg.n_layers {
+        assert_eq!(scores[l].len(), cfg.n_experts);
+        assert!(scores[l].iter().all(|&s| s > 0.0));
+        // trained experts must differentiate (not all within 1%)
+        let max = scores[l].iter().cloned().fold(0.0, f64::max);
+        let min = scores[l].iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 1.05, "layer {l}: scores too uniform");
+    }
+}
+
+#[test]
+fn dsmoe_model_also_evaluates() {
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("dsmoe_mini");
+    let cfg = meta.config("dsmoe_mini").unwrap().clone();
+    let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc).unwrap();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let digital = Placement::all_digital(&cfg);
+    let (_, avg) = ev
+        .eval_suite(&rt, &mut params, &tasks, &digital.to_flags(&cfg), 16)
+        .unwrap();
+    let chance: f64 =
+        tasks.iter().map(|t| t.chance()).sum::<f64>() / tasks.len() as f64;
+    assert!(avg > chance + 0.1, "dsmoe digital avg {avg:.3}");
+}
+
+#[test]
+fn quant_helpers_roundtrip_against_graph_semantics() {
+    // host-side eq (4)/(5) spot checks against hand-computed values —
+    // guards the constants the graph shares (127 levels at 8 bits)
+    let q = dac_quant(0.26, 1.0, 8);
+    assert!((q - (0.26f32 * 127.0).round() / 127.0).abs() < 1e-7);
+    let a = adc_quant(3.7, 2.0, 8);
+    assert_eq!(a, 2.0);
+}

@@ -84,15 +84,16 @@ fn main() -> Result<()> {
                 ev.eval_suite(&rt, &mut params, &tasks, &placement.to_flags(&cfg), 48)?;
             params.restore(&snap)?;
 
+            // project the placement onto each accelerator's cost share
             let dc = digital_batch_cost(
                 &arch,
                 &dig,
-                &DigitalPlacement { expert_fraction: gamma, dense_digital: true },
+                &DigitalPlacement::from_placement(&placement, &cfg),
                 batch,
             );
             let ac = analog_batch_cost(
                 &arch,
-                &AnalogPlacement { expert_fraction: 1.0 - gamma, dense_analog: false },
+                &AnalogPlacement::from_placement(&placement, &cfg),
                 batch,
             );
             let latency = dc.latency_s.max(ac.latency_s);

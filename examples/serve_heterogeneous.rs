@@ -11,7 +11,7 @@
 use anyhow::Result;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
-use hetmoe::coordinator::{Batcher, Engine, Request};
+use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Session};
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{apply_placement, plan_placement, PlacementOptions};
@@ -46,18 +46,14 @@ fn main() -> Result<()> {
     );
     apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0)?;
 
-    let mut engine = Engine::new(
-        &mut rt,
-        &paths,
-        cfg.clone(),
-        meta.aimc,
-        meta.serve_cap,
-        placement.clone(),
-        &params,
-    )?;
+    let engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement.clone())
+        .serve_cap(meta.serve_cap)
+        .build(&mut rt, &paths, &params)?;
 
     // request stream: gold choices of the benchmark items
-    let mut batcher = Batcher::new(cfg.batch, 8, cfg.batch * 4);
     let mut stream = Vec::new();
     'outer: for task in &tasks {
         for item in &task.items {
@@ -69,34 +65,37 @@ fn main() -> Result<()> {
         }
     }
 
-    let mut responses = Vec::new();
+    // the Session owns the admission queue + dynamic batcher: submit
+    // serves full batches inline, drain flushes the tail
+    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
     let mut latencies = Vec::new();
     let t0 = std::time::Instant::now();
-    for (id, (tk, tg, mk)) in stream.iter().enumerate() {
-        let ok = batcher.submit(Request {
-            id: id as u64,
+    for (tk, tg, mk) in &stream {
+        let before = session.pending();
+        let t = std::time::Instant::now();
+        session.submit(Request {
+            id: 0, // assigned by the session
             tokens: tk.clone(),
             targets: tg.clone(),
             mask: mk.clone(),
             arrived: 0,
-        });
-        assert!(ok, "backpressure triggered unexpectedly");
-        batcher.tick(1);
-        while let Some((batch, _reason)) = batcher.next_batch(false) {
-            let t = std::time::Instant::now();
-            responses.extend(engine.serve_batch(&rt, &batch)?);
-            latencies.push(t.elapsed().as_secs_f64() * 1e3 / batch.len() as f64);
+        })?;
+        // requests served inside this submit (full or deadline release)
+        let served = before + 1 - session.pending();
+        if served > 0 {
+            latencies.push(t.elapsed().as_secs_f64() * 1e3 / served as f64);
         }
     }
-    while let Some((batch, _)) = batcher.next_batch(true) {
-        let t = std::time::Instant::now();
-        responses.extend(engine.serve_batch(&rt, &batch)?);
-        latencies.push(t.elapsed().as_secs_f64() * 1e3 / batch.len() as f64);
+    let tail = session.pending();
+    let t = std::time::Instant::now();
+    let responses = session.drain()?;
+    if tail > 0 {
+        latencies.push(t.elapsed().as_secs_f64() * 1e3 / tail as f64);
     }
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n--- engine metrics ---");
-    println!("{}", engine.metrics.report());
+    println!("{}", session.metrics().report());
     println!(
         "per-request latency: p50={:.1}ms p95={:.1}ms  end-to-end {:.0} req/s",
         stats::quantile(&latencies, 0.5),

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use hetmoe::aimc::program::{program_matrix, NoiseModel};
 use hetmoe::bench::{env_usize, BenchCtx};
-use hetmoe::coordinator::{Batcher, Engine, Request};
+use hetmoe::coordinator::{Batcher, EngineBuilder, Request};
 use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
 use hetmoe::moe::score::SelectionMetric;
 use hetmoe::util::table::Table;
@@ -97,15 +97,12 @@ fn main() -> anyhow::Result<()> {
                 None,
             )?
         };
-        let mut engine = Engine::new(
-            &mut ctx.rt,
-            &ctx.paths,
-            cfg.clone(),
-            ctx.aimc,
-            ctx.serve_cap,
-            placement,
-            &ctx.params,
-        )?;
+        let mut engine = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(ctx.aimc)
+            .placement(placement)
+            .serve_cap(ctx.serve_cap)
+            .build(&mut ctx.rt, &ctx.paths, &ctx.params)?;
         let reqs: Vec<Request> = (0..cfg.batch)
             .map(|i| Request {
                 id: i as u64,

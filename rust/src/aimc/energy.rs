@@ -38,6 +38,25 @@ pub struct AnalogPlacement {
     pub dense_analog: bool,
 }
 
+impl AnalogPlacement {
+    /// The AIMC chip's share of a full [`Placement`]: the fraction of
+    /// routed experts mapped to `BACKEND_ANALOG` (counted from the
+    /// backend map, so hand-edited placements stay accurate), plus the
+    /// dense modules only when the placement pushed *all* of them
+    /// analog (Fig 3's worst case — the paper's method keeps dense
+    /// modules digital).
+    pub fn from_placement(
+        p: &crate::moe::placement::Placement,
+        cfg: &crate::config::ModelConfig,
+    ) -> AnalogPlacement {
+        AnalogPlacement {
+            expert_fraction: p
+                .backend_expert_fraction(cfg, crate::moe::placement::BACKEND_ANALOG),
+            dense_analog: crate::digital::all_dense_analog(p),
+        }
+    }
+}
+
 /// Per-batch analog cost.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AnalogCost {
@@ -150,6 +169,41 @@ mod tests {
             32,
         );
         assert!(experts.latency_s < full.latency_s / 10.0);
+    }
+
+    #[test]
+    fn from_placement_mirrors_digital_share() {
+        use crate::moe::placement::Placement;
+        let cfg = crate::config::ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            seq_len: 8,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            n_experts: 4,
+            top_k: 2,
+            d_expert: 8,
+            d_shared: 0,
+            dense_first_layer: false,
+            d_dense_ffn: 16,
+            batch: 2,
+            train_steps: 1,
+            flags_len: 13,
+            n_params: 0,
+        };
+        let p = Placement::all_experts_analog(&cfg);
+        let ap = AnalogPlacement::from_placement(&p, &cfg);
+        assert_eq!(ap.expert_fraction, 1.0);
+        assert!(!ap.dense_analog);
+        let ap = AnalogPlacement::from_placement(&Placement::all_analog(&cfg), &cfg);
+        assert!(ap.dense_analog);
+        // a hand-edited map is billed from the map: one analog expert
+        // out of 2 layers x 4 experts = 1/8
+        let mut edited = Placement::all_digital(&cfg);
+        edited.set_backend(1, 3, crate::moe::placement::BACKEND_ANALOG);
+        let ap = AnalogPlacement::from_placement(&edited, &cfg);
+        assert!((ap.expert_fraction - 0.125).abs() < 1e-12);
     }
 
     #[test]

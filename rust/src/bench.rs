@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::aimc::program::NoiseModel;
 use crate::config::{AimcConfig, Meta, ModelConfig};
-use crate::coordinator::{Engine, Request};
+use crate::coordinator::{Batcher, EngineBuilder, Request, Session};
 use crate::eval::data::{load_rows, load_tasks, Task};
 use crate::eval::Evaluator;
 use crate::moe::placement::{apply_placement, Placement};
@@ -148,34 +148,29 @@ impl BenchCtx {
     /// — the calibration-*free* metrics never call this).
     pub fn collect_router_stats(&mut self, max_rows: usize) -> Result<RouterStats> {
         let placement = Placement::all_digital(&self.cfg);
-        let mut engine = Engine::new(
-            &mut self.rt,
-            &self.paths,
-            self.cfg.clone(),
-            self.aimc,
-            self.serve_cap,
-            placement,
-            &self.params,
-        )?;
+        let engine = EngineBuilder::new()
+            .model(self.cfg.clone())
+            .aimc(self.aimc)
+            .placement(placement)
+            .serve_cap(self.serve_cap)
+            .build(&mut self.rt, &self.paths, &self.params)?;
         let t = self.cfg.seq_len;
         let n_rows = (self.calib.len() / t).min(max_rows);
-        let mut batch = Vec::new();
+        let mut session = Session::new(
+            &self.rt,
+            engine,
+            Batcher::new(self.cfg.batch, u64::MAX, self.cfg.batch * 2),
+        );
         for r in 0..n_rows {
-            batch.push(Request {
+            session.submit(Request {
                 id: r as u64,
                 tokens: self.calib[r * t..(r + 1) * t].to_vec(),
                 targets: vec![0; t],
                 mask: vec![0.0; t],
                 arrived: 0,
-            });
-            if batch.len() == self.cfg.batch {
-                engine.serve_batch(&self.rt, &batch)?;
-                batch.clear();
-            }
+            })?;
         }
-        if !batch.is_empty() {
-            engine.serve_batch(&self.rt, &batch)?;
-        }
-        Ok(engine.router_stats)
+        session.drain()?;
+        Ok(session.into_engine().router_stats)
     }
 }

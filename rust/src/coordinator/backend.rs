@@ -1,0 +1,324 @@
+//! The pluggable accelerator seam: [`ExpertBackend`].
+//!
+//! The paper's contribution is *heterogeneous* placement — each routed
+//! expert is served by one of several accelerators. A backend owns
+//! everything accelerator-specific that used to be inlined in the
+//! engine:
+//!
+//! - the compiled expert-FFN executables, including the small-capacity
+//!   tier (serve_cap/8) that cuts padded compute ~8x on light chunks;
+//! - per-backend constant device buffers (the AIMC κ/λ scalars);
+//! - the Appendix-A simulated cost model (latency + energy per batch).
+//!
+//! The engine's registry is a `Vec<Box<dyn ExpertBackend>>` indexed by
+//! [`BackendId`]; the [`Placement`](crate::moe::placement::Placement)
+//! maps every expert to a slot. Adding an accelerator (sharded digital,
+//! quantized middle tier, multi-tile analog) is: implement this trait,
+//! register it via `EngineBuilder::backend`, point the placement at the
+//! new slot.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::aimc::energy::{analog_batch_cost, AnalogPlacement};
+use crate::config::AimcConfig;
+use crate::digital::{digital_batch_cost, ArchSpec, DigitalPlacement, DigitalSpec};
+use crate::moe::placement::{BackendId, Placement};
+use crate::runtime::{ArtifactPaths, Executable, Runtime};
+
+/// Per-expert device-resident weights (up, gate, down) plus the registry
+/// id of the backend that serves the expert.
+pub struct ExpertWeights {
+    pub up: xla::PjRtBuffer,
+    pub gate: xla::PjRtBuffer,
+    pub down: xla::PjRtBuffer,
+    pub backend: BackendId,
+}
+
+/// Simulated per-batch cost of one backend under the paper's Appendix-A
+/// models (the clocks that produce the Table 2 throughput / efficiency
+/// numbers).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageCost {
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+/// Result of dispatching one expert chunk.
+pub struct ExpertOutput {
+    /// `[padded_rows, d]` row-major expert-FFN output; only the first
+    /// `rows` rows passed to `dispatch` are meaningful.
+    pub data: Vec<f32>,
+    /// the compiled capacity the chunk was padded to (tier that ran)
+    pub padded_rows: usize,
+}
+
+/// One accelerator in the serving engine's registry.
+pub trait ExpertBackend {
+    /// Stable short name for metrics / reports (e.g. `"digital"`).
+    fn name(&self) -> &'static str;
+
+    /// Load executables and upload constant device buffers. Called once
+    /// by `EngineBuilder::build` before any dispatch.
+    fn uploads(&mut self, rt: &mut Runtime, paths: &ArtifactPaths) -> Result<()>;
+
+    /// Largest chunk (token rows) a single dispatch accepts — the
+    /// engine splits bigger expert groups into chunks of this size.
+    fn capacity(&self) -> usize;
+
+    /// The compiled capacity a chunk of `rows` tokens will run at (the
+    /// smallest tier that fits). The caller gathers straight into a
+    /// zero-padded `[padded_rows(rows), d]` buffer — one allocation on
+    /// the dispatch hot path, no re-pad inside the backend.
+    fn padded_rows(&self, rows: usize) -> usize;
+
+    /// Run one expert chunk. `chunk` is `[padded_rows(rows), d]`
+    /// row-major with the first `rows` rows real and the rest zero.
+    fn dispatch(
+        &self,
+        rt: &Runtime,
+        chunk: &[f32],
+        rows: usize,
+        weights: &ExpertWeights,
+    ) -> Result<ExpertOutput>;
+
+    /// Appendix-A simulated cost of one batch of `batch_tokens` tokens
+    /// flowing through this backend's share of the model.
+    fn cost(&self, batch_tokens: usize) -> StageCost;
+}
+
+/// Upload a pre-padded `[cap, d]` chunk and run it through `exe` with
+/// the expert's weights (+ any backend-constant buffers). Shared by the
+/// digital and analog backends (and usable by custom ones).
+fn run_padded(
+    rt: &Runtime,
+    chunk: &[f32],
+    cap: usize,
+    d: usize,
+    exe: &Rc<Executable>,
+    extra: &[&xla::PjRtBuffer],
+    weights: &ExpertWeights,
+) -> Result<ExpertOutput> {
+    if chunk.len() != cap * d {
+        bail!(
+            "dispatch chunk holds {} floats but tier capacity {cap} expects {} \
+             (caller must pad to padded_rows())",
+            chunk.len(),
+            cap * d
+        );
+    }
+    let xb = rt.upload_f32(chunk, &[cap, d])?;
+    let mut args: Vec<&xla::PjRtBuffer> =
+        vec![&xb, &weights.up, &weights.gate, &weights.down];
+    args.extend_from_slice(extra);
+    let outs = exe.run(&args)?;
+    Ok(ExpertOutput { data: outs[0].to_vec::<f32>()?, padded_rows: cap })
+}
+
+/// The digital accelerator: exact FP expert FFN (AOT HLO), A100-roofline
+/// cost model (eq 16). Also accounts the dense modules — attention,
+/// shared experts, LM head always run digitally in the paper's method.
+pub struct DigitalBackend {
+    d_model: usize,
+    serve_cap: usize,
+    small_cap: usize,
+    exe: Option<Rc<Executable>>,
+    exe_small: Option<Rc<Executable>>,
+    arch: ArchSpec,
+    spec: DigitalSpec,
+    cost_place: DigitalPlacement,
+}
+
+impl DigitalBackend {
+    pub fn new(
+        cfg: &crate::config::ModelConfig,
+        placement: &Placement,
+        serve_cap: usize,
+    ) -> DigitalBackend {
+        DigitalBackend {
+            d_model: cfg.d_model,
+            serve_cap,
+            small_cap: small_cap_of(serve_cap),
+            exe: None,
+            exe_small: None,
+            arch: ArchSpec::from_model(cfg),
+            spec: DigitalSpec::default(),
+            cost_place: DigitalPlacement::from_placement(placement, cfg),
+        }
+    }
+
+    pub fn boxed(
+        cfg: &crate::config::ModelConfig,
+        placement: &Placement,
+        serve_cap: usize,
+    ) -> Box<dyn ExpertBackend> {
+        Box::new(DigitalBackend::new(cfg, placement, serve_cap))
+    }
+}
+
+impl ExpertBackend for DigitalBackend {
+    fn name(&self) -> &'static str {
+        "digital"
+    }
+
+    fn uploads(&mut self, rt: &mut Runtime, paths: &ArtifactPaths) -> Result<()> {
+        self.exe = Some(rt.load(&paths.hlo("expert_ffn_digital")).context("ffn digital")?);
+        self.exe_small =
+            rt.load_optional(&paths.hlo(&format!("expert_ffn_digital.c{}", self.small_cap)))?;
+        Ok(())
+    }
+
+    fn capacity(&self) -> usize {
+        self.serve_cap
+    }
+
+    fn padded_rows(&self, rows: usize) -> usize {
+        if rows <= self.small_cap && self.exe_small.is_some() {
+            self.small_cap
+        } else {
+            self.serve_cap
+        }
+    }
+
+    fn dispatch(
+        &self,
+        rt: &Runtime,
+        chunk: &[f32],
+        rows: usize,
+        weights: &ExpertWeights,
+    ) -> Result<ExpertOutput> {
+        let full = self.exe.as_ref().context("DigitalBackend::uploads not called")?;
+        let (exe, cap) = match &self.exe_small {
+            Some(small) if rows <= self.small_cap => (small, self.small_cap),
+            _ => (full, self.serve_cap),
+        };
+        run_padded(rt, chunk, cap, self.d_model, exe, &[], weights)
+    }
+
+    fn cost(&self, batch_tokens: usize) -> StageCost {
+        let c = digital_batch_cost(&self.arch, &self.spec, &self.cost_place, batch_tokens);
+        StageCost { latency_s: c.latency_s, energy_j: c.energy_j }
+    }
+}
+
+/// The AIMC accelerator: the Pallas crossbar-kernel HLO (DAC → tile dot
+/// → ADC, eqs 4-5) with per-backend κ/λ device scalars, and the
+/// pipelined-tile cost model of Appendix A.
+pub struct AnalogBackend {
+    d_model: usize,
+    serve_cap: usize,
+    small_cap: usize,
+    aimc: AimcConfig,
+    exe: Option<Rc<Executable>>,
+    exe_small: Option<Rc<Executable>>,
+    kappa_buf: Option<xla::PjRtBuffer>,
+    lam_buf: Option<xla::PjRtBuffer>,
+    arch: ArchSpec,
+    cost_place: AnalogPlacement,
+}
+
+impl AnalogBackend {
+    pub fn new(
+        cfg: &crate::config::ModelConfig,
+        aimc: AimcConfig,
+        placement: &Placement,
+        serve_cap: usize,
+    ) -> AnalogBackend {
+        AnalogBackend {
+            d_model: cfg.d_model,
+            serve_cap,
+            small_cap: small_cap_of(serve_cap),
+            aimc,
+            exe: None,
+            exe_small: None,
+            kappa_buf: None,
+            lam_buf: None,
+            arch: ArchSpec::from_model(cfg),
+            cost_place: AnalogPlacement::from_placement(placement, cfg),
+        }
+    }
+
+    pub fn boxed(
+        cfg: &crate::config::ModelConfig,
+        aimc: AimcConfig,
+        placement: &Placement,
+        serve_cap: usize,
+    ) -> Box<dyn ExpertBackend> {
+        Box::new(AnalogBackend::new(cfg, aimc, placement, serve_cap))
+    }
+}
+
+impl ExpertBackend for AnalogBackend {
+    fn name(&self) -> &'static str {
+        "analog"
+    }
+
+    fn uploads(&mut self, rt: &mut Runtime, paths: &ArtifactPaths) -> Result<()> {
+        self.exe = Some(rt.load(&paths.hlo("expert_ffn_analog")).context("ffn analog")?);
+        self.exe_small =
+            rt.load_optional(&paths.hlo(&format!("expert_ffn_analog.c{}", self.small_cap)))?;
+        self.kappa_buf = Some(rt.upload_scalar(self.aimc.kappa)?);
+        self.lam_buf = Some(rt.upload_scalar(self.aimc.lam)?);
+        Ok(())
+    }
+
+    fn capacity(&self) -> usize {
+        self.serve_cap
+    }
+
+    fn padded_rows(&self, rows: usize) -> usize {
+        if rows <= self.small_cap && self.exe_small.is_some() {
+            self.small_cap
+        } else {
+            self.serve_cap
+        }
+    }
+
+    fn dispatch(
+        &self,
+        rt: &Runtime,
+        chunk: &[f32],
+        rows: usize,
+        weights: &ExpertWeights,
+    ) -> Result<ExpertOutput> {
+        let full = self.exe.as_ref().context("AnalogBackend::uploads not called")?;
+        let kappa = self.kappa_buf.as_ref().context("κ buffer missing")?;
+        let lam = self.lam_buf.as_ref().context("λ buffer missing")?;
+        let (exe, cap) = match &self.exe_small {
+            Some(small) if rows <= self.small_cap => (small, self.small_cap),
+            _ => (full, self.serve_cap),
+        };
+        run_padded(rt, chunk, cap, self.d_model, exe, &[kappa, lam], weights)
+    }
+
+    fn cost(&self, batch_tokens: usize) -> StageCost {
+        let c = analog_batch_cost(&self.arch, &self.cost_place, batch_tokens);
+        StageCost { latency_s: c.latency_s, energy_j: c.energy_j }
+    }
+}
+
+/// The small-capacity tier compiled next to each full-capacity expert
+/// executable (§Perf iteration 2).
+pub fn small_cap_of(serve_cap: usize) -> usize {
+    (serve_cap / 8).max(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_cap_floors_at_8() {
+        assert_eq!(small_cap_of(128), 16);
+        assert_eq!(small_cap_of(32), 8);
+        assert_eq!(small_cap_of(8), 8);
+    }
+
+    #[test]
+    fn stage_cost_default_is_free() {
+        let c = StageCost::default();
+        assert_eq!(c.latency_s, 0.0);
+        assert_eq!(c.energy_j, 0.0);
+    }
+}

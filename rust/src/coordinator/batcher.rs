@@ -9,11 +9,15 @@
 
 use std::collections::VecDeque;
 
+/// Identifies a request within one serving session (assigned by
+/// `Session::submit`, echoed back on the matching `Response`).
+pub type RequestId = u64;
+
 /// One scoring request: a packed sequence row plus its target mask
 /// (produced by `eval::pack_choice` or the caller).
 #[derive(Clone, Debug)]
 pub struct Request {
-    pub id: u64,
+    pub id: RequestId,
     pub tokens: Vec<i32>,
     pub targets: Vec<i32>,
     pub mask: Vec<f32>,
@@ -24,7 +28,7 @@ pub struct Request {
 /// The engine's answer: summed target log-prob of the masked positions.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Response {
-    pub id: u64,
+    pub id: RequestId,
     pub score: f64,
 }
 
@@ -157,6 +161,28 @@ mod tests {
         assert!(!b.submit(req(4)));
         assert_eq!(b.rejected, 1);
         assert_eq!(b.depth(), 3);
+    }
+
+    #[test]
+    fn admission_order_is_preserved_across_release_reasons() {
+        // requests must come back in admission order no matter how the
+        // releases interleave full batches, deadlines, and drains
+        let mut b = Batcher::new(3, 5, 12);
+        for id in 0..4 {
+            b.submit(req(id));
+        }
+        let (first, reason) = b.next_batch(false).unwrap();
+        assert_eq!(reason, ReleaseReason::Full);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        b.submit(req(4));
+        b.tick(5); // deadline the leftover request
+        let (second, reason) = b.next_batch(false).unwrap();
+        assert_eq!(reason, ReleaseReason::Deadline);
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+        b.submit(req(5));
+        let (third, reason) = b.next_batch(true).unwrap();
+        assert_eq!(reason, ReleaseReason::Drained);
+        assert_eq!(third.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5]);
     }
 
     #[test]

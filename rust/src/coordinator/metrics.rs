@@ -1,8 +1,32 @@
 //! Serving metrics: real wall time per pipeline stage + the simulated
 //! per-accelerator clocks (Appendix-A cost models) that produce the
 //! Table 2 style throughput / energy-efficiency numbers.
+//!
+//! Accelerator accounting is keyed by *backend registry slot* (see
+//! `coordinator::backend`): each registered [`ExpertBackend`] gets one
+//! [`BackendMetrics`] entry holding its dispatch counts, real wall time,
+//! and simulated busy/energy clocks — so custom backends show up in the
+//! report without touching this module.
+//!
+//! [`ExpertBackend`]: crate::coordinator::backend::ExpertBackend
 
 use std::time::Duration;
+
+/// Per-backend accounting: real dispatch wall time plus the simulated
+/// Appendix-A clocks.
+#[derive(Debug, Default, Clone)]
+pub struct BackendMetrics {
+    /// backend name (from `ExpertBackend::name`)
+    pub name: String,
+    /// expert chunks dispatched to this backend
+    pub dispatches: u64,
+    /// real wall time spent in this backend's dispatches
+    pub wall: Duration,
+    /// simulated busy time (Appendix-A cost model)
+    pub busy_s: f64,
+    /// simulated energy (Appendix-A cost model)
+    pub energy_j: f64,
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
@@ -12,29 +36,34 @@ pub struct Metrics {
     pub tokens: u64,
 
     // expert dispatch accounting
-    pub digital_dispatches: u64,
-    pub analog_dispatches: u64,
     pub dispatched_tokens: u64,
     /// padding waste in expert batches (cap - occupancy)
     pub padded_tokens: u64,
 
-    // real wall time per stage
+    // real wall time per coordinator stage
     pub total_wall: Duration,
     pub attn_wall: Duration,
     pub route_wall: Duration,
-    pub digital_wall: Duration,
-    pub analog_wall: Duration,
     pub shared_wall: Duration,
     pub lm_wall: Duration,
 
-    // simulated accelerator clocks (paper cost models, paper-scale arch)
-    pub digital_busy_s: f64,
-    pub digital_energy_j: f64,
-    pub analog_busy_s: f64,
-    pub analog_energy_j: f64,
+    /// per-backend clocks, indexed by backend registry slot
+    pub backends: Vec<BackendMetrics>,
 }
 
 impl Metrics {
+    /// Mutable per-backend slot, growing the registry view on first use.
+    pub fn backend_mut(&mut self, id: usize, name: &str) -> &mut BackendMetrics {
+        if self.backends.len() <= id {
+            self.backends.resize_with(id + 1, BackendMetrics::default);
+        }
+        let b = &mut self.backends[id];
+        if b.name.is_empty() {
+            b.name = name.to_string();
+        }
+        b
+    }
+
     /// Real measured throughput on this testbed.
     pub fn wall_tokens_per_s(&self) -> f64 {
         let s = self.total_wall.as_secs_f64();
@@ -46,9 +75,9 @@ impl Metrics {
     }
 
     /// Simulated heterogeneous throughput: the paper takes the
-    /// upper bound (max) of the two accelerators' latencies.
+    /// upper bound (max) of the accelerators' latencies.
     pub fn simulated_tokens_per_s(&self) -> f64 {
-        let t = self.digital_busy_s.max(self.analog_busy_s);
+        let t = self.backends.iter().map(|b| b.busy_s).fold(0.0, f64::max);
         if t > 0.0 {
             self.tokens as f64 / t
         } else {
@@ -58,7 +87,7 @@ impl Metrics {
 
     /// Simulated energy efficiency (tokens per joule = tokens/(W·s)).
     pub fn simulated_tokens_per_joule(&self) -> f64 {
-        let e = self.digital_energy_j + self.analog_energy_j;
+        let e: f64 = self.backends.iter().map(|b| b.energy_j).sum();
         if e > 0.0 {
             self.tokens as f64 / e
         } else {
@@ -66,8 +95,9 @@ impl Metrics {
         }
     }
 
-    /// Expert-batch occupancy (1.0 = no padding waste).
-    pub fn occupancy(&self) -> f64 {
+    /// Expert-batch padding efficiency: fraction of dispatched expert
+    /// rows that carried real tokens (1.0 = no padding waste).
+    pub fn utilization(&self) -> f64 {
         let total = self.dispatched_tokens + self.padded_tokens;
         if total > 0 {
             self.dispatched_tokens as f64 / total as f64
@@ -77,30 +107,37 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        let mut dispatch_line = String::new();
+        for b in &self.backends {
+            if !dispatch_line.is_empty() {
+                dispatch_line.push(' ');
+            }
+            dispatch_line.push_str(&format!("{}={}", b.name, b.dispatches));
+        }
+        let mut backend_wall = String::new();
+        let mut busy_line = String::new();
+        for b in &self.backends {
+            backend_wall.push_str(&format!(" {}-ffn={:.3}s", b.name, b.wall.as_secs_f64()));
+            busy_line.push_str(&format!(" {} busy={:.4}s", b.name, b.busy_s));
+        }
         format!(
             "requests={} batches={} tokens={}\n\
-             dispatches: digital={} analog={} occupancy={:.2}\n\
-             wall: total={:.3}s attn={:.3}s route={:.3}s dig-ffn={:.3}s \
-             ana-ffn={:.3}s shared={:.3}s lm={:.3}s → {:.0} tok/s\n\
+             dispatches: {dispatch_line} utilization={:.2}\n\
+             wall: total={:.3}s attn={:.3}s route={:.3}s{backend_wall} \
+             shared={:.3}s lm={:.3}s → {:.0} tok/s\n\
              simulated accelerator clocks (Appendix-A cost model, this \
-             model's dims): digital busy={:.4}s analog busy={:.4}s \
+             model's dims):{busy_line} \
              → {:.0} tok/s, {:.1} tok/J",
             self.requests,
             self.batches,
             self.tokens,
-            self.digital_dispatches,
-            self.analog_dispatches,
-            self.occupancy(),
+            self.utilization(),
             self.total_wall.as_secs_f64(),
             self.attn_wall.as_secs_f64(),
             self.route_wall.as_secs_f64(),
-            self.digital_wall.as_secs_f64(),
-            self.analog_wall.as_secs_f64(),
             self.shared_wall.as_secs_f64(),
             self.lm_wall.as_secs_f64(),
             self.wall_tokens_per_s(),
-            self.digital_busy_s,
-            self.analog_busy_s,
             self.simulated_tokens_per_s(),
             self.simulated_tokens_per_joule(),
         )
@@ -112,24 +149,42 @@ mod tests {
     use super::*;
 
     #[test]
-    fn occupancy_math() {
+    fn utilization_math() {
         let m = Metrics {
             dispatched_tokens: 75,
             padded_tokens: 25,
             ..Default::default()
         };
-        assert!((m.occupancy() - 0.75).abs() < 1e-12);
+        assert!((m.utilization() - 0.75).abs() < 1e-12);
     }
 
     #[test]
     fn simulated_throughput_takes_max_latency() {
-        let m = Metrics {
-            tokens: 100,
-            digital_busy_s: 2.0,
-            analog_busy_s: 0.5,
-            ..Default::default()
-        };
+        let mut m = Metrics { tokens: 100, ..Default::default() };
+        m.backend_mut(0, "digital").busy_s = 2.0;
+        m.backend_mut(1, "analog").busy_s = 0.5;
         assert!((m.simulated_tokens_per_s() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_sums_across_backends() {
+        let mut m = Metrics { tokens: 100, ..Default::default() };
+        m.backend_mut(0, "digital").energy_j = 3.0;
+        m.backend_mut(1, "analog").energy_j = 1.0;
+        assert!((m.simulated_tokens_per_joule() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backend_mut_grows_and_names_slots() {
+        let mut m = Metrics::default();
+        m.backend_mut(2, "custom").dispatches = 7;
+        assert_eq!(m.backends.len(), 3);
+        assert_eq!(m.backends[2].name, "custom");
+        assert_eq!(m.backends[0].name, "");
+        // second access keeps the first name
+        m.backend_mut(2, "other").dispatches += 1;
+        assert_eq!(m.backends[2].name, "custom");
+        assert_eq!(m.backends[2].dispatches, 8);
     }
 
     #[test]
@@ -137,12 +192,16 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.wall_tokens_per_s(), 0.0);
         assert_eq!(m.simulated_tokens_per_joule(), 0.0);
-        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.utilization(), 0.0);
     }
 
     #[test]
     fn report_renders() {
-        let m = Metrics::default();
-        assert!(m.report().contains("requests=0"));
+        let mut m = Metrics::default();
+        m.backend_mut(0, "digital").dispatches = 3;
+        let r = m.report();
+        assert!(r.contains("requests=0"));
+        assert!(r.contains("digital=3"));
+        assert!(r.contains("utilization="));
     }
 }

@@ -1,0 +1,99 @@
+//! A serving session: admission queue + dynamic batcher + engine, behind
+//! a two-call API.
+//!
+//! Callers used to hand-roll the batch loop (submit → tick → poll →
+//! serve → collect) at every call site; a [`Session`] owns that loop:
+//!
+//! ```text
+//!   let mut session = Session::new(&rt, engine, Batcher::new(b, 8, 4*b));
+//!   for req in stream { session.submit(req)?; }   // serves full batches
+//!   let responses = session.drain()?;             // flushes the tail
+//! ```
+//!
+//! `submit` advances the batcher clock by one tick per request (the
+//! deterministic arrival model the batcher's deadline policy is defined
+//! over) and immediately serves any batch the release policy produces,
+//! so the admission queue can never exceed one compiled batch.
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{Batcher, Request, RequestId, Response};
+use super::metrics::Metrics;
+use super::Engine;
+use crate::runtime::Runtime;
+
+/// Request handling for one [`Engine`]: owns the admission queue and the
+/// dynamic [`Batcher`], assigns request ids, and collects responses.
+pub struct Session<'rt> {
+    rt: &'rt Runtime,
+    engine: Engine,
+    batcher: Batcher,
+    done: Vec<Response>,
+    next_id: RequestId,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn new(rt: &'rt Runtime, engine: Engine, batcher: Batcher) -> Session<'rt> {
+        Session { rt, engine, batcher, done: Vec::new(), next_id: 0 }
+    }
+
+    /// Admit one request. The session assigns and returns the request id
+    /// (the caller-set `req.id` is overwritten); any batch released by
+    /// the policy (full batch, or the oldest request's deadline) is
+    /// served inline and its responses buffered for [`Session::drain`].
+    pub fn submit(&mut self, mut req: Request) -> Result<RequestId> {
+        let id = self.next_id;
+        req.id = id;
+        if !self.batcher.submit(req) {
+            return Err(anyhow!(
+                "admission queue full ({} pending): backpressure",
+                self.batcher.depth()
+            ));
+        }
+        self.next_id += 1;
+        self.batcher.tick(1);
+        self.pump(false)?;
+        Ok(id)
+    }
+
+    /// Requests admitted but not yet served.
+    pub fn pending(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Flush the admission queue and return every buffered response (in
+    /// serve order; response ids are the ids `submit` returned).
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        self.pump(true)?;
+        Ok(std::mem::take(&mut self.done))
+    }
+
+    fn pump(&mut self, drain: bool) -> Result<()> {
+        while let Some((batch, _reason)) = self.batcher.next_batch(drain) {
+            self.done.extend(self.engine.serve_batch(self.rt, &batch)?);
+        }
+        Ok(())
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.engine.metrics
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Tear down the session, recovering the engine (e.g. to read
+    /// `router_stats` or reuse it with a new batcher).
+    pub fn into_engine(self) -> Engine {
+        self.engine
+    }
+}
+
+// Session logic that doesn't need a live engine (id assignment, the
+// pump policy) is exercised through the Batcher unit tests; end-to-end
+// Session behavior over real artifacts lives in rust/tests/.

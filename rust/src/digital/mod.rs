@@ -150,6 +150,33 @@ pub struct DigitalPlacement {
     pub dense_digital: bool,
 }
 
+impl DigitalPlacement {
+    /// The digital accelerator's share of a full [`Placement`]: the
+    /// fraction of routed experts mapped to `BACKEND_DIGITAL` (counted
+    /// from the backend map, so hand-edited placements stay accurate),
+    /// plus the dense modules unless the placement pushed *all* of them
+    /// analog (Fig 3's worst case).
+    pub fn from_placement(
+        p: &crate::moe::placement::Placement,
+        cfg: &crate::config::ModelConfig,
+    ) -> DigitalPlacement {
+        DigitalPlacement {
+            expert_fraction: p
+                .backend_expert_fraction(cfg, crate::moe::placement::BACKEND_DIGITAL),
+            dense_digital: !all_dense_analog(p),
+        }
+    }
+}
+
+/// True when every dense module family (attention, shared/dense FFN, LM
+/// head) is analog-placed — the only case where dense cost leaves the
+/// digital accelerator.
+pub(crate) fn all_dense_analog(p: &crate::moe::placement::Placement) -> bool {
+    p.lm_head_analog
+        && p.attn_analog.iter().all(|&a| a)
+        && p.dense_ffn_analog.iter().all(|&a| a)
+}
+
 /// Roofline cost of one batch of `batch` tokens through the digital share.
 ///
 /// Weight traffic: every digitally-placed parameter is streamed once per
@@ -269,6 +296,49 @@ mod tests {
             assert!(c.bytes >= last);
             last = c.bytes;
         }
+    }
+
+    #[test]
+    fn from_placement_projects_gamma_and_dense() {
+        use crate::moe::placement::Placement;
+        let cfg = crate::config::ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            seq_len: 8,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            n_experts: 4,
+            top_k: 2,
+            d_expert: 8,
+            d_shared: 0,
+            dense_first_layer: false,
+            d_dense_ffn: 16,
+            batch: 2,
+            train_steps: 1,
+            flags_len: 13,
+            n_params: 0,
+        };
+        let dig = Placement::all_digital(&cfg);
+        let dp = DigitalPlacement::from_placement(&dig, &cfg);
+        assert_eq!(dp.expert_fraction, 1.0);
+        assert!(dp.dense_digital);
+        let ana = Placement::all_analog(&cfg);
+        let dp = DigitalPlacement::from_placement(&ana, &cfg);
+        assert_eq!(dp.expert_fraction, 0.0);
+        assert!(!dp.dense_digital, "all-analog placement moves dense cost off digital");
+        // partial dense-analog keeps dense cost on the digital side
+        let mut partial = Placement::all_experts_analog(&cfg);
+        partial.attn_analog[0] = true;
+        assert!(DigitalPlacement::from_placement(&partial, &cfg).dense_digital);
+        // hand-edited backend maps are billed from the map, not the
+        // planner-recorded gamma label
+        let mut edited = Placement::all_digital(&cfg);
+        for e in 0..cfg.n_experts {
+            edited.set_backend(0, e, crate::moe::placement::BACKEND_ANALOG);
+        }
+        let dp = DigitalPlacement::from_placement(&edited, &cfg);
+        assert!((dp.expert_fraction - 0.5).abs() < 1e-12, "half the experts left digital");
     }
 
     #[test]

@@ -26,10 +26,15 @@
 //!   calibration, energy/latency model
 //! - [`digital`] — digital accelerator roofline model (eq 16)
 //! - [`moe`] — expert scoring metrics (MaxNNScore eq 6-7 + baselines) and
-//!   the Γ-fraction placement planner (Fig 2)
+//!   the Γ-fraction placement planner (Fig 2); placements map experts to
+//!   *backend ids*, not hard-wired accelerators
 //! - [`eval`] — benchmark task suite and perplexity evaluation
 //! - [`train`] — Rust-driven training through the AOT `train_step`
-//! - [`coordinator`] — the heterogeneous serving engine
+//! - [`coordinator`] — the heterogeneous serving engine behind the
+//!   backend-trait API: implement
+//!   [`coordinator::ExpertBackend`] per accelerator, assemble with
+//!   [`coordinator::EngineBuilder`], serve request streams through
+//!   [`coordinator::Session`] (see `DESIGN.md` §serving API)
 //! - [`theory`] — §4 analytical setup (Lemma 4.1, Theorem 4.2)
 
 pub mod aimc;

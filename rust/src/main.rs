@@ -11,13 +11,14 @@
 //! ```
 //!
 //! (Vendored environment has no clap; args are parsed by the tiny
-//! `cli` helper below — `--key value` pairs only.)
+//! `Cli` helper below — strict `--key value` pairs, with `--help` per
+//! subcommand.)
 
 use anyhow::{bail, Result};
 
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
-use hetmoe::coordinator::{Batcher, Engine, Request};
+use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Session};
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
@@ -27,41 +28,136 @@ use hetmoe::theory::{lemma41_experiment, theorem42_experiment, TheoryConfig};
 use hetmoe::train::{load_corpus, TrainOptions, Trainer};
 use hetmoe::util::table::Table;
 
-/// `--key value` argument map.
+/// One accepted flag: key, default (shown in help), description.
+type FlagSpec = (&'static str, &'static str, &'static str);
+
+const INFO_FLAGS: &[FlagSpec] = &[];
+const EVAL_FLAGS: &[FlagSpec] = &[
+    ("model", "olmoe_mini", "model config name"),
+    ("items", "128", "max items per task"),
+    ("gamma", "0.0", "digital expert fraction Γ (1.0 = all digital)"),
+    ("noise", "0.0", "programming-noise scale (eq 3)"),
+    ("metric", "maxnn", "selection metric: maxnn|actfreq|actweight|routernorm|random"),
+    ("seed", "0", "noise / Random-metric seed"),
+];
+const SERVE_FLAGS: &[FlagSpec] = &[
+    ("model", "olmoe_mini", "model config name"),
+    ("gamma", "0.25", "digital expert fraction Γ"),
+    ("noise", "1.0", "programming-noise scale (eq 3)"),
+    ("requests", "64", "number of scoring requests to stream"),
+];
+const TRAIN_FLAGS: &[FlagSpec] = &[
+    ("model", "olmoe_mini", "model config name"),
+    ("steps", "100", "SGD steps through the AOT train_step"),
+];
+const THEORY_FLAGS: &[FlagSpec] = &[
+    ("alpha", "0.125", "frequent-token rate α of the §4 setup"),
+    ("thresh", "0.95", "accuracy threshold defining tolerable noise c"),
+];
+
+/// Strict `--key value` argument map for one subcommand. The `FlagSpec`
+/// table is the single source of truth for defaults: `--help` and the
+/// getters read the same strings.
 struct Cli {
-    cmd: String,
     kv: std::collections::HashMap<String, String>,
+    spec: &'static [FlagSpec],
 }
 
 impl Cli {
-    fn parse() -> Cli {
-        let args: Vec<String> = std::env::args().skip(1).collect();
-        let cmd = args.first().cloned().unwrap_or_else(|| "info".into());
+    /// Parse `args` against `spec`. Every token must be a known `--key`
+    /// followed by a value; bare positionals and unknown keys are hard
+    /// errors. Returns `None` when `--help` was requested (usage already
+    /// printed).
+    fn parse(cmd: &str, args: &[String], spec: &'static [FlagSpec]) -> Result<Option<Cli>> {
         let mut kv = std::collections::HashMap::new();
-        let mut i = 1;
-        while i + 1 < args.len() + 1 {
-            if let Some(k) = args.get(i).and_then(|a| a.strip_prefix("--")) {
-                let v = args.get(i + 1).cloned().unwrap_or_default();
-                kv.insert(k.to_string(), v);
-                i += 2;
-            } else {
-                i += 1;
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                print_usage(cmd, spec);
+                return Ok(None);
+            }
+            let Some(k) = a.strip_prefix("--") else {
+                bail!(
+                    "unexpected positional argument '{a}' for '{cmd}' \
+                     (flags are --key value pairs; try 'hetmoe {cmd} --help')"
+                );
+            };
+            if !spec.iter().any(|(s, _, _)| *s == k) {
+                bail!(
+                    "unknown flag '--{k}' for '{cmd}' (known: {}; try 'hetmoe {cmd} --help')",
+                    spec.iter()
+                        .map(|(s, _, _)| format!("--{s}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+            match args.get(i + 1) {
+                // a following "--flag" token means the value is missing;
+                // single-dash tokens (negative numbers) are fine
+                Some(v) if !v.starts_with("--") => {
+                    kv.insert(k.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => bail!("flag '--{k}' expects a value (try 'hetmoe {cmd} --help')"),
             }
         }
-        Cli { cmd, kv }
+        Ok(Some(Cli { kv, spec }))
     }
 
-    fn get(&self, k: &str, default: &str) -> String {
-        self.kv.get(k).cloned().unwrap_or_else(|| default.to_string())
+    fn default_of(&self, k: &str) -> &'static str {
+        self.spec
+            .iter()
+            .find(|(s, _, _)| *s == k)
+            .map(|(_, d, _)| *d)
+            .unwrap_or("")
     }
 
-    fn get_f64(&self, k: &str, default: f64) -> f64 {
-        self.kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    fn get(&self, k: &str) -> String {
+        self.kv.get(k).cloned().unwrap_or_else(|| self.default_of(k).to_string())
     }
 
-    fn get_usize(&self, k: &str, default: usize) -> usize {
-        self.kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    fn get_f64(&self, k: &str) -> f64 {
+        self.kv
+            .get(k)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| self.default_of(k).parse().unwrap_or(0.0))
     }
+
+    fn get_usize(&self, k: &str) -> usize {
+        self.kv
+            .get(k)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| self.default_of(k).parse().unwrap_or(0))
+    }
+}
+
+fn print_usage(cmd: &str, spec: &[FlagSpec]) {
+    println!("usage: hetmoe {cmd} [flags]");
+    if spec.is_empty() {
+        println!("  (no flags)");
+        return;
+    }
+    for (key, default, help) in spec {
+        println!("  --{key:<10} {help} (default: {default})");
+    }
+}
+
+fn print_global_usage() {
+    println!(
+        "hetmoe — heterogeneous analog-digital MoE serving\n\
+         \n\
+         usage: hetmoe <command> [--key value ...]\n\
+         \n\
+         commands:\n\
+         \x20 info    artifact + model inventory\n\
+         \x20 eval    task-suite accuracy for a placement\n\
+         \x20 serve   run the heterogeneous serving engine\n\
+         \x20 train   Rust-driven AOT training demo\n\
+         \x20 theory  Lemma 4.1 / Theorem 4.2 experiments\n\
+         \n\
+         'hetmoe <command> --help' lists the command's flags."
+    );
 }
 
 fn metric_by_name(name: &str) -> Result<SelectionMetric> {
@@ -76,19 +172,28 @@ fn metric_by_name(name: &str) -> Result<SelectionMetric> {
 }
 
 fn main() -> Result<()> {
-    let cli = Cli::parse();
-    let artifacts = hetmoe::artifacts_dir();
-    match cli.cmd.as_str() {
-        "info" => cmd_info(&cli),
-        "eval" => cmd_eval(&cli),
-        "serve" => cmd_serve(&cli),
-        "train" => cmd_train(&cli),
-        "theory" => cmd_theory(&cli),
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().cloned().unwrap_or_else(|| "info".into());
+    if cmd == "--help" || cmd == "-h" || cmd == "help" {
+        print_global_usage();
+        return Ok(());
+    }
+    let rest: &[String] = if args.is_empty() { &[] } else { &args[1..] };
+    let (spec, run): (&'static [FlagSpec], fn(&Cli) -> Result<()>) = match cmd.as_str() {
+        "info" => (INFO_FLAGS, cmd_info),
+        "eval" => (EVAL_FLAGS, cmd_eval),
+        "serve" => (SERVE_FLAGS, cmd_serve),
+        "train" => (TRAIN_FLAGS, cmd_train),
+        "theory" => (THEORY_FLAGS, cmd_theory),
         other => bail!(
             "unknown command '{other}' (try: info, eval, serve, train, theory); \
              artifacts dir = {}",
-            artifacts.display()
+            hetmoe::artifacts_dir().display()
         ),
+    };
+    match Cli::parse(&cmd, rest, spec)? {
+        Some(cli) => run(&cli),
+        None => Ok(()), // --help path
     }
 }
 
@@ -119,19 +224,19 @@ fn cmd_info(_cli: &Cli) -> Result<()> {
 fn cmd_eval(cli: &Cli) -> Result<()> {
     let artifacts = hetmoe::artifacts_dir();
     let meta = Meta::load(&artifacts)?;
-    let model = cli.get("model", "olmoe_mini");
+    let model = cli.get("model");
     let cfg = meta.config(&model)?.clone();
     let paths = ArtifactPaths::new(&artifacts, &model);
     let mut rt = Runtime::cpu()?;
     let mut params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
     let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc)?;
     let tasks = load_tasks(&artifacts)?;
-    let max_items = cli.get_usize("items", 128);
+    let max_items = cli.get_usize("items");
 
-    let gamma = cli.get_f64("gamma", 0.0);
-    let noise = cli.get_f64("noise", 0.0);
-    let metric = metric_by_name(&cli.get("metric", "maxnn"))?;
-    let seed = cli.get_usize("seed", 0) as u64;
+    let gamma = cli.get_f64("gamma");
+    let noise = cli.get_f64("noise");
+    let metric = metric_by_name(&cli.get("metric"))?;
+    let seed = cli.get_usize("seed") as u64;
 
     let placement = if gamma >= 1.0 {
         Placement::all_digital(&cfg)
@@ -171,15 +276,15 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let artifacts = hetmoe::artifacts_dir();
     let meta = Meta::load(&artifacts)?;
-    let model = cli.get("model", "olmoe_mini");
+    let model = cli.get("model");
     let cfg = meta.config(&model)?.clone();
     let paths = ArtifactPaths::new(&artifacts, &model);
     let mut rt = Runtime::cpu()?;
     let mut params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
     let tasks = load_tasks(&artifacts)?;
-    let gamma = cli.get_f64("gamma", 0.25);
-    let noise = cli.get_f64("noise", 1.0);
-    let n_requests = cli.get_usize("requests", 64);
+    let gamma = cli.get_f64("gamma");
+    let noise = cli.get_f64("noise");
+    let n_requests = cli.get_usize("requests");
 
     let placement = plan_placement(
         &cfg,
@@ -188,54 +293,83 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         None,
     )?;
     apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(noise), 0)?;
-    let mut engine = Engine::new(
-        &mut rt,
-        &paths,
-        cfg.clone(),
-        meta.aimc,
-        meta.serve_cap,
-        placement,
-        &params,
-    )?;
+    let engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement)
+        .serve_cap(meta.serve_cap)
+        .build(&mut rt, &paths, &params)?;
 
-    // build a request stream from task items
-    let mut batcher = Batcher::new(cfg.batch, 4, cfg.batch * 4);
-    let mut id = 0u64;
-    let mut served = 0usize;
+    // stream requests from task items through the session
+    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 4, cfg.batch * 4));
+    let mut submitted = 0usize;
     'outer: for task in &tasks {
         for item in &task.items {
             let choice = &item.choices[item.gold];
             let (tk, tg, mk) = pack_choice(&item.ctx, choice, cfg.seq_len);
-            batcher.submit(Request { id, tokens: tk, targets: tg, mask: mk, arrived: 0 });
-            id += 1;
-            batcher.tick(1);
-            while let Some((batch, _)) = batcher.next_batch(false) {
-                served += engine.serve_batch(&rt, &batch)?.len();
-            }
-            if id as usize >= n_requests {
+            session.submit(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 })?;
+            submitted += 1;
+            if submitted >= n_requests {
                 break 'outer;
             }
         }
     }
-    while let Some((batch, _)) = batcher.next_batch(true) {
-        served += engine.serve_batch(&rt, &batch)?.len();
+    let responses = session.drain()?;
+    println!(
+        "served {} scoring requests (Γ={gamma}, prog-noise={noise})",
+        responses.len()
+    );
+
+    let m = session.metrics();
+    let mut t = Table::new("serve summary", &["metric", "value"]);
+    t.row(vec!["requests".into(), m.requests.to_string()]);
+    t.row(vec!["batches".into(), m.batches.to_string()]);
+    t.row(vec!["tokens".into(), m.tokens.to_string()]);
+    t.row(vec![
+        "expert-batch utilization".into(),
+        format!("{:.1}% ({} real / {} padded)", m.utilization() * 100.0,
+                m.dispatched_tokens, m.padded_tokens),
+    ]);
+    t.row(vec![
+        "wall throughput".into(),
+        format!("{:.0} tokens/s", m.wall_tokens_per_s()),
+    ]);
+    for b in &m.backends {
+        t.row(vec![
+            format!("{} backend", b.name),
+            format!(
+                "{} dispatches, {:.3}s wall, {:.4}s simulated busy, {:.4} J",
+                b.dispatches,
+                b.wall.as_secs_f64(),
+                b.busy_s,
+                b.energy_j
+            ),
+        ]);
     }
-    println!("served {served} scoring requests (Γ={gamma}, prog-noise={noise})");
-    println!("{}", engine.metrics.report());
+    t.row(vec![
+        "simulated throughput".into(),
+        format!("{:.0} tokens/s", m.simulated_tokens_per_s()),
+    ]);
+    t.row(vec![
+        "simulated efficiency".into(),
+        format!("{:.1} tokens/J", m.simulated_tokens_per_joule()),
+    ]);
+    t.print();
+    println!("\n{}", m.report());
     Ok(())
 }
 
 fn cmd_train(cli: &Cli) -> Result<()> {
     let artifacts = hetmoe::artifacts_dir();
     let meta = Meta::load(&artifacts)?;
-    let model = cli.get("model", "olmoe_mini");
+    let model = cli.get("model");
     let cfg = meta.config(&model)?.clone();
     let paths = ArtifactPaths::new(&artifacts, &model);
     let mut rt = Runtime::cpu()?;
     let mut store = ParamStore::load(&paths.manifest(), &paths.init_params_bin())?;
     let corpus = load_corpus(&artifacts, cfg.seq_len)?;
     let opts = TrainOptions {
-        steps: cli.get_usize("steps", 100),
+        steps: cli.get_usize("steps"),
         ..Default::default()
     };
     let mut trainer = Trainer::new(&mut rt, &paths, cfg, &mut store)?;
@@ -247,7 +381,7 @@ fn cmd_train(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_theory(cli: &Cli) -> Result<()> {
-    let alpha = cli.get_f64("alpha", 0.125);
+    let alpha = cli.get_f64("alpha");
     let cfg = TheoryConfig { alpha, ..Default::default() };
     let r41 = lemma41_experiment(&cfg);
     println!(
@@ -255,7 +389,7 @@ fn cmd_theory(cli: &Cli) -> Result<()> {
          rare-specialists={:.3} → holds={}",
         r41.mean_freq, r41.mean_rare, r41.holds
     );
-    let thresh = cli.get_f64("thresh", 0.95);
+    let thresh = cli.get_f64("thresh");
     // log-spaced: the tolerable-c boundary sits well below 1 for analog
     let c_grid: Vec<f64> = (0..=20)
         .map(|i| 0.02 * (2.0f64 / 0.02).powf(i as f64 / 20.0))

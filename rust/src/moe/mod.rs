@@ -12,5 +12,8 @@
 pub mod placement;
 pub mod score;
 
-pub use placement::{apply_placement, plan_placement, Placement, PlacementOptions};
+pub use placement::{
+    apply_placement, plan_placement, BackendId, Placement, PlacementOptions, BACKEND_ANALOG,
+    BACKEND_DIGITAL,
+};
 pub use score::{expert_scores, SelectionMetric};

@@ -4,6 +4,14 @@
 //! 2. Rank the experts of each MoE block by the selection metric.
 //! 3. Top-Γ fraction → digital; remaining experts' linear modules → AIMC.
 //!
+//! A [`Placement`] maps every routed expert to a *backend id* — an index
+//! into the serving engine's backend registry (see
+//! `coordinator::backend`). By convention slot [`BACKEND_DIGITAL`] is the
+//! digital accelerator and slot [`BACKEND_ANALOG`] the AIMC chip; future
+//! backends (sharded digital, quantized middle tiers, multi-tile analog)
+//! register higher slots through `EngineBuilder::backend` without
+//! touching this planner.
+//!
 //! A [`Placement`] is then *applied* to a [`ParamStore`]: analog-placed
 //! expert weights receive eq (3) programming noise (per seed), and the
 //! matching `analog_flags` vector enables the in-graph DAC-ADC path. The
@@ -18,11 +26,22 @@ use crate::config::{AnalogFlags, ModelConfig};
 use crate::runtime::ParamStore;
 use crate::util::Prng;
 
+/// Index of a serving backend in the engine's registry.
+pub type BackendId = usize;
+
+/// Registry slot of the digital accelerator (always present).
+pub const BACKEND_DIGITAL: BackendId = 0;
+/// Registry slot of the AIMC accelerator (always present). Experts on
+/// this slot receive eq (3) programming noise and the in-graph DAC-ADC
+/// path; slots ≥ 2 are free for custom backends.
+pub const BACKEND_ANALOG: BackendId = 1;
+
 /// Full placement decision for one model.
 #[derive(Clone, Debug)]
 pub struct Placement {
-    /// `analog[l][e]` — expert e of layer l runs on the AIMC chip
-    pub analog: Vec<Vec<bool>>,
+    /// `backend[l][e]` — registry id of the backend serving expert e of
+    /// layer l
+    pub backend: Vec<Vec<BackendId>>,
     /// attention (+LN projections) of each layer in analog (Fig 3 only;
     /// the paper's method always keeps these digital)
     pub attn_analog: Vec<bool>,
@@ -39,7 +58,7 @@ impl Placement {
     /// Everything digital (the FP-16 baseline row of Table 1/2).
     pub fn all_digital(cfg: &ModelConfig) -> Placement {
         Placement {
-            analog: vec![vec![false; cfg.n_experts]; cfg.n_layers],
+            backend: vec![vec![BACKEND_DIGITAL; cfg.n_experts]; cfg.n_layers],
             attn_analog: vec![false; cfg.n_layers],
             dense_ffn_analog: vec![false; cfg.n_layers],
             lm_head_analog: false,
@@ -54,7 +73,7 @@ impl Placement {
         let mut p = Placement::all_digital(cfg);
         for l in 0..cfg.n_layers {
             if cfg.is_moe_layer(l) {
-                p.analog[l] = vec![true; cfg.n_experts];
+                p.backend[l] = vec![BACKEND_ANALOG; cfg.n_experts];
             }
         }
         p.gamma = 0.0;
@@ -71,8 +90,64 @@ impl Placement {
         p
     }
 
+    /// Registry id of the backend serving expert `e` of layer `l`.
+    pub fn backend_of(&self, l: usize, e: usize) -> BackendId {
+        self.backend[l][e]
+    }
+
+    pub fn set_backend(&mut self, l: usize, e: usize, b: BackendId) {
+        self.backend[l][e] = b;
+    }
+
+    /// Does expert `e` of layer `l` live on the AIMC chip (and therefore
+    /// receive programming noise + the DAC-ADC flag)?
+    pub fn is_analog(&self, l: usize, e: usize) -> bool {
+        self.backend[l][e] == BACKEND_ANALOG
+    }
+
+    /// Per-expert analog mask of one layer — the shape
+    /// `aimc::program::program_expert_stack` consumes.
+    pub fn analog_mask(&self, l: usize) -> Vec<bool> {
+        self.backend[l].iter().map(|&b| b == BACKEND_ANALOG).collect()
+    }
+
+    /// Fraction of routed-expert slots (over MoE layers only) served by
+    /// backend `id` — the expert share the Appendix-A cost models bill
+    /// to that backend. Derived from the backend map, so it stays
+    /// correct after `set_backend` edits (the planner-recorded `gamma`
+    /// is a label, not an input to cost accounting).
+    pub fn backend_expert_fraction(&self, cfg: &ModelConfig, id: BackendId) -> f64 {
+        let mut total = 0usize;
+        let mut hits = 0usize;
+        for (l, layer) in self.backend.iter().enumerate() {
+            if !cfg.is_moe_layer(l) {
+                continue;
+            }
+            total += layer.len();
+            hits += layer.iter().filter(|&&b| b == id).count();
+        }
+        if total > 0 {
+            hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Highest backend id referenced by any expert (registry size - 1
+    /// lower bound for `EngineBuilder` validation).
+    pub fn max_backend_id(&self) -> BackendId {
+        self.backend
+            .iter()
+            .flat_map(|l| l.iter().copied())
+            .max()
+            .unwrap_or(BACKEND_DIGITAL)
+    }
+
     pub fn n_analog_experts(&self) -> usize {
-        self.analog.iter().map(|l| l.iter().filter(|&&a| a).count()).sum()
+        self.backend
+            .iter()
+            .map(|l| l.iter().filter(|&&b| b == BACKEND_ANALOG).count())
+            .sum()
     }
 
     /// The `analog_flags` vector for the DAC-ADC in-graph path.
@@ -80,7 +155,7 @@ impl Placement {
         let mut f = AnalogFlags::digital(cfg);
         for l in 0..cfg.n_layers {
             for e in 0..cfg.n_experts {
-                if self.analog[l][e] {
+                if self.is_analog(l, e) {
                     f.set_expert(l, e, true);
                 }
             }
@@ -102,7 +177,6 @@ impl Placement {
     pub fn digital_param_fraction(&self, cfg: &ModelConfig, params: &ParamStore) -> f64 {
         let mut digital = 0usize;
         let mut total = 0usize;
-        let per_expert = 3 * cfg.d_model * cfg.d_expert;
         for spec in &params.manifest.tensors {
             total += spec.len;
             let name = &spec.name;
@@ -110,9 +184,8 @@ impl Placement {
                 if name.contains(".experts.") {
                     // stacked [E, ...]: count per-expert placement
                     let analog_n =
-                        self.analog[l].iter().filter(|&&a| a).count();
-                    digital += spec.len
-                        - analog_n * spec.len / cfg.n_experts;
+                        self.backend[l].iter().filter(|&&b| b == BACKEND_ANALOG).count();
+                    digital += spec.len - analog_n * spec.len / cfg.n_experts;
                     continue;
                 }
                 let analog = if name.contains(".attn.") || name.contains(".ln1.") {
@@ -133,7 +206,6 @@ impl Placement {
                 digital += spec.len; // embed, pos_emb, ln_f
             }
         }
-        let _ = per_expert;
         digital as f64 / total as f64
     }
 }
@@ -177,7 +249,7 @@ pub fn plan_placement(
         let mut idx: Vec<usize> = (0..cfg.n_experts).collect();
         idx.sort_by(|&a, &b| scores[l][b].partial_cmp(&scores[l][a]).unwrap());
         for &e in idx.iter().take(k_digital) {
-            p.analog[l][e] = false;
+            p.set_backend(l, e, BACKEND_DIGITAL);
         }
     }
     Ok(p)
@@ -203,13 +275,13 @@ pub fn apply_placement(
     let (d, m) = (cfg.d_model, cfg.d_expert);
     for l in 0..cfg.n_layers {
         if cfg.is_moe_layer(l) {
-            let analog = &placement.analog[l];
+            let analog = placement.analog_mask(l);
             if analog.iter().any(|&a| a) {
                 for (mat, rows, cols) in [("up", d, m), ("gate", d, m), ("down", m, d)] {
                     let name = format!("layers.{l}.experts.{mat}");
                     let mut rng = Prng::new(seed ^ hash_name(&name));
                     let w = params.tensor_mut(&name)?;
-                    program_expert_stack(w, cfg.n_experts, rows, cols, analog, noise, &mut rng);
+                    program_expert_stack(w, cfg.n_experts, rows, cols, &analog, noise, &mut rng);
                 }
             }
             if placement.dense_ffn_analog[l] && cfg.d_shared > 0 {
@@ -262,6 +334,8 @@ fn hash_name(name: &str) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::moe::score::SelectionMetric;
+    use std::io::Write;
 
     fn cfg() -> ModelConfig {
         ModelConfig {
@@ -284,6 +358,71 @@ mod tests {
         }
     }
 
+    // minimal tempdir (no external crate)
+    struct TempDir(std::path::PathBuf);
+    impl TempDir {
+        fn new() -> TempDir {
+            let p = std::env::temp_dir().join(format!(
+                "hetmoe-placement-test-{}-{:x}",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .as_nanos()
+            ));
+            std::fs::create_dir_all(&p).unwrap();
+            TempDir(p)
+        }
+    }
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    /// Synthesize a ParamStore matching `cfg()`'s tensor layout — enough
+    /// of the manifest for `plan_placement` (Random/RouterNorm) and
+    /// `digital_param_fraction` to work without real artifacts.
+    fn tiny_store(dir: &TempDir) -> ParamStore {
+        let c = cfg();
+        let (d, m, e_n) = (c.d_model, c.d_expert, c.n_experts);
+        let mut tensors = Vec::new();
+        let mut offset = 0usize;
+        let mut push = |name: String, shape: Vec<usize>, tensors: &mut Vec<String>| {
+            let len: usize = shape.iter().product();
+            tensors.push(format!(
+                r#"{{"name": "{name}", "shape": [{}], "offset": {offset}, "len": {len}}}"#,
+                shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+            ));
+            offset += len;
+        };
+        push("embed".into(), vec![c.vocab, d], &mut tensors);
+        push("pos_emb".into(), vec![c.seq_len, d], &mut tensors);
+        for l in 0..c.n_layers {
+            push(format!("layers.{l}.attn.wq"), vec![d, d], &mut tensors);
+            push(format!("layers.{l}.router"), vec![d, e_n], &mut tensors);
+            push(format!("layers.{l}.experts.up"), vec![e_n, d, m], &mut tensors);
+            push(format!("layers.{l}.experts.gate"), vec![e_n, d, m], &mut tensors);
+            push(format!("layers.{l}.experts.down"), vec![e_n, m, d], &mut tensors);
+        }
+        push("lm_head".into(), vec![d, c.vocab], &mut tensors);
+        let manifest = format!(
+            r#"{{"tensors": [{}], "total_f32": {offset}}}"#,
+            tensors.join(", ")
+        );
+        std::fs::write(self::tiny_manifest_path(dir), &manifest).unwrap();
+        let mut f = std::fs::File::create(dir.0.join("params.bin")).unwrap();
+        let mut rng = Prng::new(7);
+        for _ in 0..offset {
+            f.write_all(&(rng.gaussian_f32() * 0.1).to_le_bytes()).unwrap();
+        }
+        ParamStore::load(&tiny_manifest_path(dir), &dir.0.join("params.bin")).unwrap()
+    }
+
+    fn tiny_manifest_path(dir: &TempDir) -> std::path::PathBuf {
+        dir.0.join("manifest.json")
+    }
+
     #[test]
     fn canned_placements() {
         let c = cfg();
@@ -297,10 +436,36 @@ mod tests {
     }
 
     #[test]
+    fn backend_ids_roundtrip() {
+        let c = cfg();
+        let mut p = Placement::all_digital(&c);
+        assert_eq!(p.backend_of(0, 0), BACKEND_DIGITAL);
+        p.set_backend(0, 1, BACKEND_ANALOG);
+        assert!(p.is_analog(0, 1));
+        assert_eq!(p.n_analog_experts(), 1);
+        assert_eq!(p.analog_mask(0), vec![false, true, false, false]);
+        // a custom backend slot counts as neither digital nor AIMC
+        p.set_backend(1, 2, 3);
+        assert!(!p.is_analog(1, 2));
+        assert_eq!(p.max_backend_id(), 3);
+        assert_eq!(p.n_analog_experts(), 1);
+    }
+
+    #[test]
+    fn backend_expert_fraction_counts_moe_layers_only() {
+        let mut c = cfg();
+        c.dense_first_layer = true; // layer 0 dense, layer 1 MoE
+        let p = Placement::all_experts_analog(&c);
+        // the dense layer's (meaningless) slots must not dilute the share
+        assert_eq!(p.backend_expert_fraction(&c, BACKEND_ANALOG), 1.0);
+        assert_eq!(p.backend_expert_fraction(&c, BACKEND_DIGITAL), 0.0);
+    }
+
+    #[test]
     fn flags_roundtrip() {
         let c = cfg();
         let mut p = Placement::all_experts_analog(&c);
-        p.analog[1][2] = false;
+        p.set_backend(1, 2, BACKEND_DIGITAL);
         p.attn_analog[0] = true;
         let f = p.to_flags(&c);
         assert!(f.expert(0, 0));
@@ -308,6 +473,82 @@ mod tests {
         assert!(f.attn(0));
         assert!(!f.attn(1));
         assert_eq!(f.n_analog_experts(), 7);
+    }
+
+    #[test]
+    fn flags_roundtrip_canned_and_planned() {
+        // round-trip to_flags against every placement constructor
+        let dir = TempDir::new();
+        let c = cfg();
+        let params = tiny_store(&dir);
+        let planned = plan_placement(
+            &c,
+            &params,
+            &PlacementOptions { metric: SelectionMetric::Random, gamma: 0.5, seed: 3 },
+            None,
+        )
+        .unwrap();
+        for p in [
+            Placement::all_digital(&c),
+            Placement::all_experts_analog(&c),
+            planned,
+        ] {
+            let f = p.to_flags(&c);
+            for l in 0..c.n_layers {
+                for e in 0..c.n_experts {
+                    assert_eq!(f.expert(l, e), p.is_analog(l, e), "({l},{e})");
+                }
+            }
+            assert_eq!(f.n_analog_experts(), p.n_analog_experts());
+        }
+    }
+
+    #[test]
+    fn digital_param_fraction_bounds_and_monotone_in_gamma() {
+        let dir = TempDir::new();
+        let c = cfg();
+        let params = tiny_store(&dir);
+        let mut last = -1.0f64;
+        for gamma in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let p = plan_placement(
+                &c,
+                &params,
+                &PlacementOptions { metric: SelectionMetric::RouterNorm, gamma, seed: 0 },
+                None,
+            )
+            .unwrap();
+            let frac = p.digital_param_fraction(&c, &params);
+            assert!((0.0..=1.0).contains(&frac), "Γ={gamma}: fraction {frac}");
+            assert!(frac >= last, "Γ={gamma}: {frac} < {last} (not monotone)");
+            last = frac;
+        }
+        // extremes: all-digital is exactly 1, all-analog experts strictly less
+        assert!(
+            (Placement::all_digital(&c).digital_param_fraction(&c, &params) - 1.0).abs()
+                < 1e-12
+        );
+        assert!(
+            Placement::all_experts_analog(&c).digital_param_fraction(&c, &params) < 1.0
+        );
+    }
+
+    #[test]
+    fn n_analog_experts_matches_gamma() {
+        let dir = TempDir::new();
+        let c = cfg();
+        let params = tiny_store(&dir);
+        for gamma in [0.0, 0.25, 0.5, 1.0] {
+            let p = plan_placement(
+                &c,
+                &params,
+                &PlacementOptions { metric: SelectionMetric::Random, gamma, seed: 1 },
+                None,
+            )
+            .unwrap();
+            let k_digital = ((c.n_experts as f64) * gamma).round() as usize;
+            let want = c.n_layers * (c.n_experts - k_digital);
+            assert_eq!(p.n_analog_experts(), want, "Γ={gamma}");
+        }
     }
 
     #[test]
@@ -330,7 +571,9 @@ mod tests {
             let mut p = Placement::all_digital(&c);
             for l in 0..c.n_layers {
                 for e in 0..c.n_experts {
-                    p.analog[l][e] = rng.uniform() < 0.5;
+                    if rng.uniform() < 0.5 {
+                        p.set_backend(l, e, BACKEND_ANALOG);
+                    }
                 }
                 p.attn_analog[l] = rng.uniform() < 0.5;
                 p.dense_ffn_analog[l] = rng.uniform() < 0.5;
@@ -340,7 +583,7 @@ mod tests {
             for l in 0..c.n_layers {
                 for e in 0..c.n_experts {
                     crate::prop_assert!(
-                        f.expert(l, e) == p.analog[l][e],
+                        f.expert(l, e) == p.is_analog(l, e),
                         "expert ({l},{e})"
                     );
                 }
@@ -370,9 +613,10 @@ mod tests {
                 let mut idx: Vec<usize> = (0..c.n_experts).collect();
                 idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
                 for &e in idx.iter().take(k_digital) {
-                    p.analog[l][e] = false;
+                    p.set_backend(l, e, BACKEND_DIGITAL);
                 }
-                let digital = p.analog[l].iter().filter(|&&a| !a).count();
+                let digital =
+                    p.backend[l].iter().filter(|&&b| b == BACKEND_DIGITAL).count();
                 crate::prop_assert!(
                     digital == k_digital,
                     "layer {l}: {digital} digital, want {k_digital}"

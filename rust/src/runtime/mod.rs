@@ -70,6 +70,18 @@ impl Runtime {
         Ok(rc)
     }
 
+    /// Load + compile an HLO text file if it exists — the pattern for
+    /// optional compiled tiers (e.g. the small-capacity expert FFNs,
+    /// absent in older artifact trees). Compilation errors still
+    /// propagate; only a missing file maps to `None`.
+    pub fn load_optional(&mut self, path: &Path) -> Result<Option<Rc<Executable>>> {
+        if path.exists() {
+            Ok(Some(self.load(path)?))
+        } else {
+            Ok(None)
+        }
+    }
+
     /// Upload an f32 tensor to the device.
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)

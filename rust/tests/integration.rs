@@ -9,7 +9,7 @@
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::aimc::quant::{adc_quant, dac_quant};
 use hetmoe::config::Meta;
-use hetmoe::coordinator::{Engine, Request};
+use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Session};
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
@@ -150,16 +150,13 @@ fn serving_pipeline_matches_monolithic_forward() {
     let cfg = meta.config("olmoe_mini").unwrap().clone();
     let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
     let placement = Placement::all_digital(&cfg);
-    let mut engine = Engine::new(
-        &mut rt,
-        &paths,
-        cfg.clone(),
-        meta.aimc,
-        meta.serve_cap,
-        placement.clone(),
-        &params,
-    )
-    .unwrap();
+    let mut engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement.clone())
+        .serve_cap(meta.serve_cap)
+        .build(&mut rt, &paths, &params)
+        .unwrap();
 
     let mut reqs = Vec::new();
     let mut tk_all = Vec::new();
@@ -335,6 +332,68 @@ fn dsmoe_model_also_evaluates() {
     let chance: f64 =
         tasks.iter().map(|t| t.chance()).sum::<f64>() / tasks.len() as f64;
     assert!(avg > chance + 0.1, "dsmoe digital avg {avg:.3}");
+}
+
+#[test]
+fn session_serves_heterogeneous_stream_through_backend_registry() {
+    // Session + EngineBuilder end to end: a Γ=0.25 placement must route
+    // dispatches to BOTH registered backends, report per-backend clocks,
+    // and hand back one response per submitted request in order.
+    require_artifacts!();
+    let (mut rt, meta, paths, params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    assert!(placement.n_analog_experts() > 0);
+    let engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement)
+        .serve_cap(meta.serve_cap)
+        .build(&mut rt, &paths, &params)
+        .unwrap();
+    assert_eq!(engine.backend_names(), vec!["digital", "analog"]);
+
+    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+    let n = cfg.batch + 1; // force one full release + one drained tail
+    let mut submitted = 0;
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            let id = session
+                .submit(Request { id: 99, tokens: tk, targets: tg, mask: mk, arrived: 0 })
+                .unwrap();
+            assert_eq!(id, submitted as u64, "session assigns sequential ids");
+            submitted += 1;
+            if submitted == n {
+                break 'outer;
+            }
+        }
+    }
+    let responses = session.drain().unwrap();
+    assert_eq!(responses.len(), n);
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "responses in admission order");
+        assert!(r.score.is_finite());
+    }
+
+    let m = session.metrics();
+    assert_eq!(m.requests, n as u64);
+    assert_eq!(m.backends.len(), 2);
+    let dig = &m.backends[0];
+    let ana = &m.backends[1];
+    assert_eq!((dig.name.as_str(), ana.name.as_str()), ("digital", "analog"));
+    assert!(dig.dispatches > 0 && ana.dispatches > 0, "both backends dispatched");
+    assert!(dig.busy_s > 0.0 && ana.busy_s > 0.0, "both simulated clocks advanced");
+    assert!(dig.energy_j > 0.0 && ana.energy_j > 0.0);
+    let u = m.utilization();
+    assert!(u > 0.0 && u <= 1.0, "utilization {u} out of range");
 }
 
 #[test]

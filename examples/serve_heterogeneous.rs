@@ -52,6 +52,12 @@ fn main() -> Result<()> {
         .placement(placement.clone())
         .serve_cap(meta.serve_cap)
         .build(&mut rt, &paths, &params)?;
+    println!(
+        "engine: backends {:?}, {} host workers (HETMOE_WORKERS=1 for the \
+         sequential reference — outputs are byte-identical)",
+        engine.backend_names(),
+        engine.workers()
+    );
 
     // request stream: gold choices of the benchmark items
     let mut stream = Vec::new();
@@ -96,6 +102,16 @@ fn main() -> Result<()> {
 
     println!("\n--- engine metrics ---");
     println!("{}", session.metrics().report());
+    for b in &session.metrics().backends {
+        println!(
+            "{:>8}: {} dispatches, utilization {:.1}% ({} real / {} padded rows)",
+            b.name,
+            b.dispatches,
+            b.utilization() * 100.0,
+            b.dispatched_tokens,
+            b.padded_tokens
+        );
+    }
     println!(
         "per-request latency: p50={:.1}ms p95={:.1}ms  end-to-end {:.0} req/s",
         stats::quantile(&latencies, 0.5),

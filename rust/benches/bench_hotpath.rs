@@ -50,6 +50,34 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
+    // --- host matmul: blocked/packed kernel vs scalar reference ---
+    {
+        let (n, k, m) = (256usize, 256usize, 256usize);
+        let mut rng = Prng::new(1);
+        let a: Vec<f32> = (0..n * k).map(|_| rng.gaussian_f32() * 0.1).collect();
+        let b: Vec<f32> = (0..k * m).map(|_| rng.gaussian_f32() * 0.1).collect();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(hetmoe::tensor::matmul_ref(&a, &b, n, k, m));
+        }
+        let ref_s = t0.elapsed().as_secs_f64() / reps as f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(hetmoe::tensor::matmul(&a, &b, n, k, m));
+        }
+        let blk_s = t0.elapsed().as_secs_f64() / reps as f64;
+        t.row(vec![
+            "tensor::matmul".into(),
+            format!("{n}\u{d7}{k}\u{d7}{m}"),
+            format!(
+                "{:.2} ms blocked vs {:.2} ms scalar ({:.1}x)",
+                blk_s * 1e3,
+                ref_s * 1e3,
+                ref_s / blk_s
+            ),
+        ]);
+    }
+
     // --- programming-noise application ---
     let (d, m) = (512usize, 512usize);
     let mut w = vec![0.1f32; d * m];

@@ -1,0 +1,22 @@
+//! Blocked-kernel benchmark — `cargo bench --bench bench_kernels`.
+//!
+//! Times the cache-blocked / pool-parallel matmul and fused gated-MLP
+//! kernels against the retained scalar reference (`tensor::matmul_ref`,
+//! `tensor::gated_mlp_ref`), verifies them against it, and writes the
+//! `BENCH_kernels.json` trajectory. Pure host compute: runs without the
+//! AOT artifact tree. Knobs: `HETMOE_BENCH_REPS`, `HETMOE_BENCH_OUT`,
+//! `HETMOE_WORKERS` (see docs/BENCHMARKS.md).
+
+use hetmoe::bench::{
+    bench_out_dir, bench_reps, print_kernel_cases, run_kernel_bench, write_bench_json,
+};
+
+fn main() -> anyhow::Result<()> {
+    let reps = bench_reps();
+    println!("kernel bench: blocked kernels vs scalar reference ({reps} reps)…");
+    let json = run_kernel_bench(reps);
+    print_kernel_cases(&json)?;
+    let path = write_bench_json(&bench_out_dir(), "BENCH_kernels.json", &json)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -13,12 +13,14 @@
 /// Exponential-moving-average estimator of an activation stream's std.
 #[derive(Clone, Debug)]
 pub struct EmaStd {
+    /// EMA decay per update.
     pub decay: f64,
     ema_var: f64,
     initialized: bool,
 }
 
 impl EmaStd {
+    /// A fresh tracker with the given decay.
     pub fn new(decay: f64) -> EmaStd {
         assert!((0.0..1.0).contains(&decay));
         EmaStd { decay, ema_var: 0.0, initialized: false }
@@ -40,6 +42,7 @@ impl EmaStd {
         }
     }
 
+    /// Current EMA standard-deviation estimate.
     pub fn std(&self) -> f64 {
         self.ema_var.sqrt()
     }
@@ -53,8 +56,11 @@ impl EmaStd {
 /// Result of one calibration run.
 #[derive(Clone, Debug)]
 pub struct CalibResult {
+    /// Chosen input-clipping multiplier kappa.
     pub kappa: f64,
+    /// Chosen output-clipping multiplier lambda.
     pub lam: f64,
+    /// Perplexity at the chosen (kappa, lambda).
     pub ppl: f64,
     /// full (κ, ppl) sweep at λ = λ₀ — the rows of Appendix B tables 3/5/7/9
     pub kappa_sweep: Vec<(f64, f64)>,
@@ -65,7 +71,9 @@ pub struct CalibResult {
 /// Two-stage grid calibration: sweep κ at λ=1, fix the argmin, then
 /// sweep λ. `ppl` is any oracle mapping (κ, λ) → perplexity.
 pub struct Calibrator {
+    /// Kappa candidates for stage one.
     pub kappa_grid: Vec<f64>,
+    /// Lambda candidates for stage two.
     pub lam_grid: Vec<f64>,
 }
 
@@ -80,6 +88,7 @@ impl Default for Calibrator {
 }
 
 impl Calibrator {
+    /// Run the two-stage sweep against the `ppl` oracle.
     pub fn run<F: FnMut(f64, f64) -> f64>(&self, mut ppl: F) -> CalibResult {
         let mut kappa_sweep = Vec::new();
         let mut best_k = self.kappa_grid[0];

@@ -60,8 +60,11 @@ impl AnalogPlacement {
 /// Per-batch analog cost.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AnalogCost {
+    /// Pipelined-tile latency of the batch, seconds.
     pub latency_s: f64,
+    /// Tile + peripheral energy, joules.
     pub energy_j: f64,
+    /// Tile MVM operations the batch performs.
     pub tile_ops: f64,
 }
 

@@ -42,6 +42,7 @@ impl Default for NoiseModel {
 }
 
 impl NoiseModel {
+    /// The default model with its sigma multiplier scaled by `scale`.
     pub fn with_scale(scale: f64) -> NoiseModel {
         NoiseModel { scale, ..Default::default() }
     }

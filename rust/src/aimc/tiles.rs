@@ -12,17 +12,20 @@ use std::collections::BTreeMap;
 /// Mapping of one weight matrix onto crossbar tiles.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TileMap {
-    /// matrix dims
+    /// matrix rows (wordlines consumed)
     pub d: usize,
+    /// matrix columns (bitlines consumed)
     pub n: usize,
     /// tile side
     pub tile: usize,
-    /// tiles along rows (wordlines) and columns (bitlines)
+    /// tiles along the row (wordline) axis
     pub row_tiles: usize,
+    /// tiles along the column (bitline) axis
     pub col_tiles: usize,
 }
 
 impl TileMap {
+    /// Map a `[d, n]` matrix onto `tile x tile` crossbars.
     pub fn new(d: usize, n: usize, tile: usize) -> TileMap {
         let t = tile.max(1);
         TileMap {
@@ -34,6 +37,7 @@ impl TileMap {
         }
     }
 
+    /// Total tiles the matrix occupies.
     pub fn n_tiles(&self) -> usize {
         self.row_tiles * self.col_tiles
     }
@@ -47,12 +51,15 @@ impl TileMap {
 /// Tracks tile allocations per named module on a chip with finite tiles.
 #[derive(Debug)]
 pub struct TileAllocator {
+    /// Tile side of every crossbar in the pool.
     pub tile: usize,
+    /// Total tiles on the chip.
     pub capacity: usize,
     allocated: BTreeMap<String, TileMap>,
 }
 
 impl TileAllocator {
+    /// An empty allocator over `capacity` tiles of side `tile`.
     pub fn new(tile: usize, capacity: usize) -> TileAllocator {
         TileAllocator { tile, capacity, allocated: BTreeMap::new() }
     }
@@ -68,18 +75,22 @@ impl TileAllocator {
         Some(map)
     }
 
+    /// Free a named allocation; false when it did not exist.
     pub fn release(&mut self, name: &str) -> bool {
         self.allocated.remove(name).is_some()
     }
 
+    /// Tiles currently allocated.
     pub fn used(&self) -> usize {
         self.allocated.values().map(|m| m.n_tiles()).sum()
     }
 
+    /// Tiles still free.
     pub fn free(&self) -> usize {
         self.capacity - self.used()
     }
 
+    /// The map of a named allocation, if present.
     pub fn get(&self, name: &str) -> Option<&TileMap> {
         self.allocated.get(name)
     }

@@ -1,4 +1,5 @@
-//! Shared harness for the paper-reproduction benches (`rust/benches/`).
+//! Shared harness for the paper-reproduction benches (`rust/benches/`)
+//! and the `hetmoe bench` JSON dumps.
 //!
 //! Every bench regenerates one table or figure of the paper; this module
 //! provides the common machinery: artifact loading, placement → noise →
@@ -9,30 +10,54 @@
 //! - `HETMOE_BENCH_ITEMS`  — items per task (default 48)
 //! - `HETMOE_BENCH_SEEDS`  — programming-noise seeds (default 3; paper: 32)
 //! - `HETMOE_BENCH_MODELS` — comma list (default both models)
+//! - `HETMOE_BENCH_REPS`   — timing repetitions (default 8)
+//! - `HETMOE_BENCH_OUT`    — `BENCH_*.json` output dir (default `bench_out/`)
+//!
+//! [`run_kernel_bench`] and [`run_serve_bench`] produce the
+//! `BENCH_kernels.json` / `BENCH_serve.json` trajectories behind
+//! `hetmoe bench` and `benches/bench_kernels.rs`; the methodology and
+//! JSON schemas are documented in `docs/BENCHMARKS.md`.
 
-use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
 
 use crate::aimc::program::NoiseModel;
 use crate::config::{AimcConfig, Meta, ModelConfig};
-use crate::coordinator::{Batcher, EngineBuilder, Request, Session};
+use crate::coordinator::{Batcher, EngineBuilder, Metrics, Request, Response, Session};
 use crate::eval::data::{load_rows, load_tasks, Task};
 use crate::eval::Evaluator;
-use crate::moe::placement::{apply_placement, Placement};
-use crate::moe::score::RouterStats;
+use crate::moe::placement::{
+    apply_placement, plan_placement, Placement, PlacementOptions,
+};
+use crate::moe::score::{RouterStats, SelectionMetric};
+use crate::runtime::pool::{default_workers, WorkerPool};
 use crate::runtime::{ArtifactPaths, ParamStore, Runtime};
+use crate::tensor;
+use crate::util::{Json, Prng};
 
+/// Read a usize knob from the environment, falling back to `default`.
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Items per task (`$HETMOE_BENCH_ITEMS`, default 48).
 pub fn bench_items() -> usize {
     env_usize("HETMOE_BENCH_ITEMS", 48)
 }
 
+/// Programming-noise seeds (`$HETMOE_BENCH_SEEDS`, default 3; paper: 32).
 pub fn bench_seeds() -> usize {
     env_usize("HETMOE_BENCH_SEEDS", 3)
 }
 
+/// Timing repetitions (`$HETMOE_BENCH_REPS`, default 8).
+pub fn bench_reps() -> usize {
+    env_usize("HETMOE_BENCH_REPS", 8)
+}
+
+/// Models to bench (`$HETMOE_BENCH_MODELS`, default both minis).
 pub fn bench_models() -> Vec<String> {
     std::env::var("HETMOE_BENCH_MODELS")
         .unwrap_or_else(|_| "olmoe_mini,dsmoe_mini".into())
@@ -44,19 +69,29 @@ pub fn bench_models() -> Vec<String> {
 
 /// Everything a bench needs for one model.
 pub struct BenchCtx {
+    /// PJRT runtime with the model's executables compiled.
     pub rt: Runtime,
+    /// The model configuration under benchmark.
     pub cfg: ModelConfig,
+    /// AIMC chip parameters from `meta.json`.
     pub aimc: AimcConfig,
+    /// Artifact paths of this model.
     pub paths: ArtifactPaths,
+    /// Trained parameters (mutated by noise cells, restored after).
     pub params: ParamStore,
+    /// Monolithic `model_fwd` evaluator.
     pub ev: Evaluator,
+    /// The benchmark task suite.
     pub tasks: Vec<Task>,
+    /// Calibration token rows.
     pub calib: Vec<i32>,
+    /// Compiled expert-chunk capacity from `meta.json`.
     pub serve_cap: usize,
     pristine: Vec<f32>,
 }
 
 impl BenchCtx {
+    /// Load artifacts, params, evaluator and data for `model`.
     pub fn new(model: &str) -> Result<BenchCtx> {
         let artifacts = crate::artifacts_dir();
         let meta = Meta::load(&artifacts)?;
@@ -174,3 +209,384 @@ impl BenchCtx {
         Ok(session.into_engine().router_stats)
     }
 }
+
+// ---------------------------------------------------------------------------
+// JSON bench harness: BENCH_kernels.json / BENCH_serve.json
+// (`hetmoe bench`, `benches/bench_kernels.rs`; schema in docs/BENCHMARKS.md)
+// ---------------------------------------------------------------------------
+
+/// Output directory for `BENCH_*.json` dumps: `$HETMOE_BENCH_OUT`,
+/// default `bench_out/` under the current directory.
+pub fn bench_out_dir() -> PathBuf {
+    std::env::var_os("HETMOE_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("bench_out"))
+}
+
+/// Write one `BENCH_*.json` dump, creating `dir` (and parents) when
+/// missing, and return the path written. Callers print the returned
+/// path so a first run neither fails nor succeeds silently.
+pub fn write_bench_json(dir: &Path, name: &str, json: &Json) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating bench output dir {}", dir.display()))?;
+    let path = dir.join(name);
+    std::fs::write(&path, json.emit())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Best-of-`reps` wall time of `f`, in seconds.
+fn best_of<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .fold(0.0, f64::max)
+}
+
+fn gaussian_buf(rng: &mut Prng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.gaussian_f32() * 0.1).collect()
+}
+
+/// Tolerance of the blocked-vs-reference check at bench shapes: the
+/// kernels associate the k-sum differently, so they agree to rounding
+/// (≈ k·ε·|terms|), not bitwise.
+const BENCH_EPS: f64 = 1e-3;
+
+fn matmul_case(pool: &WorkerPool, n: usize, k: usize, m: usize, reps: usize) -> Json {
+    let mut rng = Prng::new(0xBE_EF ^ ((n as u64) << 40 | (k as u64) << 20 | m as u64));
+    let a = gaussian_buf(&mut rng, n * k);
+    let b = gaussian_buf(&mut rng, k * m);
+    let want = tensor::matmul_ref(&a, &b, n, k, m);
+    let ref_reps = if n * k * m >= 1 << 24 { 1 } else { reps };
+    let ref_s = best_of(ref_reps, || {
+        std::hint::black_box(tensor::matmul_ref(&a, &b, n, k, m));
+    });
+    let blocked_s = best_of(reps, || {
+        std::hint::black_box(tensor::matmul(&a, &b, n, k, m));
+    });
+    let parallel_s = best_of(reps, || {
+        std::hint::black_box(tensor::matmul_pool(Some(pool), &a, &b, n, k, m));
+    });
+    let got = tensor::matmul_pool(Some(pool), &a, &b, n, k, m);
+    let diff = max_abs_diff(&got, &want);
+    Json::obj(vec![
+        ("kind", Json::str("matmul")),
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("m", Json::num(m as f64)),
+        ("ref_s", Json::num(ref_s)),
+        ("blocked_s", Json::num(blocked_s)),
+        ("parallel_s", Json::num(parallel_s)),
+        ("speedup_blocked", Json::num(ref_s / blocked_s)),
+        ("speedup_parallel", Json::num(ref_s / parallel_s)),
+        ("gflops_parallel", Json::num(2.0 * (n * k * m) as f64 / parallel_s / 1e9)),
+        ("items_per_s", Json::num(n as f64 / parallel_s)),
+        ("max_abs_diff", Json::num(diff)),
+        ("eps_ok", Json::Bool(diff < BENCH_EPS)),
+    ])
+}
+
+/// The gated-MLP workload case; also returns the per-rep items/s
+/// trajectory of the parallel fused kernel.
+fn gated_mlp_case(
+    pool: &WorkerPool,
+    n: usize,
+    d: usize,
+    m: usize,
+    reps: usize,
+) -> (Json, Vec<f64>) {
+    let mut rng = Prng::new(0xF0_0D ^ ((n as u64) << 40 | (d as u64) << 20 | m as u64));
+    let x = gaussian_buf(&mut rng, n * d);
+    let up = gaussian_buf(&mut rng, d * m);
+    let gate = gaussian_buf(&mut rng, d * m);
+    let down = gaussian_buf(&mut rng, m * d);
+    let want = tensor::gated_mlp_ref(&x, &up, &gate, &down, n, d, m);
+    let ref_reps = if n * d * m >= 1 << 24 { 1 } else { reps };
+    let ref_s = best_of(ref_reps, || {
+        std::hint::black_box(tensor::gated_mlp_ref(&x, &up, &gate, &down, n, d, m));
+    });
+    let w = tensor::GatedMlpWeights::pack(&up, &gate, &down, d, m);
+    let blocked_s = best_of(reps, || {
+        std::hint::black_box(tensor::gated_mlp_fused(None, &x, &w, n));
+    });
+    let mut trajectory = Vec::with_capacity(reps.max(1));
+    let mut parallel_s = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(tensor::gated_mlp_fused(Some(pool), &x, &w, n));
+        let dt = t0.elapsed().as_secs_f64();
+        parallel_s = parallel_s.min(dt);
+        trajectory.push(n as f64 / dt);
+    }
+    let got = tensor::gated_mlp_fused(Some(pool), &x, &w, n);
+    let diff = max_abs_diff(&got, &want);
+    let case = Json::obj(vec![
+        ("kind", Json::str("gated_mlp")),
+        ("n", Json::num(n as f64)),
+        ("d", Json::num(d as f64)),
+        ("m", Json::num(m as f64)),
+        ("ref_s", Json::num(ref_s)),
+        ("blocked_s", Json::num(blocked_s)),
+        ("parallel_s", Json::num(parallel_s)),
+        ("speedup_blocked", Json::num(ref_s / blocked_s)),
+        ("speedup_parallel", Json::num(ref_s / parallel_s)),
+        (
+            "gflops_parallel",
+            Json::num(6.0 * (n * d * m) as f64 / parallel_s / 1e9),
+        ),
+        ("items_per_s", Json::num(n as f64 / parallel_s)),
+        ("max_abs_diff", Json::num(diff)),
+        ("eps_ok", Json::Bool(diff < BENCH_EPS)),
+    ]);
+    (case, trajectory)
+}
+
+/// Shared core of [`run_kernel_bench`]: run `matmul_shapes` plus one
+/// gated-MLP `workload`, at any scale (the schema unit test uses tiny
+/// shapes so `cargo test` stays fast).
+fn kernel_bench_with_shapes(
+    pool: &WorkerPool,
+    matmul_shapes: &[(usize, usize, usize)],
+    workload: (usize, usize, usize),
+    reps: usize,
+) -> Json {
+    let mut cases = Vec::new();
+    for &(n, k, m) in matmul_shapes {
+        cases.push(matmul_case(pool, n, k, m, reps));
+    }
+    let (gated, trajectory) = gated_mlp_case(pool, workload.0, workload.1, workload.2, reps);
+    cases.push(gated);
+    Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("workers", Json::num(pool.workers() as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("eps", Json::num(BENCH_EPS)),
+        ("cases", Json::Arr(cases)),
+        ("trajectory_items_per_s", Json::arr_f64(&trajectory)),
+    ])
+}
+
+/// The kernel benchmark behind `BENCH_kernels.json`: blocked and
+/// pool-parallel matmul / fused gated-MLP timed against the retained
+/// scalar reference ([`tensor::matmul_ref`] / [`tensor::gated_mlp_ref`])
+/// and verified against it to the `eps` recorded in the dump. Pure host
+/// compute — runs without the artifact tree. Schema: `docs/BENCHMARKS.md`.
+pub fn run_kernel_bench(reps: usize) -> Json {
+    let pool = WorkerPool::new(default_workers());
+    // odd shape (panel/remainder edges), a square mid size, and the
+    // 512³ acceptance workload
+    kernel_bench_with_shapes(
+        &pool,
+        &[(127, 93, 155), (256, 256, 256), (512, 512, 512)],
+        (512, 512, 512),
+        reps,
+    )
+}
+
+/// Print the per-case summary lines of a `BENCH_kernels.json` value —
+/// shared by `hetmoe bench` and `benches/bench_kernels.rs` so the two
+/// front-ends cannot drift from the schema.
+pub fn print_kernel_cases(json: &Json) -> Result<()> {
+    for c in json.get("cases")?.as_arr()? {
+        let mid = c
+            .opt("k")
+            .or_else(|| c.opt("d"))
+            .and_then(|v| v.as_usize().ok())
+            .unwrap_or(0);
+        println!(
+            "  {} {}x{}x{}: blocked {:.1}x, parallel {:.1}x vs scalar ref \
+             (max |\u{394}| {:.1e}, eps_ok {})",
+            c.get("kind")?.as_str()?,
+            c.get("n")?.as_usize()?,
+            mid,
+            c.get("m")?.as_usize()?,
+            c.get("speedup_blocked")?.as_f64()?,
+            c.get("speedup_parallel")?.as_f64()?,
+            c.get("max_abs_diff")?.as_f64()?,
+            c.get("eps_ok")?.as_bool()?,
+        );
+    }
+    Ok(())
+}
+
+fn metrics_backends_json(m: &Metrics) -> Json {
+    Json::Arr(
+        m.backends
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("name", Json::str(b.name.clone())),
+                    ("dispatches", Json::num(b.dispatches as f64)),
+                    ("wall_s", Json::num(b.wall.as_secs_f64())),
+                    ("utilization", Json::num(b.utilization())),
+                    ("busy_s", Json::num(b.busy_s)),
+                    ("energy_j", Json::num(b.energy_j)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// The serving benchmark behind `BENCH_serve.json` for one model: a
+/// Γ=0.25 MaxNNScore deployment served twice — `workers(1)` (the
+/// sequential reference) and the default worker pool — recording wall
+/// throughput, per-wave trajectory, aggregate and per-backend
+/// utilization ([`Metrics::utilization`]), the simulated Appendix-A
+/// clocks, and a byte-identity check between the two response streams.
+/// Requires the AOT artifact tree. Schema: `docs/BENCHMARKS.md`.
+pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
+    let artifacts = crate::artifacts_dir();
+    let meta = Meta::load(&artifacts)?;
+    let cfg = meta.config(model)?.clone();
+    let paths = ArtifactPaths::new(&artifacts, model);
+    let mut rt = Runtime::cpu()?;
+    let mut params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )?;
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0)?;
+
+    let t = cfg.seq_len;
+    let vocab = cfg.vocab;
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|i| Request {
+            id: i as u64,
+            tokens: (0..t).map(|j| ((i * 17 + j * 5) % vocab) as i32).collect(),
+            targets: (0..t).map(|j| ((i * 13 + j * 7) % vocab) as i32).collect(),
+            mask: vec![1.0; t],
+            arrived: 0,
+        })
+        .collect();
+
+    // serve the same stream through one engine configuration; waves of
+    // one compiled batch give the per-wave throughput trajectory
+    let mut serve = |workers: usize| -> Result<(Vec<Response>, Metrics, f64, Vec<f64>)> {
+        let engine = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .workers(workers)
+            .build(&mut rt, &paths, &params)?;
+        let mut session =
+            Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+        let mut responses = Vec::with_capacity(reqs.len());
+        let mut trajectory = Vec::new();
+        let t0 = Instant::now();
+        for wave in reqs.chunks(cfg.batch.max(1)) {
+            let tw = Instant::now();
+            for r in wave {
+                session.submit(r.clone())?;
+            }
+            responses.extend(session.drain()?);
+            let dt = tw.elapsed().as_secs_f64();
+            if dt > 0.0 {
+                trajectory.push((wave.len() * t) as f64 / dt);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let metrics = session.metrics().clone();
+        Ok((responses, metrics, wall, trajectory))
+    };
+
+    let (seq_r, _seq_m, seq_wall, _) = serve(1)?;
+    let workers = default_workers();
+    let (par_r, par_m, par_wall, trajectory) = serve(workers)?;
+
+    let identical = seq_r.len() == par_r.len()
+        && seq_r
+            .iter()
+            .zip(&par_r)
+            .all(|(a, b)| a.id == b.id && a.score.to_bits() == b.score.to_bits());
+    let tokens = (n_requests * t) as f64;
+
+    Ok(Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("model", Json::str(model)),
+        ("requests", Json::num(n_requests as f64)),
+        ("gamma", Json::num(0.25)),
+        ("workers", Json::num(workers as f64)),
+        (
+            "sequential",
+            Json::obj(vec![
+                ("wall_s", Json::num(seq_wall)),
+                ("tokens_per_s", Json::num(tokens / seq_wall.max(1e-12))),
+            ]),
+        ),
+        (
+            "parallel",
+            Json::obj(vec![
+                ("wall_s", Json::num(par_wall)),
+                ("tokens_per_s", Json::num(tokens / par_wall.max(1e-12))),
+                ("speedup", Json::num(seq_wall / par_wall.max(1e-12))),
+            ]),
+        ),
+        ("parallel_matches_sequential", Json::Bool(identical)),
+        ("utilization", Json::num(par_m.utilization())),
+        ("backends", metrics_backends_json(&par_m)),
+        ("simulated_tokens_per_s", Json::num(par_m.simulated_tokens_per_s())),
+        (
+            "simulated_tokens_per_joule",
+            Json::num(par_m.simulated_tokens_per_joule()),
+        ),
+        ("trajectory_tokens_per_s", Json::arr_f64(&trajectory)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_bench_json_creates_missing_dirs() {
+        let dir = std::env::temp_dir().join(format!(
+            "hetmoe-bench-test-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let nested = dir.join("a/b");
+        let json = Json::obj(vec![("ok", Json::Bool(true))]);
+        let path = write_bench_json(&nested, "BENCH_test.json", &json).unwrap();
+        assert!(path.ends_with("BENCH_test.json"));
+        let back = Json::parse_file(&path).unwrap();
+        assert!(back.get("ok").unwrap().as_bool().unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn kernel_bench_schema_is_stable() {
+        // exercise the full schema (and the printer) on tiny shapes so
+        // the unit suite stays fast; the real 512³ workload only runs
+        // under `hetmoe bench` / `cargo bench`
+        let pool = WorkerPool::new(2);
+        let json =
+            kernel_bench_with_shapes(&pool, &[(7, 9, 11), (16, 16, 16)], (24, 8, 12), 1);
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "kernels");
+        let cases = json.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 3);
+        for c in cases {
+            assert!(c.get("speedup_parallel").unwrap().as_f64().unwrap() > 0.0);
+            assert!(c.get("eps_ok").unwrap().as_bool().unwrap());
+        }
+        let traj = json.get("trajectory_items_per_s").unwrap().as_arr().unwrap();
+        assert_eq!(traj.len(), 1);
+        print_kernel_cases(&json).unwrap();
+    }
+}
+

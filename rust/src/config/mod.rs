@@ -13,25 +13,42 @@ use crate::util::Json;
 /// Mini MoE model architecture (one of `olmoe_mini` / `dsmoe_mini`).
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
+    /// Config name (`olmoe_mini` / `dsmoe_mini`).
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sequence length every request is packed to.
     pub seq_len: usize,
+    /// Model width d.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Routed experts per MoE layer.
     pub n_experts: usize,
+    /// Experts activated per token.
     pub top_k: usize,
+    /// Expert hidden width m.
     pub d_expert: usize,
+    /// Shared-expert hidden width (0 = none).
     pub d_shared: usize,
+    /// DeepSeek-style dense FFN in layer 0 instead of experts?
     pub dense_first_layer: bool,
+    /// Dense-FFN hidden width of the first layer (when dense).
     pub d_dense_ffn: usize,
+    /// Compiled batch size of the serving graphs.
     pub batch: usize,
+    /// Training steps baked into the AOT train loop.
     pub train_steps: usize,
+    /// Length of the `analog_flags` vector ABI.
     pub flags_len: usize,
+    /// Total parameter count (reporting only).
     pub n_params: usize,
 }
 
 impl ModelConfig {
+    /// Parse one `configs` entry of `meta.json`.
     pub fn from_json(name: &str, j: &Json) -> Result<ModelConfig> {
         Ok(ModelConfig {
             name: name.to_string(),
@@ -58,6 +75,7 @@ impl ModelConfig {
         !(self.dense_first_layer && l == 0)
     }
 
+    /// Number of MoE layers (layers minus the optional dense first).
     pub fn n_moe_layers(&self) -> usize {
         (0..self.n_layers).filter(|&l| self.is_moe_layer(l)).count()
     }
@@ -68,6 +86,7 @@ impl ModelConfig {
         self.n_moe_layers() * self.n_experts
     }
 
+    /// Per-head attention width.
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
@@ -77,10 +96,15 @@ impl ModelConfig {
 /// the calibrated kappa/lambda).
 #[derive(Clone, Copy, Debug)]
 pub struct AimcConfig {
+    /// DAC resolution, bits (eq 4).
     pub bits_dac: u32,
+    /// ADC resolution, bits (eq 5).
     pub bits_adc: u32,
+    /// Crossbar tile side.
     pub tile_size: usize,
+    /// Input clipping multiplier κ (calibrated, Appendix B).
     pub kappa: f32,
+    /// Output clipping multiplier λ (calibrated, Appendix B).
     pub lam: f32,
 }
 
@@ -91,6 +115,7 @@ impl Default for AimcConfig {
 }
 
 impl AimcConfig {
+    /// Parse the `aimc` entry of `meta.json`.
     pub fn from_json(j: &Json) -> Result<AimcConfig> {
         Ok(AimcConfig {
             bits_dac: j.get("bits_dac")?.as_usize()? as u32,
@@ -105,24 +130,35 @@ impl AimcConfig {
 /// Dataset-side constants from meta.json.
 #[derive(Clone, Debug)]
 pub struct DataConfig {
+    /// Row length of the packed datasets.
     pub seq_len: usize,
+    /// Tokenizer vocabulary size.
     pub vocab: usize,
+    /// Rows in `data/train.bin`.
     pub n_train_rows: usize,
+    /// Rows in `data/calib.bin`.
     pub n_calib_rows: usize,
+    /// Padding token id.
     pub pad: i32,
+    /// Beginning-of-sequence token id.
     pub bos: i32,
 }
 
 /// The whole artifacts tree metadata.
 #[derive(Clone, Debug)]
 pub struct Meta {
+    /// AIMC chip parameters.
     pub aimc: AimcConfig,
+    /// Compiled expert-chunk capacity of the serving graphs.
     pub serve_cap: usize,
+    /// Dataset constants.
     pub data: DataConfig,
+    /// Every model config in the tree.
     pub configs: Vec<ModelConfig>,
 }
 
 impl Meta {
+    /// Load `meta.json` from the artifacts tree.
     pub fn load(artifacts: &Path) -> Result<Meta> {
         let j = Json::parse_file(&artifacts.join("meta.json"))?;
         let d = j.get("data")?;
@@ -146,6 +182,7 @@ impl Meta {
         })
     }
 
+    /// Look up a model config by name.
     pub fn config(&self, name: &str) -> Result<&ModelConfig> {
         self.configs
             .iter()
@@ -165,8 +202,11 @@ impl Meta {
 /// applied to weights by [`crate::aimc::program`].
 #[derive(Clone, Debug)]
 pub struct AnalogFlags {
+    /// Layers of the model the flags address.
     pub n_layers: usize,
+    /// Experts per layer the flags address.
     pub n_experts: usize,
+    /// The raw flag vector (the `model_fwd` input).
     pub flags: Vec<f32>,
 }
 
@@ -185,26 +225,31 @@ impl AnalogFlags {
         layer * self.n_experts + expert
     }
 
+    /// Route expert `expert` of `layer` through the DAC-ADC path.
     pub fn set_expert(&mut self, layer: usize, expert: usize, analog: bool) {
         let i = self.expert_idx(layer, expert);
         self.flags[i] = analog as u8 as f32;
     }
 
+    /// Is expert `expert` of `layer` flagged analog?
     pub fn expert(&self, layer: usize, expert: usize) -> bool {
         self.flags[self.expert_idx(layer, expert)] > 0.0
     }
 
+    /// Flag every routed expert at once.
     pub fn set_all_experts(&mut self, analog: bool) {
         for f in &mut self.flags[..self.n_layers * self.n_experts] {
             *f = analog as u8 as f32;
         }
     }
 
+    /// Route `layer`'s attention projections through the DAC-ADC path.
     pub fn set_attn(&mut self, layer: usize, analog: bool) {
         let i = self.n_layers * self.n_experts + layer;
         self.flags[i] = analog as u8 as f32;
     }
 
+    /// Flag every layer's attention at once.
     pub fn set_all_attn(&mut self, analog: bool) {
         for l in 0..self.n_layers {
             self.set_attn(l, analog);
@@ -217,25 +262,30 @@ impl AnalogFlags {
         self.flags[i] = analog as u8 as f32;
     }
 
+    /// Flag every layer's dense FFN / shared expert at once.
     pub fn set_all_dense_ffn(&mut self, analog: bool) {
         for l in 0..self.n_layers {
             self.set_dense_ffn(l, analog);
         }
     }
 
+    /// Route the LM head through the DAC-ADC path.
     pub fn set_lm_head(&mut self, analog: bool) {
         let i = self.n_layers * self.n_experts + 2 * self.n_layers;
         self.flags[i] = analog as u8 as f32;
     }
 
+    /// Is the LM head flagged analog?
     pub fn lm_head(&self) -> bool {
         self.flags[self.n_layers * self.n_experts + 2 * self.n_layers] > 0.0
     }
 
+    /// Is `layer`'s attention flagged analog?
     pub fn attn(&self, layer: usize) -> bool {
         self.flags[self.n_layers * self.n_experts + layer] > 0.0
     }
 
+    /// Number of expert flags currently set.
     pub fn n_analog_experts(&self) -> usize {
         self.flags[..self.n_layers * self.n_experts]
             .iter()

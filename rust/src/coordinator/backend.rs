@@ -30,9 +30,13 @@ use crate::runtime::{ArtifactPaths, Executable, Runtime};
 /// Per-expert device-resident weights (up, gate, down) plus the registry
 /// id of the backend that serves the expert.
 pub struct ExpertWeights {
+    /// `[d, m]` up-projection, device-resident.
     pub up: xla::PjRtBuffer,
+    /// `[d, m]` gate-projection, device-resident.
     pub gate: xla::PjRtBuffer,
+    /// `[m, d]` down-projection, device-resident.
     pub down: xla::PjRtBuffer,
+    /// Registry slot of the backend serving this expert.
     pub backend: BackendId,
 }
 
@@ -41,7 +45,9 @@ pub struct ExpertWeights {
 /// numbers).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct StageCost {
+    /// Simulated latency of the batch on this backend, seconds.
     pub latency_s: f64,
+    /// Simulated energy of the batch on this backend, joules.
     pub energy_j: f64,
 }
 
@@ -131,6 +137,8 @@ pub struct DigitalBackend {
 }
 
 impl DigitalBackend {
+    /// A digital backend for `cfg`, billing the cost model for the
+    /// placement's digital share. Call `uploads` before dispatching.
     pub fn new(
         cfg: &crate::config::ModelConfig,
         placement: &Placement,
@@ -148,6 +156,7 @@ impl DigitalBackend {
         }
     }
 
+    /// [`DigitalBackend::new`] boxed for `EngineBuilder::backend`.
     pub fn boxed(
         cfg: &crate::config::ModelConfig,
         placement: &Placement,
@@ -219,6 +228,9 @@ pub struct AnalogBackend {
 }
 
 impl AnalogBackend {
+    /// An AIMC backend for `cfg` with chip parameters `aimc`, billing
+    /// the pipelined-tile cost model for the placement's analog share.
+    /// Call `uploads` before dispatching.
     pub fn new(
         cfg: &crate::config::ModelConfig,
         aimc: AimcConfig,
@@ -239,6 +251,7 @@ impl AnalogBackend {
         }
     }
 
+    /// [`AnalogBackend::new`] boxed for `EngineBuilder::backend`.
     pub fn boxed(
         cfg: &crate::config::ModelConfig,
         aimc: AimcConfig,

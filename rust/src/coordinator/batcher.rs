@@ -17,9 +17,14 @@ pub type RequestId = u64;
 /// (produced by `eval::pack_choice` or the caller).
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Request id; overwritten by `Session::submit`, echoed on the
+    /// matching [`Response`].
     pub id: RequestId,
+    /// `[seq_len]` input token ids.
     pub tokens: Vec<i32>,
+    /// `[seq_len]` target token ids to score.
     pub targets: Vec<i32>,
+    /// `[seq_len]` scoring mask (1.0 = position counts).
     pub mask: Vec<f32>,
     /// arrival tick (for wait accounting)
     pub arrived: u64,
@@ -28,23 +33,31 @@ pub struct Request {
 /// The engine's answer: summed target log-prob of the masked positions.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Response {
+    /// The id `Session::submit` assigned to the request.
     pub id: RequestId,
+    /// Summed masked target log-probability.
     pub score: f64,
 }
 
 /// Why a batch was released.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReleaseReason {
+    /// A full compiled batch was available.
     Full,
+    /// The oldest admitted request waited out `max_wait_ticks`.
     Deadline,
+    /// A drain forced the flush of a partial batch.
     Drained,
 }
 
 /// Bounded-queue dynamic batcher.
 #[derive(Debug)]
 pub struct Batcher {
+    /// Compiled batch size — releases are never larger than this.
     pub max_batch: usize,
+    /// Deadline (in arrival ticks) before a partial batch releases.
     pub max_wait_ticks: u64,
+    /// Admission-queue bound; submits beyond it are rejected.
     pub max_queue: usize,
     queue: VecDeque<Request>,
     /// requests rejected due to backpressure
@@ -54,6 +67,8 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// A batcher releasing `max_batch`-sized batches, with deadline
+    /// `max_wait_ticks` and admission bound `max_queue ≥ max_batch`.
     pub fn new(max_batch: usize, max_wait_ticks: u64, max_queue: usize) -> Batcher {
         assert!(max_batch > 0 && max_queue >= max_batch);
         Batcher {
@@ -78,10 +93,12 @@ impl Batcher {
         true
     }
 
+    /// Advance the arrival clock by `dt` ticks.
     pub fn tick(&mut self, dt: u64) {
         self.now += dt;
     }
 
+    /// Requests currently admitted and waiting.
     pub fn depth(&self) -> usize {
         self.queue.len()
     }

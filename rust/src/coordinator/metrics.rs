@@ -5,8 +5,10 @@
 //! Accelerator accounting is keyed by *backend registry slot* (see
 //! `coordinator::backend`): each registered [`ExpertBackend`] gets one
 //! [`BackendMetrics`] entry holding its dispatch counts, real wall time,
-//! and simulated busy/energy clocks — so custom backends show up in the
-//! report without touching this module.
+//! per-backend padding utilization, and simulated busy/energy clocks —
+//! so custom backends show up in the report without touching this
+//! module. `BENCH_serve.json` serializes both the aggregate and the
+//! per-backend view (see `docs/BENCHMARKS.md`).
 //!
 //! [`ExpertBackend`]: crate::coordinator::backend::ExpertBackend
 
@@ -22,29 +24,59 @@ pub struct BackendMetrics {
     pub dispatches: u64,
     /// real wall time spent in this backend's dispatches
     pub wall: Duration,
+    /// real token rows this backend's dispatches carried
+    pub dispatched_tokens: u64,
+    /// padding rows this backend's dispatches carried (tier cap − rows)
+    pub padded_tokens: u64,
     /// simulated busy time (Appendix-A cost model)
     pub busy_s: f64,
     /// simulated energy (Appendix-A cost model)
     pub energy_j: f64,
 }
 
+impl BackendMetrics {
+    /// This backend's expert-batch padding efficiency: fraction of its
+    /// dispatched rows that carried real tokens (1.0 = no padding).
+    pub fn utilization(&self) -> f64 {
+        let total = self.dispatched_tokens + self.padded_tokens;
+        if total > 0 {
+            self.dispatched_tokens as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Aggregate serving metrics for one engine: request/batch counters,
+/// real wall time per coordinator stage, and the per-backend clocks.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     // request accounting
+    /// requests served
     pub requests: u64,
+    /// batches served
     pub batches: u64,
+    /// tokens served (requests × seq_len)
     pub tokens: u64,
 
     // expert dispatch accounting
+    /// real token rows dispatched to expert FFNs (all backends)
     pub dispatched_tokens: u64,
     /// padding waste in expert batches (cap - occupancy)
     pub padded_tokens: u64,
 
     // real wall time per coordinator stage
+    /// end-to-end batch wall time
     pub total_wall: Duration,
+    /// attention-sublayer wall time (digital accelerator)
     pub attn_wall: Duration,
+    /// router scoring + top-k wall time (host)
     pub route_wall: Duration,
+    /// expert-chunk gather/pack wall time (host, pool-parallel)
+    pub pack_wall: Duration,
+    /// shared-expert / dense-FFN wall time (host, fused kernel)
     pub shared_wall: Duration,
+    /// LM-head + scoring wall time (digital accelerator)
     pub lm_wall: Duration,
 
     /// per-backend clocks, indexed by backend registry slot
@@ -106,13 +138,20 @@ impl Metrics {
         }
     }
 
+    /// Multi-line human-readable summary (the `serve` subcommand and the
+    /// serving examples print this).
     pub fn report(&self) -> String {
         let mut dispatch_line = String::new();
         for b in &self.backends {
             if !dispatch_line.is_empty() {
                 dispatch_line.push(' ');
             }
-            dispatch_line.push_str(&format!("{}={}", b.name, b.dispatches));
+            dispatch_line.push_str(&format!(
+                "{}={} (util {:.2})",
+                b.name,
+                b.dispatches,
+                b.utilization()
+            ));
         }
         let mut backend_wall = String::new();
         let mut busy_line = String::new();
@@ -123,7 +162,7 @@ impl Metrics {
         format!(
             "requests={} batches={} tokens={}\n\
              dispatches: {dispatch_line} utilization={:.2}\n\
-             wall: total={:.3}s attn={:.3}s route={:.3}s{backend_wall} \
+             wall: total={:.3}s attn={:.3}s route={:.3}s pack={:.3}s{backend_wall} \
              shared={:.3}s lm={:.3}s → {:.0} tok/s\n\
              simulated accelerator clocks (Appendix-A cost model, this \
              model's dims):{busy_line} \
@@ -135,6 +174,7 @@ impl Metrics {
             self.total_wall.as_secs_f64(),
             self.attn_wall.as_secs_f64(),
             self.route_wall.as_secs_f64(),
+            self.pack_wall.as_secs_f64(),
             self.shared_wall.as_secs_f64(),
             self.lm_wall.as_secs_f64(),
             self.wall_tokens_per_s(),
@@ -156,6 +196,17 @@ mod tests {
             ..Default::default()
         };
         assert!((m.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_backend_utilization() {
+        let mut m = Metrics::default();
+        let b = m.backend_mut(0, "digital");
+        b.dispatched_tokens = 30;
+        b.padded_tokens = 10;
+        assert!((m.backends[0].utilization() - 0.75).abs() < 1e-12);
+        // untouched backend reports 0 without dividing by zero
+        assert_eq!(BackendMetrics::default().utilization(), 0.0);
     }
 
     #[test]
@@ -203,5 +254,6 @@ mod tests {
         assert!(r.contains("requests=0"));
         assert!(r.contains("digital=3"));
         assert!(r.contains("utilization="));
+        assert!(r.contains("pack="));
     }
 }

@@ -26,6 +26,18 @@
 //! its own *simulated* busy-time and energy clock using the paper's
 //! Appendix-A cost models, while the engine records real wall time per
 //! stage.
+//!
+//! Host-side stages parallelize across the engine's
+//! [`WorkerPool`](crate::runtime::WorkerPool) (`EngineBuilder::workers`,
+//! default `$HETMOE_WORKERS` / available parallelism): the embedding
+//! gather, router scoring, shared-expert fused gated-MLP, and the
+//! gather/pack of every expert chunk run on the pool — the chunk
+//! packing covers *both* backends' queues at once, so neither
+//! accelerator's host-side work serializes behind the other. PJRT
+//! itself is not `Send` and its dispatches are synchronous, so device
+//! calls stay on the coordinating thread. All pool work uses static
+//! partitioning, which keeps serving outputs byte-identical for every
+//! worker count (`workers(1)` is the sequential reference).
 
 pub mod backend;
 pub mod batcher;
@@ -46,14 +58,16 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::{AimcConfig, ModelConfig};
 use crate::moe::placement::Placement;
 use crate::moe::score::RouterStats;
+use crate::runtime::pool::{default_workers, WorkerPool};
 use crate::runtime::{ArtifactPaths, Executable, ParamStore, Runtime};
 use crate::tensor;
 
 struct LayerHost {
     ln2_s: Vec<f32>,
     ln2_b: Vec<f32>,
-    router: Vec<f32>,           // [d, E], empty for dense layers
-    shared: Option<(Vec<f32>, Vec<f32>, Vec<f32>, usize)>, // up, gate, down, m
+    router: Vec<f32>, // [d, E], empty for dense layers
+    /// shared expert / dense FFN, packed once for the fused kernel
+    shared: Option<tensor::GatedMlpWeights>,
 }
 
 /// Builds an [`Engine`]: model + placement + backend registry.
@@ -87,31 +101,49 @@ pub struct EngineBuilder {
     aimc: Option<AimcConfig>,
     placement: Option<Placement>,
     serve_cap: Option<usize>,
+    workers: Option<usize>,
     backends: Vec<Box<dyn ExpertBackend>>,
 }
 
 impl EngineBuilder {
+    /// An empty builder; `.model`, `.aimc`, `.placement` and
+    /// `.serve_cap` are required before [`EngineBuilder::build`].
     pub fn new() -> EngineBuilder {
         EngineBuilder::default()
     }
 
+    /// The model configuration to serve (required).
     pub fn model(mut self, cfg: ModelConfig) -> Self {
         self.cfg = Some(cfg);
         self
     }
 
+    /// The AIMC chip parameters (κ, λ, DAC/ADC bits) (required).
     pub fn aimc(mut self, aimc: AimcConfig) -> Self {
         self.aimc = Some(aimc);
         self
     }
 
+    /// The expert → backend placement to deploy (required).
     pub fn placement(mut self, p: Placement) -> Self {
         self.placement = Some(p);
         self
     }
 
+    /// Compiled expert-chunk capacity (token rows per dispatch)
+    /// (required; comes from `meta.serve_cap`).
     pub fn serve_cap(mut self, n: usize) -> Self {
         self.serve_cap = Some(n);
+        self
+    }
+
+    /// Worker threads for the engine's host-side compute (embedding
+    /// gather, routing, fused shared FFN, chunk gather/pack). Defaults
+    /// to [`default_workers`] (`$HETMOE_WORKERS` / machine parallelism);
+    /// `1` forces the sequential reference path, which produces
+    /// byte-identical outputs to every other setting.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n);
         self
     }
 
@@ -183,18 +215,22 @@ impl EngineBuilder {
                 rt.upload_f32(params.tensor(&format!("{p}attn.wo"))?, &[d, d])?,
             ]);
             let moe = cfg.is_moe_layer(l);
+            // pack the host-side gated MLP once; the fused kernel reuses
+            // the packed panels for every batch
             let shared = if moe && cfg.d_shared > 0 {
-                Some((
-                    params.tensor(&format!("{p}shared.up"))?.to_vec(),
-                    params.tensor(&format!("{p}shared.gate"))?.to_vec(),
-                    params.tensor(&format!("{p}shared.down"))?.to_vec(),
+                Some(tensor::GatedMlpWeights::pack(
+                    params.tensor(&format!("{p}shared.up"))?,
+                    params.tensor(&format!("{p}shared.gate"))?,
+                    params.tensor(&format!("{p}shared.down"))?,
+                    d,
                     cfg.d_shared,
                 ))
             } else if !moe {
-                Some((
-                    params.tensor(&format!("{p}ffn.up"))?.to_vec(),
-                    params.tensor(&format!("{p}ffn.gate"))?.to_vec(),
-                    params.tensor(&format!("{p}ffn.down"))?.to_vec(),
+                Some(tensor::GatedMlpWeights::pack(
+                    params.tensor(&format!("{p}ffn.up"))?,
+                    params.tensor(&format!("{p}ffn.gate"))?,
+                    params.tensor(&format!("{p}ffn.down"))?,
+                    d,
                     cfg.d_dense_ffn,
                 ))
             } else {
@@ -237,6 +273,7 @@ impl EngineBuilder {
         for (i, b) in backends.iter().enumerate() {
             engine_metrics.backend_mut(i, b.name()); // pre-register names
         }
+        let pool = WorkerPool::new(self.workers.unwrap_or_else(default_workers));
         Ok(Engine {
             metrics: engine_metrics,
             router_stats,
@@ -244,6 +281,7 @@ impl EngineBuilder {
             aimc,
             serve_cap,
             placement,
+            pool,
             backends,
             attn_exe,
             lm_exe,
@@ -262,13 +300,21 @@ impl EngineBuilder {
 
 /// The serving engine for one model + placement + backend registry.
 pub struct Engine {
+    /// The model configuration being served.
     pub cfg: ModelConfig,
+    /// AIMC chip parameters (κ, λ) of the analog tier.
     pub aimc: AimcConfig,
+    /// Compiled expert-chunk capacity (token rows per dispatch).
     pub serve_cap: usize,
+    /// The deployed expert → backend placement.
     pub placement: Placement,
+    /// Wall-clock + simulated-clock serving metrics.
     pub metrics: Metrics,
+    /// Per-(layer, expert) routing statistics for calibration baselines.
     pub router_stats: RouterStats,
 
+    /// host-side worker pool (embedding / routing / pack / fused FFN)
+    pool: WorkerPool,
     backends: Vec<Box<dyn ExpertBackend>>,
     attn_exe: Rc<Executable>,
     lm_exe: Rc<Executable>,
@@ -298,6 +344,11 @@ impl Engine {
         self.backends.iter().map(|b| b.name()).collect()
     }
 
+    /// Worker threads of the engine's host-side pool.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
     /// Serve one batch of requests through the full pipeline, returning
     /// one response per request (same order).
     pub fn serve_batch(&mut self, rt: &Runtime, reqs: &[Request]) -> Result<Vec<Response>> {
@@ -316,12 +367,18 @@ impl Engine {
             mask[i * t..(i + 1) * t].copy_from_slice(&r.mask);
         }
         let mut x = vec![0f32; b * t * d];
-        for i in 0..b * t {
-            let tok = tokens[i] as usize;
-            let pos = i % t;
-            for j in 0..d {
-                x[i * d + j] = self.embed[tok * d + j] + self.pos[pos * d + j];
-            }
+        {
+            let (embed, pos, toks) = (&self.embed, &self.pos, &tokens);
+            self.pool.run_on_row_bands(b * t, d, &mut x, |range, band| {
+                for (bi, i) in range.enumerate() {
+                    let tok = toks[i] as usize;
+                    let p = i % t;
+                    let dst = &mut band[bi * d..(bi + 1) * d];
+                    for (j, v) in dst.iter_mut().enumerate() {
+                        *v = embed[tok * d + j] + pos[p * d + j];
+                    }
+                }
+            });
         }
 
         // ---- per-layer pipeline ----
@@ -348,9 +405,9 @@ impl Engine {
             if self.cfg.is_moe_layer(l) {
                 self.dispatch_experts(rt, l, &u, &mut y, b * t)?;
             }
-            if let Some((up, gate, down, m)) = &self.layers[l].shared {
+            if let Some(w) = &self.layers[l].shared {
                 let ts = std::time::Instant::now();
-                let sy = tensor::gated_mlp(&u, up, gate, down, b * t, d, *m);
+                let sy = tensor::gated_mlp_fused(Some(&self.pool), &u, w, b * t);
                 tensor::axpy(1.0, &sy, &mut y);
                 self.metrics.shared_wall += ts.elapsed();
             }
@@ -402,6 +459,15 @@ impl Engine {
     /// Group tokens per expert and dispatch each group to the backend
     /// that owns the expert. `u` is the post-LN input `[n, d]`; results
     /// are gate-weighted into `y`.
+    ///
+    /// Parallel structure: router scores are computed per token across
+    /// the pool; chunk inputs for *all* backends are gathered/packed in
+    /// parallel (the cross-backend overlap — neither backend's packing
+    /// waits for the other's); then the (not-`Send`, synchronous) PJRT
+    /// dispatches walk the chunk plan on the coordinating thread in
+    /// expert order. The plan order is a pure function of the routing
+    /// result — never of the worker count — so serving output is
+    /// byte-identical from `workers(1)` to `workers(n)`.
     fn dispatch_experts(
         &mut self,
         rt: &Runtime,
@@ -413,65 +479,121 @@ impl Engine {
         let d = self.cfg.d_model;
         let e_n = self.cfg.n_experts;
         let top_k = self.cfg.top_k;
-        let lh = &self.layers[layer];
 
+        // token-choice routing (coordinator-owned): score tokens in
+        // parallel, then build expert groups serially in token order
         let tr = std::time::Instant::now();
-        // token-choice routing (coordinator-owned)
+        let mut picks = vec![(0usize, 0f32); n * top_k];
+        {
+            let router = &self.layers[layer].router;
+            self.pool.run_on_row_bands(n, top_k, &mut picks, |range, out| {
+                let mut scores = vec![0f32; e_n];
+                for (bi, i) in range.enumerate() {
+                    let urow = &u[i * d..(i + 1) * d];
+                    scores.fill(0.0);
+                    for (r, &ur) in urow.iter().enumerate() {
+                        if ur == 0.0 {
+                            continue;
+                        }
+                        let wrow = &router[r * e_n..(r + 1) * e_n];
+                        for (s, &w) in scores.iter_mut().zip(wrow) {
+                            *s += ur * w;
+                        }
+                    }
+                    let top = tensor::top_k(&scores, top_k);
+                    let mut gates: Vec<f32> = top.iter().map(|&e| scores[e]).collect();
+                    tensor::softmax(&mut gates);
+                    for (slot, (&e, &g)) in out[bi * top_k..(bi + 1) * top_k]
+                        .iter_mut()
+                        .zip(top.iter().zip(&gates))
+                    {
+                        *slot = (e, g);
+                    }
+                }
+            });
+        }
         let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); e_n];
         for i in 0..n {
-            let urow = &u[i * d..(i + 1) * d];
-            let mut scores = vec![0f32; e_n];
-            for r in 0..d {
-                let ur = urow[r];
-                if ur == 0.0 {
-                    continue;
-                }
-                let wrow = &lh.router[r * e_n..(r + 1) * e_n];
-                for (s, &w) in scores.iter_mut().zip(wrow) {
-                    *s += ur * w;
-                }
-            }
-            let top = tensor::top_k(&scores, top_k);
-            let mut gates: Vec<f32> = top.iter().map(|&e| scores[e]).collect();
-            tensor::softmax(&mut gates);
-            for (&e, &g) in top.iter().zip(&gates) {
+            for &(e, g) in &picks[i * top_k..(i + 1) * top_k] {
                 groups[e].push((i, g));
                 self.router_stats.record(layer, e, g as f64);
             }
         }
         self.metrics.route_wall += tr.elapsed();
 
-        // dispatch per expert through the owning backend, splitting
-        // groups larger than the backend's capacity
+        // chunk plan: split per-expert groups by the owning backend's
+        // capacity, in expert order (the pre-refactor accumulation
+        // order, so digital-placement scores stay comparable)
+        struct Chunk<'g> {
+            expert: usize,
+            backend: usize,
+            rows: &'g [(usize, f32)],
+            padded: usize,
+        }
+        let mut plan: Vec<Chunk> = Vec::new();
         for (e, group) in groups.iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            let eb = &self.experts[layer][e];
-            let be = &self.backends[eb.backend];
-            for chunk in group.chunks(be.capacity()) {
-                let td = std::time::Instant::now();
-                // gather straight into the tier-padded buffer the
-                // backend will upload — one allocation per chunk
-                let mut xe = vec![0f32; be.padded_rows(chunk.len()) * d];
-                for (row, &(tok, _)) in chunk.iter().enumerate() {
+            let bid = self.experts[layer][e].backend;
+            let be = &self.backends[bid];
+            for rows in group.chunks(be.capacity()) {
+                plan.push(Chunk {
+                    expert: e,
+                    backend: bid,
+                    rows,
+                    padded: be.padded_rows(rows.len()),
+                });
+            }
+        }
+
+        // gather/pack every chunk's tier-padded input in parallel — one
+        // allocation per chunk, written straight into upload layout.
+        // This is where the two backends' host work overlaps: the pool
+        // packs digital and analog chunks concurrently instead of one
+        // backend's queue at a time. (PJRT dispatch itself is
+        // synchronous, so reordering dispatches would buy nothing.)
+        let tp = std::time::Instant::now();
+        let mut inputs: Vec<Vec<f32>> = Vec::new();
+        inputs.resize_with(plan.len(), Vec::new);
+        {
+            let plan_ref = &plan;
+            self.pool.for_each_mut(&mut inputs, |ci, buf| {
+                let ch = &plan_ref[ci];
+                let mut xe = vec![0f32; ch.padded * d];
+                for (row, &(tok, _)) in ch.rows.iter().enumerate() {
                     xe[row * d..(row + 1) * d].copy_from_slice(&u[tok * d..(tok + 1) * d]);
                 }
-                let out = be.dispatch(rt, &xe, chunk.len(), eb)?;
-                for (row, &(tok, gate)) in chunk.iter().enumerate() {
-                    tensor::axpy(
-                        gate,
-                        &out.data[row * d..(row + 1) * d],
-                        &mut y[tok * d..(tok + 1) * d],
-                    );
-                }
-                let name = be.name();
-                let bm = self.metrics.backend_mut(eb.backend, name);
-                bm.dispatches += 1;
-                bm.wall += td.elapsed();
-                self.metrics.dispatched_tokens += chunk.len() as u64;
-                self.metrics.padded_tokens += (out.padded_rows - chunk.len()) as u64;
+                *buf = xe;
+            });
+        }
+        self.metrics.pack_wall += tp.elapsed();
+
+        // dispatch: PJRT executes on the coordinating thread, walking
+        // the plan in expert order; combine is a gate-weighted
+        // scatter-add
+        for (ci, ch) in plan.iter().enumerate() {
+            let eb = &self.experts[layer][ch.expert];
+            let be = &self.backends[ch.backend];
+            let td = std::time::Instant::now();
+            let out = be.dispatch(rt, &inputs[ci], ch.rows.len(), eb)?;
+            for (row, &(tok, gate)) in ch.rows.iter().enumerate() {
+                tensor::axpy(
+                    gate,
+                    &out.data[row * d..(row + 1) * d],
+                    &mut y[tok * d..(tok + 1) * d],
+                );
             }
+            let name = be.name();
+            let real = ch.rows.len() as u64;
+            let pad = (out.padded_rows - ch.rows.len()) as u64;
+            let bm = self.metrics.backend_mut(ch.backend, name);
+            bm.dispatches += 1;
+            bm.wall += td.elapsed();
+            bm.dispatched_tokens += real;
+            bm.padded_tokens += pad;
+            self.metrics.dispatched_tokens += real;
+            self.metrics.padded_tokens += pad;
         }
         Ok(())
     }
@@ -516,6 +638,14 @@ mod tests {
         assert!(b.aimc.is_none());
         assert!(b.placement.is_some());
         assert_eq!(b.serve_cap, Some(8));
+    }
+
+    #[test]
+    fn builder_workers_roundtrip() {
+        let b = EngineBuilder::new().workers(3);
+        assert_eq!(b.workers, Some(3));
+        // unset → resolved at build time from the environment default
+        assert!(EngineBuilder::new().workers.is_none());
     }
 
     #[test]

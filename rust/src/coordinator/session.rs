@@ -33,6 +33,8 @@ pub struct Session<'rt> {
 }
 
 impl<'rt> Session<'rt> {
+    /// Wrap an engine and a batching policy into a serving session.
+    /// Request ids restart from 0 per session.
     pub fn new(rt: &'rt Runtime, engine: Engine, batcher: Batcher) -> Session<'rt> {
         Session { rt, engine, batcher, done: Vec::new(), next_id: 0 }
     }
@@ -56,6 +58,15 @@ impl<'rt> Session<'rt> {
         Ok(id)
     }
 
+    /// Admit a whole request stream in order, returning the assigned
+    /// ids. Stops at the first backpressure rejection or engine error.
+    pub fn submit_all<I>(&mut self, reqs: I) -> Result<Vec<RequestId>>
+    where
+        I: IntoIterator<Item = Request>,
+    {
+        reqs.into_iter().map(|r| self.submit(r)).collect()
+    }
+
     /// Requests admitted but not yet served.
     pub fn pending(&self) -> usize {
         self.batcher.depth()
@@ -63,6 +74,13 @@ impl<'rt> Session<'rt> {
 
     /// Flush the admission queue and return every buffered response (in
     /// serve order; response ids are the ids `submit` returned).
+    ///
+    /// Batches released here run through the engine's parallel pipeline:
+    /// host-side stages fan out across the engine's worker pool, and
+    /// the expert-chunk packing covers the digital and analog queues
+    /// concurrently rather than one backend at a time. The response
+    /// stream is byte-identical to a `workers(1)` sequential engine (see
+    /// the `parallel_drain_matches_sequential_drain` integration test).
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         self.pump(true)?;
         Ok(std::mem::take(&mut self.done))
@@ -75,14 +93,17 @@ impl<'rt> Session<'rt> {
         Ok(())
     }
 
+    /// The engine's serving metrics (wall + simulated clocks).
     pub fn metrics(&self) -> &Metrics {
         &self.engine.metrics
     }
 
+    /// Shared view of the wrapped engine.
     pub fn engine(&self) -> &Engine {
         &self.engine
     }
 
+    /// Mutable view of the wrapped engine (e.g. to reset metrics).
     pub fn engine_mut(&mut self) -> &mut Engine {
         &mut self.engine
     }

@@ -16,8 +16,11 @@
 /// A100-like accelerator constants (Appendix A).
 #[derive(Clone, Copy, Debug)]
 pub struct DigitalSpec {
+    /// Peak throughput, ops/s (FP16 tensor core).
     pub tops: f64,
+    /// Board power, watts.
     pub power_w: f64,
+    /// Memory bandwidth, bytes/s.
     pub mem_bw: f64,
     /// bytes per weight (FP16 deployment)
     pub bytes_per_param: f64,
@@ -32,15 +35,25 @@ impl Default for DigitalSpec {
 /// Transformer-MoE architecture dimensions for cost accounting.
 #[derive(Clone, Debug)]
 pub struct ArchSpec {
+    /// Architecture name for reporting.
     pub name: String,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Layers with routed experts.
     pub n_moe_layers: usize,
+    /// Model width d.
     pub d_model: usize,
+    /// Routed experts per MoE layer.
     pub n_experts: usize,
+    /// Experts activated per token.
     pub top_k: usize,
+    /// Expert hidden width.
     pub d_expert: usize,
+    /// Shared-expert hidden width (0 = none).
     pub d_shared: usize,
+    /// Dense-FFN hidden width of non-MoE layers.
     pub d_dense_ffn: usize,
+    /// Vocabulary size.
     pub vocab: usize,
 }
 
@@ -113,10 +126,12 @@ impl ArchSpec {
         attn + shared + dense_ffn + head + embed
     }
 
+    /// Parameters across all routed experts.
     pub fn expert_params_total(&self) -> f64 {
         self.n_moe_layers as f64 * self.n_experts as f64 * self.params_per_expert()
     }
 
+    /// Total model parameters (dense + experts).
     pub fn total_params(&self) -> f64 {
         self.dense_params() + self.expert_params_total()
     }
@@ -135,9 +150,13 @@ impl ArchSpec {
 /// Per-batch digital cost under eq (16)'s roofline.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DigitalCost {
+    /// Roofline latency of the batch, seconds.
     pub latency_s: f64,
+    /// Energy at board power, joules.
     pub energy_j: f64,
+    /// FLOPs the batch performs on this accelerator.
     pub flops: f64,
+    /// Weight bytes streamed from memory.
     pub bytes: f64,
 }
 

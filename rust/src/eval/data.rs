@@ -9,20 +9,27 @@ use crate::util::Json;
 /// One multiple-choice item.
 #[derive(Clone, Debug)]
 pub struct TaskItem {
+    /// Context token ids.
     pub ctx: Vec<i32>,
+    /// Candidate continuations, token ids each.
     pub choices: Vec<Vec<i32>>,
+    /// Index of the correct choice.
     pub gold: usize,
 }
 
 /// One benchmark task (a synthetic analog of PIQA/ARC/... — DESIGN.md §2).
 #[derive(Clone, Debug)]
 pub struct Task {
+    /// Task name (see [`TASK_NAMES`]).
     pub name: String,
+    /// Choices per item.
     pub n_choices: usize,
+    /// The task's items.
     pub items: Vec<TaskItem>,
 }
 
 impl Task {
+    /// Load one task JSON written by aot.py.
     pub fn load(path: &Path) -> Result<Task> {
         let j = Json::parse_file(path)?;
         let mut items = Vec::new();
@@ -99,12 +106,16 @@ pub fn load_rows(path: &Path, seq_len: usize) -> Result<Vec<i32>> {
 /// Token-frequency table + successor table (Fig 6 analysis).
 #[derive(Clone, Debug)]
 pub struct FreqTable {
+    /// Occurrence count per token id.
     pub freq: Vec<u64>,
+    /// Deterministic successor per token id.
     pub succ: Vec<usize>,
+    /// First non-special token id.
     pub word0: usize,
 }
 
 impl FreqTable {
+    /// Load `data/freq.json` from the artifacts tree.
     pub fn load(artifacts: &Path) -> Result<FreqTable> {
         let j = Json::parse_file(&artifacts.join("data/freq.json"))?;
         Ok(FreqTable {

@@ -19,7 +19,9 @@ use crate::runtime::{ArtifactPaths, Executable, ParamStore, Runtime};
 
 /// Scoring engine over the monolithic `model_fwd` entry point.
 pub struct Evaluator {
+    /// The model configuration being scored.
     pub cfg: ModelConfig,
+    /// AIMC chip parameters (default κ/λ for scoring).
     pub aimc: AimcConfig,
     exe: Rc<Executable>,
     /// number of `model_fwd` invocations so far (perf accounting)
@@ -29,6 +31,7 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
+    /// Load and compile the monolithic `model_fwd` executable.
     pub fn new(
         rt: &mut Runtime,
         paths: &ArtifactPaths,

@@ -20,8 +20,12 @@
 //!
 //! - [`util`] — PRNG, JSON, statistics, tables, mini property testing
 //! - [`config`] — model/system/noise configuration
-//! - [`tensor`] — host tensors + the small dense math the coordinator owns
-//! - [`runtime`] — PJRT executable loading and execution, parameter store
+//! - [`tensor`] — host tensors + the small dense math the coordinator
+//!   owns: cache-blocked/packed matmul and fused gated-MLP kernels with
+//!   a retained scalar reference
+//! - [`runtime`] — PJRT executable loading and execution, parameter
+//!   store, and the scoped-thread [`runtime::WorkerPool`] for host-side
+//!   parallelism
 //! - [`aimc`] — NVM tiles, programming noise (eq 3), DAC/ADC (eqs 4-5),
 //!   calibration, energy/latency model
 //! - [`digital`] — digital accelerator roofline model (eq 16)
@@ -33,9 +37,14 @@
 //! - [`coordinator`] — the heterogeneous serving engine behind the
 //!   backend-trait API: implement
 //!   [`coordinator::ExpertBackend`] per accelerator, assemble with
-//!   [`coordinator::EngineBuilder`], serve request streams through
-//!   [`coordinator::Session`] (see `DESIGN.md` §serving API)
+//!   [`coordinator::EngineBuilder`] (worker count via `.workers(n)`),
+//!   serve request streams through [`coordinator::Session`] (see
+//!   `DESIGN.md` §serving API)
 //! - [`theory`] — §4 analytical setup (Lemma 4.1, Theorem 4.2)
+//! - [`bench`] — shared bench machinery + the `BENCH_*.json` harness
+//!   (`docs/BENCHMARKS.md`)
+
+#![warn(missing_docs)]
 
 pub mod aimc;
 pub mod bench;

@@ -6,6 +6,7 @@
 //! hetmoe info                         artifact + model inventory
 //! hetmoe eval   [--model M] [...]     task-suite accuracy for a placement
 //! hetmoe serve  [--model M] [...]     run the heterogeneous serving engine
+//! hetmoe bench  [--suite S] [...]     kernel/serving benchmarks → BENCH_*.json
 //! hetmoe train  [--model M] [...]     Rust-driven AOT training demo
 //! hetmoe theory [...]                 Lemma 4.1 / Theorem 4.2 experiments
 //! ```
@@ -27,6 +28,7 @@ use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
 use hetmoe::theory::{lemma41_experiment, theorem42_experiment, TheoryConfig};
 use hetmoe::train::{load_corpus, TrainOptions, Trainer};
 use hetmoe::util::table::Table;
+use hetmoe::util::Json;
 
 /// One accepted flag: key, default (shown in help), description.
 type FlagSpec = (&'static str, &'static str, &'static str);
@@ -45,6 +47,13 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     ("gamma", "0.25", "digital expert fraction Γ"),
     ("noise", "1.0", "programming-noise scale (eq 3)"),
     ("requests", "64", "number of scoring requests to stream"),
+];
+const BENCH_FLAGS: &[FlagSpec] = &[
+    ("suite", "all", "which benches to run: kernels|serve|all"),
+    ("out", "bench_out", "BENCH_*.json output dir (overrides $HETMOE_BENCH_OUT)"),
+    ("reps", "8", "timing repetitions per kernel case (overrides $HETMOE_BENCH_REPS)"),
+    ("requests", "64", "scoring requests per model in the serve bench"),
+    ("models", "olmoe_mini,dsmoe_mini", "serve-bench models (overrides $HETMOE_BENCH_MODELS)"),
 ];
 const TRAIN_FLAGS: &[FlagSpec] = &[
     ("model", "olmoe_mini", "model config name"),
@@ -153,6 +162,7 @@ fn print_global_usage() {
          \x20 info    artifact + model inventory\n\
          \x20 eval    task-suite accuracy for a placement\n\
          \x20 serve   run the heterogeneous serving engine\n\
+         \x20 bench   kernel + serving benchmarks (writes BENCH_*.json)\n\
          \x20 train   Rust-driven AOT training demo\n\
          \x20 theory  Lemma 4.1 / Theorem 4.2 experiments\n\
          \n\
@@ -183,10 +193,11 @@ fn main() -> Result<()> {
         "info" => (INFO_FLAGS, cmd_info),
         "eval" => (EVAL_FLAGS, cmd_eval),
         "serve" => (SERVE_FLAGS, cmd_serve),
+        "bench" => (BENCH_FLAGS, cmd_bench),
         "train" => (TRAIN_FLAGS, cmd_train),
         "theory" => (THEORY_FLAGS, cmd_theory),
         other => bail!(
-            "unknown command '{other}' (try: info, eval, serve, train, theory); \
+            "unknown command '{other}' (try: info, eval, serve, bench, train, theory); \
              artifacts dir = {}",
             hetmoe::artifacts_dir().display()
         ),
@@ -334,12 +345,17 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "wall throughput".into(),
         format!("{:.0} tokens/s", m.wall_tokens_per_s()),
     ]);
+    t.row(vec![
+        "host workers".into(),
+        session.engine().workers().to_string(),
+    ]);
     for b in &m.backends {
         t.row(vec![
             format!("{} backend", b.name),
             format!(
-                "{} dispatches, {:.3}s wall, {:.4}s simulated busy, {:.4} J",
+                "{} dispatches, util {:.1}%, {:.3}s wall, {:.4}s simulated busy, {:.4} J",
                 b.dispatches,
+                b.utilization() * 100.0,
                 b.wall.as_secs_f64(),
                 b.busy_s,
                 b.energy_j
@@ -356,6 +372,73 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     ]);
     t.print();
     println!("\n{}", m.report());
+    Ok(())
+}
+
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    let suite = cli.get("suite");
+    if !matches!(suite.as_str(), "kernels" | "serve" | "all") {
+        bail!("unknown suite '{suite}' (expected kernels, serve, or all)");
+    }
+    // explicit flags win over the environment knobs; the FlagSpec
+    // defaults mirror the knob defaults
+    let out = cli
+        .kv
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(hetmoe::bench::bench_out_dir);
+    let reps = cli
+        .kv
+        .get("reps")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(hetmoe::bench::bench_reps);
+    let requests = cli.get_usize("requests");
+    let models: Vec<String> = match cli.kv.get("models") {
+        Some(m) => m
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => hetmoe::bench::bench_models(),
+    };
+
+    if suite == "kernels" || suite == "all" {
+        println!("kernel bench: blocked kernels vs scalar reference ({reps} reps)…");
+        let json = hetmoe::bench::run_kernel_bench(reps);
+        hetmoe::bench::print_kernel_cases(&json)?;
+        let path = hetmoe::bench::write_bench_json(&out, "BENCH_kernels.json", &json)?;
+        println!("wrote {}", path.display());
+    }
+
+    if suite == "serve" || suite == "all" {
+        if !hetmoe::artifacts_dir().join("meta.json").exists() {
+            println!(
+                "serve bench skipped: artifact tree missing at {} \
+                 (run `make artifacts`; kernel bench needs no artifacts)",
+                hetmoe::artifacts_dir().display()
+            );
+        } else {
+            let mut entries = Vec::new();
+            for model in &models {
+                println!("serve bench: {model} ({requests} requests, Γ=0.25)…");
+                let entry = hetmoe::bench::run_serve_bench(model, requests)?;
+                println!(
+                    "  {:.0} tok/s sequential → {:.0} tok/s parallel \
+                     (identical outputs: {})",
+                    entry.get("sequential")?.get("tokens_per_s")?.as_f64()?,
+                    entry.get("parallel")?.get("tokens_per_s")?.as_f64()?,
+                    entry.get("parallel_matches_sequential")?.as_bool()?,
+                );
+                entries.push(entry);
+            }
+            let json = Json::obj(vec![
+                ("bench", Json::str("serve")),
+                ("models", Json::Arr(entries)),
+            ]);
+            let path = hetmoe::bench::write_bench_json(&out, "BENCH_serve.json", &json)?;
+            println!("wrote {}", path.display());
+        }
+    }
     Ok(())
 }
 

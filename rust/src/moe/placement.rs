@@ -51,6 +51,8 @@ pub struct Placement {
     pub lm_head_analog: bool,
     /// the metric and Γ that produced this placement (for reporting)
     pub metric: Option<SelectionMetric>,
+    /// planner-recorded digital expert fraction Γ (a label — cost
+    /// accounting derives the live share from the backend map)
     pub gamma: f64,
 }
 
@@ -95,6 +97,7 @@ impl Placement {
         self.backend[l][e]
     }
 
+    /// Reassign expert `e` of layer `l` to backend slot `b`.
     pub fn set_backend(&mut self, l: usize, e: usize, b: BackendId) {
         self.backend[l][e] = b;
     }
@@ -143,6 +146,7 @@ impl Placement {
             .unwrap_or(BACKEND_DIGITAL)
     }
 
+    /// Total experts placed on the AIMC slot across all layers.
     pub fn n_analog_experts(&self) -> usize {
         self.backend
             .iter()
@@ -221,6 +225,7 @@ fn parse_layer(name: &str) -> Option<usize> {
 /// Options for [`plan_placement`].
 #[derive(Clone, Debug)]
 pub struct PlacementOptions {
+    /// Expert-ranking metric (Fig 2 step 2; MaxNNScore is the paper's).
     pub metric: SelectionMetric,
     /// Γ — fraction of experts per MoE block placed digital (Fig 2 step 3)
     pub gamma: f64,

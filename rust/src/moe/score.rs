@@ -26,14 +26,20 @@ use crate::util::Prng;
 /// Which metric ranks experts for digital placement.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SelectionMetric {
+    /// Product of max neuron norms (eqs 6-7) — the paper's metric.
     MaxNNScore,
+    /// Fraction of calibration tokens routed to the expert.
     ActivationFrequency,
+    /// Mean routing weight over the calibration set.
     ActivationWeight,
+    /// ℓ2 norm of the expert's routing-matrix column.
     RouterNorm,
+    /// Uniform random ranking (control).
     Random,
 }
 
 impl SelectionMetric {
+    /// Short display name (matches the paper's table labels).
     pub fn name(&self) -> &'static str {
         match self {
             SelectionMetric::MaxNNScore => "MaxNNScore",
@@ -44,6 +50,8 @@ impl SelectionMetric {
         }
     }
 
+    /// Does this metric require router statistics from a calibration
+    /// pass (ActFreq / ActWeight) rather than weights alone?
     pub fn needs_calibration_data(&self) -> bool {
         matches!(
             self,
@@ -51,6 +59,7 @@ impl SelectionMetric {
         )
     }
 
+    /// Every metric, in the paper's reporting order.
     pub const ALL: [SelectionMetric; 5] = [
         SelectionMetric::MaxNNScore,
         SelectionMetric::ActivationFrequency,
@@ -74,6 +83,7 @@ pub struct RouterStats {
 }
 
 impl RouterStats {
+    /// Zeroed statistics for an `n_layers × n_experts` model.
     pub fn new(n_layers: usize, n_experts: usize) -> RouterStats {
         RouterStats {
             counts: vec![vec![0; n_experts]; n_layers],
@@ -82,6 +92,8 @@ impl RouterStats {
         }
     }
 
+    /// Record one routed token: expert `expert` of `layer` received a
+    /// token with routing weight `weight`.
     pub fn record(&mut self, layer: usize, expert: usize, weight: f64) {
         self.counts[layer][expert] += 1;
         self.weight_sums[layer][expert] += weight;

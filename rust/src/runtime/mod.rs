@@ -10,10 +10,16 @@
 //! calls via `execute_b`; only small data tensors (token batches, flags)
 //! are transferred per call. Re-programming an expert (noise injection)
 //! invalidates just that tensor's buffer.
+//!
+//! Host-side compute around the PJRT calls (blocked kernels, routing,
+//! chunk gather) parallelizes through [`pool::WorkerPool`] — see that
+//! module for the `Send`-safety boundary.
 
 pub mod params;
+pub mod pool;
 
 pub use params::{Manifest, ParamStore, TensorSpec};
+pub use pool::WorkerPool;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -23,6 +29,7 @@ use anyhow::{anyhow, Context, Result};
 
 /// A compiled HLO entry point plus its metadata.
 pub struct Executable {
+    /// Source file name of the HLO module (for error reporting).
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -38,11 +45,13 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Create a runtime backed by the PJRT CPU client.
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime { client, cache: HashMap::new() })
     }
 
+    /// Name of the PJRT platform backing this runtime (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -138,26 +147,32 @@ pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
 /// The per-config artifact paths.
 #[derive(Clone, Debug)]
 pub struct ArtifactPaths {
+    /// Root of this model config's artifact directory.
     pub dir: PathBuf,
 }
 
 impl ArtifactPaths {
+    /// Artifact paths for model `config` under the `artifacts` tree.
     pub fn new(artifacts: &Path, config: &str) -> ArtifactPaths {
         ArtifactPaths { dir: artifacts.join(config) }
     }
 
+    /// Path of the HLO text file for graph entry point `entry`.
     pub fn hlo(&self, entry: &str) -> PathBuf {
         self.dir.join(format!("{entry}.hlo.txt"))
     }
 
+    /// Path of the trained flat-f32 parameter file.
     pub fn params_bin(&self) -> PathBuf {
         self.dir.join("params.bin")
     }
 
+    /// Path of the untrained (initialization) parameter file.
     pub fn init_params_bin(&self) -> PathBuf {
         self.dir.join("init_params.bin")
     }
 
+    /// Path of the tensor-layout manifest (`manifest.json`).
     pub fn manifest(&self) -> PathBuf {
         self.dir.join("manifest.json")
     }

@@ -13,21 +13,28 @@ use crate::util::Json;
 /// One tensor's layout within the flat parameter file.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
+    /// Tensor name (the parameter ABI key).
     pub name: String,
+    /// Dimension sizes.
     pub shape: Vec<usize>,
+    /// f32 offset within the flat file.
     pub offset: usize,
+    /// Element count.
     pub len: usize,
 }
 
 /// The ordered tensor manifest written by aot.py.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Tensor layouts in canonical (HLO input) order.
     pub tensors: Vec<TensorSpec>,
+    /// Total f32 count of the flat file.
     pub total_f32: usize,
     by_name: HashMap<String, usize>,
 }
 
 impl Manifest {
+    /// Parse a `manifest.json` written by aot.py.
     pub fn load(path: &Path) -> Result<Manifest> {
         let j = Json::parse_file(path)?;
         let mut tensors = Vec::new();
@@ -48,6 +55,7 @@ impl Manifest {
         Ok(Manifest { tensors, total_f32: total, by_name })
     }
 
+    /// Position of a named tensor in the canonical order.
     pub fn index_of(&self, name: &str) -> Result<usize> {
         self.by_name
             .get(name)
@@ -55,6 +63,7 @@ impl Manifest {
             .ok_or_else(|| anyhow!("no tensor '{name}' in manifest"))
     }
 
+    /// Layout of a named tensor.
     pub fn spec(&self, name: &str) -> Result<&TensorSpec> {
         Ok(&self.tensors[self.index_of(name)?])
     }
@@ -62,6 +71,7 @@ impl Manifest {
 
 /// Host-side parameter values + lazily maintained device mirrors.
 pub struct ParamStore {
+    /// The tensor-layout manifest this store follows.
     pub manifest: Manifest,
     data: Vec<f32>,
     /// device mirror per tensor; None = stale / not yet uploaded
@@ -90,6 +100,7 @@ impl ParamStore {
         Ok(ParamStore { manifest, data, buffers: (0..n).map(|_| None).collect() })
     }
 
+    /// Number of tensors in the store.
     pub fn n_tensors(&self) -> usize {
         self.manifest.tensors.len()
     }
@@ -100,6 +111,7 @@ impl ParamStore {
         Ok(&self.data[s.offset..s.offset + s.len])
     }
 
+    /// Shape of a named tensor.
     pub fn tensor_shape(&self, name: &str) -> Result<&[usize]> {
         Ok(&self.manifest.spec(name)?.shape)
     }

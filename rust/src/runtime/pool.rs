@@ -1,0 +1,192 @@
+//! Scoped-thread worker pool for the coordinator's host-side compute.
+//!
+//! PJRT handles are raw pointers (`Runtime` is not `Send`), so device
+//! dispatches always run on the coordinating thread. Everything *around*
+//! them — cache-blocked matmuls, router scoring, expert-chunk
+//! gather/pack — is pure host work over `&[f32]` slices and parallelizes
+//! cleanly. This pool covers exactly that: it partitions index ranges or
+//! disjoint output bands across short-lived scoped threads
+//! (`std::thread::scope`), so no `'static` bounds, no channels, and no
+//! locks are needed; every helper is a fork-join barrier.
+//!
+//! Determinism: all helpers use *static* partitioning (contiguous
+//! chunks), and callers only ever write disjoint output regions, so
+//! results are byte-identical no matter how many workers run — including
+//! `workers = 1`, which degenerates to an inline loop on the calling
+//! thread. The serving engine's parallel-vs-sequential equivalence test
+//! rests on this.
+
+/// A fixed-width fork-join worker pool over scoped threads.
+///
+/// The pool itself holds no threads — each helper spawns its workers
+/// inside a [`std::thread::scope`] and joins them before returning, so a
+/// `WorkerPool` is just a sizing policy and is trivially cheap to store
+/// (the engine keeps one).
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+/// Default worker count: `$HETMOE_WORKERS` when set, otherwise the
+/// machine's available parallelism, clamped to `[1, 32]`.
+pub fn default_workers() -> usize {
+    std::env::var("HETMOE_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .clamp(1, 32)
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new(default_workers())
+    }
+}
+
+impl WorkerPool {
+    /// A pool that runs work on up to `workers` threads (clamped to at
+    /// least 1). `WorkerPool::new(1)` is the sequential reference
+    /// configuration: every helper runs inline on the calling thread.
+    pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool { workers: workers.max(1) }
+    }
+
+    /// The configured worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// True when the pool degenerates to inline execution.
+    pub fn is_sequential(&self) -> bool {
+        self.workers <= 1
+    }
+
+    /// Split a `rows × row_len` row-major output buffer into contiguous
+    /// row bands — one per worker — and run `f(row_range, band)` on each
+    /// band concurrently. `f` must compute each output row independently
+    /// of band boundaries (the engine's kernels do), which makes the
+    /// result identical for every worker count.
+    pub fn run_on_row_bands<T, F>(&self, rows: usize, row_len: usize, out: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+    {
+        assert_eq!(out.len(), rows * row_len, "band buffer shape mismatch");
+        if rows == 0 || row_len == 0 {
+            return;
+        }
+        let w = self.workers.min(rows);
+        if w <= 1 {
+            f(0..rows, out);
+            return;
+        }
+        let per = rows.div_ceil(w);
+        std::thread::scope(|s| {
+            let f = &f;
+            for (bi, band) in out.chunks_mut(per * row_len).enumerate() {
+                let start = bi * per;
+                let take = band.len() / row_len;
+                s.spawn(move || f(start..start + take, band));
+            }
+        });
+    }
+
+    /// Run `f(i, &mut items[i])` for every element, partitioning the
+    /// slice into contiguous chunks across workers. Used for
+    /// variable-size per-task outputs (e.g. one gathered expert chunk
+    /// per slot) where a flat band split does not apply.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let w = self.workers.min(n);
+        if w <= 1 {
+            for (i, it) in items.iter_mut().enumerate() {
+                f(i, it);
+            }
+            return;
+        }
+        let per = n.div_ceil(w);
+        std::thread::scope(|s| {
+            let f = &f;
+            for (bi, chunk) in items.chunks_mut(per).enumerate() {
+                let base = bi * per;
+                s.spawn(move || {
+                    for (j, it) in chunk.iter_mut().enumerate() {
+                        f(base + j, it);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_to_one_worker() {
+        assert_eq!(WorkerPool::new(0).workers(), 1);
+        assert!(WorkerPool::new(1).is_sequential());
+        assert!(!WorkerPool::new(2).is_sequential());
+    }
+
+    #[test]
+    fn row_bands_cover_all_rows_once() {
+        for workers in [1, 2, 3, 7] {
+            let pool = WorkerPool::new(workers);
+            let (rows, row_len) = (13, 3);
+            let mut out = vec![0u32; rows * row_len];
+            pool.run_on_row_bands(rows, row_len, &mut out, |range, band| {
+                for (bi, r) in range.enumerate() {
+                    for c in 0..row_len {
+                        band[bi * row_len + c] += (r * row_len + c) as u32 + 1;
+                    }
+                }
+            });
+            let want: Vec<u32> = (1..=(rows * row_len) as u32).collect();
+            assert_eq!(out, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn row_bands_handle_empty_and_degenerate() {
+        let pool = WorkerPool::new(4);
+        let mut empty: Vec<f32> = Vec::new();
+        pool.run_on_row_bands(0, 8, &mut empty, |_, _| panic!("no work"));
+        // more workers than rows: one row per band
+        let mut out = vec![0f32; 2 * 2];
+        pool.run_on_row_bands(2, 2, &mut out, |range, band| {
+            assert_eq!(range.len() * 2, band.len());
+            band.fill(1.0);
+        });
+        assert!(out.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_index() {
+        for workers in [1, 2, 5] {
+            let pool = WorkerPool::new(workers);
+            let mut items = vec![0usize; 11];
+            pool.for_each_mut(&mut items, |i, it| *it = i * i);
+            let want: Vec<usize> = (0..11).map(|i| i * i).collect();
+            assert_eq!(items, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+        assert!(default_workers() <= 32);
+    }
+}

@@ -4,22 +4,62 @@
 //! compiled XLA executables; the coordinator still needs embedding
 //! gathers, LayerNorm, router softmax/top-k, residual adds and norm
 //! computations (MaxNNScore) on the host. Row-major `f32` throughout.
+//!
+//! # Kernels
+//!
+//! Two matmul paths coexist:
+//!
+//! - [`matmul_ref`] / [`gated_mlp_ref`] — the naive scalar triple loop,
+//!   retained as the ground-truth reference. Every blocked result is
+//!   verified against it (property tests here; `BENCH_kernels.json`
+//!   re-checks at bench time).
+//! - [`matmul`] / [`gated_mlp`] and their pool-aware variants
+//!   [`matmul_pool`] / [`gated_mlp_fused`] — the production path:
+//!   B is packed into cache-sized column panels ([`PackedB`], a
+//!   transposed-panel layout), the kernel walks panel × k-block tiles
+//!   with a 4-way-unrolled update of each output row, and the gated-MLP
+//!   fuses bias + SiLU + gating between the two projections instead of
+//!   materializing full-size intermediates. Row bands parallelize
+//!   across a [`WorkerPool`]; each output row is computed with an
+//!   identical operation order regardless of worker count, so parallel
+//!   and sequential results are byte-identical (see
+//!   `prop_parallel_matmul_is_bit_identical`).
+//!
+//! Blocked and reference kernels associate the k-sum differently, so
+//! they agree to rounding (≤ ~1e-5 at coordinator scales), not bitwise;
+//! the tolerance contract is pinned by `prop_blocked_matmul_matches_ref`.
 
 use anyhow::{bail, Result};
+
+use crate::runtime::pool::WorkerPool;
+
+/// Column-panel width of [`PackedB`] (f32 lanes; 128 × 4 B = one 512 B
+/// stream per packed row, several rows per L1 set).
+const NB: usize = 128;
+/// Contraction-dim block: one (KB × NB) sub-panel is 128 KiB, sized for
+/// L2 residency while a row band streams through it.
+const KB: usize = 256;
+/// Row block of the fused gated-MLP: bounds per-thread scratch to
+/// `2 · RB · m` floats.
+const RB: usize = 32;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major payload; `data.len() == shape.iter().product()`.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// An all-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Wrap an existing buffer; fails when the element count mismatches.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -28,10 +68,12 @@ impl Tensor {
         Ok(Tensor { shape: shape.to_vec(), data })
     }
 
+    /// Total number of elements.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
@@ -44,6 +86,7 @@ impl Tensor {
         }
     }
 
+    /// The three dims of a rank-3 tensor.
     pub fn dims3(&self) -> Result<(usize, usize, usize)> {
         match self.shape.as_slice() {
             [a, b, c] => Ok((*a, *b, *c)),
@@ -57,6 +100,7 @@ impl Tensor {
         &self.data[i * c..(i + 1) * c]
     }
 
+    /// Mutable row of a rank-2 tensor.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let (_, c) = self.dims2().expect("row_mut() on rank-2");
         &mut self.data[i * c..(i + 1) * c]
@@ -68,6 +112,7 @@ impl Tensor {
         &self.data[s * r * c..(s + 1) * r * c]
     }
 
+    /// Mutable slice of the s-th rank-2 plane of a rank-3 tensor.
     pub fn plane_mut(&mut self, s: usize) -> &mut [f32] {
         let (_, r, c) = self.dims3().expect("plane_mut() on rank-3");
         &mut self.data[s * r * c..(s + 1) * r * c]
@@ -149,10 +194,15 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// Row-major matmul: `c[n,m] = a[n,k] @ b[k,m]`. The coordinator uses
-/// this only for small host-side modules (shared experts / dense FFN at
-/// mini scale); all large matmuls run in XLA executables.
-pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+// ---------------------------------------------------------------------------
+// matmul: scalar reference + blocked/packed production kernels
+// ---------------------------------------------------------------------------
+
+/// Reference row-major matmul: `c[n,m] = a[n,k] @ b[k,m]` as a naive
+/// scalar triple loop. Retained as the ground truth the blocked kernels
+/// are property-tested and benchmarked against (`BENCH_kernels.json`
+/// reports the speedup of [`matmul`] / [`matmul_pool`] over this).
+pub fn matmul_ref(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     assert_eq!(a.len(), n * k);
     assert_eq!(b.len(), k * m);
     let mut c = vec![0f32; n * m];
@@ -172,22 +222,305 @@ pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     c
 }
 
+/// The right-hand matrix of a matmul, re-laid out for the blocked
+/// kernel: `[k, m]` row-major B becomes `ceil(m/NB)` column panels, each
+/// stored as `k × NB` contiguous rows (the transposed-panel packing —
+/// panel-local column index is the fast axis, zero-padded on the last
+/// panel). One pack amortizes over every row of A that multiplies it,
+/// so long-lived weights (shared experts, dense FFNs) pack once at
+/// engine build and serve every batch.
+pub struct PackedB {
+    k: usize,
+    m: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a `[k, m]` row-major matrix.
+    pub fn pack(b: &[f32], k: usize, m: usize) -> PackedB {
+        assert_eq!(b.len(), k * m, "PackedB::pack: {} != {k}×{m}", b.len());
+        let n_panels = m.div_ceil(NB);
+        let mut data = vec![0f32; n_panels * k * NB];
+        for p in 0..n_panels {
+            let j0 = p * NB;
+            let w = NB.min(m - j0);
+            let dst = &mut data[p * k * NB..(p + 1) * k * NB];
+            for kk in 0..k {
+                dst[kk * NB..kk * NB + w].copy_from_slice(&b[kk * m + j0..kk * m + j0 + w]);
+            }
+        }
+        PackedB { k, m, data }
+    }
+
+    /// Rows of the source matrix (the contraction dimension).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Columns of the source matrix.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+}
+
+/// Blocked kernel over one row band: `c_band[rows, m] += a[rows] @ B`.
+/// Walks column panels × k-blocks so a (KB × NB) sub-panel stays hot
+/// while the band streams through it; the inner update is 4-way
+/// unrolled over k. Each output row's operation order depends only on
+/// the kernel constants — never on the band split — which is what makes
+/// the parallel path bit-identical to the sequential one.
+fn matmul_band(a: &[f32], bp: &PackedB, rows: std::ops::Range<usize>, c_band: &mut [f32]) {
+    let (k, m) = (bp.k, bp.m);
+    let band_rows = rows.len();
+    debug_assert_eq!(c_band.len(), band_rows * m);
+    if band_rows == 0 || m == 0 || k == 0 {
+        return;
+    }
+    let n_panels = m.div_ceil(NB);
+    for p in 0..n_panels {
+        let j0 = p * NB;
+        let w = NB.min(m - j0);
+        let panel = &bp.data[p * k * NB..(p + 1) * k * NB];
+        let mut kb0 = 0;
+        while kb0 < k {
+            let kb1 = (kb0 + KB).min(k);
+            for bi in 0..band_rows {
+                let arow = &a[(rows.start + bi) * k..(rows.start + bi + 1) * k];
+                let crow = &mut c_band[bi * m + j0..bi * m + j0 + w];
+                let mut kk = kb0;
+                while kk + 4 <= kb1 {
+                    let (a0, a1, a2, a3) =
+                        (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                        let b0 = &panel[kk * NB..kk * NB + w];
+                        let b1 = &panel[(kk + 1) * NB..(kk + 1) * NB + w];
+                        let b2 = &panel[(kk + 2) * NB..(kk + 2) * NB + w];
+                        let b3 = &panel[(kk + 3) * NB..(kk + 3) * NB + w];
+                        for (cv, (((&v0, &v1), &v2), &v3)) in crow
+                            .iter_mut()
+                            .zip(b0.iter().zip(b1.iter()).zip(b2.iter()).zip(b3.iter()))
+                        {
+                            *cv += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                        }
+                    }
+                    kk += 4;
+                }
+                while kk < kb1 {
+                    let av = arow[kk];
+                    if av != 0.0 {
+                        let brow = &panel[kk * NB..kk * NB + w];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                    kk += 1;
+                }
+            }
+            kb0 = kb1;
+        }
+    }
+}
+
+/// Row-major matmul: `c[n,m] = a[n,k] @ b[k,m]`. Thin wrapper over the
+/// blocked kernel ([`matmul_pool`] with no pool); [`matmul_ref`] keeps
+/// the scalar reference semantics. The coordinator uses this for
+/// host-side modules (shared experts / dense FFN at mini scale); large
+/// matmuls run in XLA executables.
+pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    matmul_pool(None, a, b, n, k, m)
+}
+
+/// Blocked matmul, optionally row-band-parallel across `pool`. Packs B
+/// per call — when the same B multiplies many batches, pack once with
+/// [`PackedB::pack`] and use [`matmul_packed`].
+pub fn matmul_pool(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(b.len(), k * m);
+    let bp = PackedB::pack(b, k, m);
+    matmul_packed(pool, a, &bp, n)
+}
+
+/// Blocked matmul against a pre-packed B: `c[n, bp.m] = a[n, bp.k] @ B`.
+pub fn matmul_packed(pool: Option<&WorkerPool>, a: &[f32], bp: &PackedB, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), n * bp.k);
+    let mut c = vec![0f32; n * bp.m];
+    if n == 0 || bp.m == 0 {
+        return c;
+    }
+    match pool {
+        Some(p) if !p.is_sequential() && n > 1 => {
+            p.run_on_row_bands(n, bp.m, &mut c, |rows, band| matmul_band(a, bp, rows, band));
+        }
+        _ => matmul_band(a, bp, 0..n, &mut c),
+    }
+    c
+}
+
 /// SiLU activation (matches the L2 model).
 #[inline]
 pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// Gated MLP `silu(x@up) * (x@gate) @ down` on the host — the serving
-/// path for shared experts / the DeepSeek dense FFN (always digital).
-pub fn gated_mlp(x: &[f32], up: &[f32], gate: &[f32], down: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
-    let u = matmul(x, up, n, d, m);
-    let g = matmul(x, gate, n, d, m);
+/// Reference gated MLP `silu(x@up) * (x@gate) @ down` via [`matmul_ref`]
+/// — the scalar ground truth for the fused kernel.
+pub fn gated_mlp_ref(
+    x: &[f32],
+    up: &[f32],
+    gate: &[f32],
+    down: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+) -> Vec<f32> {
+    let u = matmul_ref(x, up, n, d, m);
+    let g = matmul_ref(x, gate, n, d, m);
     let mut act = vec![0f32; n * m];
     for i in 0..n * m {
         act[i] = silu(u[i]) * g[i];
     }
-    matmul(&act, down, n, m, d)
+    matmul_ref(&act, down, n, m, d)
+}
+
+/// Pre-packed weights (and optional biases) of one gated MLP
+/// `y = (silu(x@up + b_up) · (x@gate + b_gate)) @ down + b_down`.
+/// The serving engine packs each shared-expert / dense-FFN stack once at
+/// build and reuses it for every batch.
+pub struct GatedMlpWeights {
+    d: usize,
+    m: usize,
+    up: PackedB,
+    gate: PackedB,
+    down: PackedB,
+    /// per-column biases (up[m], gate[m], down[d]); `None` = bias-free
+    bias: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+}
+
+impl GatedMlpWeights {
+    /// Pack `up[d,m]`, `gate[d,m]`, `down[m,d]` without biases.
+    pub fn pack(up: &[f32], gate: &[f32], down: &[f32], d: usize, m: usize) -> GatedMlpWeights {
+        GatedMlpWeights {
+            d,
+            m,
+            up: PackedB::pack(up, d, m),
+            gate: PackedB::pack(gate, d, m),
+            down: PackedB::pack(down, m, d),
+            bias: None,
+        }
+    }
+
+    /// Attach per-column biases (`b_up[m]`, `b_gate[m]`, `b_down[d]`);
+    /// the fused kernel applies them in the activation pass at no extra
+    /// sweep over the intermediates.
+    pub fn with_bias(mut self, b_up: &[f32], b_gate: &[f32], b_down: &[f32]) -> GatedMlpWeights {
+        assert_eq!(b_up.len(), self.m);
+        assert_eq!(b_gate.len(), self.m);
+        assert_eq!(b_down.len(), self.d);
+        self.bias = Some((b_up.to_vec(), b_gate.to_vec(), b_down.to_vec()));
+        self
+    }
+
+    /// Model width d (input and output columns).
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Hidden width m.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+}
+
+/// Fused gated-MLP over one row band: RB-row blocks flow through
+/// up/gate projections, a single fused bias+SiLU+gating pass, and the
+/// down projection — per-thread scratch stays at `2·RB·m` floats instead
+/// of two full `n×m` intermediates.
+fn gated_mlp_band(
+    x: &[f32],
+    w: &GatedMlpWeights,
+    rows: std::ops::Range<usize>,
+    y_band: &mut [f32],
+) {
+    let (d, m) = (w.d, w.m);
+    debug_assert_eq!(y_band.len(), rows.len() * d);
+    let mut u = vec![0f32; RB * m];
+    let mut g = vec![0f32; RB * m];
+    let mut r = rows.start;
+    let mut out = 0usize;
+    while r < rows.end {
+        let rb = RB.min(rows.end - r);
+        let ub = &mut u[..rb * m];
+        let gb = &mut g[..rb * m];
+        ub.fill(0.0);
+        gb.fill(0.0);
+        matmul_band(x, &w.up, r..r + rb, ub);
+        matmul_band(x, &w.gate, r..r + rb, gb);
+        match &w.bias {
+            None => {
+                for (uv, &gv) in ub.iter_mut().zip(gb.iter()) {
+                    *uv = silu(*uv) * gv;
+                }
+            }
+            Some((b_up, b_gate, _)) => {
+                for i in 0..rb {
+                    let urow = &mut ub[i * m..(i + 1) * m];
+                    let grow = &gb[i * m..(i + 1) * m];
+                    for j in 0..m {
+                        urow[j] = silu(urow[j] + b_up[j]) * (grow[j] + b_gate[j]);
+                    }
+                }
+            }
+        }
+        let yb = &mut y_band[out..out + rb * d];
+        matmul_band(ub, &w.down, 0..rb, yb);
+        if let Some((_, _, b_down)) = &w.bias {
+            for i in 0..rb {
+                for (yv, &bv) in yb[i * d..(i + 1) * d].iter_mut().zip(b_down) {
+                    *yv += bv;
+                }
+            }
+        }
+        out += rb * d;
+        r += rb;
+    }
+}
+
+/// Fused gated-MLP against pre-packed weights, optionally row-band-
+/// parallel across `pool`. Byte-identical for every worker count.
+pub fn gated_mlp_fused(
+    pool: Option<&WorkerPool>,
+    x: &[f32],
+    w: &GatedMlpWeights,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), n * w.d);
+    let mut y = vec![0f32; n * w.d];
+    if n == 0 || w.d == 0 {
+        return y;
+    }
+    match pool {
+        Some(p) if !p.is_sequential() && n > 1 => {
+            p.run_on_row_bands(n, w.d, &mut y, |rows, band| gated_mlp_band(x, w, rows, band));
+        }
+        _ => gated_mlp_band(x, w, 0..n, &mut y),
+    }
+    y
+}
+
+/// Gated MLP `silu(x@up) * (x@gate) @ down` on the host — the serving
+/// path for shared experts / the DeepSeek dense FFN (always digital).
+/// Thin wrapper over the fused blocked kernel; [`gated_mlp_ref`] keeps
+/// the scalar reference semantics.
+pub fn gated_mlp(x: &[f32], up: &[f32], gate: &[f32], down: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    let w = GatedMlpWeights::pack(up, gate, down, d, m);
+    gated_mlp_fused(None, x, &w, n)
 }
 
 /// Column ℓ2 norms of a [d, m] row-major matrix — the neuron norms of
@@ -210,6 +543,7 @@ pub fn col_norms(w: &[f32], d: usize, m: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Prng;
 
     #[test]
     fn tensor_shapes() {
@@ -284,6 +618,8 @@ mod tests {
         // a = [[1,2],[3,4]], b = [[5,6],[7,8]] → [[19,22],[43,50]]
         let c = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
         assert_eq!(c, vec![19., 22., 43., 50.]);
+        let r = matmul_ref(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        assert_eq!(r, c);
     }
 
     #[test]
@@ -305,5 +641,146 @@ mod tests {
         let mut y = [1.0f32, 1.0];
         axpy(2.0, &[1.0, 2.0], &mut y);
         assert_eq!(y, [3.0, 5.0]);
+    }
+
+    fn rand_buf(rng: &mut Prng, n: usize) -> Vec<f32> {
+        // small magnitudes keep the reassociation error of the blocked
+        // k-sum well inside the 1e-5 contract at test sizes
+        (0..n).map(|_| (rng.uniform() as f32 - 0.5) * 0.1).collect()
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+    }
+
+    #[test]
+    fn prop_blocked_matmul_matches_ref() {
+        // property: blocked/packed matmul agrees with the scalar
+        // reference within 1e-5 on odd, non-multiple-of-block shapes
+        // (panel edge w < NB, k remainder < 4, single-row bands)
+        crate::util::proptest::check("blocked matmul vs ref", 40, |rng| {
+            let n = rng.range(1, 40);
+            let k = rng.range(1, 80);
+            let m = rng.range(1, 300); // crosses the NB=128 panel edge
+            let mut r = Prng::new(rng.next_u64());
+            let a = rand_buf(&mut r, n * k);
+            let b = rand_buf(&mut r, k * m);
+            let want = matmul_ref(&a, &b, n, k, m);
+            let got = matmul(&a, &b, n, k, m);
+            let diff = max_abs_diff(&got, &want);
+            crate::prop_assert!(diff < 1e-5, "n={n} k={k} m={m}: diff {diff}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_parallel_matmul_is_bit_identical() {
+        // property: the row-band-parallel kernel is byte-identical to
+        // the sequential blocked kernel for any worker count
+        crate::util::proptest::check("parallel matmul determinism", 20, |rng| {
+            let n = rng.range(1, 30);
+            let k = rng.range(1, 50);
+            let m = rng.range(1, 200);
+            let workers = rng.range(2, 6);
+            let mut r = Prng::new(rng.next_u64());
+            let a = rand_buf(&mut r, n * k);
+            let b = rand_buf(&mut r, k * m);
+            let seq = matmul(&a, &b, n, k, m);
+            let pool = WorkerPool::new(workers);
+            let par = matmul_pool(Some(&pool), &a, &b, n, k, m);
+            for (i, (x, y)) in seq.iter().zip(&par).enumerate() {
+                crate::prop_assert!(
+                    x.to_bits() == y.to_bits(),
+                    "workers={workers} n={n} k={k} m={m}: elem {i} differs"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fused_gated_mlp_matches_ref() {
+        crate::util::proptest::check("fused gated mlp vs ref", 25, |rng| {
+            let n = rng.range(1, 70); // crosses the RB=32 row block edge
+            let d = rng.range(1, 50);
+            let m = rng.range(1, 140); // crosses the NB panel edge
+            let mut r = Prng::new(rng.next_u64());
+            let x = rand_buf(&mut r, n * d);
+            let up = rand_buf(&mut r, d * m);
+            let gate = rand_buf(&mut r, d * m);
+            let down = rand_buf(&mut r, m * d);
+            let want = gated_mlp_ref(&x, &up, &gate, &down, n, d, m);
+            let got = gated_mlp(&x, &up, &gate, &down, n, d, m);
+            let diff = max_abs_diff(&got, &want);
+            crate::prop_assert!(diff < 1e-5, "n={n} d={d} m={m}: diff {diff}");
+            // the parallel fused path is bit-identical to sequential
+            let pool = WorkerPool::new(3);
+            let w = GatedMlpWeights::pack(&up, &gate, &down, d, m);
+            let par = gated_mlp_fused(Some(&pool), &x, &w, n);
+            for (i, (a, b)) in got.iter().zip(&par).enumerate() {
+                crate::prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "n={n} d={d} m={m}: parallel elem {i} differs"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_bias_matches_manual_composition() {
+        let mut rng = Prng::new(7);
+        let (n, d, m) = (37, 13, 45);
+        let x = rand_buf(&mut rng, n * d);
+        let up = rand_buf(&mut rng, d * m);
+        let gate = rand_buf(&mut rng, d * m);
+        let down = rand_buf(&mut rng, m * d);
+        let b_up = rand_buf(&mut rng, m);
+        let b_gate = rand_buf(&mut rng, m);
+        let b_down = rand_buf(&mut rng, d);
+
+        // manual reference: biased projections composed from matmul_ref
+        let u = matmul_ref(&x, &up, n, d, m);
+        let g = matmul_ref(&x, &gate, n, d, m);
+        let mut act = vec![0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                act[i * m + j] =
+                    silu(u[i * m + j] + b_up[j]) * (g[i * m + j] + b_gate[j]);
+            }
+        }
+        let mut want = matmul_ref(&act, &down, n, m, d);
+        for i in 0..n {
+            for j in 0..d {
+                want[i * d + j] += b_down[j];
+            }
+        }
+
+        let w = GatedMlpWeights::pack(&up, &gate, &down, d, m)
+            .with_bias(&b_up, &b_gate, &b_down);
+        let got = gated_mlp_fused(None, &x, &w, n);
+        assert!(max_abs_diff(&got, &want) < 1e-5);
+    }
+
+    #[test]
+    fn packed_b_reuse_matches_fresh_pack() {
+        let mut rng = Prng::new(11);
+        let (k, m) = (19, 131);
+        let b = rand_buf(&mut rng, k * m);
+        let bp = PackedB::pack(&b, k, m);
+        assert_eq!((bp.k(), bp.m()), (k, m));
+        for n in [1usize, 5, 33] {
+            let a = rand_buf(&mut rng, n * k);
+            assert_eq!(matmul_packed(None, &a, &bp, n), matmul(&a, &b, n, k, m));
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_empty_or_zero() {
+        assert!(matmul(&[], &[0.0; 12], 0, 3, 4).is_empty());
+        assert_eq!(matmul(&[1.0, 2.0], &[], 2, 1, 0), Vec::<f32>::new());
+        // k = 0: no contraction terms → all zeros
+        let c = matmul(&[], &[], 2, 0, 3);
+        assert_eq!(c, vec![0.0; 6]);
     }
 }

@@ -34,17 +34,29 @@ use crate::util::{stats, Prng};
 /// Model + data hyper-parameters of the analytical setup.
 #[derive(Clone, Debug)]
 pub struct TheoryConfig {
+    /// Orthonormal-basis dimension (vocabulary of signed tokens).
     pub d: usize,
+    /// Number of experts.
     pub k: usize,
+    /// Neurons per expert.
     pub m: usize,
+    /// Tokens per sequence.
     pub n_tokens: usize,
+    /// Tokens each expert routes (expert-choice top-l).
     pub top_l: usize,
+    /// Rare-token rate alpha of the sampling model.
     pub alpha: f64,
+    /// SGD batch size.
     pub batch: usize,
+    /// SGD steps.
     pub steps: usize,
+    /// Expert learning rate.
     pub eta_e: f64,
+    /// Router learning rate.
     pub eta_r: f64,
+    /// Initialization scale.
     pub init_scale: f64,
+    /// Sampling / init seed.
     pub seed: u64,
 }
 
@@ -73,6 +85,7 @@ impl Default for TheoryConfig {
 pub struct Sequence {
     /// (basis index, sign) per position
     pub toks: Vec<(usize, f32)>,
+    /// Class label, +1 or -1.
     pub label: f32,
     /// position of the task-relevant token
     pub rel_pos: usize,
@@ -92,6 +105,7 @@ pub enum RelToken {
 }
 
 impl RelToken {
+    /// Basis index of the token (o1 = 0, o2 = 1).
     pub fn basis(&self) -> usize {
         match self {
             RelToken::PosO1 | RelToken::NegO1 => 0,
@@ -99,6 +113,7 @@ impl RelToken {
         }
     }
 
+    /// Sign of the token (+1 rare, -1 frequent).
     pub fn sign(&self) -> f32 {
         match self {
             RelToken::PosO1 | RelToken::PosO2 => 1.0,
@@ -106,6 +121,7 @@ impl RelToken {
         }
     }
 
+    /// Class label the token determines.
     pub fn label(&self) -> f32 {
         match self {
             RelToken::PosO1 | RelToken::NegO1 => 1.0,
@@ -113,6 +129,7 @@ impl RelToken {
         }
     }
 
+    /// All four task-relevant tokens, in reporting order.
     pub const ALL: [RelToken; 4] =
         [RelToken::PosO1, RelToken::NegO1, RelToken::PosO2, RelToken::NegO2];
 }
@@ -145,6 +162,7 @@ pub fn sample_sequence(cfg: &TheoryConfig, rng: &mut Prng) -> (Sequence, RelToke
 /// with fixed down-projection signs `a[s]`.
 #[derive(Clone, Debug)]
 pub struct TheoryMoe {
+    /// The hyper-parameters the model was built with.
     pub cfg: TheoryConfig,
     /// router columns, `sigma[s][dim]`
     pub sigma: Vec<Vec<f32>>,
@@ -155,6 +173,7 @@ pub struct TheoryMoe {
 }
 
 impl TheoryMoe {
+    /// Initialize router and experts at `init_scale` from `cfg.seed`.
     pub fn new(cfg: TheoryConfig) -> TheoryMoe {
         let mut rng = Prng::new(cfg.seed ^ 0x7E0);
         let sigma = (0..cfg.k)
@@ -218,6 +237,7 @@ impl TheoryMoe {
         f
     }
 
+    /// Model output with the trained (noise-free) weights.
     pub fn forward(&self, seq: &Sequence) -> f64 {
         self.forward_with(seq, &self.w)
     }
@@ -286,6 +306,7 @@ impl TheoryMoe {
         loss_sum / cfg.batch as f64
     }
 
+    /// Run the full SGD schedule; returns the per-step loss curve.
     pub fn train(&mut self) -> Vec<f64> {
         let mut rng = Prng::new(self.cfg.seed ^ 0x7EA1);
         (0..self.cfg.steps).map(|_| self.sgd_step(&mut rng)).collect()
@@ -369,10 +390,13 @@ pub struct Lemma41Result {
     pub scores: Vec<f64>,
     /// specialization p_v per expert per RelToken (indexed by RelToken::ALL)
     pub spec: Vec<Vec<f64>>,
-    /// mean score of frequent-token specialists vs rare-token specialists
+    /// mean score of the frequent-token specialists
     pub mean_freq: f64,
+    /// mean score of the rare-token specialists
     pub mean_rare: f64,
+    /// did the lemma's ordering hold?
     pub holds: bool,
+    /// training loss at the final step
     pub final_loss: f64,
 }
 
@@ -425,13 +449,15 @@ pub fn lemma41_experiment(cfg: &TheoryConfig) -> Lemma41Result {
 /// Outcome of the Theorem 4.2 sweep at one α.
 #[derive(Clone, Debug)]
 pub struct Thm42Result {
+    /// Rare-token rate the sweep ran at.
     pub alpha: f64,
     /// (c, accuracy) for all-analog
     pub analog_curve: Vec<(f64, f64)>,
     /// (c, accuracy) for heterogeneous (top-γ MaxNNScore digital)
     pub het_curve: Vec<(f64, f64)>,
-    /// max c with accuracy ≥ threshold, per scheme
+    /// max tolerable c for the all-analog scheme
     pub c_analog: f64,
+    /// max tolerable c for the heterogeneous scheme
     pub c_het: f64,
 }
 

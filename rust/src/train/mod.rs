@@ -39,10 +39,15 @@ pub fn rows_to_batch(rows: &[i32], b: usize, t: usize, pad: i32) -> (Vec<i32>, V
 /// Training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainOptions {
+    /// SGD steps to run.
     pub steps: usize,
+    /// Peak learning rate.
     pub lr: f32,
+    /// Linear-warmup steps.
     pub warmup: usize,
+    /// Record the loss every this many steps.
     pub log_every: usize,
+    /// Batch-sampling seed.
     pub seed: u64,
 }
 
@@ -55,12 +60,15 @@ impl Default for TrainOptions {
 /// One (step, nll) point of the loss curve.
 #[derive(Clone, Copy, Debug)]
 pub struct LossPoint {
+    /// Step index.
     pub step: usize,
+    /// Mean negative log-likelihood at that step.
     pub nll: f32,
 }
 
 /// Trainer state: device-resident params + momentum.
 pub struct Trainer {
+    /// The model configuration being trained.
     pub cfg: ModelConfig,
     exe: Rc<Executable>,
     params: Vec<xla::PjRtBuffer>,

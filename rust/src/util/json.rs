@@ -21,6 +21,7 @@ pub enum Json {
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -32,6 +33,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON file, naming the path in errors.
     pub fn parse_file(path: &std::path::Path) -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
@@ -40,6 +42,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// Required object member (error when absent or not an object).
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key '{key}'")),
@@ -47,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Optional object member.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -54,6 +58,7 @@ impl Json {
         }
     }
 
+    /// This value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -61,6 +66,7 @@ impl Json {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -69,6 +75,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// This value as an integer.
     pub fn as_i64(&self) -> Result<i64> {
         let x = self.as_f64()?;
         if x.fract() != 0.0 {
@@ -77,6 +84,7 @@ impl Json {
         Ok(x as i64)
     }
 
+    /// This value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -84,6 +92,7 @@ impl Json {
         }
     }
 
+    /// This value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -91,6 +100,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -98,6 +108,7 @@ impl Json {
         }
     }
 
+    /// This value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -118,24 +129,29 @@ impl Json {
             .collect()
     }
 
+    /// Array of non-negative integers -> Vec<usize>.
     pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
     // -- construction helpers ----------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// A number value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// A string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// An array of numbers.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }

@@ -42,6 +42,7 @@ impl Prng {
         Prng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the generator.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1]

@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with a title row and column headers.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -17,11 +18,13 @@ impl Table {
         }
     }
 
+    /// Append one row (cells in header order).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Render to an aligned ASCII string.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut w = vec![0usize; ncol];
@@ -60,6 +63,7 @@ impl Table {
         out
     }
 
+    /// Render and print to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

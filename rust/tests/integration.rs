@@ -9,7 +9,7 @@
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::aimc::quant::{adc_quant, dac_quant};
 use hetmoe::config::Meta;
-use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Session};
+use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Response, Session};
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
@@ -394,6 +394,69 @@ fn session_serves_heterogeneous_stream_through_backend_registry() {
     assert!(dig.energy_j > 0.0 && ana.energy_j > 0.0);
     let u = m.utilization();
     assert!(u > 0.0 && u <= 1.0, "utilization {u} out of range");
+}
+
+#[test]
+fn parallel_drain_matches_sequential_drain() {
+    // The engine's parallel pipeline (pool-parallel embedding/routing/
+    // pack + interleaved backend dispatch) must be a pure optimization:
+    // a workers=4 engine and the workers=1 sequential reference must
+    // produce byte-identical response streams on the same deployment.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+
+    let serve = |rt: &mut Runtime, workers: usize| -> Vec<Response> {
+        let engine = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .workers(workers)
+            .build(rt, &paths, &params)
+            .unwrap();
+        let mut session =
+            Session::new(rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+        let n = cfg.batch * 2 + 1; // full releases + a drained tail
+        let mut submitted = 0;
+        'outer: for task in &tasks {
+            for item in &task.items {
+                let (tk, tg, mk) =
+                    pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+                session
+                    .submit(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 })
+                    .unwrap();
+                submitted += 1;
+                if submitted == n {
+                    break 'outer;
+                }
+            }
+        }
+        session.drain().unwrap()
+    };
+    let seq = serve(&mut rt, 1);
+    let par = serve(&mut rt, 4);
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "request {}: parallel {} != sequential {}",
+            a.id,
+            b.score,
+            a.score
+        );
+    }
 }
 
 #[test]

@@ -104,9 +104,12 @@ fn main() -> Result<()> {
     println!("{}", session.metrics().report());
     for b in &session.metrics().backends {
         println!(
-            "{:>8}: {} dispatches, utilization {:.1}% ({} real / {} padded rows)",
+            "{:>8}: {} dispatches in {} device round trips ({:.1} chunks/trip), \
+             utilization {:.1}% ({} real / {} padded rows)",
             b.name,
             b.dispatches,
+            b.device_round_trips,
+            b.chunks_per_round_trip(),
             b.utilization() * 100.0,
             b.dispatched_tokens,
             b.padded_tokens
@@ -131,7 +134,8 @@ fn main() -> Result<()> {
         tg.extend_from_slice(g);
         mk.extend_from_slice(m);
     }
-    let mono = ev.score_rows(&rt, &mut params, &tk, &tg, &mk, &flags, meta.aimc.kappa, meta.aimc.lam)?;
+    let mono = ev
+        .score_rows(&rt, &mut params, &tk, &tg, &mk, &flags, meta.aimc.kappa, meta.aimc.lam)?;
     let mut max_diff = 0f64;
     for i in 0..n_check {
         max_diff = max_diff.max((responses[i].score - mono[i] as f64).abs());

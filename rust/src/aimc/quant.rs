@@ -25,9 +25,46 @@ pub fn beta_out_for(col_abs_max: f32, beta_in: f32, lam: f32) -> f32 {
     lam * beta_in * col_abs_max.max(1e-12)
 }
 
+/// Precomputed ADC calibration of one crossbar tile: the per-column
+/// output ranges of eq (5), which depend only on the programmed weights
+/// and the chip's (β_in, λ) — not on the activations.
+///
+/// `tile_mvm` used to rescan every weight column for `max|W_:,i|` on
+/// every call; for a batch of rows through one tile that scan is
+/// O(d·n) *per row*. Build a `TileCalib` once per tile and feed it to
+/// [`tile_mvm_calibrated`] to hoist it out of the row loop.
+pub struct TileCalib {
+    /// per-column β_out = λ · β_in · max|W_:,i| (eq 5)
+    pub beta_out: Vec<f32>,
+}
+
+impl TileCalib {
+    /// Calibrate one `[d, n]` row-major tile for DAC range `beta_in`
+    /// and ADC headroom `lam`.
+    pub fn new(w: &[f32], d: usize, n: usize, beta_in: f32, lam: f32) -> TileCalib {
+        assert_eq!(w.len(), d * n);
+        let mut col_max = vec![0f32; n];
+        for r in 0..d {
+            let row = &w[r * n..(r + 1) * n];
+            for (m, &v) in col_max.iter_mut().zip(row) {
+                *m = m.max(v.abs());
+            }
+        }
+        TileCalib {
+            beta_out: col_max.iter().map(|&m| beta_out_for(m, beta_in, lam)).collect(),
+        }
+    }
+}
+
 /// Full analog MVM through one crossbar tile (host simulator):
 /// `y = ADC(DAC(x) @ W)` for `x: [d]`, `w: [d, n]` row-major.
 /// Mirrors `kernels/ref.py::aimc_mvm_ref` for a single tile.
+///
+/// Thin wrapper over [`tile_mvm_calibrated`] that rebuilds the
+/// [`TileCalib`] per call — kept as the one-shot property-test oracle.
+/// Batch callers (many rows through one tile) should build the calib
+/// once instead.
+#[allow(clippy::too_many_arguments)]
 pub fn tile_mvm(
     x: &[f32],
     w: &[f32],
@@ -38,8 +75,27 @@ pub fn tile_mvm(
     bits_dac: u32,
     bits_adc: u32,
 ) -> Vec<f32> {
+    let calib = TileCalib::new(w, d, n, beta_in, lam);
+    tile_mvm_calibrated(x, w, d, n, &calib, beta_in, bits_dac, bits_adc)
+}
+
+/// [`tile_mvm`] against a precomputed [`TileCalib`], skipping the
+/// per-call column scan. Identical output to [`tile_mvm`] when `calib`
+/// was built with the same `(w, beta_in, lam)`.
+#[allow(clippy::too_many_arguments)]
+pub fn tile_mvm_calibrated(
+    x: &[f32],
+    w: &[f32],
+    d: usize,
+    n: usize,
+    calib: &TileCalib,
+    beta_in: f32,
+    bits_dac: u32,
+    bits_adc: u32,
+) -> Vec<f32> {
     assert_eq!(x.len(), d);
     assert_eq!(w.len(), d * n);
+    assert_eq!(calib.beta_out.len(), n);
     let xq: Vec<f32> = x.iter().map(|&v| dac_quant(v, beta_in, bits_dac)).collect();
     let mut y = vec![0f32; n];
     for r in 0..d {
@@ -52,15 +108,8 @@ pub fn tile_mvm(
             *yj += xr * wj;
         }
     }
-    let mut col_max = vec![0f32; n];
-    for r in 0..d {
-        for c in 0..n {
-            col_max[c] = col_max[c].max(w[r * n + c].abs());
-        }
-    }
-    for c in 0..n {
-        let bo = beta_out_for(col_max[c], beta_in, lam);
-        y[c] = adc_quant(y[c], bo, bits_adc);
+    for (yj, &bo) in y.iter_mut().zip(&calib.beta_out) {
+        *yj = adc_quant(*yj, bo, bits_adc);
     }
     y
 }
@@ -136,6 +185,49 @@ mod tests {
     #[test]
     fn beta_out_guards_zero_columns() {
         assert!(beta_out_for(0.0, 1.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn tile_calib_matches_per_call_scan() {
+        let (d, n) = (16, 4);
+        let mut rng = Prng::new(9);
+        let w: Vec<f32> = (0..d * n).map(|_| rng.gaussian_f32() * 0.1).collect();
+        let calib = TileCalib::new(&w, d, n, 4.0, 2.0);
+        assert_eq!(calib.beta_out.len(), n);
+        assert!(calib.beta_out.iter().all(|&b| b > 0.0));
+        for c in 0..n {
+            let col_max = (0..d).map(|r| w[r * n + c].abs()).fold(0f32, f32::max);
+            assert_eq!(calib.beta_out[c], beta_out_for(col_max, 4.0, 2.0));
+        }
+    }
+
+    #[test]
+    fn prop_calibrated_mvm_matches_oracle_wrapper() {
+        // property: hoisting the column scan into TileCalib never
+        // changes a single output bit vs the per-call oracle
+        crate::util::proptest::check("tile_mvm calib hoist", 30, |rng| {
+            let d = rng.range(1, 24);
+            let n = rng.range(1, 9);
+            let beta_in = 0.5 + rng.uniform_f32() * 4.0;
+            let lam = 0.5 + rng.uniform_f32() * 2.0;
+            let bits = 4 + (rng.below(9) as u32);
+            let x: Vec<f32> = (0..d).map(|_| rng.gaussian_f32() * 0.5).collect();
+            let w: Vec<f32> = (0..d * n).map(|_| rng.gaussian_f32() * 0.1).collect();
+            let want = tile_mvm(&x, &w, d, n, beta_in, lam, bits, bits);
+            let calib = TileCalib::new(&w, d, n, beta_in, lam);
+            // rows of a batch reuse one calib — same tile, same result
+            for _ in 0..2 {
+                let got =
+                    tile_mvm_calibrated(&x, &w, d, n, &calib, beta_in, bits, bits);
+                for (a, b) in want.iter().zip(&got) {
+                    crate::prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "d={d} n={n}: {a} != {b}"
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

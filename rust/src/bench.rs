@@ -427,6 +427,10 @@ fn metrics_backends_json(m: &Metrics) -> Json {
                 Json::obj(vec![
                     ("name", Json::str(b.name.clone())),
                     ("dispatches", Json::num(b.dispatches as f64)),
+                    ("device_round_trips", Json::num(b.device_round_trips as f64)),
+                    ("chunks_per_round_trip", Json::num(b.chunks_per_round_trip())),
+                    ("transfer_bytes", Json::num(b.transfer_bytes as f64)),
+                    ("alloc_bytes", Json::num(b.alloc_bytes as f64)),
                     ("wall_s", Json::num(b.wall.as_secs_f64())),
                     ("utilization", Json::num(b.utilization())),
                     ("busy_s", Json::num(b.busy_s)),
@@ -473,38 +477,40 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
 
     // serve the same stream through one engine configuration; waves of
     // one compiled batch give the per-wave throughput trajectory
-    let mut serve = |workers: usize| -> Result<(Vec<Response>, Metrics, f64, Vec<f64>)> {
-        let engine = EngineBuilder::new()
-            .model(cfg.clone())
-            .aimc(meta.aimc)
-            .placement(placement.clone())
-            .serve_cap(meta.serve_cap)
-            .workers(workers)
-            .build(&mut rt, &paths, &params)?;
-        let mut session =
-            Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
-        let mut responses = Vec::with_capacity(reqs.len());
-        let mut trajectory = Vec::new();
-        let t0 = Instant::now();
-        for wave in reqs.chunks(cfg.batch.max(1)) {
-            let tw = Instant::now();
-            for r in wave {
-                session.submit(r.clone())?;
+    let mut serve =
+        |workers: usize| -> Result<(Vec<Response>, Metrics, f64, Vec<f64>, f64)> {
+            let engine = EngineBuilder::new()
+                .model(cfg.clone())
+                .aimc(meta.aimc)
+                .placement(placement.clone())
+                .serve_cap(meta.serve_cap)
+                .workers(workers)
+                .build(&mut rt, &paths, &params)?;
+            let mut session =
+                Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+            let mut responses = Vec::with_capacity(reqs.len());
+            let mut trajectory = Vec::new();
+            let t0 = Instant::now();
+            for wave in reqs.chunks(cfg.batch.max(1)) {
+                let tw = Instant::now();
+                for r in wave {
+                    session.submit(r.clone())?;
+                }
+                responses.extend(session.drain()?);
+                let dt = tw.elapsed().as_secs_f64();
+                if dt > 0.0 {
+                    trajectory.push((wave.len() * t) as f64 / dt);
+                }
             }
-            responses.extend(session.drain()?);
-            let dt = tw.elapsed().as_secs_f64();
-            if dt > 0.0 {
-                trajectory.push((wave.len() * t) as f64 / dt);
-            }
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let metrics = session.metrics().clone();
-        Ok((responses, metrics, wall, trajectory))
-    };
+            let wall = t0.elapsed().as_secs_f64();
+            let occupancy = session.occupancy();
+            let metrics = session.metrics().clone();
+            Ok((responses, metrics, wall, trajectory, occupancy))
+        };
 
-    let (seq_r, _seq_m, seq_wall, _) = serve(1)?;
+    let (seq_r, _seq_m, seq_wall, _, _) = serve(1)?;
     let workers = default_workers();
-    let (par_r, par_m, par_wall, trajectory) = serve(workers)?;
+    let (par_r, par_m, par_wall, trajectory, occupancy) = serve(workers)?;
 
     let identical = seq_r.len() == par_r.len()
         && seq_r
@@ -536,6 +542,8 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         ),
         ("parallel_matches_sequential", Json::Bool(identical)),
         ("utilization", Json::num(par_m.utilization())),
+        ("batch_occupancy", Json::num(occupancy)),
+        ("alloc_bytes", Json::num(par_m.alloc_bytes as f64)),
         ("backends", metrics_backends_json(&par_m)),
         ("simulated_tokens_per_s", Json::num(par_m.simulated_tokens_per_s())),
         (

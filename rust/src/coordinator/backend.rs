@@ -16,6 +16,15 @@
 //! quantized middle tier, multi-tile analog) is: implement this trait,
 //! register it via `EngineBuilder::backend`, point the placement at the
 //! new slot.
+//!
+//! Dispatch is **batched**: the engine hands each backend one
+//! tier-contiguous [`ChunkBatch`] per layer through
+//! [`ExpertBackend::dispatch_many`]. The standard backends coalesce
+//! each compiled tier's host↔device traffic into a single blocking
+//! round trip (upload all slices → launch all runs → drain once); a
+//! custom backend only has to implement the per-chunk
+//! [`ExpertBackend::dispatch`] — the default `dispatch_many` loops over
+//! it and stays byte-identical to the coalesced path.
 
 use std::rc::Rc;
 
@@ -25,7 +34,7 @@ use crate::aimc::energy::{analog_batch_cost, AnalogPlacement};
 use crate::config::AimcConfig;
 use crate::digital::{digital_batch_cost, ArchSpec, DigitalPlacement, DigitalSpec};
 use crate::moe::placement::{BackendId, Placement};
-use crate::runtime::{ArtifactPaths, Executable, Runtime};
+use crate::runtime::{ArtifactPaths, Executable, Runtime, ScratchArena};
 
 /// Per-expert device-resident weights (up, gate, down) plus the registry
 /// id of the backend that serves the expert.
@@ -60,6 +69,85 @@ pub struct ExpertOutput {
     pub padded_rows: usize,
 }
 
+/// One chunk's slot inside a [`ChunkBatch`]: which expert it runs
+/// against, where its rows live in the coalesced buffer, and the tier
+/// capacity it was padded to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkSpec {
+    /// Index into the expert-weights slice passed to
+    /// [`ExpertBackend::dispatch_many`].
+    pub expert: usize,
+    /// First row of this chunk inside the batch buffer.
+    pub row_offset: usize,
+    /// Real token rows (the rest up to `padded` are zero padding).
+    pub rows: usize,
+    /// Tier capacity the chunk is padded to
+    /// ([`ExpertBackend::padded_rows`] of `rows`).
+    pub padded: usize,
+}
+
+/// A coalesced batch of expert chunks for one backend: every chunk the
+/// engine routed to this backend in one layer, gathered into a single
+/// `[total_rows, d]` host buffer.
+///
+/// Chunks are **tier-contiguous**: equal `padded` values are adjacent,
+/// so a backend can walk the batch in runs that share one compiled
+/// tier executable and coalesce each run's host↔device traffic into a
+/// single round trip (see [`tier_runs`]).
+pub struct ChunkBatch<'a> {
+    /// `[total_rows, d]` row-major gathered chunk inputs; chunk `c`
+    /// occupies rows `c.row_offset .. c.row_offset + c.padded`, real
+    /// rows first, zero padding after.
+    pub data: &'a [f32],
+    /// Row width (the model dimension d).
+    pub d: usize,
+    /// Chunk descriptors, tier-contiguous, offsets ascending.
+    pub chunks: &'a [ChunkSpec],
+}
+
+impl ChunkBatch<'_> {
+    /// Total (padded) rows of the batch buffer.
+    pub fn total_rows(&self) -> usize {
+        self.chunks.last().map_or(0, |c| c.row_offset + c.padded)
+    }
+}
+
+/// Result of a coalesced [`ExpertBackend::dispatch_many`] call.
+pub struct BatchOutput {
+    /// `[total_rows, d]` row-major expert-FFN outputs, laid out exactly
+    /// like the input [`ChunkBatch::data`].
+    pub data: Vec<f32>,
+    /// Coalesced upload→launch→drain dispatch cycles this call
+    /// performed — the pipeline-stall structure of the dispatch path,
+    /// not a count of individual buffer transfers (those are
+    /// `transfer_bytes`). The coalesced backends pay one cycle per tier
+    /// run; the per-chunk fallback interleaves upload, run, and fetch
+    /// per chunk and pays one per chunk (`docs/BENCHMARKS.md` §Transfer
+    /// accounting).
+    pub device_round_trips: u64,
+    /// Bytes moved across the host↔device boundary (padded chunk
+    /// inputs plus outputs).
+    pub transfer_bytes: u64,
+}
+
+/// Maximal runs of equal-tier chunks in a tier-contiguous batch:
+/// `(start..end, padded)` index ranges into [`ChunkBatch::chunks`].
+/// Each run is one coalesced round trip for the standard backends.
+pub fn tier_runs(chunks: &[ChunkSpec]) -> Vec<(std::ops::Range<usize>, usize)> {
+    let mut runs = Vec::new();
+    let mut start = 0;
+    while start < chunks.len() {
+        let padded = chunks[start].padded;
+        let mut end = start + 1;
+        while end < chunks.len() && chunks[end].padded == padded {
+            end += 1;
+        }
+        runs.push((start..end, padded));
+        start = end;
+    }
+    runs
+}
+
 /// One accelerator in the serving engine's registry.
 pub trait ExpertBackend {
     /// Stable short name for metrics / reports (e.g. `"digital"`).
@@ -88,6 +176,57 @@ pub trait ExpertBackend {
         rows: usize,
         weights: &ExpertWeights,
     ) -> Result<ExpertOutput>;
+
+    /// Run every chunk of a coalesced, tier-contiguous [`ChunkBatch`]
+    /// against the layer's device-resident `weights`
+    /// (`ChunkSpec::expert` indexes into the slice), returning the
+    /// outputs in the same single-buffer layout.
+    ///
+    /// The standard backends override this with a pipelined
+    /// implementation: per tier run, all chunk slices upload, all
+    /// executions launch against the resident weight buffers, and one
+    /// blocking drain collects the outputs — one device round trip per
+    /// `(backend, tier)` instead of one per chunk. This default loops
+    /// over [`ExpertBackend::dispatch`] so custom backends stay correct
+    /// unchanged (and is the reference the
+    /// `batched_dispatch_matches_per_chunk_dispatch` identity test
+    /// compares against); it pays one round trip per chunk.
+    ///
+    /// `scratch` recycles the output buffer across layers and batches —
+    /// the engine returns it via
+    /// [`ScratchArena::give`] after the combine stage.
+    fn dispatch_many(
+        &self,
+        rt: &Runtime,
+        batch: &ChunkBatch,
+        weights: &[ExpertWeights],
+        scratch: &mut ScratchArena,
+    ) -> Result<BatchOutput> {
+        let d = batch.d;
+        let mut data = scratch.take(batch.total_rows() * d);
+        let mut transfer_bytes = 0u64;
+        for ch in batch.chunks {
+            let lo = ch.row_offset * d;
+            let hi = lo + ch.padded * d;
+            let out = self.dispatch(rt, &batch.data[lo..hi], ch.rows, &weights[ch.expert])?;
+            if out.padded_rows != ch.padded {
+                bail!(
+                    "backend '{}' ran chunk at tier {} but the batch was \
+                     gathered for tier {}",
+                    self.name(),
+                    out.padded_rows,
+                    ch.padded
+                );
+            }
+            data[lo..hi].copy_from_slice(&out.data[..ch.padded * d]);
+            transfer_bytes += 2 * (ch.padded * d * std::mem::size_of::<f32>()) as u64;
+        }
+        Ok(BatchOutput {
+            data,
+            device_round_trips: batch.chunks.len() as u64,
+            transfer_bytes,
+        })
+    }
 
     /// Appendix-A simulated cost of one batch of `batch_tokens` tokens
     /// flowing through this backend's share of the model.
@@ -120,6 +259,81 @@ fn run_padded(
     args.extend_from_slice(extra);
     let outs = exe.run(&args)?;
     Ok(ExpertOutput { data: outs[0].to_vec::<f32>()?, padded_rows: cap })
+}
+
+/// Coalesced dispatch shared by the digital and analog backends: walk
+/// the tier-contiguous batch in [`tier_runs`], and for each run —
+/// chunks that share one compiled tier executable of capacity `cap` —
+/// upload every chunk slice of the single gathered buffer, launch every
+/// execution against the device-resident expert weights without
+/// fetching, then drain all outputs in one sweep. One
+/// upload→launch→drain cycle per tier run, instead of an interleaved
+/// upload→run→download stall per chunk. (The per-buffer transfers
+/// inside a cycle still happen — `transfer_bytes` counts them; on an
+/// asynchronous PJRT device the drain's first fetch overlaps the
+/// remaining launches, while on the synchronous CPU testbed the phase
+/// split reorders rather than overlaps the same work.)
+///
+/// `pick_tier(padded)` maps a chunk's gathered tier capacity to the
+/// executable compiled for it.
+#[allow(clippy::too_many_arguments)]
+fn run_batch_pipelined<'e>(
+    rt: &Runtime,
+    batch: &ChunkBatch,
+    weights: &[ExpertWeights],
+    scratch: &mut ScratchArena,
+    d: usize,
+    name: &str,
+    pick_tier: impl Fn(usize) -> Result<&'e Rc<Executable>>,
+    extra: &[&xla::PjRtBuffer],
+) -> Result<BatchOutput> {
+    if batch.d != d {
+        bail!(
+            "ChunkBatch row width {} does not match backend model width {d}",
+            batch.d
+        );
+    }
+    if batch.data.len() != batch.total_rows() * d {
+        bail!(
+            "ChunkBatch buffer holds {} floats but its specs cover {} rows × {d}",
+            batch.data.len(),
+            batch.total_rows()
+        );
+    }
+    let mut data = scratch.take(batch.total_rows() * d);
+    let mut round_trips = 0u64;
+    let mut transfer_bytes = 0u64;
+    for (run, cap) in tier_runs(batch.chunks) {
+        let exe = pick_tier(cap)?;
+        let chunks = &batch.chunks[run];
+        // upload phase: every chunk of the tier, sliced straight out of
+        // the one gathered buffer
+        let mut inputs = Vec::with_capacity(chunks.len());
+        for ch in chunks {
+            let lo = ch.row_offset * d;
+            inputs.push(rt.upload_f32(&batch.data[lo..lo + cap * d], &[cap, d])?);
+        }
+        // launch phase: run against the resident weight buffers, keep
+        // every output on the device (no host transfer yet)
+        let mut pending = Vec::with_capacity(chunks.len());
+        for (ch, xb) in chunks.iter().zip(&inputs) {
+            let w = &weights[ch.expert];
+            let mut args: Vec<&xla::PjRtBuffer> = vec![xb, &w.up, &w.gate, &w.down];
+            args.extend_from_slice(extra);
+            pending.push(exe.run_buffers(&args)?);
+        }
+        // drain phase: one blocking sweep scatters the tier's outputs
+        // into the coalesced result buffer
+        for (ch, bufs) in chunks.iter().zip(&pending) {
+            let out = Executable::fetch_f32(bufs)
+                .with_context(|| format!("draining {name} tier-{cap} batch"))?;
+            let lo = ch.row_offset * d;
+            data[lo..lo + cap * d].copy_from_slice(&out[..cap * d]);
+            transfer_bytes += 2 * (cap * d * std::mem::size_of::<f32>()) as u64;
+        }
+        round_trips += 1;
+    }
+    Ok(BatchOutput { data, device_round_trips: round_trips, transfer_bytes })
 }
 
 /// The digital accelerator: exact FP expert FFN (AOT HLO), A100-roofline
@@ -203,6 +417,25 @@ impl ExpertBackend for DigitalBackend {
             _ => (full, self.serve_cap),
         };
         run_padded(rt, chunk, cap, self.d_model, exe, &[], weights)
+    }
+
+    fn dispatch_many(
+        &self,
+        rt: &Runtime,
+        batch: &ChunkBatch,
+        weights: &[ExpertWeights],
+        scratch: &mut ScratchArena,
+    ) -> Result<BatchOutput> {
+        run_batch_pipelined(
+            rt,
+            batch,
+            weights,
+            scratch,
+            self.d_model,
+            self.name(),
+            |cap| pick_tier(cap, &self.exe, &self.exe_small, self.serve_cap, self.small_cap),
+            &[],
+        )
     }
 
     fn cost(&self, batch_tokens: usize) -> StageCost {
@@ -305,6 +538,27 @@ impl ExpertBackend for AnalogBackend {
         run_padded(rt, chunk, cap, self.d_model, exe, &[kappa, lam], weights)
     }
 
+    fn dispatch_many(
+        &self,
+        rt: &Runtime,
+        batch: &ChunkBatch,
+        weights: &[ExpertWeights],
+        scratch: &mut ScratchArena,
+    ) -> Result<BatchOutput> {
+        let kappa = self.kappa_buf.as_ref().context("κ buffer missing")?;
+        let lam = self.lam_buf.as_ref().context("λ buffer missing")?;
+        run_batch_pipelined(
+            rt,
+            batch,
+            weights,
+            scratch,
+            self.d_model,
+            self.name(),
+            |cap| pick_tier(cap, &self.exe, &self.exe_small, self.serve_cap, self.small_cap),
+            &[kappa, lam],
+        )
+    }
+
     fn cost(&self, batch_tokens: usize) -> StageCost {
         let c = analog_batch_cost(&self.arch, &self.cost_place, batch_tokens);
         StageCost { latency_s: c.latency_s, energy_j: c.energy_j }
@@ -315,6 +569,27 @@ impl ExpertBackend for AnalogBackend {
 /// executable (§Perf iteration 2).
 pub fn small_cap_of(serve_cap: usize) -> usize {
     (serve_cap / 8).max(8)
+}
+
+/// Resolve a gathered tier capacity to the executable compiled for it.
+/// The engine gathers chunks at `padded_rows(rows)`, so `cap` is always
+/// one of the two compiled tiers; anything else is a caller bug.
+fn pick_tier<'e>(
+    cap: usize,
+    full: &'e Option<Rc<Executable>>,
+    small: &'e Option<Rc<Executable>>,
+    serve_cap: usize,
+    small_cap: usize,
+) -> Result<&'e Rc<Executable>> {
+    if cap == small_cap {
+        if let Some(exe) = small {
+            return Ok(exe);
+        }
+    }
+    if cap == serve_cap {
+        return full.as_ref().context("backend uploads not called");
+    }
+    bail!("no compiled tier of capacity {cap} (tiers: {small_cap}, {serve_cap})")
 }
 
 #[cfg(test)]
@@ -333,5 +608,40 @@ mod tests {
         let c = StageCost::default();
         assert_eq!(c.latency_s, 0.0);
         assert_eq!(c.energy_j, 0.0);
+    }
+
+    fn spec(expert: usize, row_offset: usize, rows: usize, padded: usize) -> ChunkSpec {
+        ChunkSpec { expert, row_offset, rows, padded }
+    }
+
+    #[test]
+    fn tier_runs_group_equal_capacities() {
+        // tier-contiguous batch: two small-tier chunks, then three full
+        let chunks = [
+            spec(0, 0, 3, 8),
+            spec(1, 8, 8, 8),
+            spec(2, 16, 20, 64),
+            spec(0, 80, 64, 64),
+            spec(3, 144, 1, 64),
+        ];
+        let runs = tier_runs(&chunks);
+        assert_eq!(runs, vec![(0..2, 8), (2..5, 64)]);
+        // round trips per layer = active (backend, tier) pairs, not chunks
+        assert_eq!(runs.len(), 2);
+    }
+
+    #[test]
+    fn tier_runs_of_empty_batch_is_empty() {
+        assert!(tier_runs(&[]).is_empty());
+    }
+
+    #[test]
+    fn chunk_batch_total_rows_from_last_chunk() {
+        let chunks = [spec(0, 0, 2, 8), spec(1, 8, 60, 64)];
+        let data = vec![0.0f32; 72 * 4];
+        let batch = ChunkBatch { data: &data, d: 4, chunks: &chunks };
+        assert_eq!(batch.total_rows(), 72);
+        let empty = ChunkBatch { data: &[], d: 4, chunks: &[] };
+        assert_eq!(empty.total_rows(), 0);
     }
 }

@@ -64,6 +64,10 @@ pub struct Batcher {
     pub rejected: u64,
     /// running tick (monotone; advanced by the caller)
     pub now: u64,
+    /// requests released across all batches (occupancy accounting)
+    released_requests: u64,
+    /// batches released (occupancy accounting)
+    released_batches: u64,
 }
 
 impl Batcher {
@@ -78,6 +82,8 @@ impl Batcher {
             queue: VecDeque::new(),
             rejected: 0,
             now: 0,
+            released_requests: 0,
+            released_batches: 0,
         }
     }
 
@@ -105,7 +111,23 @@ impl Batcher {
 
     /// Release a batch if the policy says so: full batch available, or
     /// the oldest request has waited out, or `drain` forces a flush.
+    /// Allocates a fresh `Vec` per release; the serving loop uses
+    /// [`Batcher::next_batch_into`] with a persistent scratch instead.
     pub fn next_batch(&mut self, drain: bool) -> Option<(Vec<Request>, ReleaseReason)> {
+        let mut batch = Vec::new();
+        self.next_batch_into(drain, &mut batch).map(|reason| (batch, reason))
+    }
+
+    /// [`Batcher::next_batch`] into a caller-provided buffer (cleared
+    /// first), so a long-lived serving loop reuses one allocation for
+    /// every drain tick. Returns the release reason when a batch was
+    /// released; `out` is left empty otherwise.
+    pub fn next_batch_into(
+        &mut self,
+        drain: bool,
+        out: &mut Vec<Request>,
+    ) -> Option<ReleaseReason> {
+        out.clear();
         if self.queue.is_empty() {
             return None;
         }
@@ -120,8 +142,21 @@ impl Batcher {
             return None;
         };
         let take = self.queue.len().min(self.max_batch);
-        let batch = self.queue.drain(..take).collect();
-        Some((batch, reason))
+        out.extend(self.queue.drain(..take));
+        self.released_requests += take as u64;
+        self.released_batches += 1;
+        Some(reason)
+    }
+
+    /// Average fill fraction of released batches: released requests
+    /// over released batches × `max_batch` (1.0 = every release was a
+    /// full compiled batch; 0.0 before any release). The `hetmoe serve`
+    /// summary surfaces this as "batch occupancy".
+    pub fn occupancy(&self) -> f64 {
+        if self.released_batches == 0 {
+            return 0.0;
+        }
+        self.released_requests as f64 / (self.released_batches * self.max_batch as u64) as f64
     }
 }
 
@@ -178,6 +213,29 @@ mod tests {
         assert!(!b.submit(req(4)));
         assert_eq!(b.rejected, 1);
         assert_eq!(b.depth(), 3);
+    }
+
+    #[test]
+    fn next_batch_into_reuses_buffer_and_tracks_occupancy() {
+        let mut b = Batcher::new(4, 100, 12);
+        assert_eq!(b.occupancy(), 0.0, "no releases yet");
+        let mut scratch = vec![req(77)]; // stale contents must clear
+        for id in 0..4 {
+            b.submit(req(id));
+        }
+        assert_eq!(b.next_batch_into(false, &mut scratch), Some(ReleaseReason::Full));
+        assert_eq!(scratch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        let cap = scratch.capacity();
+        b.submit(req(4));
+        b.submit(req(5));
+        assert_eq!(b.next_batch_into(true, &mut scratch), Some(ReleaseReason::Drained));
+        assert_eq!(scratch.len(), 2);
+        assert_eq!(scratch.capacity(), cap, "drain tick must not reallocate");
+        // 6 requests over 2 releases of capacity 4 → 0.75
+        assert!((b.occupancy() - 0.75).abs() < 1e-12);
+        // empty queue: no release, scratch cleared
+        assert_eq!(b.next_batch_into(true, &mut scratch), None);
+        assert!(scratch.is_empty());
     }
 
     #[test]

@@ -22,6 +22,16 @@ pub struct BackendMetrics {
     pub name: String,
     /// expert chunks dispatched to this backend
     pub dispatches: u64,
+    /// coalesced upload→launch→drain dispatch cycles this backend
+    /// performed (one per (layer, tier) run; per-chunk fallback: one
+    /// per chunk — see `docs/BENCHMARKS.md` §Transfer accounting)
+    pub device_round_trips: u64,
+    /// bytes moved across this backend's host↔device boundary (padded
+    /// chunk inputs + outputs)
+    pub transfer_bytes: u64,
+    /// fresh scratch-arena bytes allocated on behalf of this backend's
+    /// dispatches (flat at 0 once the arena is warm)
+    pub alloc_bytes: u64,
     /// real wall time spent in this backend's dispatches
     pub wall: Duration,
     /// real token rows this backend's dispatches carried
@@ -45,6 +55,17 @@ impl BackendMetrics {
             0.0
         }
     }
+
+    /// Expert chunks carried per blocking device round trip — the
+    /// coalescing factor of the batched dispatch path (1.0 = the old
+    /// one-round-trip-per-chunk behavior).
+    pub fn chunks_per_round_trip(&self) -> f64 {
+        if self.device_round_trips > 0 {
+            self.dispatches as f64 / self.device_round_trips as f64
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Aggregate serving metrics for one engine: request/batch counters,
@@ -64,6 +85,9 @@ pub struct Metrics {
     pub dispatched_tokens: u64,
     /// padding waste in expert batches (cap - occupancy)
     pub padded_tokens: u64,
+    /// cumulative fresh bytes the engine's scratch arena allocated
+    /// (engine-side staging + all backends; flat once the arena is warm)
+    pub alloc_bytes: u64,
 
     // real wall time per coordinator stage
     /// end-to-end batch wall time
@@ -74,6 +98,8 @@ pub struct Metrics {
     pub route_wall: Duration,
     /// expert-chunk gather/pack wall time (host, pool-parallel)
     pub pack_wall: Duration,
+    /// gate-weighted output scatter wall time (host, pool-parallel)
+    pub scatter_wall: Duration,
     /// shared-expert / dense-FFN wall time (host, fused kernel)
     pub shared_wall: Duration,
     /// LM-head + scoring wall time (digital accelerator)
@@ -155,14 +181,24 @@ impl Metrics {
         }
         let mut backend_wall = String::new();
         let mut busy_line = String::new();
+        let mut transfer_line = String::new();
         for b in &self.backends {
             backend_wall.push_str(&format!(" {}-ffn={:.3}s", b.name, b.wall.as_secs_f64()));
             busy_line.push_str(&format!(" {} busy={:.4}s", b.name, b.busy_s));
+            transfer_line.push_str(&format!(
+                " {}: {} round trips ({:.1} chunks/trip, {} B moved)",
+                b.name,
+                b.device_round_trips,
+                b.chunks_per_round_trip(),
+                b.transfer_bytes,
+            ));
         }
         format!(
             "requests={} batches={} tokens={}\n\
              dispatches: {dispatch_line} utilization={:.2}\n\
-             wall: total={:.3}s attn={:.3}s route={:.3}s pack={:.3}s{backend_wall} \
+             transfers:{transfer_line} alloc={} B\n\
+             wall: total={:.3}s attn={:.3}s route={:.3}s pack={:.3}s \
+             scatter={:.3}s{backend_wall} \
              shared={:.3}s lm={:.3}s → {:.0} tok/s\n\
              simulated accelerator clocks (Appendix-A cost model, this \
              model's dims):{busy_line} \
@@ -171,10 +207,12 @@ impl Metrics {
             self.batches,
             self.tokens,
             self.utilization(),
+            self.alloc_bytes,
             self.total_wall.as_secs_f64(),
             self.attn_wall.as_secs_f64(),
             self.route_wall.as_secs_f64(),
             self.pack_wall.as_secs_f64(),
+            self.scatter_wall.as_secs_f64(),
             self.shared_wall.as_secs_f64(),
             self.lm_wall.as_secs_f64(),
             self.wall_tokens_per_s(),
@@ -255,5 +293,19 @@ mod tests {
         assert!(r.contains("digital=3"));
         assert!(r.contains("utilization="));
         assert!(r.contains("pack="));
+        assert!(r.contains("round trips"));
+        assert!(r.contains("alloc="));
+    }
+
+    #[test]
+    fn chunks_per_round_trip_measures_coalescing() {
+        let mut m = Metrics::default();
+        let b = m.backend_mut(0, "digital");
+        b.dispatches = 12;
+        b.device_round_trips = 3;
+        b.transfer_bytes = 4096;
+        assert!((m.backends[0].chunks_per_round_trip() - 4.0).abs() < 1e-12);
+        // untouched backend reports 0 without dividing by zero
+        assert_eq!(BackendMetrics::default().chunks_per_round_trip(), 0.0);
     }
 }

@@ -30,14 +30,21 @@
 //! Host-side stages parallelize across the engine's
 //! [`WorkerPool`](crate::runtime::WorkerPool) (`EngineBuilder::workers`,
 //! default `$HETMOE_WORKERS` / available parallelism): the embedding
-//! gather, router scoring, shared-expert fused gated-MLP, and the
-//! gather/pack of every expert chunk run on the pool — the chunk
-//! packing covers *both* backends' queues at once, so neither
-//! accelerator's host-side work serializes behind the other. PJRT
-//! itself is not `Send` and its dispatches are synchronous, so device
-//! calls stay on the coordinating thread. All pool work uses static
-//! partitioning, which keeps serving outputs byte-identical for every
-//! worker count (`workers(1)` is the sequential reference).
+//! gather, router scoring, shared-expert fused gated-MLP, the
+//! gather/pack of every expert chunk, and the gate-weighted output
+//! scatter run on the pool — the chunk packing covers *both* backends'
+//! queues at once, so neither accelerator's host-side work serializes
+//! behind the other. PJRT itself is not `Send`, so device calls stay on
+//! the coordinating thread; expert chunks flow through the coalesced
+//! [`backend::ExpertBackend::dispatch_many`] path, which gathers each
+//! backend's chunks into one tier-contiguous buffer and pays one
+//! blocking device round trip per `(backend, tier)` per layer instead
+//! of one per chunk. All host buffers on the hot path (pack buffers,
+//! chunk batches, activation staging) are recycled through a
+//! [`ScratchArena`], so steady-state batches allocate nothing. All pool
+//! work uses static partitioning, which keeps serving outputs
+//! byte-identical for every worker count (`workers(1)` is the
+//! sequential reference).
 
 pub mod backend;
 pub mod batcher;
@@ -45,7 +52,8 @@ pub mod metrics;
 pub mod session;
 
 pub use backend::{
-    AnalogBackend, DigitalBackend, ExpertBackend, ExpertOutput, ExpertWeights, StageCost,
+    AnalogBackend, BatchOutput, ChunkBatch, ChunkSpec, DigitalBackend, ExpertBackend,
+    ExpertOutput, ExpertWeights, StageCost,
 };
 pub use batcher::{Batcher, ReleaseReason, Request, RequestId, Response};
 pub use metrics::{BackendMetrics, Metrics};
@@ -59,7 +67,7 @@ use crate::config::{AimcConfig, ModelConfig};
 use crate::moe::placement::Placement;
 use crate::moe::score::RouterStats;
 use crate::runtime::pool::{default_workers, WorkerPool};
-use crate::runtime::{ArtifactPaths, Executable, ParamStore, Runtime};
+use crate::runtime::{ArtifactPaths, Executable, ParamStore, Runtime, ScratchArena};
 use crate::tensor;
 
 struct LayerHost {
@@ -274,6 +282,7 @@ impl EngineBuilder {
             engine_metrics.backend_mut(i, b.name()); // pre-register names
         }
         let pool = WorkerPool::new(self.workers.unwrap_or_else(default_workers));
+        let route_groups = vec![Vec::new(); cfg.n_experts];
         Ok(Engine {
             metrics: engine_metrics,
             router_stats,
@@ -282,6 +291,8 @@ impl EngineBuilder {
             serve_cap,
             placement,
             pool,
+            scratch: ScratchArena::new(),
+            route_groups,
             backends,
             attn_exe,
             lm_exe,
@@ -313,8 +324,13 @@ pub struct Engine {
     /// Per-(layer, expert) routing statistics for calibration baselines.
     pub router_stats: RouterStats,
 
-    /// host-side worker pool (embedding / routing / pack / fused FFN)
+    /// host-side worker pool (embedding / routing / pack / fused FFN /
+    /// output scatter)
     pool: WorkerPool,
+    /// recycled hot-path buffers (pack, chunk batches, activations)
+    scratch: ScratchArena,
+    /// per-expert routing groups, reused across layers and batches
+    route_groups: Vec<Vec<(usize, f32)>>,
     backends: Vec<Box<dyn ExpertBackend>>,
     attn_exe: Rc<Executable>,
     lm_exe: Rc<Executable>,
@@ -349,6 +365,11 @@ impl Engine {
         self.pool.workers()
     }
 
+    /// The engine's scratch arena (hit rate / allocation accounting).
+    pub fn scratch(&self) -> &ScratchArena {
+        &self.scratch
+    }
+
     /// Serve one batch of requests through the full pipeline, returning
     /// one response per request (same order).
     pub fn serve_batch(&mut self, rt: &Runtime, reqs: &[Request]) -> Result<Vec<Response>> {
@@ -366,7 +387,7 @@ impl Engine {
             targets[i * t..(i + 1) * t].copy_from_slice(&r.targets);
             mask[i * t..(i + 1) * t].copy_from_slice(&r.mask);
         }
-        let mut x = vec![0f32; b * t * d];
+        let mut x = self.scratch.take(b * t * d);
         {
             let (embed, pos, toks) = (&self.embed, &self.pos, &tokens);
             self.pool.run_on_row_bands(b * t, d, &mut x, |range, band| {
@@ -391,27 +412,33 @@ impl Engine {
                 &xb, &ab[0], &ab[1], &ab[2], &ab[3], &ab[4], &ab[5], &self.zero_buf,
                 &self.kappa_buf, &self.lam_buf,
             ])?;
-            x = outs[0].to_vec::<f32>()?;
+            // the device fetch allocates its own buffer; recycle the
+            // previous activation staging into the arena
+            self.scratch.give(std::mem::replace(&mut x, outs[0].to_vec::<f32>()?));
             self.metrics.attn_wall += ta.elapsed();
 
             // router + expert dispatch (coordinator)
-            let mut u = vec![0f32; b * t * d];
+            let mut u = self.scratch.take(b * t * d);
             {
                 let lh = &self.layers[l];
                 tensor::layer_norm(&x, &lh.ln2_s, &lh.ln2_b, d, &mut u);
             }
 
-            let mut y = vec![0f32; b * t * d];
+            let mut y = self.scratch.take(b * t * d);
             if self.cfg.is_moe_layer(l) {
                 self.dispatch_experts(rt, l, &u, &mut y, b * t)?;
             }
             if let Some(w) = &self.layers[l].shared {
                 let ts = std::time::Instant::now();
-                let sy = tensor::gated_mlp_fused(Some(&self.pool), &u, w, b * t);
+                let mut sy = self.scratch.take(b * t * d);
+                tensor::gated_mlp_fused_into(Some(&self.pool), &u, w, b * t, &mut sy);
                 tensor::axpy(1.0, &sy, &mut y);
+                self.scratch.give(sy);
                 self.metrics.shared_wall += ts.elapsed();
             }
             tensor::axpy(1.0, &y, &mut x);
+            self.scratch.give(u);
+            self.scratch.give(y);
         }
 
         // ---- LM head + scoring (digital) ----
@@ -429,6 +456,7 @@ impl Engine {
             &self.lam_buf,
         ])?;
         let logp = outs[0].to_vec::<f32>()?;
+        self.scratch.give(x); // recycle the final activation staging
         self.metrics.lm_wall += tl.elapsed();
 
         let mut responses = Vec::with_capacity(reqs.len());
@@ -452,6 +480,7 @@ impl Engine {
         self.metrics.batches += 1;
         self.metrics.requests += reqs.len() as u64;
         self.metrics.tokens += batch_tokens as u64;
+        self.metrics.alloc_bytes = self.scratch.alloc_bytes();
         self.metrics.total_wall += t0.elapsed();
         Ok(responses)
     }
@@ -461,13 +490,21 @@ impl Engine {
     /// are gate-weighted into `y`.
     ///
     /// Parallel structure: router scores are computed per token across
-    /// the pool; chunk inputs for *all* backends are gathered/packed in
-    /// parallel (the cross-backend overlap — neither backend's packing
-    /// waits for the other's); then the (not-`Send`, synchronous) PJRT
-    /// dispatches walk the chunk plan on the coordinating thread in
-    /// expert order. The plan order is a pure function of the routing
-    /// result — never of the worker count — so serving output is
-    /// byte-identical from `workers(1)` to `workers(n)`.
+    /// the pool; each backend's chunks are gathered into **one**
+    /// tier-contiguous [`ChunkBatch`] buffer in parallel (the
+    /// cross-backend overlap — neither backend's packing waits for the
+    /// other's); the (not-`Send`) PJRT work then flows through one
+    /// coalesced [`ExpertBackend::dispatch_many`] per backend on the
+    /// coordinating thread — one blocking device round trip per
+    /// `(backend, tier)` instead of one per chunk; finally the
+    /// gate-weighted combine scatters outputs back into `y` across the
+    /// pool's row bands. Every per-token accumulation runs in plan
+    /// (expert) order — the pre-refactor order — and the plan is a pure
+    /// function of the routing result, never of the worker count, so
+    /// serving output is byte-identical from `workers(1)` to
+    /// `workers(n)` *and* to the per-chunk [`ExpertBackend::dispatch`]
+    /// reference path (see the
+    /// `batched_dispatch_matches_per_chunk_dispatch` integration test).
     fn dispatch_experts(
         &mut self,
         rt: &Runtime,
@@ -476,18 +513,33 @@ impl Engine {
         y: &mut [f32],
         n: usize,
     ) -> Result<()> {
-        let d = self.cfg.d_model;
-        let e_n = self.cfg.n_experts;
-        let top_k = self.cfg.top_k;
+        let Engine {
+            cfg,
+            pool,
+            layers,
+            experts,
+            backends,
+            metrics,
+            router_stats,
+            scratch,
+            route_groups,
+            ..
+        } = self;
+        let d = cfg.d_model;
+        let e_n = cfg.n_experts;
+        let top_k = cfg.top_k;
 
         // token-choice routing (coordinator-owned): score tokens in
-        // parallel, then build expert groups serially in token order
+        // parallel with per-band reused temporaries, then build expert
+        // groups serially in token order into the recycled group store
         let tr = std::time::Instant::now();
         let mut picks = vec![(0usize, 0f32); n * top_k];
         {
-            let router = &self.layers[layer].router;
-            self.pool.run_on_row_bands(n, top_k, &mut picks, |range, out| {
+            let router = &layers[layer].router;
+            pool.run_on_row_bands(n, top_k, &mut picks, |range, out| {
                 let mut scores = vec![0f32; e_n];
+                let mut top: Vec<usize> = Vec::with_capacity(e_n);
+                let mut gates: Vec<f32> = Vec::with_capacity(top_k);
                 for (bi, i) in range.enumerate() {
                     let urow = &u[i * d..(i + 1) * d];
                     scores.fill(0.0);
@@ -500,8 +552,9 @@ impl Engine {
                             *s += ur * w;
                         }
                     }
-                    let top = tensor::top_k(&scores, top_k);
-                    let mut gates: Vec<f32> = top.iter().map(|&e| scores[e]).collect();
+                    tensor::top_k_into(&scores, top_k, &mut top);
+                    gates.clear();
+                    gates.extend(top.iter().map(|&e| scores[e]));
                     tensor::softmax(&mut gates);
                     for (slot, (&e, &g)) in out[bi * top_k..(bi + 1) * top_k]
                         .iter_mut()
@@ -512,14 +565,16 @@ impl Engine {
                 }
             });
         }
-        let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); e_n];
+        for g in route_groups.iter_mut() {
+            g.clear();
+        }
         for i in 0..n {
             for &(e, g) in &picks[i * top_k..(i + 1) * top_k] {
-                groups[e].push((i, g));
-                self.router_stats.record(layer, e, g as f64);
+                route_groups[e].push((i, g));
+                router_stats.record(layer, e, g as f64);
             }
         }
-        self.metrics.route_wall += tr.elapsed();
+        metrics.route_wall += tr.elapsed();
 
         // chunk plan: split per-expert groups by the owning backend's
         // capacity, in expert order (the pre-refactor accumulation
@@ -529,71 +584,156 @@ impl Engine {
             backend: usize,
             rows: &'g [(usize, f32)],
             padded: usize,
+            /// row offset inside the owning backend's batch buffer
+            row_offset: usize,
         }
         let mut plan: Vec<Chunk> = Vec::new();
-        for (e, group) in groups.iter().enumerate() {
+        for (e, group) in route_groups.iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            let bid = self.experts[layer][e].backend;
-            let be = &self.backends[bid];
+            let bid = experts[layer][e].backend;
+            let be = &backends[bid];
             for rows in group.chunks(be.capacity()) {
                 plan.push(Chunk {
                     expert: e,
                     backend: bid,
                     rows,
                     padded: be.padded_rows(rows.len()),
+                    row_offset: 0,
                 });
             }
         }
 
-        // gather/pack every chunk's tier-padded input in parallel — one
-        // allocation per chunk, written straight into upload layout.
+        // batch layout: per backend, order chunks tier-contiguously
+        // (stable by (tier, plan index)) and assign each a row offset
+        // in the backend's single coalesced buffer
+        let n_back = backends.len();
+        let mut order: Vec<Vec<usize>> = vec![Vec::new(); n_back];
+        for (ci, ch) in plan.iter().enumerate() {
+            order[ch.backend].push(ci);
+        }
+        let mut totals = vec![0usize; n_back];
+        for (b, ord) in order.iter_mut().enumerate() {
+            ord.sort_by_key(|&ci| (plan[ci].padded, ci));
+            for &ci in ord.iter() {
+                plan[ci].row_offset = totals[b];
+                totals[b] += plan[ci].padded;
+            }
+        }
+
+        // gather: every chunk's rows copy straight into its slot of the
+        // owning backend's batch buffer, in parallel across the pool.
         // This is where the two backends' host work overlaps: the pool
         // packs digital and analog chunks concurrently instead of one
-        // backend's queue at a time. (PJRT dispatch itself is
-        // synchronous, so reordering dispatches would buy nothing.)
+        // backend's queue at a time. Arena buffers arrive zeroed, so
+        // tier padding needs no extra pass.
         let tp = std::time::Instant::now();
-        let mut inputs: Vec<Vec<f32>> = Vec::new();
-        inputs.resize_with(plan.len(), Vec::new);
+        let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(n_back);
+        for &total in &totals {
+            inputs.push(scratch.take(total * d));
+        }
         {
-            let plan_ref = &plan;
-            self.pool.for_each_mut(&mut inputs, |ci, buf| {
-                let ch = &plan_ref[ci];
-                let mut xe = vec![0f32; ch.padded * d];
-                for (row, &(tok, _)) in ch.rows.iter().enumerate() {
-                    xe[row * d..(row + 1) * d].copy_from_slice(&u[tok * d..(tok + 1) * d]);
+            let mut tasks: Vec<(usize, &mut [f32])> = Vec::with_capacity(plan.len());
+            for (b, buf) in inputs.iter_mut().enumerate() {
+                let mut rest: &mut [f32] = buf.as_mut_slice();
+                for &ci in &order[b] {
+                    let (dst, tail) = rest.split_at_mut(plan[ci].padded * d);
+                    tasks.push((ci, dst));
+                    rest = tail;
                 }
-                *buf = xe;
+            }
+            let plan_ref = &plan;
+            pool.for_each_mut(&mut tasks, |_, (ci, dst)| {
+                let ch = &plan_ref[*ci];
+                for (row, &(tok, _)) in ch.rows.iter().enumerate() {
+                    dst[row * d..(row + 1) * d].copy_from_slice(&u[tok * d..(tok + 1) * d]);
+                }
             });
         }
-        self.metrics.pack_wall += tp.elapsed();
+        metrics.pack_wall += tp.elapsed();
 
-        // dispatch: PJRT executes on the coordinating thread, walking
-        // the plan in expert order; combine is a gate-weighted
-        // scatter-add
-        for (ci, ch) in plan.iter().enumerate() {
-            let eb = &self.experts[layer][ch.expert];
-            let be = &self.backends[ch.backend];
-            let td = std::time::Instant::now();
-            let out = be.dispatch(rt, &inputs[ci], ch.rows.len(), eb)?;
-            for (row, &(tok, gate)) in ch.rows.iter().enumerate() {
-                tensor::axpy(
-                    gate,
-                    &out.data[row * d..(row + 1) * d],
-                    &mut y[tok * d..(tok + 1) * d],
-                );
+        // dispatch: one coalesced dispatch_many per backend on the
+        // coordinating thread — upload once, run per chunk against the
+        // resident weights, drain once per tier
+        let mut outputs: Vec<Option<BatchOutput>> = Vec::with_capacity(n_back);
+        for b in 0..n_back {
+            if order[b].is_empty() {
+                outputs.push(None);
+                continue;
             }
-            let name = be.name();
-            let real = ch.rows.len() as u64;
-            let pad = (out.padded_rows - ch.rows.len()) as u64;
-            let bm = self.metrics.backend_mut(ch.backend, name);
-            bm.dispatches += 1;
+            let specs: Vec<ChunkSpec> = order[b]
+                .iter()
+                .map(|&ci| {
+                    let ch = &plan[ci];
+                    ChunkSpec {
+                        expert: ch.expert,
+                        row_offset: ch.row_offset,
+                        rows: ch.rows.len(),
+                        padded: ch.padded,
+                    }
+                })
+                .collect();
+            let be = &backends[b];
+            let td = std::time::Instant::now();
+            let alloc0 = scratch.alloc_bytes();
+            let batch = ChunkBatch { data: &inputs[b], d, chunks: &specs };
+            let out = be.dispatch_many(rt, &batch, &experts[layer], scratch)?;
+            let mut real = 0u64;
+            let mut pad = 0u64;
+            for s in &specs {
+                real += s.rows as u64;
+                pad += (s.padded - s.rows) as u64;
+            }
+            let bm = metrics.backend_mut(b, be.name());
             bm.wall += td.elapsed();
+            bm.dispatches += specs.len() as u64;
+            bm.device_round_trips += out.device_round_trips;
+            bm.transfer_bytes += out.transfer_bytes;
+            bm.alloc_bytes += scratch.alloc_bytes() - alloc0;
             bm.dispatched_tokens += real;
             bm.padded_tokens += pad;
-            self.metrics.dispatched_tokens += real;
-            self.metrics.padded_tokens += pad;
+            metrics.dispatched_tokens += real;
+            metrics.padded_tokens += pad;
+            outputs.push(Some(out));
+        }
+
+        // combine: gate-weighted scatter-add across the pool's row
+        // bands. Each band walks the plan in expert order and applies
+        // only its own tokens, so every token's accumulation order is
+        // the plan order — independent of worker count and identical to
+        // the per-chunk reference path.
+        let ts = std::time::Instant::now();
+        {
+            let plan_ref = &plan;
+            let outputs_ref = &outputs;
+            pool.run_on_row_bands(n, d, y, |range, band| {
+                for ch in plan_ref {
+                    let Some(out) = &outputs_ref[ch.backend] else {
+                        continue;
+                    };
+                    for (row, &(tok, gate)) in ch.rows.iter().enumerate() {
+                        if range.contains(&tok) {
+                            let src = (ch.row_offset + row) * d;
+                            let dst = (tok - range.start) * d;
+                            tensor::axpy(
+                                gate,
+                                &out.data[src..src + d],
+                                &mut band[dst..dst + d],
+                            );
+                        }
+                    }
+                }
+            });
+        }
+        metrics.scatter_wall += ts.elapsed();
+
+        // recycle the coalesced buffers for the next layer / batch
+        for buf in inputs {
+            scratch.give(buf);
+        }
+        for out in outputs.into_iter().flatten() {
+            scratch.give(out.data);
         }
         Ok(())
     }

@@ -30,13 +30,15 @@ pub struct Session<'rt> {
     batcher: Batcher,
     done: Vec<Response>,
     next_id: RequestId,
+    /// released-batch scratch, reused across every drain tick
+    batch: Vec<Request>,
 }
 
 impl<'rt> Session<'rt> {
     /// Wrap an engine and a batching policy into a serving session.
     /// Request ids restart from 0 per session.
     pub fn new(rt: &'rt Runtime, engine: Engine, batcher: Batcher) -> Session<'rt> {
-        Session { rt, engine, batcher, done: Vec::new(), next_id: 0 }
+        Session { rt, engine, batcher, done: Vec::new(), next_id: 0, batch: Vec::new() }
     }
 
     /// Admit one request. The session assigns and returns the request id
@@ -87,10 +89,26 @@ impl<'rt> Session<'rt> {
     }
 
     fn pump(&mut self, drain: bool) -> Result<()> {
-        while let Some((batch, _reason)) = self.batcher.next_batch(drain) {
-            self.done.extend(self.engine.serve_batch(self.rt, &batch)?);
+        // the release buffer is a session-lifetime scratch: one
+        // allocation serves every drain tick (Batcher::next_batch_into)
+        let mut batch = std::mem::take(&mut self.batch);
+        while self.batcher.next_batch_into(drain, &mut batch).is_some() {
+            match self.engine.serve_batch(self.rt, &batch) {
+                Ok(responses) => self.done.extend(responses),
+                Err(e) => {
+                    self.batch = batch;
+                    return Err(e);
+                }
+            }
         }
+        self.batch = batch;
         Ok(())
+    }
+
+    /// Average fill fraction of the batches released so far (see
+    /// [`Batcher::occupancy`]).
+    pub fn occupancy(&self) -> f64 {
+        self.batcher.occupancy()
     }
 
     /// The engine's serving metrics (wall + simulated clocks).

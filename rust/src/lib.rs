@@ -24,8 +24,9 @@
 //!   owns: cache-blocked/packed matmul and fused gated-MLP kernels with
 //!   a retained scalar reference
 //! - [`runtime`] — PJRT executable loading and execution, parameter
-//!   store, and the scoped-thread [`runtime::WorkerPool`] for host-side
-//!   parallelism
+//!   store, the scoped-thread [`runtime::WorkerPool`] for host-side
+//!   parallelism, and the recycling [`runtime::ScratchArena`] behind
+//!   the allocation-free serving hot path
 //! - [`aimc`] — NVM tiles, programming noise (eq 3), DAC/ADC (eqs 4-5),
 //!   calibration, energy/latency model
 //! - [`digital`] — digital accelerator roofline model (eq 16)
@@ -36,7 +37,9 @@
 //! - [`train`] — Rust-driven training through the AOT `train_step`
 //! - [`coordinator`] — the heterogeneous serving engine behind the
 //!   backend-trait API: implement
-//!   [`coordinator::ExpertBackend`] per accelerator, assemble with
+//!   [`coordinator::ExpertBackend`] per accelerator (coalesced batched
+//!   dispatch via [`coordinator::ExpertBackend::dispatch_many`] — one
+//!   device round trip per backend tier, not per chunk), assemble with
 //!   [`coordinator::EngineBuilder`] (worker count via `.workers(n)`),
 //!   serve request streams through [`coordinator::Session`] (see
 //!   `DESIGN.md` §serving API)

@@ -331,15 +331,25 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         responses.len()
     );
 
+    let occupancy = session.occupancy();
     let m = session.metrics();
     let mut t = Table::new("serve summary", &["metric", "value"]);
     t.row(vec!["requests".into(), m.requests.to_string()]);
     t.row(vec!["batches".into(), m.batches.to_string()]);
     t.row(vec!["tokens".into(), m.tokens.to_string()]);
     t.row(vec![
+        "batch occupancy".into(),
+        format!("{:.1}% of compiled batch", occupancy * 100.0),
+    ]);
+    t.row(vec![
         "expert-batch utilization".into(),
         format!("{:.1}% ({} real / {} padded)", m.utilization() * 100.0,
                 m.dispatched_tokens, m.padded_tokens),
+    ]);
+    t.row(vec![
+        "scratch arena".into(),
+        format!("{} B allocated, hit rate {:.2}",
+                m.alloc_bytes, session.engine().scratch().hit_rate()),
     ]);
     t.row(vec![
         "wall throughput".into(),
@@ -359,6 +369,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 b.wall.as_secs_f64(),
                 b.busy_s,
                 b.energy_j
+            ),
+        ]);
+        t.row(vec![
+            format!("{} transfers", b.name),
+            format!(
+                "{} device round trips ({:.1} chunks/trip), {} B moved",
+                b.device_round_trips,
+                b.chunks_per_round_trip(),
+                b.transfer_bytes
             ),
         ]);
     }
@@ -429,6 +448,16 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
                     entry.get("parallel")?.get("tokens_per_s")?.as_f64()?,
                     entry.get("parallel_matches_sequential")?.as_bool()?,
                 );
+                for b in entry.get("backends")?.as_arr()? {
+                    println!(
+                        "  {}: {:.0} device round trips ({:.1} chunks/trip), \
+                         {:.0} B moved",
+                        b.get("name")?.as_str()?,
+                        b.get("device_round_trips")?.as_f64()?,
+                        b.get("chunks_per_round_trip")?.as_f64()?,
+                        b.get("transfer_bytes")?.as_f64()?,
+                    );
+                }
                 entries.push(entry);
             }
             let json = Json::obj(vec![

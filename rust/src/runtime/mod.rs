@@ -13,13 +13,17 @@
 //!
 //! Host-side compute around the PJRT calls (blocked kernels, routing,
 //! chunk gather) parallelizes through [`pool::WorkerPool`] — see that
-//! module for the `Send`-safety boundary.
+//! module for the `Send`-safety boundary — and recycles its buffers
+//! through a [`scratch::ScratchArena`], so steady-state serving
+//! performs no per-chunk or per-layer allocation.
 
 pub mod params;
 pub mod pool;
+pub mod scratch;
 
 pub use params::{Manifest, ParamStore, TensorSpec};
 pub use pool::WorkerPool;
+pub use scratch::ScratchArena;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -123,13 +127,31 @@ impl Executable {
     }
 
     /// Execute and return device buffers without host transfer (for
-    /// chaining: e.g. the train loop feeds outputs back as inputs).
+    /// chaining: e.g. the train loop feeds outputs back as inputs, and
+    /// the coalesced expert dispatch launches a whole tier before its
+    /// one blocking [`Executable::fetch_f32`] drain).
     pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
         let mut outs = self
             .exe
             .execute_b(args)
             .with_context(|| format!("executing {}", self.name))?;
         Ok(std::mem::take(&mut outs[0]))
+    }
+
+    /// Fetch the first tuple element of a [`Executable::run_buffers`]
+    /// result to the host as f32s — the blocking half of the
+    /// launch-then-drain pattern (all lowered computations use
+    /// `return_tuple=True`, so the single output buffer is a tuple).
+    pub fn fetch_f32(bufs: &[xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let buf = bufs
+            .first()
+            .ok_or_else(|| anyhow!("executable returned no output buffers"))?;
+        let lit = buf.to_literal_sync().context("fetching device output")?;
+        let parts = lit.to_tuple()?;
+        let first = parts
+            .first()
+            .ok_or_else(|| anyhow!("executable output tuple is empty"))?;
+        Ok(first.to_vec::<f32>()?)
     }
 }
 

@@ -3,11 +3,16 @@
 //! PJRT handles are raw pointers (`Runtime` is not `Send`), so device
 //! dispatches always run on the coordinating thread. Everything *around*
 //! them — cache-blocked matmuls, router scoring, expert-chunk
-//! gather/pack — is pure host work over `&[f32]` slices and parallelizes
-//! cleanly. This pool covers exactly that: it partitions index ranges or
-//! disjoint output bands across short-lived scoped threads
-//! (`std::thread::scope`), so no `'static` bounds, no channels, and no
-//! locks are needed; every helper is a fork-join barrier.
+//! gather/pack into the coalesced per-backend batch buffers, and the
+//! gate-weighted output scatter — is pure host work over `&[f32]`
+//! slices and parallelizes cleanly. This pool covers exactly that: it
+//! partitions index ranges or disjoint output bands across short-lived
+//! scoped threads (`std::thread::scope`), so no `'static` bounds, no
+//! channels, and no locks are needed; every helper is a fork-join
+//! barrier. (The gather hands [`WorkerPool::for_each_mut`] pre-split
+//! disjoint `&mut [f32]` slots of one arena buffer; the scatter walks
+//! the chunk plan per [`WorkerPool::run_on_row_bands`] band, so each
+//! token's accumulation order never depends on the worker count.)
 //!
 //! Determinism: all helpers use *static* partitioning (contiguous
 //! chunks), and callers only ever write disjoint output regions, so

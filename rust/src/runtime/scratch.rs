@@ -1,0 +1,231 @@
+//! Reusable `f32` scratch buffers for the serving hot path.
+//!
+//! Before the batched-dispatch refactor the coordinator allocated a
+//! fresh `Vec` for every expert-chunk pack buffer, every chunk batch,
+//! every per-layer activation staging buffer, and every fused-MLP
+//! output — per chunk, per layer, per batch. A [`ScratchArena`] replaces
+//! that churn with a checkout/recycle discipline: [`ScratchArena::take`]
+//! hands out a zeroed buffer of the requested length (reusing a
+//! previously recycled allocation when one is large enough),
+//! [`ScratchArena::give`] returns it for reuse. After the first batch
+//! warms the arena, steady-state serving performs no buffer allocation
+//! at all — [`ScratchArena::alloc_bytes`] goes flat, which
+//! `BENCH_serve.json` records per backend (see `docs/BENCHMARKS.md`
+//! §Transfer accounting).
+//!
+//! Determinism: a checked-out buffer is always `len` zeros — exactly
+//! the contents of a fresh `vec![0.0; len]` — so recycling buffers can
+//! never change serving output (the
+//! `scratch_arena_reuse_matches_fresh_allocation` integration test and
+//! the property test below pin this).
+
+/// Most buffers [`ScratchArena::give`] will park for reuse; further
+/// gives drop their buffer instead, bounding arena memory even when
+/// callers give more than they take (see [`ScratchArena::give`]).
+pub const MAX_RETAINED: usize = 32;
+
+/// A recycling pool of `f32` buffers.
+///
+/// Not thread-safe by design: the arena lives on the coordinating
+/// thread next to the PJRT runtime; pool workers receive disjoint
+/// sub-slices of already-checked-out buffers, never the arena itself.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    free: Vec<Vec<f32>>,
+    takes: u64,
+    hits: u64,
+    alloc_bytes: u64,
+}
+
+impl ScratchArena {
+    /// An empty arena. The first [`ScratchArena::take`] of each buffer
+    /// size allocates; subsequent takes recycle.
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements.
+    ///
+    /// Reuses the smallest recycled buffer whose capacity fits (best
+    /// fit, so one large buffer is not burned on a small request);
+    /// allocates fresh — and counts it in
+    /// [`ScratchArena::alloc_bytes`] — only when nothing fits. The
+    /// returned contents are always `len` zeros, identical to
+    /// `vec![0.0; len]`.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        self.takes += 1;
+        let mut best: Option<(usize, usize)> = None; // (slot, capacity)
+        for (i, buf) in self.free.iter().enumerate() {
+            let cap = buf.capacity();
+            let better = match best {
+                None => true,
+                Some((_, best_cap)) => cap < best_cap,
+            };
+            if cap >= len && better {
+                best = Some((i, cap));
+            }
+        }
+        if let Some((i, _)) = best {
+            self.hits += 1;
+            let mut buf = self.free.swap_remove(i);
+            buf.clear();
+            buf.resize(len, 0.0);
+            return buf;
+        }
+        self.alloc_bytes += (len * std::mem::size_of::<f32>()) as u64;
+        vec![0.0; len]
+    }
+
+    /// Return a buffer to the arena for reuse. Zero-capacity buffers
+    /// are dropped (nothing to recycle), and so is the incoming buffer
+    /// once [`MAX_RETAINED`] buffers are already parked — the serving
+    /// engine gives back one externally allocated device-fetch buffer
+    /// per layer on top of its balanced take/give pairs, so an uncapped
+    /// free list would grow by `n_layers` buffers per batch forever.
+    /// The cap bounds retention at the steady-state working set while
+    /// keeping every hot-path checkout a hit.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 && self.free.len() < MAX_RETAINED {
+            self.free.push(buf);
+        }
+    }
+
+    /// Cumulative bytes of *fresh* allocation performed by
+    /// [`ScratchArena::take`] (arena misses). Flat across batches once
+    /// the arena is warm — the serving metrics snapshot this per batch.
+    pub fn alloc_bytes(&self) -> u64 {
+        self.alloc_bytes
+    }
+
+    /// Checkouts served from a recycled buffer, over total checkouts.
+    pub fn hit_rate(&self) -> f64 {
+        if self.takes > 0 {
+            self.hits as f64 / self.takes as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Buffers currently parked in the arena.
+    pub fn retained(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_sized() {
+        let mut a = ScratchArena::new();
+        let b = a.take(7);
+        assert_eq!(b, vec![0.0; 7]);
+        assert_eq!(a.alloc_bytes(), 28);
+    }
+
+    #[test]
+    fn recycle_hits_and_stops_allocating() {
+        let mut a = ScratchArena::new();
+        let mut b = a.take(16);
+        b.fill(3.5); // dirty it — the next take must still come back zeroed
+        a.give(b);
+        let b2 = a.take(16);
+        assert_eq!(b2, vec![0.0; 16]);
+        assert_eq!(a.alloc_bytes(), 64, "second take must not allocate");
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smaller_take_reuses_larger_buffer() {
+        let mut a = ScratchArena::new();
+        a.give(a_buf(32));
+        let b = a.take(10);
+        assert_eq!(b.len(), 10);
+        assert_eq!(a.alloc_bytes(), 0);
+        assert_eq!(a.retained(), 0);
+    }
+
+    #[test]
+    fn best_fit_spares_the_big_buffer() {
+        let mut a = ScratchArena::new();
+        a.give(a_buf(1024));
+        a.give(a_buf(8));
+        let small = a.take(8);
+        assert_eq!(small.capacity(), 8, "best fit should pick the 8-cap buffer");
+        let big = a.take(1024);
+        assert_eq!(big.capacity(), 1024);
+        assert_eq!(a.alloc_bytes(), 0);
+    }
+
+    #[test]
+    fn too_small_free_buffers_do_not_satisfy() {
+        let mut a = ScratchArena::new();
+        a.give(a_buf(4));
+        let b = a.take(9);
+        assert_eq!(b.len(), 9);
+        assert_eq!(a.alloc_bytes(), 36);
+        assert_eq!(a.retained(), 1, "the 4-cap buffer stays parked");
+    }
+
+    #[test]
+    fn retention_is_capped() {
+        // gives beyond MAX_RETAINED drop their buffer: an unbalanced
+        // caller (the engine gives one device-fetch buffer per layer
+        // on top of its take/give pairs) must not grow the arena
+        // forever
+        let mut a = ScratchArena::new();
+        for _ in 0..MAX_RETAINED + 10 {
+            a.give(a_buf(4));
+        }
+        assert_eq!(a.retained(), MAX_RETAINED);
+        // parked buffers still serve checkouts
+        let b = a.take(4);
+        assert_eq!(b, vec![0.0; 4]);
+        assert_eq!(a.alloc_bytes(), 0);
+        assert_eq!(a.retained(), MAX_RETAINED - 1);
+    }
+
+    #[test]
+    fn zero_len_take_and_give_are_noops() {
+        let mut a = ScratchArena::new();
+        let b = a.take(0);
+        assert!(b.is_empty());
+        assert_eq!(a.alloc_bytes(), 0);
+        a.give(Vec::new());
+        assert_eq!(a.retained(), 0);
+    }
+
+    #[test]
+    fn prop_checkout_always_matches_fresh_allocation() {
+        // property: under any take/give interleaving, a checked-out
+        // buffer is indistinguishable from vec![0.0; len]
+        crate::util::proptest::check("scratch arena vs fresh alloc", 50, |rng| {
+            let mut arena = ScratchArena::new();
+            let mut held: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..rng.range(1, 40) {
+                if rng.below(3) == 0 && !held.is_empty() {
+                    let i = rng.below(held.len());
+                    arena.give(held.swap_remove(i));
+                } else {
+                    let len = rng.range(0, 64);
+                    let mut buf = arena.take(len);
+                    crate::prop_assert!(
+                        buf == vec![0.0f32; len],
+                        "take({len}) not zeroed/sized"
+                    );
+                    // dirty it so recycling without re-zeroing would show
+                    buf.iter_mut().for_each(|v| *v = 1.0);
+                    held.push(buf);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn a_buf(cap: usize) -> Vec<f32> {
+        let mut v = Vec::with_capacity(cap);
+        v.resize(cap, 1.0);
+        v
+    }
+}

@@ -173,12 +173,22 @@ pub fn softmax(xs: &mut [f32]) {
 /// Indices of the k largest values (descending by value; stable on ties
 /// by lower index first — matches jax.lax.top_k).
 pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let mut idx = Vec::new();
+    top_k_into(xs, k, &mut idx);
+    idx
+}
+
+/// [`top_k`] into a caller-provided index buffer — the serving router
+/// calls this once per token, so reusing `idx` removes a per-token
+/// allocation from the hot path. Identical selection and ordering to
+/// [`top_k`] (it is the same sort).
+pub fn top_k_into(xs: &[f32], k: usize, idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..xs.len());
     idx.sort_by(|&a, &b| {
         xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b))
     });
     idx.truncate(k);
-    idx
 }
 
 /// ℓ2 norm of a slice.
@@ -349,18 +359,35 @@ pub fn matmul_pool(
 
 /// Blocked matmul against a pre-packed B: `c[n, bp.m] = a[n, bp.k] @ B`.
 pub fn matmul_packed(pool: Option<&WorkerPool>, a: &[f32], bp: &PackedB, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), n * bp.k);
     let mut c = vec![0f32; n * bp.m];
+    matmul_packed_into(pool, a, bp, n, &mut c);
+    c
+}
+
+/// [`matmul_packed`] writing into a caller-provided `[n, bp.m]` slice
+/// (overwritten, not accumulated into) — the serving engine feeds it
+/// recycled [`ScratchArena`](crate::runtime::ScratchArena) buffers so
+/// steady-state batches allocate nothing. Byte-identical to
+/// [`matmul_packed`] for every pool width.
+pub fn matmul_packed_into(
+    pool: Option<&WorkerPool>,
+    a: &[f32],
+    bp: &PackedB,
+    n: usize,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), n * bp.k);
+    assert_eq!(c.len(), n * bp.m);
+    c.fill(0.0);
     if n == 0 || bp.m == 0 {
-        return c;
+        return;
     }
     match pool {
         Some(p) if !p.is_sequential() && n > 1 => {
-            p.run_on_row_bands(n, bp.m, &mut c, |rows, band| matmul_band(a, bp, rows, band));
+            p.run_on_row_bands(n, bp.m, c, |rows, band| matmul_band(a, bp, rows, band));
         }
-        _ => matmul_band(a, bp, 0..n, &mut c),
+        _ => matmul_band(a, bp, 0..n, c),
     }
-    c
 }
 
 /// SiLU activation (matches the L2 model).
@@ -500,25 +527,50 @@ pub fn gated_mlp_fused(
     w: &GatedMlpWeights,
     n: usize,
 ) -> Vec<f32> {
-    assert_eq!(x.len(), n * w.d);
     let mut y = vec![0f32; n * w.d];
+    gated_mlp_fused_into(pool, x, w, n, &mut y);
+    y
+}
+
+/// [`gated_mlp_fused`] writing into a caller-provided `[n, w.d]` slice
+/// (overwritten, not accumulated into) — the serving engine's
+/// shared-expert stage runs on recycled
+/// [`ScratchArena`](crate::runtime::ScratchArena) buffers through this.
+/// Byte-identical to [`gated_mlp_fused`] for every pool width.
+pub fn gated_mlp_fused_into(
+    pool: Option<&WorkerPool>,
+    x: &[f32],
+    w: &GatedMlpWeights,
+    n: usize,
+    y: &mut [f32],
+) {
+    assert_eq!(x.len(), n * w.d);
+    assert_eq!(y.len(), n * w.d);
+    y.fill(0.0);
     if n == 0 || w.d == 0 {
-        return y;
+        return;
     }
     match pool {
         Some(p) if !p.is_sequential() && n > 1 => {
-            p.run_on_row_bands(n, w.d, &mut y, |rows, band| gated_mlp_band(x, w, rows, band));
+            p.run_on_row_bands(n, w.d, y, |rows, band| gated_mlp_band(x, w, rows, band));
         }
-        _ => gated_mlp_band(x, w, 0..n, &mut y),
+        _ => gated_mlp_band(x, w, 0..n, y),
     }
-    y
 }
 
 /// Gated MLP `silu(x@up) * (x@gate) @ down` on the host — the serving
 /// path for shared experts / the DeepSeek dense FFN (always digital).
 /// Thin wrapper over the fused blocked kernel; [`gated_mlp_ref`] keeps
 /// the scalar reference semantics.
-pub fn gated_mlp(x: &[f32], up: &[f32], gate: &[f32], down: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+pub fn gated_mlp(
+    x: &[f32],
+    up: &[f32],
+    gate: &[f32],
+    down: &[f32],
+    n: usize,
+    d: usize,
+    m: usize,
+) -> Vec<f32> {
     let w = GatedMlpWeights::pack(up, gate, down, d, m);
     gated_mlp_fused(None, x, &w, n)
 }
@@ -760,6 +812,47 @@ mod tests {
             .with_bias(&b_up, &b_gate, &b_down);
         let got = gated_mlp_fused(None, &x, &w, n);
         assert!(max_abs_diff(&got, &want) < 1e-5);
+    }
+
+    #[test]
+    fn top_k_into_reuses_buffer_and_matches_top_k() {
+        let mut idx = vec![99usize; 8]; // stale contents must not leak
+        for xs in [vec![0.1f32, 0.9, 0.5, 0.9], vec![2.0f32, -1.0, 0.0]] {
+            for k in 1..=xs.len() {
+                top_k_into(&xs, k, &mut idx);
+                assert_eq!(idx, top_k(&xs, k), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_kernels_on_dirty_buffers() {
+        // the _into contract: overwrite (zero then compute), so a
+        // recycled dirty buffer gives byte-identical results to a
+        // fresh allocation — the ScratchArena reuse path rests on this
+        let mut rng = Prng::new(23);
+        let (n, d, m) = (21, 17, 150); // crosses the NB panel edge
+        let a = rand_buf(&mut rng, n * d);
+        let b = rand_buf(&mut rng, d * m);
+        let bp = PackedB::pack(&b, d, m);
+        let pool = WorkerPool::new(3);
+        for p in [None, Some(&pool)] {
+            let want = matmul_packed(p, &a, &bp, n);
+            let mut c = vec![7.5f32; n * m]; // dirty
+            matmul_packed_into(p, &a, &bp, n, &mut c);
+            assert_eq!(c, want);
+        }
+
+        let up = rand_buf(&mut rng, d * m);
+        let gate = rand_buf(&mut rng, d * m);
+        let down = rand_buf(&mut rng, m * d);
+        let w = GatedMlpWeights::pack(&up, &gate, &down, d, m);
+        for p in [None, Some(&pool)] {
+            let want = gated_mlp_fused(p, &a, &w, n);
+            let mut y = vec![-3.25f32; n * d]; // dirty
+            gated_mlp_fused_into(p, &a, &w, n, &mut y);
+            assert_eq!(y, want);
+        }
     }
 
     #[test]

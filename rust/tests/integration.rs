@@ -9,7 +9,10 @@
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::aimc::quant::{adc_quant, dac_quant};
 use hetmoe::config::Meta;
-use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Response, Session};
+use hetmoe::coordinator::{
+    AnalogBackend, Batcher, DigitalBackend, EngineBuilder, ExpertBackend, ExpertOutput,
+    ExpertWeights, Request, Response, Session, StageCost,
+};
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
@@ -107,15 +110,17 @@ fn expert_ffn_analog_matches_rust_tile_simulator() {
     };
     let beta_up = kappa * std + 1e-6;
     let mvm = |inp: &[f32], w: &[f32], rows: usize, cols: usize, beta: f32| -> Vec<f32> {
+        // one tile serves the whole batch: calibrate once, not per row
+        let calib = hetmoe::aimc::quant::TileCalib::new(w, rows, cols, beta, lam);
         let mut out = vec![0f32; cap * cols];
         for i in 0..cap {
-            let y = hetmoe::aimc::quant::tile_mvm(
+            let y = hetmoe::aimc::quant::tile_mvm_calibrated(
                 &inp[i * rows..(i + 1) * rows],
                 w,
                 rows,
                 cols,
+                &calib,
                 beta,
-                lam,
                 8,
                 8,
             );
@@ -456,6 +461,244 @@ fn parallel_drain_matches_sequential_drain() {
             b.score,
             a.score
         );
+    }
+}
+
+/// Forwards everything to the wrapped backend but deliberately does NOT
+/// override `dispatch_many`, so batched dispatches fall back to the
+/// trait's default per-chunk loop — the reference path of the
+/// coalesced-dispatch identity test below.
+struct PerChunk<B: ExpertBackend>(B);
+
+impl<B: ExpertBackend> ExpertBackend for PerChunk<B> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn uploads(
+        &mut self,
+        rt: &mut Runtime,
+        paths: &ArtifactPaths,
+    ) -> anyhow::Result<()> {
+        self.0.uploads(rt, paths)
+    }
+    fn capacity(&self) -> usize {
+        self.0.capacity()
+    }
+    fn padded_rows(&self, rows: usize) -> usize {
+        self.0.padded_rows(rows)
+    }
+    fn dispatch(
+        &self,
+        rt: &Runtime,
+        chunk: &[f32],
+        rows: usize,
+        weights: &ExpertWeights,
+    ) -> anyhow::Result<ExpertOutput> {
+        self.0.dispatch(rt, chunk, rows, weights)
+    }
+    fn cost(&self, batch_tokens: usize) -> StageCost {
+        self.0.cost(batch_tokens)
+    }
+}
+
+#[test]
+fn batched_dispatch_matches_per_chunk_dispatch() {
+    // The coalesced dispatch_many path (one tier-contiguous buffer per
+    // backend, one round trip per (backend, tier)) must be a pure
+    // optimization: byte-identical responses to the default per-chunk
+    // dispatch loop, across mixed tiers, both backends, and any worker
+    // count.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+
+    // enough requests for full batches + a drained tail, so chunk
+    // occupancies mix the small and full compiled tiers
+    let mut reqs = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            reqs.push(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 });
+            if reqs.len() == cfg.batch * 2 + 1 {
+                break 'outer;
+            }
+        }
+    }
+
+    let serve = |rt: &mut Runtime,
+                 workers: usize,
+                 per_chunk: bool|
+     -> (Vec<Response>, hetmoe::coordinator::Metrics) {
+        let mut builder = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .workers(workers);
+        if per_chunk {
+            builder = builder
+                .backend(Box::new(PerChunk(DigitalBackend::new(
+                    &cfg,
+                    &placement,
+                    meta.serve_cap,
+                ))))
+                .backend(Box::new(PerChunk(AnalogBackend::new(
+                    &cfg,
+                    meta.aimc,
+                    &placement,
+                    meta.serve_cap,
+                ))));
+        }
+        let engine = builder.build(rt, &paths, &params).unwrap();
+        let mut session =
+            Session::new(rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+        for r in &reqs {
+            session.submit(r.clone()).unwrap();
+        }
+        let responses = session.drain().unwrap();
+        let metrics = session.metrics().clone();
+        (responses, metrics)
+    };
+
+    let (reference, ref_m) = serve(&mut rt, 1, true);
+    // the reference path really is per-chunk: one round trip per chunk
+    for b in &ref_m.backends {
+        assert_eq!(b.device_round_trips, b.dispatches, "{}: default loop", b.name);
+    }
+
+    let moe_layers = (0..cfg.n_layers).filter(|&l| cfg.is_moe_layer(l)).count() as u64;
+    for workers in [1usize, 2, 4] {
+        let (got, m) = serve(&mut rt, workers, false);
+        assert_eq!(got.len(), reference.len(), "workers={workers}");
+        for (a, b) in reference.iter().zip(&got) {
+            assert_eq!(a.id, b.id, "workers={workers}");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "workers={workers} request {}: coalesced {} != per-chunk {}",
+                a.id,
+                b.score,
+                a.score
+            );
+        }
+        // same chunks flowed, but coalesced into at most one round trip
+        // per (backend, tier) per MoE layer per batch — two compiled
+        // tiers, so ≤ 2 · moe_layers · batches — not one per chunk
+        for (rb, b) in ref_m.backends.iter().zip(&m.backends) {
+            assert_eq!(b.dispatches, rb.dispatches, "{}: chunk count", b.name);
+            assert_eq!(b.transfer_bytes, rb.transfer_bytes, "{}: bytes", b.name);
+            if b.dispatches == 0 {
+                continue;
+            }
+            assert!(b.device_round_trips >= 1);
+            assert!(
+                b.device_round_trips <= 2 * moe_layers * m.batches,
+                "{}: {} round trips > {} active (backend, tier) slots",
+                b.name,
+                b.device_round_trips,
+                2 * moe_layers * m.batches
+            );
+            assert!(b.device_round_trips <= b.dispatches);
+        }
+    }
+}
+
+#[test]
+fn scratch_arena_reuse_matches_fresh_allocation() {
+    // Serving the same batch twice through one engine exercises the
+    // recycled scratch-arena path end to end: the second pass must
+    // produce bit-identical responses, allocate no fresh arena bytes,
+    // and agree with a cold engine serving the same batch.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+
+    let mut reqs = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            reqs.push(Request {
+                id: reqs.len() as u64,
+                tokens: tk,
+                targets: tg,
+                mask: mk,
+                arrived: 0,
+            });
+            if reqs.len() == cfg.batch {
+                break 'outer;
+            }
+        }
+    }
+
+    let build = |rt: &mut Runtime| {
+        EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .build(rt, &paths, &params)
+            .unwrap()
+    };
+    let mut engine = build(&mut rt);
+    let first = engine.serve_batch(&rt, &reqs).unwrap();
+    let alloc_cold = engine.metrics.alloc_bytes;
+    assert!(alloc_cold > 0, "cold batch must warm the arena");
+
+    let second = engine.serve_batch(&rt, &reqs).unwrap();
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "request {}: recycled {} != cold {}",
+            a.id,
+            b.score,
+            a.score
+        );
+    }
+    assert_eq!(
+        engine.metrics.alloc_bytes, alloc_cold,
+        "warm batch must be allocation-free (arena misses)"
+    );
+    assert!(engine.scratch().hit_rate() > 0.0);
+    // the engine gives back one device-fetch buffer per layer on top of
+    // its balanced take/give pairs; the arena's retention cap must keep
+    // that bounded instead of growing by n_layers buffers per batch
+    assert!(
+        engine.scratch().retained() <= hetmoe::runtime::scratch::MAX_RETAINED,
+        "arena retained {} buffers",
+        engine.scratch().retained()
+    );
+    for b in &engine.metrics.backends {
+        if b.dispatches > 0 {
+            assert!(b.device_round_trips > 0 && b.transfer_bytes > 0, "{}", b.name);
+        }
+    }
+
+    // a cold engine with a fresh arena agrees bit-for-bit
+    let mut cold = build(&mut rt);
+    let fresh = cold.serve_batch(&rt, &reqs).unwrap();
+    for (a, b) in first.iter().zip(&fresh) {
+        assert_eq!(a.score.to_bits(), b.score.to_bits(), "request {}", a.id);
     }
 }
 

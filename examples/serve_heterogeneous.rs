@@ -9,9 +9,11 @@
 //! ```
 
 use anyhow::Result;
+use hetmoe::aimc::drift::DriftModel;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Session};
+use hetmoe::moe::placement::RePlacerOptions;
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{apply_placement, plan_placement, PlacementOptions};
@@ -144,6 +146,45 @@ fn main() -> Result<()> {
         "\nserving-vs-monolith score agreement over {n_check} requests: \
          max |Δ| = {max_diff:.4} (analog β_in differs by batch statistics; \
          digital-only placements agree to ~1e-4)"
+    );
+
+    // --- drift soak epilogue: the same deployment under aggressive
+    // conductance drift, with a live re-placement tick per wave ---
+    println!("\n--- drift soak (ν=0.4, maintenance every wave) ---");
+    let engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement.clone())
+        .serve_cap(meta.serve_cap)
+        .drift(DriftModel::with_nu(0.4))
+        .replacer(RePlacerOptions { budget: 4, ..Default::default() })
+        .build(&mut rt, &paths, &params)?;
+    let mut soak = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+    for wave in stream.chunks(cfg.batch.max(1)) {
+        for (tk, tg, mk) in wave {
+            soak.submit(Request {
+                id: 0,
+                tokens: tk.clone(),
+                targets: tg.clone(),
+                mask: mk.clone(),
+                arrived: 0,
+            })?;
+        }
+        soak.drain()?;
+        let rep = soak.maintenance()?;
+        println!(
+            "@ {:>5} tokens: probed {} experts, max |dev| {:.4}, {} migrations",
+            rep.drift_clock,
+            rep.probed,
+            rep.max_deviation,
+            rep.migrations.len()
+        );
+    }
+    let m = soak.metrics();
+    println!(
+        "soak total: {} migrations ({} promoted, {} demoted), final sentinel \
+         max |dev| {:.4}",
+        m.migrations, m.promotions, m.demotions, m.sentinel_deviation
     );
     Ok(())
 }

@@ -1,0 +1,457 @@
+//! Time-dependent conductance drift + the runtime drift monitor.
+//!
+//! PCM conductances are not stable after programming: the amorphous
+//! phase relaxes, and the programmed conductance decays along the
+//! well-characterized power law
+//!
+//! ```text
+//! g(t) = g0 · (t / t0)^(-ν)        for t > t0
+//! ```
+//!
+//! (Le Gallo et al. 2023-style fits; ROMER, arXiv 2605.11800, shows
+//! MoE-on-analog robustness requires *runtime* expert replacement
+//! precisely because of this decay, and the hardware-aware-training
+//! line, arXiv 2302.08469, quantifies how drift compounds with the
+//! eq (3) programming noise). The static norm-based placement of Fig 2
+//! is computed once at deployment, so a placement that was safe at
+//! `t0` degrades under load — this module provides the two runtime
+//! pieces the serving engine needs to react:
+//!
+//! - [`DriftModel`] — the decay law on a **token-count clock** (the
+//!   serving proxy for wall time: the engine advances the clock by the
+//!   tokens it serves), with per-tile ν jitter drawn from the crate's
+//!   deterministic [`Prng`] — every 512×512 crossbar tile of a weight
+//!   matrix relaxes at its own rate, exactly like each tile drew its
+//!   own programming noise.
+//! - [`DriftMonitor`] — per-expert degradation tracking: a small cached
+//!   sentinel input is replayed through the expert's gated MLP with the
+//!   *drifted* weights and compared against the **digital reference
+//!   path** (the exact-FP gated MLP the digital backend serves — the
+//!   integration suite pins host [`crate::tensor::gated_mlp`] equal to
+//!   the digital HLO), plus the max-neuron-norm proxy already used for
+//!   static placement (eqs 6-7).
+//!
+//! The monitor's deviations feed
+//! [`RePlacer`](crate::moe::placement::RePlacer), which decides which
+//! experts migrate between backends; the engine executes the migration
+//! live (see `coordinator::Engine::maintenance`).
+
+use crate::tensor;
+use crate::util::Prng;
+
+/// The power-law conductance drift model on a token-count clock.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftModel {
+    /// Mean drift exponent ν (0.0 disables drift; PCM literature:
+    /// 0.01–0.1 physical, higher values model accelerated soak tests).
+    pub nu: f64,
+    /// Per-tile jitter std on ν (each crossbar tile relaxes at
+    /// `ν + N(0, ν_jitter²)`, clamped at 0).
+    pub nu_jitter: f64,
+    /// Reference token count t0: drift is 1.0 until the clock passes
+    /// it, then decays as `(t/t0)^(-ν)`.
+    pub t0_tokens: u64,
+    /// Crossbar tile side (rows × cols per independent ν draw).
+    pub tile: usize,
+    /// Seed of the per-tile jitter streams.
+    pub seed: u64,
+}
+
+impl Default for DriftModel {
+    fn default() -> Self {
+        DriftModel { nu: 0.0, nu_jitter: 0.0, t0_tokens: 256, tile: 512, seed: 0 }
+    }
+}
+
+impl DriftModel {
+    /// A model with mean exponent `nu` and the conventional 10% per-tile
+    /// jitter (`nu_jitter = nu / 10`); `nu = 0.0` disables drift.
+    pub fn with_nu(nu: f64) -> DriftModel {
+        DriftModel { nu, nu_jitter: nu / 10.0, ..Default::default() }
+    }
+
+    /// Does this model drift at all? Disabled models make
+    /// [`DriftModel::apply_matrix`] the identity at every clock value.
+    pub fn enabled(&self) -> bool {
+        self.nu > 0.0 || self.nu_jitter > 0.0
+    }
+
+    /// The decay factor `(t/t0)^(-ν)` for one tile's exponent at
+    /// `elapsed` tokens since the tile was (re)programmed. 1.0 for
+    /// `elapsed <= t0` (the reference point) and for `ν <= 0`.
+    pub fn factor(&self, nu: f64, elapsed_tokens: u64) -> f64 {
+        if nu <= 0.0 || elapsed_tokens <= self.t0_tokens {
+            return 1.0;
+        }
+        let t = elapsed_tokens as f64 / self.t0_tokens.max(1) as f64;
+        t.powf(-nu)
+    }
+
+    /// The jittered exponent of one crossbar tile, identified by its
+    /// owning (layer, expert, matrix) and its (row-tile, col-tile)
+    /// coordinates. Deterministic per seed: replaying a serve run
+    /// replays its drift realisation.
+    pub fn tile_nu(&self, layer: usize, expert: usize, mat: usize, rt: usize, ct: usize) -> f64 {
+        if self.nu_jitter <= 0.0 {
+            return self.nu.max(0.0);
+        }
+        let tag = crate::util::fnv1a(
+            [layer as u64, expert as u64, mat as u64, rt as u64, ct as u64]
+                .iter()
+                .flat_map(|w| w.to_le_bytes()),
+        );
+        let mut rng = Prng::new(self.seed ^ tag);
+        (self.nu + rng.gaussian() * self.nu_jitter).max(0.0)
+    }
+
+    /// Decay a row-major `[d, n]` weight matrix in place: every
+    /// `tile × tile` block is scaled by its own `(t/t0)^(-ν_tile)`.
+    /// `mat` tags which projection this is (0 = up, 1 = gate, 2 = down)
+    /// so the three matrices of one expert drift independently;
+    /// `elapsed_tokens` counts from the tile's last (re)programming.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_matrix(
+        &self,
+        w: &mut [f32],
+        d: usize,
+        n: usize,
+        layer: usize,
+        expert: usize,
+        mat: usize,
+        elapsed_tokens: u64,
+    ) {
+        assert_eq!(w.len(), d * n, "drift matrix buffer size mismatch");
+        if !self.enabled() || elapsed_tokens <= self.t0_tokens {
+            return;
+        }
+        let tile = self.tile.max(1);
+        let mut r0 = 0;
+        while r0 < d {
+            let r1 = (r0 + tile).min(d);
+            let mut c0 = 0;
+            while c0 < n {
+                let c1 = (c0 + tile).min(n);
+                let nu = self.tile_nu(layer, expert, mat, r0 / tile, c0 / tile);
+                let f = self.factor(nu, elapsed_tokens) as f32;
+                if f != 1.0 {
+                    for r in r0..r1 {
+                        for v in &mut w[r * n + c0..r * n + c1] {
+                            *v *= f;
+                        }
+                    }
+                }
+                c0 = c1;
+            }
+            r0 = r1;
+        }
+    }
+}
+
+/// One expert's host-side reference weights (the values programmed at
+/// deployment, post eq (3) noise) — what the digital backend serves
+/// exactly and what drift decays from.
+#[derive(Clone, Debug, Default)]
+pub struct ExpertHostWeights {
+    /// `[d, m]` up-projection.
+    pub up: Vec<f32>,
+    /// `[d, m]` gate-projection.
+    pub gate: Vec<f32>,
+    /// `[m, d]` down-projection.
+    pub down: Vec<f32>,
+}
+
+/// Per-expert drift tracking: sentinel-probe output deviation plus the
+/// max-neuron-norm proxy, one slot per (layer, expert).
+#[derive(Clone, Debug)]
+pub struct DriftMonitor {
+    d: usize,
+    m: usize,
+    rows: usize,
+    /// cached sentinel input `[rows, d]`, drawn once per monitor seed
+    sentinel: Vec<f32>,
+    /// last measured relative output deviation per `[layer][expert]`
+    /// (0.0 = agrees with the digital reference path)
+    deviations: Vec<Vec<f64>>,
+    /// last measured MaxNNScore ratio drifted/reference per
+    /// `[layer][expert]` (1.0 = norms unchanged)
+    norm_ratios: Vec<Vec<f64>>,
+    /// memoized digital-reference probe per `[layer][expert]`: the
+    /// sentinel's gated-MLP output and MaxNNScore of the reference
+    /// weights, which are fixed between (re)programmings — halves the
+    /// per-tick probe cost (cleared by [`DriftMonitor::record_migrated`])
+    ref_cache: Vec<Vec<Option<(Vec<f32>, f64)>>>,
+}
+
+impl DriftMonitor {
+    /// A monitor for an `n_layers × n_experts` model of width `d` and
+    /// expert width `m`, probing with `rows` cached sentinel rows.
+    pub fn new(
+        n_layers: usize,
+        n_experts: usize,
+        d: usize,
+        m: usize,
+        rows: usize,
+        seed: u64,
+    ) -> DriftMonitor {
+        let mut rng = Prng::new(seed ^ 0xD21F_7001);
+        let sentinel = (0..rows * d).map(|_| rng.gaussian_f32() * 0.5).collect();
+        DriftMonitor {
+            d,
+            m,
+            rows,
+            sentinel,
+            deviations: vec![vec![0.0; n_experts]; n_layers],
+            norm_ratios: vec![vec![1.0; n_experts]; n_layers],
+            ref_cache: vec![vec![None; n_experts]; n_layers],
+        }
+    }
+
+    /// Sentinel rows replayed per probe.
+    pub fn probe_rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Replay the cached sentinel through the expert's gated MLP with
+    /// the `drifted` weights and against the digital reference path
+    /// (`reference`), recording and returning the relative ℓ2 output
+    /// deviation. Also records the max-neuron-norm proxy
+    /// (drifted/reference MaxNNScore ratio).
+    ///
+    /// The reference-side probe is memoized per (layer, expert):
+    /// reference weights are fixed between (re)programmings, so only
+    /// the first probe after construction / [`DriftMonitor::record_migrated`]
+    /// pays for the reference gated MLP and norm scan.
+    pub fn probe(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        drifted: (&[f32], &[f32], &[f32]),
+        reference: &ExpertHostWeights,
+    ) -> f64 {
+        let (d, m, n) = (self.d, self.m, self.rows);
+        let (up, gate, down) = drifted;
+        let got = tensor::gated_mlp(&self.sentinel, up, gate, down, n, d, m);
+        let slot = &mut self.ref_cache[layer][expert];
+        if slot.is_none() {
+            let want = tensor::gated_mlp(
+                &self.sentinel,
+                &reference.up,
+                &reference.gate,
+                &reference.down,
+                n,
+                d,
+                m,
+            );
+            let nn = maxnn(&reference.up, &reference.gate, &reference.down, d, m);
+            *slot = Some((want, nn));
+        }
+        let (want, ref_nn) = slot.as_ref().expect("reference cache just filled");
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in got.iter().zip(want) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        let dev = (num / den.max(1e-24)).sqrt();
+        self.deviations[layer][expert] = dev;
+        self.norm_ratios[layer][expert] = maxnn(up, gate, down, d, m) / ref_nn.max(1e-24);
+        dev
+    }
+
+    /// Mark an expert as freshly migrated / reprogrammed: deviation 0,
+    /// norm ratio 1 (its serving weights equal the reference again).
+    /// Also drops the expert's memoized reference probe, so a caller
+    /// that re-programs with *different* reference weights stays
+    /// correct on the next probe.
+    pub fn record_migrated(&mut self, layer: usize, expert: usize) {
+        self.deviations[layer][expert] = 0.0;
+        self.norm_ratios[layer][expert] = 1.0;
+        self.ref_cache[layer][expert] = None;
+    }
+
+    /// Last measured relative output deviation per `[layer][expert]`.
+    pub fn deviations(&self) -> &[Vec<f64>] {
+        &self.deviations
+    }
+
+    /// Last measured MaxNNScore ratio per `[layer][expert]`.
+    pub fn norm_ratios(&self) -> &[Vec<f64>] {
+        &self.norm_ratios
+    }
+
+    /// Largest recorded deviation across all experts — the headline
+    /// "sentinel deviation" serving metric.
+    pub fn max_deviation(&self) -> f64 {
+        self.deviations
+            .iter()
+            .flat_map(|l| l.iter().copied())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// MaxNNScore (eq 7) of one expert's three projections.
+fn maxnn(up: &[f32], gate: &[f32], down: &[f32], d: usize, m: usize) -> f64 {
+    let mx = |w: &[f32], r: usize, c: usize| {
+        tensor::col_norms(w, r, c).into_iter().fold(0.0, f64::max)
+    };
+    mx(up, d, m) * mx(gate, d, m) * mx(down, m, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_is_identity_before_t0_and_for_zero_nu() {
+        let m = DriftModel::with_nu(0.1);
+        assert_eq!(m.factor(0.1, 0), 1.0);
+        assert_eq!(m.factor(0.1, m.t0_tokens), 1.0);
+        assert_eq!(m.factor(0.0, 1 << 20), 1.0);
+    }
+
+    #[test]
+    fn factor_decays_monotonically() {
+        let m = DriftModel::with_nu(0.1);
+        let f1 = m.factor(0.1, 2 * m.t0_tokens);
+        let f2 = m.factor(0.1, 8 * m.t0_tokens);
+        assert!(f1 < 1.0, "{f1}");
+        assert!(f2 < f1, "{f2} !< {f1}");
+        // closed form at t = 2 t0: 2^-0.1
+        assert!((f1 - 2f64.powf(-0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_model_is_identity() {
+        let m = DriftModel::default();
+        assert!(!m.enabled());
+        let mut w: Vec<f32> = (0..24).map(|x| x as f32 / 7.0).collect();
+        let orig = w.clone();
+        m.apply_matrix(&mut w, 4, 6, 0, 0, 0, 1 << 30);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn apply_matrix_is_deterministic_per_seed() {
+        let m = DriftModel { nu: 0.2, nu_jitter: 0.05, t0_tokens: 16, tile: 4, seed: 7 };
+        let mut a: Vec<f32> = (0..64).map(|x| (x as f32).sin()).collect();
+        let mut b = a.clone();
+        m.apply_matrix(&mut a, 8, 8, 1, 2, 0, 1024);
+        m.apply_matrix(&mut b, 8, 8, 1, 2, 0, 1024);
+        assert_eq!(a, b);
+        // a different expert draws different tile exponents
+        let mut c: Vec<f32> = (0..64).map(|x| (x as f32).sin()).collect();
+        m.apply_matrix(&mut c, 8, 8, 1, 3, 0, 1024);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tiles_decay_independently() {
+        // two row tiles: with jitter their scale factors differ (jitter
+        // kept well below ν so no tile can clamp to zero drift)
+        let m = DriftModel { nu: 0.3, nu_jitter: 0.04, t0_tokens: 16, tile: 4, seed: 3 };
+        let mut w = vec![1.0f32; 8]; // [8, 1]: two 4-row tiles
+        m.apply_matrix(&mut w, 8, 1, 0, 0, 0, 4096);
+        let top = w[0];
+        let bot = w[4];
+        assert!(w[..4].iter().all(|&v| v == top), "top tile not uniform");
+        assert!(w[4..].iter().all(|&v| v == bot), "bottom tile not uniform");
+        assert_ne!(top, bot, "tiles drew the same jittered nu");
+        assert!(top < 1.0 && bot < 1.0, "both tiles must decay");
+    }
+
+    #[test]
+    fn monitor_zero_deviation_on_reference() {
+        let (d, m) = (6, 4);
+        let mut rng = Prng::new(11);
+        let reference = ExpertHostWeights {
+            up: (0..d * m).map(|_| rng.gaussian_f32() * 0.3).collect(),
+            gate: (0..d * m).map(|_| rng.gaussian_f32() * 0.3).collect(),
+            down: (0..m * d).map(|_| rng.gaussian_f32() * 0.3).collect(),
+        };
+        let mut mon = DriftMonitor::new(2, 3, d, m, 4, 0);
+        let dev = mon.probe(
+            1,
+            2,
+            (
+                reference.up.as_slice(),
+                reference.gate.as_slice(),
+                reference.down.as_slice(),
+            ),
+            &reference,
+        );
+        assert_eq!(dev, 0.0);
+        assert!((mon.norm_ratios()[1][2] - 1.0).abs() < 1e-12);
+        assert_eq!(mon.max_deviation(), 0.0);
+    }
+
+    #[test]
+    fn monitor_deviation_grows_with_drift() {
+        let (d, m) = (8, 6);
+        let mut rng = Prng::new(5);
+        let reference = ExpertHostWeights {
+            up: (0..d * m).map(|_| rng.gaussian_f32() * 0.3).collect(),
+            gate: (0..d * m).map(|_| rng.gaussian_f32() * 0.3).collect(),
+            down: (0..m * d).map(|_| rng.gaussian_f32() * 0.3).collect(),
+        };
+        let model = DriftModel { nu: 0.2, nu_jitter: 0.0, t0_tokens: 16, tile: 512, seed: 0 };
+        let mut mon = DriftMonitor::new(1, 1, d, m, 8, 0);
+        let mut dev_at = |elapsed: u64| {
+            let mut up = reference.up.clone();
+            let mut gate = reference.gate.clone();
+            let mut down = reference.down.clone();
+            model.apply_matrix(&mut up, d, m, 0, 0, 0, elapsed);
+            model.apply_matrix(&mut gate, d, m, 0, 0, 1, elapsed);
+            model.apply_matrix(&mut down, m, d, 0, 0, 2, elapsed);
+            mon.probe(0, 0, (up.as_slice(), gate.as_slice(), down.as_slice()), &reference)
+        };
+        let d_early = dev_at(64);
+        let d_late = dev_at(4096);
+        assert!(d_early > 0.0);
+        assert!(d_late > d_early, "{d_late} !> {d_early}");
+        // uniform decay shrinks every neuron norm: proxy ratio < 1
+        assert!(mon.norm_ratios()[0][0] < 1.0);
+        // migration resets the slot
+        mon.record_migrated(0, 0);
+        assert_eq!(mon.deviations()[0][0], 0.0);
+        assert_eq!(mon.norm_ratios()[0][0], 1.0);
+        assert_eq!(mon.max_deviation(), 0.0);
+    }
+
+    #[test]
+    fn sentinel_is_deterministic_per_seed() {
+        let a = DriftMonitor::new(1, 1, 4, 3, 2, 9);
+        let b = DriftMonitor::new(1, 1, 4, 3, 2, 9);
+        let c = DriftMonitor::new(1, 1, 4, 3, 2, 10);
+        assert_eq!(a.sentinel, b.sentinel);
+        assert_ne!(a.sentinel, c.sentinel);
+    }
+
+    #[test]
+    fn prop_factor_bounded_and_monotone_in_elapsed() {
+        crate::util::proptest::check("drift factor bounds", 100, |rng| {
+            let model = DriftModel {
+                nu: rng.uniform() * 0.5,
+                nu_jitter: rng.uniform() * 0.1,
+                t0_tokens: 1 + rng.below(1024) as u64,
+                tile: 1 + rng.below(64),
+                seed: rng.next_u64(),
+            };
+            let nu = model.tile_nu(
+                rng.below(4),
+                rng.below(8),
+                rng.below(3),
+                rng.below(4),
+                rng.below(4),
+            );
+            crate::prop_assert!(nu >= 0.0, "jittered nu {nu} negative");
+            let mut last = 1.0f64;
+            for exp in 0..8 {
+                let f = model.factor(nu, model.t0_tokens << exp);
+                crate::prop_assert!(f > 0.0 && f <= 1.0, "factor {f} out of (0,1]");
+                crate::prop_assert!(f <= last + 1e-15, "factor not monotone");
+                last = f;
+            }
+            Ok(())
+        });
+    }
+}

@@ -14,6 +14,11 @@
 //!   implementation used for unit testing and for the tile-level
 //!   simulator; the request path's DAC-ADC runs inside the HLO graph
 //!   (identical math, see `python/compile/kernels/ref.py`).
+//! - [`drift`] — time-dependent conductance drift (power-law decay on a
+//!   token-count clock, per-tile ν jitter) plus the [`DriftMonitor`]
+//!   that tracks per-expert degradation at serve time via sentinel
+//!   probes against the digital reference path — the runtime signal
+//!   behind live expert re-placement (`coordinator::Engine::maintenance`).
 //! - [`calib`] — κ/λ calibration à la §2.2 + Appendix B.
 //! - [`tiles`] — crossbar tile geometry and the tile allocator mapping
 //!   weight matrices onto 512×512 arrays.
@@ -21,12 +26,14 @@
 //!   accelerator (Appendix A; constants in the style of Büchel 2025b).
 
 pub mod calib;
+pub mod drift;
 pub mod energy;
 pub mod program;
 pub mod quant;
 pub mod tiles;
 
 pub use calib::Calibrator;
+pub use drift::{DriftModel, DriftMonitor, ExpertHostWeights};
 pub use energy::AnalogCost;
 pub use program::{program_matrix, programming_sigma, NoiseModel};
 pub use quant::{adc_quant, dac_quant};

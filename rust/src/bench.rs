@@ -23,13 +23,14 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::aimc::drift::DriftModel;
 use crate::aimc::program::NoiseModel;
 use crate::config::{AimcConfig, Meta, ModelConfig};
 use crate::coordinator::{Batcher, EngineBuilder, Metrics, Request, Response, Session};
 use crate::eval::data::{load_rows, load_tasks, Task};
 use crate::eval::Evaluator;
 use crate::moe::placement::{
-    apply_placement, plan_placement, Placement, PlacementOptions,
+    apply_placement, plan_placement, Placement, PlacementOptions, RePlacerOptions,
 };
 use crate::moe::score::{RouterStats, SelectionMetric};
 use crate::runtime::pool::{default_workers, WorkerPool};
@@ -512,6 +513,49 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
     let workers = default_workers();
     let (par_r, par_m, par_wall, trajectory, occupancy) = serve(workers)?;
 
+    // --- drift soak: the long-horizon serving scenario — aggressive
+    // conductance drift with a live re-placement tick after every wave
+    // (docs/BENCHMARKS.md §Drift soak) ---
+    let soak_nu = 0.4;
+    let soak_budget = 4usize;
+    let soak = {
+        let engine = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .drift(DriftModel::with_nu(soak_nu))
+            .replacer(RePlacerOptions { budget: soak_budget, ..Default::default() })
+            .build(&mut rt, &paths, &params)?;
+        let mut session =
+            Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+        let t0 = Instant::now();
+        let mut peak_dev = 0.0f64;
+        for wave in reqs.chunks(cfg.batch.max(1)) {
+            for r in wave {
+                session.submit(r.clone())?;
+            }
+            session.drain()?;
+            let rep = session.maintenance()?;
+            peak_dev = peak_dev.max(rep.max_deviation);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = session.metrics().clone();
+        Json::obj(vec![
+            ("nu", Json::num(soak_nu)),
+            ("replace_every_requests", Json::num(cfg.batch as f64)),
+            ("migration_budget", Json::num(soak_budget as f64)),
+            ("drift_clock", Json::num(m.drift_clock as f64)),
+            ("migrations", Json::num(m.migrations as f64)),
+            ("promotions", Json::num(m.promotions as f64)),
+            ("demotions", Json::num(m.demotions as f64)),
+            ("migrated", Json::Bool(m.migrations > 0)),
+            ("peak_sentinel_deviation", Json::num(peak_dev)),
+            ("sentinel_deviation", Json::num(m.sentinel_deviation)),
+            ("tokens_per_s", Json::num((n_requests * t) as f64 / wall.max(1e-12))),
+        ])
+    };
+
     let identical = seq_r.len() == par_r.len()
         && seq_r
             .iter()
@@ -544,6 +588,13 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         ("utilization", Json::num(par_m.utilization())),
         ("batch_occupancy", Json::num(occupancy)),
         ("alloc_bytes", Json::num(par_m.alloc_bytes as f64)),
+        // drift accounting of the (drift-free) parallel run — the
+        // clock ticks regardless, migrations/deviation stay zero; the
+        // drift_soak block is where they move
+        ("migrations", Json::num(par_m.migrations as f64)),
+        ("sentinel_deviation", Json::num(par_m.sentinel_deviation)),
+        ("drift_clock", Json::num(par_m.drift_clock as f64)),
+        ("drift_soak", soak),
         ("backends", metrics_backends_json(&par_m)),
         ("simulated_tokens_per_s", Json::num(par_m.simulated_tokens_per_s())),
         (

@@ -231,6 +231,14 @@ pub trait ExpertBackend {
     /// Appendix-A simulated cost of one batch of `batch_tokens` tokens
     /// flowing through this backend's share of the model.
     fn cost(&self, batch_tokens: usize) -> StageCost;
+
+    /// Re-project the simulated cost model onto a revised expert →
+    /// backend placement. Live re-placement (`Engine::apply_replacement`)
+    /// migrates experts between batches; the standard backends recompute
+    /// their placement share here so the Appendix-A clocks keep billing
+    /// the slot that actually serves each expert. Default: no-op, for
+    /// custom backends whose cost is placement-independent.
+    fn replan(&mut self, _placement: &Placement) {}
 }
 
 /// Upload a pre-padded `[cap, d]` chunk and run it through `exe` with
@@ -348,6 +356,8 @@ pub struct DigitalBackend {
     arch: ArchSpec,
     spec: DigitalSpec,
     cost_place: DigitalPlacement,
+    /// kept for cost re-projection after live re-placement
+    cfg: crate::config::ModelConfig,
 }
 
 impl DigitalBackend {
@@ -367,6 +377,7 @@ impl DigitalBackend {
             arch: ArchSpec::from_model(cfg),
             spec: DigitalSpec::default(),
             cost_place: DigitalPlacement::from_placement(placement, cfg),
+            cfg: cfg.clone(),
         }
     }
 
@@ -442,6 +453,10 @@ impl ExpertBackend for DigitalBackend {
         let c = digital_batch_cost(&self.arch, &self.spec, &self.cost_place, batch_tokens);
         StageCost { latency_s: c.latency_s, energy_j: c.energy_j }
     }
+
+    fn replan(&mut self, placement: &Placement) {
+        self.cost_place = DigitalPlacement::from_placement(placement, &self.cfg);
+    }
 }
 
 /// The AIMC accelerator: the Pallas crossbar-kernel HLO (DAC → tile dot
@@ -458,6 +473,8 @@ pub struct AnalogBackend {
     lam_buf: Option<xla::PjRtBuffer>,
     arch: ArchSpec,
     cost_place: AnalogPlacement,
+    /// kept for cost re-projection after live re-placement
+    cfg: crate::config::ModelConfig,
 }
 
 impl AnalogBackend {
@@ -481,6 +498,7 @@ impl AnalogBackend {
             lam_buf: None,
             arch: ArchSpec::from_model(cfg),
             cost_place: AnalogPlacement::from_placement(placement, cfg),
+            cfg: cfg.clone(),
         }
     }
 
@@ -563,6 +581,10 @@ impl ExpertBackend for AnalogBackend {
         let c = analog_batch_cost(&self.arch, &self.cost_place, batch_tokens);
         StageCost { latency_s: c.latency_s, energy_j: c.energy_j }
     }
+
+    fn replan(&mut self, placement: &Placement) {
+        self.cost_place = AnalogPlacement::from_placement(placement, &self.cfg);
+    }
 }
 
 /// The small-capacity tier compiled next to each full-capacity expert
@@ -633,6 +655,52 @@ mod tests {
     #[test]
     fn tier_runs_of_empty_batch_is_empty() {
         assert!(tier_runs(&[]).is_empty());
+    }
+
+    #[test]
+    fn replan_reprojects_cost_models_onto_revised_placement() {
+        use crate::moe::placement::Placement;
+        let cfg = crate::config::ModelConfig {
+            name: "t".into(),
+            vocab: 32,
+            seq_len: 8,
+            d_model: 4,
+            n_heads: 2,
+            n_layers: 2,
+            n_experts: 4,
+            top_k: 2,
+            d_expert: 3,
+            d_shared: 0,
+            dense_first_layer: false,
+            d_dense_ffn: 8,
+            batch: 2,
+            train_steps: 1,
+            flags_len: 13,
+            n_params: 0,
+        };
+        let analog_all = Placement::all_experts_analog(&cfg);
+        let digital_all = Placement::all_digital(&cfg);
+
+        // a live migration wave that moves every expert to digital must
+        // move the simulated clocks with it
+        let mut dig = DigitalBackend::new(&cfg, &analog_all, 8);
+        let before = dig.cost(64);
+        dig.replan(&digital_all);
+        let after = dig.cost(64);
+        assert!(
+            after.latency_s > before.latency_s,
+            "digital clock must grow with its expert share: {} !> {}",
+            after.latency_s,
+            before.latency_s
+        );
+
+        let aimc = crate::config::AimcConfig::default();
+        let mut ana = AnalogBackend::new(&cfg, aimc, &analog_all, 8);
+        let before = ana.cost(64);
+        ana.replan(&digital_all);
+        let after = ana.cost(64);
+        assert!(before.latency_s > 0.0);
+        assert_eq!(after.latency_s, 0.0, "no analog experts left to bill");
     }
 
     #[test]

@@ -89,6 +89,25 @@ pub struct Metrics {
     /// (engine-side staging + all backends; flat once the arena is warm)
     pub alloc_bytes: u64,
 
+    // drift + live re-placement accounting (Engine::maintenance)
+    /// live expert migrations executed (`Engine::apply_replacement`)
+    pub migrations: u64,
+    /// analog → digital promotions among `migrations`
+    pub promotions: u64,
+    /// digital → analog demotions among `migrations` (reprogrammed
+    /// experts returning to the AIMC chip)
+    pub demotions: u64,
+    /// largest sentinel-probe output deviation recorded at the last
+    /// maintenance tick (0.0 = every probed expert matches the digital
+    /// reference path)
+    pub sentinel_deviation: f64,
+    /// token-count drift clock: tokens served since deployment (the
+    /// proxy clock `aimc::drift::DriftModel` decays on)
+    pub drift_clock: u64,
+    /// maintenance wall time (sentinel probes, drift materialization,
+    /// migrations)
+    pub maintenance_wall: Duration,
+
     // real wall time per coordinator stage
     /// end-to-end batch wall time
     pub total_wall: Duration,
@@ -197,9 +216,11 @@ impl Metrics {
             "requests={} batches={} tokens={}\n\
              dispatches: {dispatch_line} utilization={:.2}\n\
              transfers:{transfer_line} alloc={} B\n\
+             drift: clock={} tokens migrations={} ({} promoted, {} demoted) \
+             sentinel max |dev|={:.4}\n\
              wall: total={:.3}s attn={:.3}s route={:.3}s pack={:.3}s \
              scatter={:.3}s{backend_wall} \
-             shared={:.3}s lm={:.3}s → {:.0} tok/s\n\
+             shared={:.3}s lm={:.3}s maint={:.3}s → {:.0} tok/s\n\
              simulated accelerator clocks (Appendix-A cost model, this \
              model's dims):{busy_line} \
              → {:.0} tok/s, {:.1} tok/J",
@@ -208,6 +229,11 @@ impl Metrics {
             self.tokens,
             self.utilization(),
             self.alloc_bytes,
+            self.drift_clock,
+            self.migrations,
+            self.promotions,
+            self.demotions,
+            self.sentinel_deviation,
             self.total_wall.as_secs_f64(),
             self.attn_wall.as_secs_f64(),
             self.route_wall.as_secs_f64(),
@@ -215,6 +241,7 @@ impl Metrics {
             self.scatter_wall.as_secs_f64(),
             self.shared_wall.as_secs_f64(),
             self.lm_wall.as_secs_f64(),
+            self.maintenance_wall.as_secs_f64(),
             self.wall_tokens_per_s(),
             self.simulated_tokens_per_s(),
             self.simulated_tokens_per_joule(),
@@ -295,6 +322,23 @@ mod tests {
         assert!(r.contains("pack="));
         assert!(r.contains("round trips"));
         assert!(r.contains("alloc="));
+    }
+
+    #[test]
+    fn report_renders_drift_accounting() {
+        let m = Metrics {
+            migrations: 3,
+            promotions: 2,
+            demotions: 1,
+            sentinel_deviation: 0.125,
+            drift_clock: 4096,
+            ..Default::default()
+        };
+        let r = m.report();
+        assert!(r.contains("migrations=3 (2 promoted, 1 demoted)"));
+        assert!(r.contains("clock=4096 tokens"));
+        assert!(r.contains("sentinel max |dev|=0.1250"));
+        assert!(r.contains("maint="));
     }
 
     #[test]

@@ -45,6 +45,21 @@
 //! work uses static partitioning, which keeps serving outputs
 //! byte-identical for every worker count (`workers(1)` is the
 //! sequential reference).
+//!
+//! Long-lived deployments add one more loop: AIMC conductances drift
+//! after programming (power-law decay on a token-count clock — see
+//! [`crate::aimc::drift`]), so the placement that was safe at
+//! deployment degrades under load. [`Engine::maintenance`] is the
+//! periodic tick that keeps serving healthy *without a rebuild*:
+//! materialize the drifted conductances into the analog serving
+//! buffers, replay the sentinel probe per drift-tracked expert against
+//! the digital reference path, hand the deviations to the
+//! hysteresis-banded [`RePlacer`](crate::moe::placement::RePlacer), and
+//! execute the planned migrations live between batches
+//! ([`Engine::apply_replacement`] swaps an expert's device buffers and
+//! backend slot, re-projects the Appendix-A cost models, and records
+//! `migrations` / `sentinel_deviation` / `drift_clock` in [`Metrics`]).
+//! [`Session::maintenance`] exposes the tick to serving loops.
 
 pub mod backend;
 pub mod batcher;
@@ -63,8 +78,11 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::aimc::drift::{DriftModel, DriftMonitor, ExpertHostWeights};
 use crate::config::{AimcConfig, ModelConfig};
-use crate::moe::placement::Placement;
+use crate::moe::placement::{
+    Migration, Placement, RePlacer, RePlacerOptions, BACKEND_ANALOG, BACKEND_DIGITAL,
+};
 use crate::moe::score::RouterStats;
 use crate::runtime::pool::{default_workers, WorkerPool};
 use crate::runtime::{ArtifactPaths, Executable, ParamStore, Runtime, ScratchArena};
@@ -110,6 +128,8 @@ pub struct EngineBuilder {
     placement: Option<Placement>,
     serve_cap: Option<usize>,
     workers: Option<usize>,
+    drift: Option<DriftModel>,
+    replacer: Option<RePlacerOptions>,
     backends: Vec<Box<dyn ExpertBackend>>,
 }
 
@@ -152,6 +172,24 @@ impl EngineBuilder {
     /// byte-identical outputs to every other setting.
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = Some(n);
+        self
+    }
+
+    /// The conductance-drift model the engine advances on its
+    /// token-count clock (optional; default
+    /// [`DriftModel::default`] — disabled). With drift enabled,
+    /// [`Engine::maintenance`] decays the analog experts' serving
+    /// weights and migrates degraded experts per the re-placement
+    /// policy.
+    pub fn drift(mut self, model: DriftModel) -> Self {
+        self.drift = Some(model);
+        self
+    }
+
+    /// Thresholds + migration budget of the live re-placement policy
+    /// (optional; default [`RePlacerOptions::default`]).
+    pub fn replacer(mut self, opts: RePlacerOptions) -> Self {
+        self.replacer = Some(opts);
         self
     }
 
@@ -212,6 +250,7 @@ impl EngineBuilder {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         let mut attn_bufs = Vec::with_capacity(cfg.n_layers);
         let mut experts = Vec::with_capacity(cfg.n_layers);
+        let mut host_experts = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             let p = format!("layers.{l}.");
             attn_bufs.push([
@@ -255,20 +294,35 @@ impl EngineBuilder {
                 shared,
             });
             let mut ebufs = Vec::new();
+            let mut ehost = Vec::new();
             if moe {
                 let up = params.tensor(&format!("{p}experts.up"))?;
                 let gate = params.tensor(&format!("{p}experts.gate"))?;
                 let down = params.tensor(&format!("{p}experts.down"))?;
                 for e in 0..cfg.n_experts {
+                    let (u, g, dn) = (
+                        &up[e * d * m..(e + 1) * d * m],
+                        &gate[e * d * m..(e + 1) * d * m],
+                        &down[e * m * d..(e + 1) * m * d],
+                    );
                     ebufs.push(ExpertWeights {
-                        up: rt.upload_f32(&up[e * d * m..(e + 1) * d * m], &[d, m])?,
-                        gate: rt.upload_f32(&gate[e * d * m..(e + 1) * d * m], &[d, m])?,
-                        down: rt.upload_f32(&down[e * m * d..(e + 1) * m * d], &[m, d])?,
+                        up: rt.upload_f32(u, &[d, m])?,
+                        gate: rt.upload_f32(g, &[d, m])?,
+                        down: rt.upload_f32(dn, &[m, d])?,
                         backend: placement.backend_of(l, e),
+                    });
+                    // host reference copy: what the digital backend
+                    // serves exactly, what drift decays from, and what
+                    // a live migration re-packs into the target tier
+                    ehost.push(ExpertHostWeights {
+                        up: u.to_vec(),
+                        gate: g.to_vec(),
+                        down: dn.to_vec(),
                     });
                 }
             }
             experts.push(ebufs);
+            host_experts.push(ehost);
         }
         let lm_bufs = [
             rt.upload_f32(params.tensor("ln_f.s")?, &[d])?,
@@ -283,6 +337,21 @@ impl EngineBuilder {
         }
         let pool = WorkerPool::new(self.workers.unwrap_or_else(default_workers));
         let route_groups = vec![Vec::new(); cfg.n_experts];
+        let drift = self.drift.unwrap_or_default();
+        let monitor = DriftMonitor::new(
+            cfg.n_layers,
+            cfg.n_experts,
+            d,
+            m,
+            SENTINEL_ROWS,
+            drift.seed,
+        );
+        let replacer = RePlacer::new(
+            self.replacer.unwrap_or_default(),
+            cfg.n_layers,
+            cfg.n_experts,
+        );
+        let birth = vec![vec![0u64; cfg.n_experts]; cfg.n_layers];
         Ok(Engine {
             metrics: engine_metrics,
             router_stats,
@@ -294,6 +363,12 @@ impl EngineBuilder {
             scratch: ScratchArena::new(),
             route_groups,
             backends,
+            drift,
+            monitor,
+            replacer,
+            drift_tokens: 0,
+            birth,
+            host_experts,
             attn_exe,
             lm_exe,
             kappa_buf,
@@ -307,6 +382,23 @@ impl EngineBuilder {
             lm_bufs,
         })
     }
+}
+
+/// Sentinel rows the drift monitor replays per expert probe (small on
+/// purpose: one probe is `3 · SENTINEL_ROWS · d · m` MACs on the host).
+pub const SENTINEL_ROWS: usize = 8;
+
+/// What one [`Engine::maintenance`] tick did.
+#[derive(Clone, Debug, Default)]
+pub struct MaintenanceReport {
+    /// Token-count drift clock at the tick.
+    pub drift_clock: u64,
+    /// Experts sentinel-probed (analog residents + promoted shadows).
+    pub probed: usize,
+    /// Largest sentinel deviation after the tick's migrations.
+    pub max_deviation: f64,
+    /// Migrations executed live by this tick.
+    pub migrations: Vec<Migration>,
 }
 
 /// The serving engine for one model + placement + backend registry.
@@ -332,6 +424,26 @@ pub struct Engine {
     /// per-expert routing groups, reused across layers and batches
     route_groups: Vec<Vec<(usize, f32)>>,
     backends: Vec<Box<dyn ExpertBackend>>,
+
+    // drift + live re-placement subsystem (Engine::maintenance)
+    /// conductance-drift law on the token clock (disabled by default)
+    drift: DriftModel,
+    /// per-expert sentinel-probe deviations + norm proxy
+    monitor: DriftMonitor,
+    /// hysteresis-banded, budget-bounded migration planner
+    replacer: RePlacer,
+    /// tokens served since deployment (the drift clock)
+    drift_tokens: u64,
+    /// drift clock value at each expert's last (re)programming
+    birth: Vec<Vec<u64>>,
+    /// host reference weights per `[layer][expert]` (empty for dense
+    /// layers): digital ground truth + migration source. Kept even
+    /// with drift disabled so operator-driven [`Engine::apply_replacement`]
+    /// always works — one extra host copy of the expert tensors, the
+    /// deliberate price of rebuild-free migration (at this repo's mini
+    /// scale, a few MB)
+    host_experts: Vec<Vec<ExpertHostWeights>>,
+
     attn_exe: Rc<Executable>,
     lm_exe: Rc<Executable>,
     // constant device scalars of the dense-path graphs
@@ -480,9 +592,187 @@ impl Engine {
         self.metrics.batches += 1;
         self.metrics.requests += reqs.len() as u64;
         self.metrics.tokens += batch_tokens as u64;
+        // the drift clock ticks in served tokens — the serving proxy
+        // for wall time the conductance decay law is defined over
+        self.drift_tokens += batch_tokens as u64;
+        self.metrics.drift_clock = self.drift_tokens;
         self.metrics.alloc_bytes = self.scratch.alloc_bytes();
         self.metrics.total_wall += t0.elapsed();
         Ok(responses)
+    }
+
+    /// One drift-maintenance tick, run between batches (never mid-batch):
+    ///
+    /// 1. **Materialize drift** — for every analog-resident expert,
+    ///    decay the host reference weights to the current clock
+    ///    ([`DriftModel::apply_matrix`], staged through the
+    ///    [`ScratchArena`]) and re-upload the decayed conductances into
+    ///    the serving buffers, so subsequent dispatches run the drifted
+    ///    chip, not the deployment-time one.
+    /// 2. **Sentinel-probe** each drift-tracked expert (analog
+    ///    residents, plus the *shadow* tiles of promoted experts, which
+    ///    keep drifting while the expert is served digitally): replay
+    ///    the cached sentinel input against the digital reference path
+    ///    and record the relative output deviation + the
+    ///    max-neuron-norm proxy ([`DriftMonitor`]).
+    /// 3. **Re-place** — hand the deviations to the hysteresis-banded
+    ///    [`RePlacer`] and execute the planned migrations live via
+    ///    [`Engine::apply_replacement`].
+    ///
+    /// With drift disabled (the default) steps 1–2 are skipped and the
+    /// tick is a cheap no-op that still reports the clock.
+    pub fn maintenance(&mut self, rt: &Runtime) -> Result<MaintenanceReport> {
+        let t0 = std::time::Instant::now();
+        let mut probed = 0usize;
+        if self.drift.enabled() {
+            let Engine {
+                cfg,
+                drift,
+                monitor,
+                replacer,
+                scratch,
+                experts,
+                host_experts,
+                birth,
+                drift_tokens,
+                ..
+            } = self;
+            let (d, m) = (cfg.d_model, cfg.d_expert);
+            for l in 0..cfg.n_layers {
+                if !cfg.is_moe_layer(l) {
+                    continue;
+                }
+                for e in 0..cfg.n_experts {
+                    let owner = experts[l][e].backend;
+                    // custom slots (≥ 2) have no drift semantics; a
+                    // digital expert only stays tracked while it is a
+                    // drift rescue (its shadow tiles await recovery)
+                    let tracked = owner == BACKEND_ANALOG
+                        || (owner == BACKEND_DIGITAL && replacer.is_promoted(l, e));
+                    if !tracked {
+                        continue;
+                    }
+                    let elapsed = drift_tokens.saturating_sub(birth[l][e]);
+                    let host = &host_experts[l][e];
+                    let mut up = scratch.take(d * m);
+                    up.copy_from_slice(&host.up);
+                    drift.apply_matrix(&mut up, d, m, l, e, 0, elapsed);
+                    let mut gate = scratch.take(d * m);
+                    gate.copy_from_slice(&host.gate);
+                    drift.apply_matrix(&mut gate, d, m, l, e, 1, elapsed);
+                    let mut down = scratch.take(m * d);
+                    down.copy_from_slice(&host.down);
+                    drift.apply_matrix(&mut down, m, d, l, e, 2, elapsed);
+                    monitor.probe(l, e, (up.as_slice(), gate.as_slice(), down.as_slice()), host);
+                    probed += 1;
+                    if owner == BACKEND_ANALOG {
+                        // the serving buffers now hold the drifted chip
+                        let w = &mut experts[l][e];
+                        w.up = rt.upload_f32(&up, &[d, m])?;
+                        w.gate = rt.upload_f32(&gate, &[d, m])?;
+                        w.down = rt.upload_f32(&down, &[m, d])?;
+                    }
+                    scratch.give(up);
+                    scratch.give(gate);
+                    scratch.give(down);
+                }
+            }
+        }
+        let migrations = self.replacer.plan(&self.placement, self.monitor.deviations());
+        self.apply_replacement(rt, &migrations)?;
+        self.metrics.sentinel_deviation = self.monitor.max_deviation();
+        self.metrics.drift_clock = self.drift_tokens;
+        self.metrics.maintenance_wall += t0.elapsed();
+        Ok(MaintenanceReport {
+            drift_clock: self.drift_tokens,
+            probed,
+            max_deviation: self.metrics.sentinel_deviation,
+            migrations,
+        })
+    }
+
+    /// Execute a wave of live migrations between batches: re-pack each
+    /// expert's reference weights into the target backend's tier
+    /// (staged through the [`ScratchArena`] like every other hot-path
+    /// buffer), swap the device buffers and the registry slot, update
+    /// the deployed [`Placement`], reset the expert's drift birth (a
+    /// promotion schedules the tiles for reprogramming; a demotion
+    /// moves freshly reprogrammed tiles back), and re-project every
+    /// backend's Appendix-A cost model onto the revised placement.
+    ///
+    /// Routing follows automatically — the dispatch plan reads the
+    /// expert's backend id per batch — so the next `serve_batch` serves
+    /// the new placement with no rebuild. Callable directly for
+    /// operator-driven migrations; [`Engine::maintenance`] calls it
+    /// with the [`RePlacer`]'s plan.
+    pub fn apply_replacement(&mut self, rt: &Runtime, migrations: &[Migration]) -> Result<usize> {
+        for mg in migrations {
+            let (l, e) = (mg.layer, mg.expert);
+            if l >= self.experts.len() || e >= self.experts[l].len() {
+                return Err(anyhow!("migration targets unknown expert ({l},{e})"));
+            }
+            if mg.to >= self.backends.len() {
+                return Err(anyhow!(
+                    "migration of expert ({l},{e}) targets unregistered backend slot {}",
+                    mg.to
+                ));
+            }
+            // a stale plan (expert already moved since it was drawn up)
+            // must not silently reprogram the expert — rejecting it
+            // protects the drift realisation and the migration counters
+            let current = self.experts[l][e].backend;
+            if current != mg.from {
+                return Err(anyhow!(
+                    "stale migration: expert ({l},{e}) expected on backend slot {} \
+                     but it is on {current}",
+                    mg.from
+                ));
+            }
+            if mg.from == mg.to {
+                return Err(anyhow!(
+                    "migration of expert ({l},{e}) is a no-op (slot {} → {})",
+                    mg.from,
+                    mg.to
+                ));
+            }
+            let (d, m) = (self.cfg.d_model, self.cfg.d_expert);
+            let host = &self.host_experts[l][e];
+            // stage through the arena: zero steady-state allocation once
+            // the serving working set has warmed it
+            let mut buf = self.scratch.take(d * m);
+            buf.copy_from_slice(&host.up);
+            let up = rt.upload_f32(&buf, &[d, m])?;
+            buf.copy_from_slice(&host.gate);
+            let gate = rt.upload_f32(&buf, &[d, m])?;
+            self.scratch.give(buf);
+            let mut buf = self.scratch.take(m * d);
+            buf.copy_from_slice(&host.down);
+            let down = rt.upload_f32(&buf, &[m, d])?;
+            self.scratch.give(buf);
+            let w = &mut self.experts[l][e];
+            w.up = up;
+            w.gate = gate;
+            w.down = down;
+            w.backend = mg.to;
+            self.placement.set_backend(l, e, mg.to);
+            self.birth[l][e] = self.drift_tokens;
+            self.monitor.record_migrated(l, e);
+            self.metrics.migrations += 1;
+            // only the two standard media have promote/demote
+            // semantics; a move to a custom slot counts as neither
+            if mg.to == BACKEND_DIGITAL {
+                self.metrics.promotions += 1;
+            } else if mg.to == BACKEND_ANALOG {
+                self.metrics.demotions += 1;
+            }
+        }
+        if !migrations.is_empty() {
+            // the simulated clocks must bill the slots that now serve
+            for b in self.backends.iter_mut() {
+                b.replan(&self.placement);
+            }
+        }
+        Ok(migrations.len())
     }
 
     /// Group tokens per expert and dispatch each group to the backend
@@ -786,6 +1076,27 @@ mod tests {
         assert_eq!(b.workers, Some(3));
         // unset → resolved at build time from the environment default
         assert!(EngineBuilder::new().workers.is_none());
+    }
+
+    #[test]
+    fn builder_drift_and_replacer_roundtrip() {
+        let b = EngineBuilder::new()
+            .drift(DriftModel::with_nu(0.25))
+            .replacer(RePlacerOptions { promote: 0.2, demote: 0.05, budget: 3 });
+        assert!((b.drift.unwrap().nu - 0.25).abs() < 1e-12);
+        assert_eq!(b.replacer.unwrap().budget, 3);
+        // unset → disabled drift + default policy at build time
+        let b = EngineBuilder::new();
+        assert!(b.drift.is_none() && b.replacer.is_none());
+        assert!(!DriftModel::default().enabled());
+    }
+
+    #[test]
+    fn maintenance_report_default_is_empty() {
+        let r = MaintenanceReport::default();
+        assert_eq!(r.probed, 0);
+        assert_eq!(r.max_deviation, 0.0);
+        assert!(r.migrations.is_empty());
     }
 
     #[test]

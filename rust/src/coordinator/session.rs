@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::{Batcher, Request, RequestId, Response};
 use super::metrics::Metrics;
-use super::Engine;
+use super::{Engine, MaintenanceReport};
 use crate::runtime::Runtime;
 
 /// Request handling for one [`Engine`]: owns the admission queue and the
@@ -103,6 +103,18 @@ impl<'rt> Session<'rt> {
         }
         self.batch = batch;
         Ok(())
+    }
+
+    /// Run one drift-maintenance tick on the wrapped engine: decay the
+    /// analog experts to the current token clock, sentinel-probe every
+    /// drift-tracked expert, and execute the re-placement policy's
+    /// migrations live (see [`Engine::maintenance`]). Call it between
+    /// submits on whatever cadence the deployment needs — `hetmoe
+    /// serve --replace-every N` calls it every N admitted requests.
+    /// Pending (queued, unserved) requests are unaffected: maintenance
+    /// never runs mid-batch.
+    pub fn maintenance(&mut self) -> Result<MaintenanceReport> {
+        self.engine.maintenance(self.rt)
     }
 
     /// Average fill fraction of the batches released so far (see

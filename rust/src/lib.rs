@@ -28,7 +28,9 @@
 //!   parallelism, and the recycling [`runtime::ScratchArena`] behind
 //!   the allocation-free serving hot path
 //! - [`aimc`] — NVM tiles, programming noise (eq 3), DAC/ADC (eqs 4-5),
-//!   calibration, energy/latency model
+//!   calibration, energy/latency model, and conductance drift
+//!   ([`aimc::drift`]: power-law decay on a token clock + the sentinel
+//!   drift monitor behind live re-placement)
 //! - [`digital`] — digital accelerator roofline model (eq 16)
 //! - [`moe`] — expert scoring metrics (MaxNNScore eq 6-7 + baselines) and
 //!   the Γ-fraction placement planner (Fig 2); placements map experts to
@@ -42,7 +44,10 @@
 //!   device round trip per backend tier, not per chunk), assemble with
 //!   [`coordinator::EngineBuilder`] (worker count via `.workers(n)`),
 //!   serve request streams through [`coordinator::Session`] (see
-//!   `DESIGN.md` §serving API)
+//!   `DESIGN.md` §serving API), and keep long-lived deployments healthy
+//!   with the drift-maintenance tick
+//!   ([`coordinator::Session::maintenance`]: sentinel probes → live
+//!   expert re-placement, no rebuild)
 //! - [`theory`] — §4 analytical setup (Lemma 4.1, Theorem 4.2)
 //! - [`bench`] — shared bench machinery + the `BENCH_*.json` harness
 //!   (`docs/BENCHMARKS.md`)

@@ -17,9 +17,11 @@
 
 use anyhow::{bail, Result};
 
+use hetmoe::aimc::drift::DriftModel;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Session};
+use hetmoe::moe::placement::RePlacerOptions;
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
@@ -47,6 +49,9 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     ("gamma", "0.25", "digital expert fraction Γ"),
     ("noise", "1.0", "programming-noise scale (eq 3)"),
     ("requests", "64", "number of scoring requests to stream"),
+    ("drift-nu", "0.0", "conductance-drift exponent ν (0 = no drift)"),
+    ("replace-every", "0", "maintenance tick every N requests (0 = only at end)"),
+    ("migration-budget", "2", "max live migrations per maintenance tick"),
 ];
 const BENCH_FLAGS: &[FlagSpec] = &[
     ("suite", "all", "which benches to run: kernels|serve|all"),
@@ -296,6 +301,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let gamma = cli.get_f64("gamma");
     let noise = cli.get_f64("noise");
     let n_requests = cli.get_usize("requests");
+    let drift_nu = cli.get_f64("drift-nu");
+    let replace_every = cli.get_usize("replace-every");
+    let budget = cli.get_usize("migration-budget");
 
     let placement = plan_placement(
         &cfg,
@@ -304,14 +312,20 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         None,
     )?;
     apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(noise), 0)?;
-    let engine = EngineBuilder::new()
+    let mut builder = EngineBuilder::new()
         .model(cfg.clone())
         .aimc(meta.aimc)
         .placement(placement)
         .serve_cap(meta.serve_cap)
-        .build(&mut rt, &paths, &params)?;
+        .replacer(RePlacerOptions { budget, ..Default::default() });
+    if drift_nu > 0.0 {
+        builder = builder.drift(DriftModel::with_nu(drift_nu));
+    }
+    let engine = builder.build(&mut rt, &paths, &params)?;
 
-    // stream requests from task items through the session
+    // stream requests from task items through the session; with drift
+    // enabled, run a maintenance tick (drift decay → sentinel probes →
+    // live re-placement) every `replace-every` admitted requests
     let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 4, cfg.batch * 4));
     let mut submitted = 0usize;
     'outer: for task in &tasks {
@@ -320,14 +334,32 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             let (tk, tg, mk) = pack_choice(&item.ctx, choice, cfg.seq_len);
             session.submit(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 })?;
             submitted += 1;
+            if replace_every > 0 && submitted % replace_every == 0 {
+                let rep = session.maintenance()?;
+                for mg in &rep.migrations {
+                    println!(
+                        "  maintenance @ {} tokens: expert ({},{}) {} (|dev| {:.4})",
+                        rep.drift_clock,
+                        mg.layer,
+                        mg.expert,
+                        if mg.is_promotion() { "analog → digital" } else { "digital → analog" },
+                        mg.deviation
+                    );
+                }
+            }
             if submitted >= n_requests {
                 break 'outer;
             }
         }
     }
     let responses = session.drain()?;
+    if drift_nu > 0.0 {
+        // final tick so the reported sentinel deviation reflects the
+        // end-of-stream chip state
+        session.maintenance()?;
+    }
     println!(
-        "served {} scoring requests (Γ={gamma}, prog-noise={noise})",
+        "served {} scoring requests (Γ={gamma}, prog-noise={noise}, drift ν={drift_nu})",
         responses.len()
     );
 
@@ -358,6 +390,21 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     t.row(vec![
         "host workers".into(),
         session.engine().workers().to_string(),
+    ]);
+    t.row(vec![
+        "drift clock".into(),
+        format!("{} tokens (ν={drift_nu})", m.drift_clock),
+    ]);
+    t.row(vec![
+        "live migrations".into(),
+        format!(
+            "{} ({} promoted, {} demoted), budget {budget}/tick",
+            m.migrations, m.promotions, m.demotions
+        ),
+    ]);
+    t.row(vec![
+        "sentinel deviation".into(),
+        format!("max |dev| {:.4} vs digital reference", m.sentinel_deviation),
     ]);
     for b in &m.backends {
         t.row(vec![
@@ -458,6 +505,17 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
                         b.get("transfer_bytes")?.as_f64()?,
                     );
                 }
+                let soak = entry.get("drift_soak")?;
+                println!(
+                    "  drift soak ν={}: {:.0} migrations ({:.0} promoted, \
+                     {:.0} demoted), sentinel |dev| peak {:.3} → final {:.3}",
+                    soak.get("nu")?.as_f64()?,
+                    soak.get("migrations")?.as_f64()?,
+                    soak.get("promotions")?.as_f64()?,
+                    soak.get("demotions")?.as_f64()?,
+                    soak.get("peak_sentinel_deviation")?.as_f64()?,
+                    soak.get("sentinel_deviation")?.as_f64()?,
+                );
                 entries.push(entry);
             }
             let json = Json::obj(vec![

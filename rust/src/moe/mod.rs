@@ -7,13 +7,17 @@
 //! - [`placement`] — the Fig 2 three-step placement algorithm: dense
 //!   modules digital, experts ranked per block, top-Γ to digital, rest
 //!   to AIMC; plus the weight-programming step that applies eq (3) noise
-//!   to the analog-placed tensors in a [`ParamStore`].
+//!   to the analog-placed tensors in a [`ParamStore`], and the
+//!   [`placement::RePlacer`] that revises a deployed placement at run
+//!   time when conductance drift degrades analog experts
+//!   (hysteresis-banded, budget-bounded — executed live by
+//!   `coordinator::Engine::maintenance`).
 
 pub mod placement;
 pub mod score;
 
 pub use placement::{
-    apply_placement, plan_placement, BackendId, Placement, PlacementOptions, BACKEND_ANALOG,
-    BACKEND_DIGITAL,
+    apply_placement, plan_placement, BackendId, Migration, Placement, PlacementOptions,
+    RePlacer, RePlacerOptions, BACKEND_ANALOG, BACKEND_DIGITAL,
 };
 pub use score::{expert_scores, SelectionMetric};

@@ -12,6 +12,12 @@
 //! register higher slots through `EngineBuilder::backend` without
 //! touching this planner.
 //!
+//! The placement is not final: AIMC conductances drift after
+//! deployment, so [`RePlacer`] revises the expert → backend map at run
+//! time from the drift monitor's sentinel deviations (hysteresis bands,
+//! per-step migration budget); the serving engine executes the planned
+//! [`Migration`]s live between batches.
+//!
 //! A [`Placement`] is then *applied* to a [`ParamStore`]: analog-placed
 //! expert weights receive eq (3) programming noise (per seed), and the
 //! matching `analog_flags` vector enables the in-graph DAC-ADC path. The
@@ -326,14 +332,174 @@ pub fn apply_placement(
     Ok(())
 }
 
-fn hash_name(name: &str) -> u64 {
-    // FNV-1a — stable across runs, distinct per tensor name
-    let mut h = 0xcbf29ce484222325u64;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
+// ---------------------------------------------------------------------------
+// Live re-placement under drift (ROMER-style runtime expert replacement)
+// ---------------------------------------------------------------------------
+
+/// One planned live migration of an expert between backend slots.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Migration {
+    /// Layer of the migrating expert.
+    pub layer: usize,
+    /// Expert index within the layer.
+    pub expert: usize,
+    /// Backend slot the expert is leaving.
+    pub from: BackendId,
+    /// Backend slot the expert moves to.
+    pub to: BackendId,
+    /// The sentinel deviation that triggered the decision.
+    pub deviation: f64,
+}
+
+impl Migration {
+    /// Is this an analog → digital promotion (drift rescue)? Defined
+    /// over the two standard slots the [`RePlacer`] plans between; a
+    /// hand-written migration to a custom slot (≥ 2) is neither a
+    /// promotion nor a demotion.
+    pub fn is_promotion(&self) -> bool {
+        self.to == BACKEND_DIGITAL
     }
-    h
+}
+
+/// Thresholds + budget of the [`RePlacer`].
+#[derive(Clone, Copy, Debug)]
+pub struct RePlacerOptions {
+    /// Sentinel deviation at or above which an analog expert is
+    /// promoted to the digital backend.
+    pub promote: f64,
+    /// Sentinel deviation at or below which a previously promoted
+    /// expert (its tiles reprogrammed, deviation recovered) is demoted
+    /// back to analog. Must be strictly below `promote` — the gap is
+    /// the hysteresis band.
+    pub demote: f64,
+    /// Maximum migrations per maintenance step (promotions are planned
+    /// first: they protect accuracy, demotions only recover capacity).
+    pub budget: usize,
+}
+
+impl Default for RePlacerOptions {
+    fn default() -> Self {
+        RePlacerOptions { promote: 0.08, demote: 0.02, budget: 2 }
+    }
+}
+
+/// Hysteresis-banded live re-placement planner.
+///
+/// Each maintenance step the serving engine probes every drift-tracked
+/// expert (see `aimc::drift::DriftMonitor`) and hands the deviations to
+/// [`RePlacer::plan`]:
+///
+/// - analog experts whose deviation reached `promote` are moved to the
+///   digital backend, worst first (their tiles are scheduled for
+///   reprogramming at promotion time);
+/// - previously *promoted* experts whose deviation fell back to
+///   `demote` — i.e. whose reprogrammed tiles have recovered — return
+///   to analog, best first. Experts the planner never promoted are
+///   left alone: a hand-placed digital expert is a placement decision,
+///   not a drift rescue.
+///
+/// The two thresholds form a hysteresis band: after a demotion the
+/// deviation must climb the full band width
+/// ([`RePlacer::band`] = `promote - demote`) before the expert can
+/// migrate again, so the placement can never oscillate on deviation
+/// wiggle smaller than the band (pinned by
+/// `prop_replacer_never_oscillates_within_band`). The per-step
+/// `budget` bounds migration work so a maintenance tick stays cheap.
+#[derive(Clone, Debug)]
+pub struct RePlacer {
+    opts: RePlacerOptions,
+    /// experts this planner moved to digital (the only demotion
+    /// candidates), per `[layer][expert]`
+    promoted: Vec<Vec<bool>>,
+}
+
+impl RePlacer {
+    /// A planner for an `n_layers × n_experts` model. Panics if the
+    /// options do not leave a positive hysteresis band.
+    pub fn new(opts: RePlacerOptions, n_layers: usize, n_experts: usize) -> RePlacer {
+        assert!(
+            opts.promote > opts.demote,
+            "RePlacer needs promote ({}) > demote ({}) — the gap is the hysteresis band",
+            opts.promote,
+            opts.demote
+        );
+        RePlacer { opts, promoted: vec![vec![false; n_experts]; n_layers] }
+    }
+
+    /// The hysteresis band width (`promote - demote`).
+    pub fn band(&self) -> f64 {
+        self.opts.promote - self.opts.demote
+    }
+
+    /// The planner's thresholds + budget.
+    pub fn options(&self) -> &RePlacerOptions {
+        &self.opts
+    }
+
+    /// Was this expert promoted by the planner (and not yet demoted)?
+    pub fn is_promoted(&self, layer: usize, expert: usize) -> bool {
+        self.promoted[layer][expert]
+    }
+
+    /// Plan this step's migrations from the monitor's deviations
+    /// (`deviations[layer][expert]`), bounded by the budget, and commit
+    /// the promoted-set bookkeeping. The caller must execute every
+    /// returned migration (the engine's `apply_replacement`).
+    pub fn plan(&mut self, placement: &Placement, deviations: &[Vec<f64>]) -> Vec<Migration> {
+        let mut promote: Vec<Migration> = Vec::new();
+        let mut demote: Vec<Migration> = Vec::new();
+        for (l, layer) in deviations.iter().enumerate() {
+            for (e, &dev) in layer.iter().enumerate() {
+                let owner = placement.backend_of(l, e);
+                if owner == BACKEND_ANALOG && dev >= self.opts.promote {
+                    promote.push(Migration {
+                        layer: l,
+                        expert: e,
+                        from: BACKEND_ANALOG,
+                        to: BACKEND_DIGITAL,
+                        deviation: dev,
+                    });
+                } else if owner == BACKEND_DIGITAL
+                    && self.promoted[l][e]
+                    && dev <= self.opts.demote
+                {
+                    demote.push(Migration {
+                        layer: l,
+                        expert: e,
+                        from: BACKEND_DIGITAL,
+                        to: BACKEND_ANALOG,
+                        deviation: dev,
+                    });
+                }
+            }
+        }
+        // worst drift first; ties broken by (layer, expert) for
+        // determinism
+        promote.sort_by(|a, b| {
+            b.deviation
+                .partial_cmp(&a.deviation)
+                .unwrap()
+                .then_with(|| (a.layer, a.expert).cmp(&(b.layer, b.expert)))
+        });
+        demote.sort_by(|a, b| {
+            a.deviation
+                .partial_cmp(&b.deviation)
+                .unwrap()
+                .then_with(|| (a.layer, a.expert).cmp(&(b.layer, b.expert)))
+        });
+        promote.extend(demote);
+        promote.truncate(self.opts.budget);
+        for m in &promote {
+            self.promoted[m.layer][m.expert] = m.is_promotion();
+        }
+        promote
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a — stable across runs, distinct per tensor name (same
+    // stream-tag hash the drift model uses for per-tile ν draws)
+    crate::util::fnv1a(name.bytes())
 }
 
 #[cfg(test)]
@@ -626,6 +792,119 @@ mod tests {
                     digital == k_digital,
                     "layer {l}: {digital} digital, want {k_digital}"
                 );
+            }
+            Ok(())
+        });
+    }
+
+    // --- RePlacer ---
+
+    fn dev_grid(c: &ModelConfig, v: f64) -> Vec<Vec<f64>> {
+        vec![vec![v; c.n_experts]; c.n_layers]
+    }
+
+    #[test]
+    fn replacer_promotes_worst_drift_first_within_budget() {
+        let c = cfg();
+        let p = Placement::all_experts_analog(&c);
+        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 2 };
+        let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
+        let mut devs = dev_grid(&c, 0.0);
+        devs[0][1] = 0.5;
+        devs[1][3] = 0.9;
+        devs[1][0] = 0.2;
+        devs[0][0] = 0.09; // inside the band — must not move
+        let plan = rp.plan(&p, &devs);
+        assert_eq!(plan.len(), 2, "budget caps the step");
+        assert_eq!((plan[0].layer, plan[0].expert), (1, 3), "worst first");
+        assert_eq!((plan[1].layer, plan[1].expert), (0, 1));
+        assert!(plan.iter().all(|m| m.is_promotion()));
+        assert!(rp.is_promoted(1, 3) && rp.is_promoted(0, 1));
+        assert!(!rp.is_promoted(1, 0), "over-budget candidate not committed");
+    }
+
+    #[test]
+    fn replacer_demotes_only_its_own_promotions() {
+        let c = cfg();
+        let mut p = Placement::all_experts_analog(&c);
+        // expert (0,2) was placed digital by the planner at deployment —
+        // a placement decision, not a drift rescue
+        p.set_backend(0, 2, BACKEND_DIGITAL);
+        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 4 };
+        let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
+        // promote (1,1), then recover it
+        let mut devs = dev_grid(&c, 0.0);
+        devs[1][1] = 0.3;
+        let plan = rp.plan(&p, &devs);
+        assert_eq!(plan.len(), 1);
+        p.set_backend(1, 1, BACKEND_DIGITAL); // caller executes the move
+        let devs = dev_grid(&c, 0.0); // everything recovered
+        let plan = rp.plan(&p, &devs);
+        assert_eq!(plan.len(), 1, "only the promoted expert returns");
+        assert_eq!((plan[0].layer, plan[0].expert), (1, 1));
+        assert_eq!(plan[0].to, BACKEND_ANALOG);
+        assert!(!rp.is_promoted(1, 1));
+    }
+
+    #[test]
+    fn replacer_holds_inside_the_band() {
+        let c = cfg();
+        let p = Placement::all_experts_analog(&c);
+        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 8 };
+        let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
+        // every deviation strictly inside (demote, promote): no moves
+        let plan = rp.plan(&p, &dev_grid(&c, 0.05));
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "hysteresis band")]
+    fn replacer_rejects_inverted_band() {
+        RePlacer::new(RePlacerOptions { promote: 0.02, demote: 0.1, budget: 1 }, 1, 1);
+    }
+
+    #[test]
+    fn prop_replacer_never_oscillates_within_band() {
+        // property: feed random deviation trajectories; whenever the
+        // planner migrates the same expert twice, the two triggering
+        // deviations must differ by at least the band width (and the
+        // directions must alternate) — deviation wiggle inside one band
+        // can never bounce an expert between backends
+        crate::util::proptest::check("replacer hysteresis", 50, |rng| {
+            let c = cfg();
+            let mut p = Placement::all_experts_analog(&c);
+            let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 64 };
+            let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
+            let band = rp.band();
+            let mut last: Vec<Vec<Option<Migration>>> =
+                vec![vec![None; c.n_experts]; c.n_layers];
+            for _step in 0..rng.range(2, 30) {
+                let devs: Vec<Vec<f64>> = (0..c.n_layers)
+                    .map(|_| (0..c.n_experts).map(|_| rng.uniform() * 0.2).collect())
+                    .collect();
+                for m in rp.plan(&p, &devs) {
+                    p.set_backend(m.layer, m.expert, m.to); // execute
+                    if let Some(prev) = last[m.layer][m.expert] {
+                        crate::prop_assert!(
+                            prev.to == m.from,
+                            "({},{}) migrated {}→{} after {}→{}",
+                            m.layer,
+                            m.expert,
+                            m.from,
+                            m.to,
+                            prev.from,
+                            prev.to
+                        );
+                        crate::prop_assert!(
+                            (prev.deviation - m.deviation).abs() >= band,
+                            "({},{}) re-migrated on a {:.3} move — inside the {band:.3} band",
+                            m.layer,
+                            m.expert,
+                            (prev.deviation - m.deviation).abs()
+                        );
+                    }
+                    last[m.layer][m.expert] = Some(m);
+                }
             }
             Ok(())
         });

@@ -15,3 +15,26 @@ pub mod table;
 pub use json::Json;
 pub use prng::Prng;
 pub use stats::{mean, mean_stderr, stddev};
+
+/// FNV-1a over a byte stream — the crate's one stable, seed-addressable
+/// name/coordinate hash (per-tensor noise streams in `moe::placement`,
+/// per-tile drift streams in `aimc::drift`).
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a_is_stable_and_distinct() {
+        // pinned reference value of FNV-1a("a") — guards the constants
+        assert_eq!(super::fnv1a(*b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(super::fnv1a(*b"up"), super::fnv1a(*b"gate"));
+        assert_eq!(super::fnv1a([]), 0xcbf29ce484222325);
+    }
+}

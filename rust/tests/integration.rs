@@ -6,6 +6,7 @@
 //! artifacts tree is missing they fail with a clear message rather than
 //! silently passing.
 
+use hetmoe::aimc::drift::DriftModel;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::aimc::quant::{adc_quant, dac_quant};
 use hetmoe::config::Meta;
@@ -15,7 +16,10 @@ use hetmoe::coordinator::{
 };
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
-use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
+use hetmoe::moe::placement::{
+    apply_placement, plan_placement, Migration, Placement, PlacementOptions, RePlacerOptions,
+    BACKEND_ANALOG, BACKEND_DIGITAL,
+};
 use hetmoe::moe::score::{maxnn_scores, SelectionMetric};
 use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
 use hetmoe::tensor;
@@ -700,6 +704,262 @@ fn scratch_arena_reuse_matches_fresh_allocation() {
     for (a, b) in first.iter().zip(&fresh) {
         assert_eq!(a.score.to_bits(), b.score.to_bits(), "request {}", a.id);
     }
+}
+
+#[test]
+fn live_migration_preserves_unrouted_outputs() {
+    // Live re-placement must be surgical: migrating one analog expert to
+    // the digital backend between batches changes only the requests
+    // whose tokens routed to that expert — every other request's score
+    // stays byte-identical. Requests are served one per batch, so
+    // request granularity equals "tokens routed to unmigrated experts".
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+
+    let n = 12usize;
+    let mut reqs = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            reqs.push(Request {
+                id: reqs.len() as u64,
+                tokens: tk,
+                targets: tg,
+                mask: mk,
+                arrived: 0,
+            });
+            if reqs.len() == n {
+                break 'outer;
+            }
+        }
+    }
+
+    let build = |rt: &mut Runtime| {
+        EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .build(rt, &paths, &params)
+            .unwrap()
+    };
+
+    // phantom routing of the zero-padded rows: an empty batch routes
+    // b identical all-zero rows, so per-row counts divide evenly
+    let mut probe = build(&mut rt);
+    probe.serve_batch(&rt, &[]).unwrap();
+    let b = cfg.batch as u64;
+    let mut phantom = vec![vec![0u64; cfg.n_experts]; cfg.n_layers];
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            let c = probe.router_stats.counts[l][e];
+            assert_eq!(c % b, 0, "zero rows must route identically ({l},{e})");
+            phantom[l][e] = c / b;
+        }
+    }
+
+    // reference pass: serve each request alone, recording which experts
+    // its own tokens routed to (counts delta minus the b-1 phantom rows)
+    let mut reference = build(&mut rt);
+    let mut baseline: Vec<Response> = Vec::new();
+    let mut touched: Vec<Vec<(usize, usize)>> = Vec::new();
+    let mut prev = reference.router_stats.counts.clone();
+    for r in &reqs {
+        let resp = reference.serve_batch(&rt, std::slice::from_ref(r)).unwrap();
+        baseline.extend(resp);
+        let mut own = Vec::new();
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                let delta = reference.router_stats.counts[l][e] - prev[l][e];
+                assert!(delta >= (b - 1) * phantom[l][e], "phantom under-count");
+                if delta > (b - 1) * phantom[l][e] {
+                    own.push((l, e));
+                }
+            }
+        }
+        prev = reference.router_stats.counts.clone();
+        touched.push(own);
+    }
+
+    // pick an analog expert with a mixed touch set *after* the
+    // migration point: some post-split requests route to it (they must
+    // observe the move) and some don't (they must stay byte-identical).
+    // It must also be phantom-free — the zero-padded rows route too,
+    // and a phantom activation changed by the migration could reach an
+    // untouched request through a shared analog chunk's β batch
+    // statistics at a later layer.
+    let split = reqs.len() / 3;
+    let mut target: Option<(usize, usize)> = None;
+    'pick: for l in 0..cfg.n_layers {
+        if !cfg.is_moe_layer(l) {
+            continue;
+        }
+        for e in 0..cfg.n_experts {
+            if placement.backend_of(l, e) != BACKEND_ANALOG || phantom[l][e] > 0 {
+                continue;
+            }
+            let post = &touched[split..];
+            let hits = post.iter().filter(|t| t.contains(&(l, e))).count();
+            if hits > 0 && hits < post.len() {
+                target = Some((l, e));
+                break 'pick;
+            }
+        }
+    }
+    let (tl, te) = target.expect("no phantom-free analog expert with a mixed touch set");
+
+    // live pass: serve the first third, migrate mid-stream, serve on
+    let mut live = build(&mut rt);
+    let mut migrated_resp: Vec<Response> = Vec::new();
+    for r in &reqs[..split] {
+        migrated_resp.extend(live.serve_batch(&rt, std::slice::from_ref(r)).unwrap());
+    }
+    let moved = live
+        .apply_replacement(
+            &rt,
+            &[Migration {
+                layer: tl,
+                expert: te,
+                from: BACKEND_ANALOG,
+                to: BACKEND_DIGITAL,
+                deviation: 0.0,
+            }],
+        )
+        .unwrap();
+    assert_eq!(moved, 1);
+    assert_eq!(live.placement.backend_of(tl, te), BACKEND_DIGITAL);
+    assert_eq!(live.metrics.migrations, 1);
+    assert_eq!(live.metrics.promotions, 1);
+    for r in &reqs[split..] {
+        migrated_resp.extend(live.serve_batch(&rt, std::slice::from_ref(r)).unwrap());
+    }
+
+    assert_eq!(baseline.len(), migrated_resp.len());
+    let mut diverged = 0usize;
+    for (i, (a, m)) in baseline.iter().zip(&migrated_resp).enumerate() {
+        assert_eq!(a.id, m.id);
+        let hits_target = touched[i].contains(&(tl, te));
+        if i < split || !hits_target {
+            assert_eq!(
+                a.score.to_bits(),
+                m.score.to_bits(),
+                "request {i} never routed to the migrated expert ({tl},{te}) \
+                 but its score changed: {} != {}",
+                m.score,
+                a.score
+            );
+        } else if a.score.to_bits() != m.score.to_bits() {
+            diverged += 1;
+        }
+    }
+    // the migrated expert now runs exact FP instead of DAC-ADC: at
+    // least one routed request must actually observe the move
+    assert!(diverged > 0, "migration had no observable effect on routed requests");
+}
+
+#[test]
+fn drift_soak_migrates_and_deviation_recovers() {
+    // Long-horizon soak: aggressive drift + a maintenance tick per wave
+    // must (a) detect sentinel deviation, (b) perform at least one live
+    // analog → digital promotion, and (c) keep the deviation of every
+    // migrated expert at zero afterwards (served from the exact digital
+    // reference), with the drift clock tracking served tokens.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+
+    let engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement.clone())
+        .serve_cap(meta.serve_cap)
+        .drift(DriftModel::with_nu(0.5))
+        .replacer(RePlacerOptions { budget: 8, ..Default::default() })
+        .build(&mut rt, &paths, &params)
+        .unwrap();
+    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+
+    let mut stream = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            stream.push((tk, tg, mk));
+            if stream.len() == cfg.batch * 3 {
+                break 'outer;
+            }
+        }
+    }
+
+    let mut peak_dev = 0.0f64;
+    let mut all_migrations: Vec<Migration> = Vec::new();
+    for wave in stream.chunks(cfg.batch) {
+        for (tk, tg, mk) in wave {
+            session
+                .submit(Request {
+                    id: 0,
+                    tokens: tk.clone(),
+                    targets: tg.clone(),
+                    mask: mk.clone(),
+                    arrived: 0,
+                })
+                .unwrap();
+        }
+        session.drain().unwrap();
+        let rep = session.maintenance().unwrap();
+        assert!(rep.probed > 0, "drift-enabled maintenance must probe");
+        peak_dev = peak_dev.max(rep.max_deviation);
+        all_migrations.extend(rep.migrations);
+    }
+
+    let m = session.metrics();
+    assert_eq!(m.drift_clock, m.tokens, "drift clock ticks in served tokens");
+    assert!(peak_dev > 0.0, "aggressive drift must register on the sentinel");
+    assert!(peak_dev.is_finite());
+    assert!(
+        m.migrations >= 1 && m.promotions >= 1,
+        "aggressive drift must force at least one analog → digital promotion \
+         (got {} migrations, {} promotions)",
+        m.migrations,
+        m.promotions
+    );
+    assert_eq!(m.migrations, all_migrations.len() as u64);
+
+    // every promotion is live in the deployed placement, and no
+    // migrated-and-still-digital expert carries sentinel deviation
+    let engine = session.into_engine();
+    for mg in &all_migrations {
+        let still_digital = engine.placement.backend_of(mg.layer, mg.expert) == BACKEND_DIGITAL;
+        if mg.is_promotion() && still_digital {
+            assert!(
+                mg.deviation >= 0.08,
+                "promotion below the threshold: {}",
+                mg.deviation
+            );
+        }
+    }
+    assert!(
+        engine.placement.n_analog_experts() < placement.n_analog_experts(),
+        "at least one expert must have left the analog chip"
+    );
 }
 
 #[test]

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Bench-regression guard for BENCH_kernels.json trajectories.
+
+Compares the current kernel-bench dump against the previous CI run's
+artifact and fails when any case's throughput regressed by more than
+the allowed fraction. Correctness gates (``eps_ok``) in the *current*
+dump fail hard regardless of the baseline.
+
+Warn-only when the baseline file is missing (first run on a repo whose
+trajectory is still empty) or a case has no counterpart — CI shared
+runners also make timing noisy, which is why the default threshold is a
+generous 25%.
+
+Usage:
+    python3 scripts/bench_guard.py PREV.json CUR.json [--max-regression 0.25]
+
+Exit codes: 0 ok / baseline missing, 1 regression or correctness gate.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# throughput-style metrics to guard, per case kind (higher = better)
+GUARDED = ["items_per_s", "speedup_blocked", "speedup_parallel"]
+
+
+def case_key(case):
+    mid = case.get("k", case.get("d", 0))
+    return (case.get("kind", "?"), case.get("n", 0), mid, case.get("m", 0))
+
+
+def load_cases(path):
+    with open(path) as f:
+        dump = json.load(f)
+    return {case_key(c): c for c in dump.get("cases", [])}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev", help="baseline BENCH_kernels.json (previous run)")
+    ap.add_argument("cur", help="current BENCH_kernels.json")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional drop per guarded metric")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.cur):
+        print(f"bench guard: current dump {args.cur} missing", file=sys.stderr)
+        return 1
+    cur = load_cases(args.cur)
+
+    failures = []
+    # correctness gates are not perf numbers: a false fails regardless
+    # of any baseline (docs/BENCHMARKS.md §Comparing runs)
+    for key, case in cur.items():
+        if case.get("eps_ok") is False:
+            failures.append(f"{key}: eps_ok=false — kernel no longer matches the scalar reference")
+
+    if not os.path.exists(args.prev):
+        print(f"bench guard: no baseline at {args.prev} — warn-only first run "
+              f"({len(cur)} current cases recorded)")
+        for f in failures:
+            print(f"FAIL {f}", file=sys.stderr)
+        return 1 if failures else 0
+
+    prev = load_cases(args.prev)
+    compared = 0
+    for key, pc in prev.items():
+        cc = cur.get(key)
+        if cc is None:
+            print(f"warn: case {key} disappeared from the current dump")
+            continue
+        for metric in GUARDED:
+            if metric not in pc or metric not in cc:
+                continue
+            old, new = float(pc[metric]), float(cc[metric])
+            if old <= 0:
+                continue
+            drop = (old - new) / old
+            compared += 1
+            status = "FAIL" if drop > args.max_regression else "ok"
+            print(f"{status:>4} {key} {metric}: {old:.3g} -> {new:.3g} "
+                  f"({-drop * 100:+.1f}%)")
+            if drop > args.max_regression:
+                failures.append(
+                    f"{key} {metric} regressed {drop * 100:.1f}% "
+                    f"(> {args.max_regression * 100:.0f}% allowed)")
+
+    print(f"bench guard: {compared} metrics compared, {len(failures)} failure(s)")
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

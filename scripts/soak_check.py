@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Assert the drift-soak smoke actually exercised live re-placement.
+
+Parses the ``hetmoe serve`` report line
+
+    drift: clock=N tokens migrations=M (P promoted, D demoted) sentinel max |dev|=X
+
+and fails unless the run performed at least one live migration (with at
+least one analog → digital promotion) and the post-maintenance sentinel
+deviation is finite and bounded. Used by the weekly ``drift-soak`` CI
+job against ``hetmoe serve --drift-nu … --replace-every …`` output.
+
+Usage: python3 scripts/soak_check.py SERVE_LOG [--max-deviation 2.0]
+"""
+
+import argparse
+import math
+import re
+import sys
+
+PATTERN = re.compile(
+    r"drift: clock=(?P<clock>\d+) tokens migrations=(?P<mig>\d+) "
+    r"\((?P<pro>\d+) promoted, (?P<dem>\d+) demoted\) "
+    r"sentinel max \|dev\|=(?P<dev>[0-9.eE+-]+)"
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("log", help="captured `hetmoe serve` stdout")
+    ap.add_argument("--max-deviation", type=float, default=2.0,
+                    help="bound on the post-maintenance sentinel deviation")
+    args = ap.parse_args()
+
+    with open(args.log) as f:
+        text = f.read()
+    m = PATTERN.search(text)
+    if not m:
+        print("soak check: no drift report line found in the serve output",
+              file=sys.stderr)
+        return 1
+
+    clock = int(m.group("clock"))
+    migrations = int(m.group("mig"))
+    promoted = int(m.group("pro"))
+    deviation = float(m.group("dev"))
+    print(f"soak check: clock={clock} tokens, migrations={migrations} "
+          f"({promoted} promoted), sentinel max |dev|={deviation}")
+
+    errors = []
+    if clock <= 0:
+        errors.append("drift clock never advanced")
+    if migrations < 1 or promoted < 1:
+        errors.append(
+            f"expected ≥1 live analog → digital migration, got {migrations} "
+            f"({promoted} promoted)")
+    if not math.isfinite(deviation) or deviation > args.max_deviation:
+        errors.append(
+            f"sentinel deviation {deviation} not bounded by {args.max_deviation}")
+    for e in errors:
+        print(f"FAIL soak check: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,25 +1,29 @@
-//! Heterogeneous serving: run the full coordinator request path — queue,
-//! dynamic batcher with backpressure, per-layer scheduler dispatching
-//! expert batches to the digital (exact HLO) and analog (Pallas crossbar
-//! kernel HLO) accelerators — over a stream of scoring requests, and
-//! verify the pipelined path agrees with the monolithic `model_fwd`.
+//! Heterogeneous multi-tenant serving: run the full coordinator request
+//! path — two clients enqueueing into priority lanes (bursty
+//! interactive over steady bulk), the weighted-deficit scheduler
+//! composing mixed batches, completions consumed off the server's
+//! completion queue — over a stream of scoring requests, then verify
+//! the pipelined path agrees with the monolithic `model_fwd`.
 //!
 //! ```bash
 //! cargo run --release --example serve_heterogeneous -- [n_requests]
 //! ```
 
-use anyhow::Result;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
 use hetmoe::aimc::drift::DriftModel;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
-use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Session};
-use hetmoe::moe::placement::RePlacerOptions;
+use hetmoe::coordinator::{
+    EngineBuilder, Lane, LaneParams, MaintenancePolicy, Request, Server, ServerConfig,
+};
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
+use hetmoe::moe::placement::RePlacerOptions;
 use hetmoe::moe::placement::{apply_placement, plan_placement, PlacementOptions};
 use hetmoe::moe::score::SelectionMetric;
 use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
-use hetmoe::util::stats;
 
 fn main() -> Result<()> {
     let n_requests: usize = std::env::args()
@@ -73,38 +77,68 @@ fn main() -> Result<()> {
         }
     }
 
-    // the Session owns the admission queue + dynamic batcher: submit
-    // serves full batches inline, drain flushes the tail
-    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
-    let mut latencies = Vec::new();
+    // the Server owns the per-lane queues, the weighted-deficit
+    // scheduler, and the completion queue: two tenants share it —
+    // `alice` sends bursty interactive traffic, `bob` a steady bulk
+    // backfill. Interactive outweighs bulk 3:1, but the bulk lane's
+    // aging bound caps its wait (no starvation under the bursts).
+    let server_cfg = ServerConfig::new(cfg.batch)
+        .lane(
+            Lane::Interactive,
+            LaneParams { weight: 3, max_wait_ticks: 4, max_queue: cfg.batch * 4 },
+        )
+        .lane(
+            Lane::Bulk,
+            LaneParams {
+                weight: 1,
+                max_wait_ticks: (8 * cfg.batch.max(1)) as u64,
+                max_queue: cfg.batch * 8,
+            },
+        );
+    let mut server = Server::new(&rt, engine, server_cfg);
+    let alice = server.client();
+    let bob = server.client();
+
+    let burst = cfg.batch.max(1);
+    let mut scores: HashMap<u64, f64> = HashMap::new();
     let t0 = std::time::Instant::now();
-    for (tk, tg, mk) in &stream {
-        let before = session.pending();
-        let t = std::time::Instant::now();
-        session.submit(Request {
-            id: 0, // assigned by the session
+    for (i, (tk, tg, mk)) in stream.iter().enumerate() {
+        // interactive bursts of one compiled batch, bulk in between
+        let (client, lane) = if i % (3 * burst) < burst {
+            (&alice, Lane::Interactive)
+        } else {
+            (&bob, Lane::Bulk)
+        };
+        let req = Request {
+            id: 0, // overwritten with the ticket id
             tokens: tk.clone(),
             targets: tg.clone(),
             mask: mk.clone(),
             arrived: 0,
-        })?;
-        // requests served inside this submit (full or deadline release)
-        let served = before + 1 - session.pending();
-        if served > 0 {
-            latencies.push(t.elapsed().as_secs_f64() * 1e3 / served as f64);
+        };
+        // backpressure is non-destructive: a rejected request comes
+        // back; one poll (serving a batch) frees space
+        if let Err(back) = server.enqueue(client, req, lane) {
+            server.poll()?;
+            server
+                .enqueue(client, back, lane)
+                .map_err(|_| anyhow!("queue still full after poll"))?;
+        }
+        server.poll()?;
+        // consume completions as they appear — no blocking drain needed
+        while let Some(c) = server.try_recv() {
+            scores.insert(c.ticket.id, c.response.score);
         }
     }
-    let tail = session.pending();
-    let t = std::time::Instant::now();
-    let responses = session.drain()?;
-    if tail > 0 {
-        latencies.push(t.elapsed().as_secs_f64() * 1e3 / tail as f64);
+    let (report, engine) = server.shutdown()?;
+    for c in &report.completions {
+        scores.insert(c.ticket.id, c.response.score);
     }
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n--- engine metrics ---");
-    println!("{}", session.metrics().report());
-    for b in &session.metrics().backends {
+    println!("{}", engine.metrics.report());
+    for b in &engine.metrics.backends {
         println!(
             "{:>8}: {} dispatches in {} device round trips ({:.1} chunks/trip), \
              utilization {:.1}% ({} real / {} padded rows)",
@@ -117,17 +151,34 @@ fn main() -> Result<()> {
             b.padded_tokens
         );
     }
+    println!("\n--- per-lane traffic ---");
+    for lm in &report.lanes {
+        println!(
+            "{:>12} (w={}): admitted {}, rejected {}, served {}, wait ticks \
+             p50={:.1} p95={:.1} p99={:.1} max={}",
+            lm.name,
+            lm.weight,
+            lm.admitted,
+            lm.rejected,
+            lm.served,
+            lm.wait.quantile(0.5),
+            lm.wait.quantile(0.95),
+            lm.wait.quantile(0.99),
+            lm.wait.max_ticks()
+        );
+    }
     println!(
-        "per-request latency: p50={:.1}ms p95={:.1}ms  end-to-end {:.0} req/s",
-        stats::quantile(&latencies, 0.5),
-        stats::quantile(&latencies, 0.95),
-        responses.len() as f64 / wall
+        "batch occupancy {:.1}%, end-to-end {:.0} req/s",
+        report.occupancy * 100.0,
+        scores.len() as f64 / wall.max(1e-12)
     );
 
     // --- cross-check: pipelined serving == monolithic model_fwd ---
+    // ticket ids are assigned in enqueue order, so stream[i]'s score is
+    // scores[&(i as u64)]
     let mut ev = Evaluator::new(&mut rt, &paths, cfg.clone(), meta.aimc)?;
     let flags = placement.to_flags(&cfg);
-    let n_check = responses.len().min(cfg.batch);
+    let n_check = stream.len().min(cfg.batch);
     let mut tk = Vec::new();
     let mut tg = Vec::new();
     let mut mk = Vec::new();
@@ -140,7 +191,10 @@ fn main() -> Result<()> {
         .score_rows(&rt, &mut params, &tk, &tg, &mk, &flags, meta.aimc.kappa, meta.aimc.lam)?;
     let mut max_diff = 0f64;
     for i in 0..n_check {
-        max_diff = max_diff.max((responses[i].score - mono[i] as f64).abs());
+        let served = scores
+            .get(&(i as u64))
+            .ok_or_else(|| anyhow!("no completion for ticket {i}"))?;
+        max_diff = max_diff.max((served - mono[i] as f64).abs());
     }
     println!(
         "\nserving-vs-monolith score agreement over {n_check} requests: \
@@ -149,8 +203,18 @@ fn main() -> Result<()> {
     );
 
     // --- drift soak epilogue: the same deployment under aggressive
-    // conductance drift, with a live re-placement tick per wave ---
-    println!("\n--- drift soak (ν=0.4, maintenance every wave) ---");
+    // conductance drift; the server owns the maintenance cadence (one
+    // tick per compiled batch served) ---
+    println!("\n--- drift soak (ν=0.4, server-owned maintenance every batch) ---");
+    let print_tick = |rep: &hetmoe::coordinator::MaintenanceReport| {
+        println!(
+            "@ {:>5} tokens: probed {} experts, max |dev| {:.4}, {} migrations",
+            rep.drift_clock,
+            rep.probed,
+            rep.max_deviation,
+            rep.migrations.len()
+        );
+    };
     let engine = EngineBuilder::new()
         .model(cfg.clone())
         .aimc(meta.aimc)
@@ -159,28 +223,40 @@ fn main() -> Result<()> {
         .drift(DriftModel::with_nu(0.4))
         .replacer(RePlacerOptions { budget: 4, ..Default::default() })
         .build(&mut rt, &paths, &params)?;
-    let mut soak = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
-    for wave in stream.chunks(cfg.batch.max(1)) {
-        for (tk, tg, mk) in wave {
-            soak.submit(Request {
-                id: 0,
-                tokens: tk.clone(),
-                targets: tg.clone(),
-                mask: mk.clone(),
-                arrived: 0,
-            })?;
+    let mut soak = Server::new(
+        &rt,
+        engine,
+        ServerConfig::new(cfg.batch)
+            .maintenance(MaintenancePolicy::every(cfg.batch.max(1) as u64)),
+    );
+    let soak_client = soak.client();
+    for (tk, tg, mk) in &stream {
+        let req = Request {
+            id: 0,
+            tokens: tk.clone(),
+            targets: tg.clone(),
+            mask: mk.clone(),
+            arrived: 0,
+        };
+        if let Err(back) = soak.enqueue(&soak_client, req, Lane::Interactive) {
+            soak.poll()?;
+            soak.enqueue(&soak_client, back, Lane::Interactive)
+                .map_err(|_| anyhow!("soak queue still full after poll"))?;
         }
-        soak.drain()?;
-        let rep = soak.maintenance()?;
-        println!(
-            "@ {:>5} tokens: probed {} experts, max |dev| {:.4}, {} migrations",
-            rep.drift_clock,
-            rep.probed,
-            rep.max_deviation,
-            rep.migrations.len()
-        );
+        soak.poll()?;
+        for rep in soak.take_maintenance_reports() {
+            print_tick(&rep);
+        }
     }
-    let m = soak.metrics();
+    let (soak_report, engine) = soak.shutdown()?;
+    for rep in soak_report
+        .maintenance_log
+        .iter()
+        .chain(std::iter::once(&soak_report.maintenance))
+    {
+        print_tick(rep);
+    }
+    let m = &engine.metrics;
     println!(
         "soak total: {} migrations ({} promoted, {} demoted), final sentinel \
          max |dev| {:.4}",

@@ -26,7 +26,10 @@ use anyhow::{Context, Result};
 use crate::aimc::drift::DriftModel;
 use crate::aimc::program::NoiseModel;
 use crate::config::{AimcConfig, Meta, ModelConfig};
-use crate::coordinator::{Batcher, EngineBuilder, Metrics, Request, Response, Session};
+use crate::coordinator::{
+    EngineBuilder, Lane, LaneMetrics, LaneParams, MaintenancePolicy, Metrics, Request, Response,
+    Server, ServerConfig,
+};
 use crate::eval::data::{load_rows, load_tasks, Task};
 use crate::eval::Evaluator;
 use crate::moe::placement::{
@@ -192,22 +195,25 @@ impl BenchCtx {
             .build(&mut self.rt, &self.paths, &self.params)?;
         let t = self.cfg.seq_len;
         let n_rows = (self.calib.len() / t).min(max_rows);
-        let mut session = Session::new(
-            &self.rt,
-            engine,
-            Batcher::new(self.cfg.batch, u64::MAX, self.cfg.batch * 2),
-        );
+        // single interactive lane, no deadline (full batches only)
+        let cfg = ServerConfig::single_lane(self.cfg.batch, u64::MAX, self.cfg.batch * 2);
+        let mut server = Server::new(&self.rt, engine, cfg);
+        let client = server.client();
         for r in 0..n_rows {
-            session.submit(Request {
+            let req = Request {
                 id: r as u64,
                 tokens: self.calib[r * t..(r + 1) * t].to_vec(),
                 targets: vec![0; t],
                 mask: vec![0.0; t],
                 arrived: 0,
-            })?;
+            };
+            server
+                .enqueue(&client, req, Lane::Interactive)
+                .map_err(|_| anyhow::anyhow!("router-stat queue rejected row {r}"))?;
+            server.poll()?;
         }
-        session.drain()?;
-        Ok(session.into_engine().router_stats)
+        let (_report, engine) = server.shutdown()?;
+        Ok(engine.router_stats)
     }
 }
 
@@ -420,6 +426,26 @@ pub fn print_kernel_cases(json: &Json) -> Result<()> {
     Ok(())
 }
 
+/// One lane's `mixed_priority` entry: counters plus the wait-tick
+/// percentiles derived from the lane's [`WaitHistogram`]
+/// (docs/BENCHMARKS.md §Mixed-priority traffic).
+///
+/// [`WaitHistogram`]: crate::coordinator::WaitHistogram
+fn lane_json(l: &LaneMetrics) -> Json {
+    Json::obj(vec![
+        ("lane", Json::str(l.name.clone())),
+        ("weight", Json::num(l.weight as f64)),
+        ("admitted", Json::num(l.admitted as f64)),
+        ("rejected", Json::num(l.rejected as f64)),
+        ("served", Json::num(l.served as f64)),
+        ("wait_p50", Json::num(l.wait.quantile(0.5))),
+        ("wait_p95", Json::num(l.wait.quantile(0.95))),
+        ("wait_p99", Json::num(l.wait.quantile(0.99))),
+        ("wait_max", Json::num(l.wait.max_ticks() as f64)),
+        ("wait_mean", Json::num(l.wait.mean())),
+    ])
+}
+
 fn metrics_backends_json(m: &Metrics) -> Json {
     Json::Arr(
         m.backends
@@ -448,7 +474,12 @@ fn metrics_backends_json(m: &Metrics) -> Json {
 /// throughput, per-wave trajectory, aggregate and per-backend
 /// utilization ([`Metrics::utilization`]), the simulated Appendix-A
 /// clocks, and a byte-identity check between the two response streams.
-/// Requires the AOT artifact tree. Schema: `docs/BENCHMARKS.md`.
+/// Two scenario blocks ride along: `drift_soak` (aggressive drift with
+/// the server-owned maintenance cadence) and `mixed_priority` (bursty
+/// interactive over steady bulk through the [`Server`] lanes, with
+/// per-lane p50/p95/p99 wait ticks — the latency trajectory the CI
+/// guard watches). Requires the AOT artifact tree. Schema:
+/// `docs/BENCHMARKS.md`.
 pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
     let artifacts = crate::artifacts_dir();
     let meta = Meta::load(&artifacts)?;
@@ -476,6 +507,11 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         })
         .collect();
 
+    // single-lane scheduling identical to the legacy Session flow:
+    // interactive lane only, deadline 8 ticks, queue 4 batches
+    let single_lane =
+        |max_batch: usize| ServerConfig::single_lane(max_batch, 8, max_batch * 4);
+
     // serve the same stream through one engine configuration; waves of
     // one compiled batch give the per-wave throughput trajectory
     let mut serve =
@@ -487,25 +523,29 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
                 .serve_cap(meta.serve_cap)
                 .workers(workers)
                 .build(&mut rt, &paths, &params)?;
-            let mut session =
-                Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+            let mut server = Server::new(&rt, engine, single_lane(cfg.batch));
+            let client = server.client();
             let mut responses = Vec::with_capacity(reqs.len());
             let mut trajectory = Vec::new();
             let t0 = Instant::now();
             for wave in reqs.chunks(cfg.batch.max(1)) {
                 let tw = Instant::now();
                 for r in wave {
-                    session.submit(r.clone())?;
+                    server
+                        .enqueue(&client, r.clone(), Lane::Interactive)
+                        .map_err(|_| anyhow::anyhow!("serve-bench queue rejected"))?;
+                    server.poll()?;
                 }
-                responses.extend(session.drain()?);
+                server.drain()?;
+                responses.extend(server.recv_all().into_iter().map(|c| c.response));
                 let dt = tw.elapsed().as_secs_f64();
                 if dt > 0.0 {
                     trajectory.push((wave.len() * t) as f64 / dt);
                 }
             }
             let wall = t0.elapsed().as_secs_f64();
-            let occupancy = session.occupancy();
-            let metrics = session.metrics().clone();
+            let occupancy = server.occupancy();
+            let metrics = server.metrics().clone();
             Ok((responses, metrics, wall, trajectory, occupancy))
         };
 
@@ -514,8 +554,9 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
     let (par_r, par_m, par_wall, trajectory, occupancy) = serve(workers)?;
 
     // --- drift soak: the long-horizon serving scenario — aggressive
-    // conductance drift with a live re-placement tick after every wave
-    // (docs/BENCHMARKS.md §Drift soak) ---
+    // conductance drift with the server-owned maintenance cadence
+    // ticking after every compiled batch (docs/BENCHMARKS.md §Drift
+    // soak) ---
     let soak_nu = 0.4;
     let soak_budget = 4usize;
     let soak = {
@@ -527,20 +568,30 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
             .drift(DriftModel::with_nu(soak_nu))
             .replacer(RePlacerOptions { budget: soak_budget, ..Default::default() })
             .build(&mut rt, &paths, &params)?;
-        let mut session =
-            Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+        let mut server = Server::new(
+            &rt,
+            engine,
+            single_lane(cfg.batch)
+                .maintenance(MaintenancePolicy::every(cfg.batch.max(1) as u64)),
+        );
+        let client = server.client();
         let t0 = Instant::now();
-        let mut peak_dev = 0.0f64;
         for wave in reqs.chunks(cfg.batch.max(1)) {
             for r in wave {
-                session.submit(r.clone())?;
+                server
+                    .enqueue(&client, r.clone(), Lane::Interactive)
+                    .map_err(|_| anyhow::anyhow!("soak queue rejected"))?;
+                server.poll()?;
             }
-            session.drain()?;
-            let rep = session.maintenance()?;
-            peak_dev = peak_dev.max(rep.max_deviation);
+            server.drain()?;
         }
         let wall = t0.elapsed().as_secs_f64();
-        let m = session.metrics().clone();
+        let (report, engine) = server.shutdown()?;
+        let mut peak_dev = report.maintenance.max_deviation;
+        for rep in &report.maintenance_log {
+            peak_dev = peak_dev.max(rep.max_deviation);
+        }
+        let m = engine.metrics.clone();
         Json::obj(vec![
             ("nu", Json::num(soak_nu)),
             ("replace_every_requests", Json::num(cfg.batch as f64)),
@@ -552,6 +603,74 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
             ("migrated", Json::Bool(m.migrations > 0)),
             ("peak_sentinel_deviation", Json::num(peak_dev)),
             ("sentinel_deviation", Json::num(m.sentinel_deviation)),
+            ("tokens_per_s", Json::num((n_requests * t) as f64 / wall.max(1e-12))),
+        ])
+    };
+
+    // --- mixed-priority traffic: bursty interactive over steady bulk
+    // through the weighted-deficit lane scheduler; the per-lane wait
+    // percentiles are the serve-latency trajectory the CI guard
+    // watches (docs/BENCHMARKS.md §Mixed-priority traffic) ---
+    let mp_weights = (3u64, 1u64);
+    let mp_interactive_wait = 4u64;
+    let mp_bulk_wait = (8 * cfg.batch.max(1)) as u64;
+    let mixed = {
+        let engine = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .build(&mut rt, &paths, &params)?;
+        let server_cfg = ServerConfig::new(cfg.batch)
+            .lane(
+                Lane::Interactive,
+                LaneParams {
+                    weight: mp_weights.0,
+                    max_wait_ticks: mp_interactive_wait,
+                    max_queue: cfg.batch * 4,
+                },
+            )
+            .lane(
+                Lane::Bulk,
+                LaneParams {
+                    weight: mp_weights.1,
+                    max_wait_ticks: mp_bulk_wait,
+                    max_queue: cfg.batch * 8,
+                },
+            );
+        let mut server = Server::new(&rt, engine, server_cfg);
+        let interactive = server.client();
+        let bulk = server.client();
+        let burst = cfg.batch.max(1);
+        let t0 = Instant::now();
+        for (i, r) in reqs.iter().enumerate() {
+            // one interactive burst of a compiled batch every three:
+            // the steady bulk flood fills the remaining arrivals
+            let (client, lane) = if i % (3 * burst) < burst {
+                (&interactive, Lane::Interactive)
+            } else {
+                (&bulk, Lane::Bulk)
+            };
+            if let Err(back) = server.enqueue(client, r.clone(), lane) {
+                // non-destructive rejection: a poll frees space
+                server.poll()?;
+                server
+                    .enqueue(client, back, lane)
+                    .map_err(|_| anyhow::anyhow!("mixed-priority queue rejected"))?;
+            }
+            server.poll()?;
+        }
+        let (report, _engine) = server.shutdown()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let lanes: Vec<Json> = report.lanes.iter().map(lane_json).collect();
+        Json::obj(vec![
+            ("interactive_weight", Json::num(mp_weights.0 as f64)),
+            ("bulk_weight", Json::num(mp_weights.1 as f64)),
+            ("interactive_max_wait", Json::num(mp_interactive_wait as f64)),
+            ("bulk_max_wait", Json::num(mp_bulk_wait as f64)),
+            ("requests", Json::num(n_requests as f64)),
+            ("batch_occupancy", Json::num(report.occupancy)),
+            ("lanes", Json::Arr(lanes)),
             ("tokens_per_s", Json::num((n_requests * t) as f64 / wall.max(1e-12))),
         ])
     };
@@ -595,6 +714,7 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         ("sentinel_deviation", Json::num(par_m.sentinel_deviation)),
         ("drift_clock", Json::num(par_m.drift_clock as f64)),
         ("drift_soak", soak),
+        ("mixed_priority", mixed),
         ("backends", metrics_backends_json(&par_m)),
         ("simulated_tokens_per_s", Json::num(par_m.simulated_tokens_per_s())),
         (

@@ -1,24 +1,46 @@
-//! Admission queue + dynamic batcher.
+//! Admission queues + dynamic batching policies.
 //!
-//! vLLM-router-style policy adapted to scoring workloads: requests are
-//! admitted up to a bounded queue depth (backpressure beyond that),
-//! batches form when either the compiled batch size is reached or the
-//! oldest admitted request has waited `max_wait` (here expressed in
-//! arrival ticks, so the policy is deterministic and testable — the
-//! serve example maps ticks to wall time).
+//! Two policies live here:
+//!
+//! - [`Batcher`] — the original single-FIFO policy (vLLM-router style
+//!   adapted to scoring workloads): requests are admitted up to a
+//!   bounded queue depth (backpressure beyond that), batches form when
+//!   either the compiled batch size is reached or the oldest admitted
+//!   request has waited `max_wait`. Kept as the single-lane reference
+//!   and as the configuration carrier of the legacy
+//!   [`Session`](super::Session) adapter.
+//! - [`LaneScheduler`] — the multi-lane generalization behind
+//!   [`Server`](super::Server): per-lane bounded FIFO queues
+//!   ([`LaneParams`]: weight, aging bound, queue bound), mixed-lane
+//!   batch composition by **aged-first + weighted deficit round robin**.
+//!   Requests whose wait reached their lane's `max_wait_ticks` are
+//!   taken first (oldest arrival across lanes), which is the starvation
+//!   bound: when the caller pumps after every tick, no request is ever
+//!   served with `wait > max_wait_ticks` of its lane — independent of
+//!   the other lanes' arrival rates and weights (pumping every `dt`
+//!   ticks relaxes the bound to `max_wait_ticks + dt - 1`). Remaining
+//!   batch slots fill by deficit round robin: each pass grants every
+//!   backlogged lane `weight` credits and takes one request per credit,
+//!   so backlogged lanes share a batch in `weight` proportion.
+//!
+//! Both policies are tick-based (the clock advances by caller-declared
+//! arrival ticks, not wall time), so every release decision is
+//! deterministic and testable; the serve paths map ticks to wall time.
 
 use std::collections::VecDeque;
 
-/// Identifies a request within one serving session (assigned by
-/// `Session::submit`, echoed back on the matching `Response`).
+/// Identifies a request within one serving front-end (assigned at
+/// admission — the `Ticket` id of `Server::enqueue`, or
+/// `Session::submit`'s return — and echoed on the matching
+/// [`Response`]).
 pub type RequestId = u64;
 
 /// One scoring request: a packed sequence row plus its target mask
 /// (produced by `eval::pack_choice` or the caller).
 #[derive(Clone, Debug)]
 pub struct Request {
-    /// Request id; overwritten by `Session::submit`, echoed on the
-    /// matching [`Response`].
+    /// Request id; overwritten at admission (`Server::enqueue` /
+    /// `Session::submit`), echoed on the matching [`Response`].
     pub id: RequestId,
     /// `[seq_len]` input token ids.
     pub tokens: Vec<i32>,
@@ -33,7 +55,8 @@ pub struct Request {
 /// The engine's answer: summed target log-prob of the masked positions.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Response {
-    /// The id `Session::submit` assigned to the request.
+    /// The id admission assigned to the request (`Ticket::id` on the
+    /// `Server` path).
     pub id: RequestId,
     /// Summed masked target log-probability.
     pub score: f64,
@@ -152,6 +175,246 @@ impl Batcher {
     /// over released batches × `max_batch` (1.0 = every release was a
     /// full compiled batch; 0.0 before any release). The `hetmoe serve`
     /// summary surfaces this as "batch occupancy".
+    pub fn occupancy(&self) -> f64 {
+        if self.released_batches == 0 {
+            return 0.0;
+        }
+        self.released_requests as f64 / (self.released_batches * self.max_batch as u64) as f64
+    }
+}
+
+/// Admission + scheduling parameters of one [`LaneScheduler`] lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneParams {
+    /// Deficit-round-robin weight: backlogged lanes share a batch in
+    /// `weight` proportion (must be ≥ 1).
+    pub weight: u64,
+    /// Aging bound in arrival ticks: a request that has waited this
+    /// long is released ahead of every un-aged request (and triggers a
+    /// `Deadline` release on its own). This is the lane's starvation
+    /// bound.
+    pub max_wait_ticks: u64,
+    /// Admission-queue bound; submits beyond it are rejected
+    /// non-destructively (must be ≥ the scheduler's `max_batch`, so a
+    /// full lane always implies a releasable batch).
+    pub max_queue: usize,
+}
+
+/// One item released by [`LaneScheduler::next_batch_into`], tagged with
+/// its lane and its queueing delay at release.
+#[derive(Clone, Debug)]
+pub struct Released<T> {
+    /// The submitted payload.
+    pub item: T,
+    /// Index of the lane the item was admitted on.
+    pub lane: usize,
+    /// Arrival ticks the item spent queued before release.
+    pub wait_ticks: u64,
+}
+
+struct Queued<T> {
+    item: T,
+    arrived: u64,
+}
+
+struct LaneState<T> {
+    params: LaneParams,
+    queue: VecDeque<Queued<T>>,
+    /// carried deficit-round-robin credit (clamped to one round's
+    /// `weight` between releases; reset when the lane empties)
+    deficit: u64,
+}
+
+/// Multi-lane weighted-deficit batch scheduler — the generalization of
+/// [`Batcher`] behind the [`Server`](super::Server) front-end.
+///
+/// Release policy (checked in this order):
+/// 1. **Full** — the lanes hold at least `max_batch` requests combined;
+/// 2. **Deadline** — some lane's oldest request aged past its
+///    `max_wait_ticks`;
+/// 3. **Drained** — a drain forces the flush of whatever is queued.
+///
+/// Batch composition: aged requests first (oldest arrival across
+/// lanes, ties to the lower lane index), then deficit round robin over
+/// the backlogged lanes in `weight` proportion, FIFO within each lane.
+/// The composition is a pure function of the submit/tick history, so
+/// every release is replayable (see the property tests below).
+///
+/// With a single lane the scheduler is release-for-release identical
+/// to [`Batcher`] (pinned by `prop_single_lane_matches_batcher`).
+pub struct LaneScheduler<T> {
+    max_batch: usize,
+    lanes: Vec<LaneState<T>>,
+    now: u64,
+    released_requests: u64,
+    released_batches: u64,
+}
+
+impl<T> LaneScheduler<T> {
+    /// A scheduler releasing `max_batch`-sized mixed batches over
+    /// `lanes` (at least one; every lane needs `weight ≥ 1` and
+    /// `max_queue ≥ max_batch`).
+    pub fn new(max_batch: usize, lanes: Vec<LaneParams>) -> LaneScheduler<T> {
+        assert!(max_batch > 0, "max_batch must be positive");
+        assert!(!lanes.is_empty(), "at least one lane");
+        for p in &lanes {
+            assert!(p.weight >= 1, "lane weight must be ≥ 1");
+            assert!(p.max_queue >= max_batch, "lane max_queue < max_batch");
+        }
+        LaneScheduler {
+            max_batch,
+            lanes: lanes
+                .into_iter()
+                .map(|params| LaneState { params, queue: VecDeque::new(), deficit: 0 })
+                .collect(),
+            now: 0,
+            released_requests: 0,
+            released_batches: 0,
+        }
+    }
+
+    /// Number of configured lanes.
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The parameters lane `lane` was configured with.
+    pub fn lane_params(&self, lane: usize) -> LaneParams {
+        self.lanes[lane].params
+    }
+
+    /// Admit `item` on `lane`; a full lane rejects **non-destructively**
+    /// — the item comes back in `Err` so the caller can retry or shed
+    /// load explicitly.
+    pub fn submit(&mut self, lane: usize, item: T) -> Result<(), T> {
+        let l = &mut self.lanes[lane];
+        if l.queue.len() >= l.params.max_queue {
+            return Err(item);
+        }
+        l.queue.push_back(Queued { item, arrived: self.now });
+        Ok(())
+    }
+
+    /// Advance the arrival clock by `dt` ticks.
+    pub fn tick(&mut self, dt: u64) {
+        self.now += dt;
+    }
+
+    /// Current arrival tick.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Requests queued across all lanes.
+    pub fn depth(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.len()).sum()
+    }
+
+    /// Requests queued on `lane`.
+    pub fn lane_depth(&self, lane: usize) -> usize {
+        self.lanes[lane].queue.len()
+    }
+
+    /// Release a mixed batch into `out` (cleared first) if the policy
+    /// says so; returns the release reason, or `None` (with `out`
+    /// empty) when nothing releases.
+    pub fn next_batch_into(
+        &mut self,
+        drain: bool,
+        out: &mut Vec<Released<T>>,
+    ) -> Option<ReleaseReason> {
+        out.clear();
+        let total = self.depth();
+        if total == 0 {
+            return None;
+        }
+        let now = self.now;
+        let aged = self.lanes.iter().any(|l| match l.queue.front() {
+            Some(front) => now - front.arrived >= l.params.max_wait_ticks,
+            None => false,
+        });
+        let reason = if total >= self.max_batch {
+            ReleaseReason::Full
+        } else if aged {
+            ReleaseReason::Deadline
+        } else if drain {
+            ReleaseReason::Drained
+        } else {
+            return None;
+        };
+
+        // 1. aged-first: requests past their lane's aging bound go in
+        // oldest-arrival order across lanes (tie → lower lane index) —
+        // the starvation bound of the scheduler
+        while out.len() < self.max_batch {
+            let mut best: Option<(u64, usize)> = None;
+            for (li, l) in self.lanes.iter().enumerate() {
+                if let Some(front) = l.queue.front() {
+                    if now - front.arrived >= l.params.max_wait_ticks {
+                        let better = match best {
+                            None => true,
+                            Some((arrived, _)) => front.arrived < arrived,
+                        };
+                        if better {
+                            best = Some((front.arrived, li));
+                        }
+                    }
+                }
+            }
+            let Some((_, li)) = best else { break };
+            let q = self.lanes[li].queue.pop_front().unwrap();
+            out.push(Released { item: q.item, lane: li, wait_ticks: now - q.arrived });
+        }
+
+        // 2. weighted deficit round robin over the backlog: each pass
+        // grants every backlogged lane `weight` credits and spends one
+        // per released request, so lanes share the remaining slots in
+        // weight proportion, FIFO within a lane
+        'fill: while out.len() < self.max_batch {
+            let mut progressed = false;
+            for (li, l) in self.lanes.iter_mut().enumerate() {
+                if out.len() == self.max_batch {
+                    break 'fill;
+                }
+                if l.queue.is_empty() {
+                    l.deficit = 0;
+                    continue;
+                }
+                l.deficit += l.params.weight;
+                while l.deficit >= 1 && out.len() < self.max_batch {
+                    let Some(q) = l.queue.pop_front() else {
+                        l.deficit = 0;
+                        break;
+                    };
+                    l.deficit -= 1;
+                    out.push(Released { item: q.item, lane: li, wait_ticks: now - q.arrived });
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        // carried credit caps at one round, so a lane starved of slots
+        // by aged traffic cannot bank unbounded priority
+        for l in &mut self.lanes {
+            l.deficit = l.deficit.min(l.params.weight);
+        }
+
+        self.released_requests += out.len() as u64;
+        self.released_batches += 1;
+        Some(reason)
+    }
+
+    /// [`LaneScheduler::next_batch_into`] into a fresh `Vec` (tests and
+    /// small call sites; serving loops reuse a scratch buffer).
+    pub fn next_batch(&mut self, drain: bool) -> Option<(Vec<Released<T>>, ReleaseReason)> {
+        let mut out = Vec::new();
+        self.next_batch_into(drain, &mut out).map(|reason| (out, reason))
+    }
+
+    /// Average fill fraction of released batches (1.0 = every release
+    /// was a full compiled batch; 0.0 before any release).
     pub fn occupancy(&self) -> f64 {
         if self.released_batches == 0 {
             return 0.0;
@@ -300,6 +563,232 @@ mod tests {
                 released == admitted,
                 "released {released:?} != admitted {admitted:?}"
             );
+            Ok(())
+        });
+    }
+
+    // ---- LaneScheduler ----
+
+    fn lane(weight: u64, max_wait: u64, max_queue: usize) -> LaneParams {
+        LaneParams { weight, max_wait_ticks: max_wait, max_queue }
+    }
+
+    #[test]
+    fn scheduler_rejects_non_destructively() {
+        let mut s: LaneScheduler<u64> = LaneScheduler::new(2, vec![lane(1, 100, 2)]);
+        assert!(s.submit(0, 7).is_ok());
+        assert!(s.submit(0, 8).is_ok());
+        // the rejected item comes back intact
+        assert_eq!(s.submit(0, 9), Err(9));
+        assert_eq!(s.lane_depth(0), 2);
+    }
+
+    #[test]
+    fn scheduler_mixes_backlogged_lanes_by_weight() {
+        // both lanes backlogged, weights 3:1, batch 8, nothing aged →
+        // the release interleaves DRR rounds of 3 interactive + 1 bulk
+        let mut s: LaneScheduler<&'static str> =
+            LaneScheduler::new(8, vec![lane(3, 1000, 16), lane(1, 1000, 16)]);
+        for _ in 0..8 {
+            s.submit(0, "i").unwrap();
+            s.submit(1, "b").unwrap();
+        }
+        let (batch, reason) = s.next_batch(false).unwrap();
+        assert_eq!(reason, ReleaseReason::Full);
+        let lanes: Vec<usize> = batch.iter().map(|r| r.lane).collect();
+        assert_eq!(lanes, vec![0, 0, 0, 1, 0, 0, 0, 1]);
+        assert_eq!(batch.iter().filter(|r| r.lane == 0).count(), 6);
+        assert_eq!(batch.iter().filter(|r| r.lane == 1).count(), 2);
+    }
+
+    #[test]
+    fn scheduler_releases_aged_requests_first() {
+        // a bulk request past its aging bound preempts fresher
+        // interactive traffic even at weight 1 vs 3
+        let mut s: LaneScheduler<&'static str> =
+            LaneScheduler::new(2, vec![lane(3, 100, 8), lane(1, 5, 8)]);
+        s.submit(1, "old-bulk").unwrap();
+        s.tick(5);
+        for _ in 0..4 {
+            s.submit(0, "i").unwrap();
+        }
+        let (batch, reason) = s.next_batch(false).unwrap();
+        assert_eq!(reason, ReleaseReason::Full);
+        assert_eq!(batch[0].item, "old-bulk");
+        assert_eq!(batch[0].wait_ticks, 5);
+        assert_eq!(batch[1].item, "i");
+    }
+
+    #[test]
+    fn scheduler_deadline_releases_partial_batch() {
+        let mut s: LaneScheduler<u64> = LaneScheduler::new(8, vec![lane(1, 4, 8)]);
+        s.submit(0, 1).unwrap();
+        s.tick(3);
+        assert!(s.next_batch(false).is_none());
+        s.tick(1);
+        let (batch, reason) = s.next_batch(false).unwrap();
+        assert_eq!(reason, ReleaseReason::Deadline);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].wait_ticks, 4);
+    }
+
+    #[test]
+    fn prop_single_lane_matches_batcher() {
+        // a single-lane scheduler must be release-for-release identical
+        // to the legacy Batcher on any submit/tick/release interleaving
+        check("single-lane scheduler ≡ Batcher", 60, |rng| {
+            let max_batch = rng.range(1, 8);
+            let max_queue = max_batch + rng.range(0, 8);
+            let max_wait = rng.range(1, 10) as u64;
+            let mut b = Batcher::new(max_batch, max_wait, max_queue);
+            let mut s: LaneScheduler<u64> =
+                LaneScheduler::new(max_batch, vec![lane(1, max_wait, max_queue)]);
+            let mut next_id = 0u64;
+            for _ in 0..rng.range(1, 80) {
+                match rng.below(3) {
+                    0 => {
+                        let ok_b = b.submit(req(next_id));
+                        let ok_s = s.submit(0, next_id).is_ok();
+                        prop_assert!(ok_b == ok_s, "admission diverged on {next_id}");
+                        next_id += 1;
+                    }
+                    1 => {
+                        let dt = rng.range(0, 4) as u64;
+                        b.tick(dt);
+                        s.tick(dt);
+                    }
+                    _ => {
+                        let drain = rng.below(4) == 0;
+                        let rb = b.next_batch(drain);
+                        let rs = s.next_batch(drain);
+                        match (&rb, &rs) {
+                            (None, None) => {}
+                            (Some((bb, br)), Some((sb, sr))) => {
+                                prop_assert!(br == sr, "reason {br:?} != {sr:?}");
+                                let bi: Vec<u64> = bb.iter().map(|r| r.id).collect();
+                                let si: Vec<u64> = sb.iter().map(|r| r.item).collect();
+                                prop_assert!(bi == si, "batch {bi:?} != {si:?}");
+                            }
+                            _ => prop_assert!(false, "release diverged: {rb:?} vs {rs:?}"),
+                        }
+                    }
+                }
+            }
+            prop_assert!(
+                (b.occupancy() - s.occupancy()).abs() < 1e-12,
+                "occupancy diverged"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_no_lane_starves_under_flood() {
+        // starvation bound: pumping after every tick, no request is
+        // ever released with wait > its lane's max_wait_ticks — no
+        // matter how hard the other lane floods or how the weights lean
+        check("lane starvation bound", 40, |rng| {
+            let max_batch = rng.range(1, 6);
+            let wi = rng.range(1, 8) as u64;
+            let wb = rng.range(1, 8) as u64;
+            let inter_wait = rng.range(1, 8) as u64;
+            let bulk_wait = rng.range(4, 40) as u64;
+            let mut s: LaneScheduler<u64> = LaneScheduler::new(
+                max_batch,
+                vec![
+                    lane(wi, inter_wait, max_batch * 8),
+                    lane(wb, bulk_wait, max_batch * 8),
+                ],
+            );
+            let mut out = Vec::new();
+            let mut submitted = 0u64;
+            let mut released = 0u64;
+            for _ in 0..rng.range(20, 120) {
+                // interactive flood: several arrivals per tick
+                for _ in 0..rng.range(0, 4) {
+                    if s.submit(0, submitted).is_ok() {
+                        submitted += 1;
+                    }
+                }
+                // occasional steady bulk arrival
+                if rng.below(3) == 0 && s.submit(1, submitted).is_ok() {
+                    submitted += 1;
+                }
+                s.tick(1);
+                while s.next_batch_into(false, &mut out).is_some() {
+                    for r in &out {
+                        let bound = s.lane_params(r.lane).max_wait_ticks;
+                        prop_assert!(
+                            r.wait_ticks <= bound,
+                            "lane {} request waited {} > bound {bound}",
+                            r.lane,
+                            r.wait_ticks
+                        );
+                        released += 1;
+                    }
+                }
+            }
+            while s.next_batch_into(true, &mut out).is_some() {
+                released += out.len() as u64;
+            }
+            prop_assert!(released == submitted, "{released} released of {submitted}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_scheduler_conserves_and_keeps_lane_fifo() {
+        // every admitted item is released exactly once; within a lane
+        // the release order is FIFO; batches never exceed max_batch
+        check("scheduler conservation", 50, |rng| {
+            let max_batch = rng.range(1, 8);
+            let n_lanes = rng.range(1, 4);
+            let params: Vec<LaneParams> = (0..n_lanes)
+                .map(|_| {
+                    lane(
+                        rng.range(1, 6) as u64,
+                        rng.range(1, 20) as u64,
+                        max_batch + rng.range(0, 8),
+                    )
+                })
+                .collect();
+            let mut s: LaneScheduler<u64> = LaneScheduler::new(max_batch, params);
+            let mut admitted: Vec<Vec<u64>> = vec![Vec::new(); n_lanes];
+            let mut released: Vec<Vec<u64>> = vec![Vec::new(); n_lanes];
+            let mut next_id = 0u64;
+            for _ in 0..rng.range(1, 100) {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let li = rng.below(n_lanes as u64) as usize;
+                        if s.submit(li, next_id).is_ok() {
+                            admitted[li].push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    2 => s.tick(rng.range(0, 4) as u64),
+                    _ => {
+                        if let Some((batch, _)) = s.next_batch(false) {
+                            prop_assert!(batch.len() <= max_batch, "batch too big");
+                            for r in batch {
+                                released[r.lane].push(r.item);
+                            }
+                        }
+                    }
+                }
+            }
+            while let Some((batch, _)) = s.next_batch(true) {
+                for r in batch {
+                    released[r.lane].push(r.item);
+                }
+            }
+            for li in 0..n_lanes {
+                prop_assert!(
+                    released[li] == admitted[li],
+                    "lane {li}: released {:?} != admitted {:?}",
+                    released[li],
+                    admitted[li]
+                );
+            }
             Ok(())
         });
     }

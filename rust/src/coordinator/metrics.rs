@@ -14,6 +14,112 @@
 
 use std::time::Duration;
 
+/// Log₂-bucketed histogram of queueing waits in arrival ticks.
+///
+/// Bucket `b` covers waits in `[2^b − 1, 2^(b+1) − 2]` (bucket 0 is
+/// exactly wait 0, bucket 1 is 1–2 ticks, …), so short interactive
+/// waits keep near-exact resolution while the tail stays O(1) memory —
+/// the histogram never allocates, whatever the request volume.
+/// [`WaitHistogram::quantile`] interpolates linearly inside a bucket,
+/// which makes p50/p95/p99 *estimates*: exact for waits ≤ 2 ticks,
+/// within a bucket width above that — consistent run-over-run, which is
+/// what the `BENCH_serve.json` regression guard needs.
+#[derive(Debug, Clone, Default)]
+pub struct WaitHistogram {
+    counts: [u64; 32],
+    total: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl WaitHistogram {
+    fn bucket(wait: u64) -> usize {
+        (wait.saturating_add(1).ilog2() as usize).min(31)
+    }
+
+    /// Record one request's queueing wait.
+    pub fn record(&mut self, wait: u64) {
+        self.counts[Self::bucket(wait)] += 1;
+        self.total += 1;
+        self.sum += wait;
+        self.max = self.max.max(wait);
+    }
+
+    /// Requests recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Largest wait recorded (0 when empty).
+    pub fn max_ticks(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean wait in ticks (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    /// q-quantile estimate (`0 ≤ q ≤ 1`) of the recorded waits, in
+    /// ticks: locate the bucket holding rank `q·(count−1)` and
+    /// interpolate linearly across the bucket's tick range (clamped to
+    /// the recorded maximum). 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * (self.total - 1) as f64;
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if rank < (cum + c) as f64 {
+                let lo = (1u64 << b) - 1;
+                let hi = ((1u64 << (b + 1)) - 2).min(self.max).max(lo);
+                // ranks cum..=cum+c−1 span the bucket's tick range, so
+                // uniform data interpolates exactly; a lone entry
+                // reports the range's upper (max-clamped) end. The
+                // clamp keeps a fractional rank in the gap before the
+                // next bucket from extrapolating past the bucket edge
+                // (which would break quantile monotonicity).
+                let frac = if c > 1 {
+                    ((rank - cum as f64) / (c - 1) as f64).min(1.0)
+                } else {
+                    1.0
+                };
+                return lo as f64 + (hi - lo) as f64 * frac;
+            }
+            cum += c;
+        }
+        self.max as f64
+    }
+}
+
+/// Per-lane serving accounting of the [`Server`](super::Server)
+/// front-end: admission counters plus the wait-tick histogram behind
+/// the p50/p95/p99 fields of `BENCH_serve.json`'s `mixed_priority`
+/// scenario and the `hetmoe serve` per-lane table.
+#[derive(Debug, Clone, Default)]
+pub struct LaneMetrics {
+    /// Lane name (`"interactive"` / `"bulk"`).
+    pub name: String,
+    /// The lane's deficit-round-robin weight.
+    pub weight: u64,
+    /// Requests admitted into the lane's queue.
+    pub admitted: u64,
+    /// Requests rejected by the lane's queue bound (returned to the
+    /// caller non-destructively).
+    pub rejected: u64,
+    /// Requests served to completion.
+    pub served: u64,
+    /// Queueing-wait histogram (ticks between admission and release).
+    pub wait: WaitHistogram,
+}
+
 /// Per-backend accounting: real dispatch wall time plus the simulated
 /// Appendix-A clocks.
 #[derive(Debug, Default, Clone)]
@@ -339,6 +445,72 @@ mod tests {
         assert!(r.contains("clock=4096 tokens"));
         assert!(r.contains("sentinel max |dev|=0.1250"));
         assert!(r.contains("maint="));
+    }
+
+    #[test]
+    fn wait_histogram_exact_on_small_waits() {
+        let mut h = WaitHistogram::default();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        for _ in 0..10 {
+            h.record(0);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.max_ticks(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn wait_histogram_quantiles_are_monotone_and_bounded() {
+        let mut h = WaitHistogram::default();
+        for w in 0..100u64 {
+            h.record(w);
+        }
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p99 <= h.max_ticks() as f64);
+        assert_eq!(h.max_ticks(), 99);
+        assert!((h.mean() - 49.5).abs() < 1e-9);
+        // log₂ buckets: the p50 estimate lands within the bucket
+        // holding the true median (31..62 covers rank 49.5)
+        assert!((31.0..=62.0).contains(&p50), "p50 {p50}");
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(1.0), 99.0);
+    }
+
+    #[test]
+    fn wait_histogram_quantiles_monotone_across_bucket_gaps() {
+        // regression: a fractional rank falling in the gap between a
+        // bucket's last rank and the next bucket must not extrapolate
+        // past the bucket edge ({3,3,7,7} once produced p50 > p95)
+        let mut h = WaitHistogram::default();
+        for w in [3u64, 3, 7, 7] {
+            h.record(w);
+        }
+        let (p50, p95) = (h.quantile(0.5), h.quantile(0.95));
+        assert!(p50 <= p95, "p50 {p50} > p95 {p95}");
+        assert!(p95 <= h.max_ticks() as f64);
+        assert_eq!(h.quantile(1.0), 7.0);
+    }
+
+    #[test]
+    fn wait_histogram_single_bucket_interpolates_to_max() {
+        let mut h = WaitHistogram::default();
+        h.record(5);
+        h.record(5);
+        // bucket 2 covers 3..=6 but the recorded max clamps the range
+        assert!(h.quantile(1.0) <= 5.0);
+        assert!(h.quantile(0.0) >= 3.0);
+    }
+
+    #[test]
+    fn lane_metrics_default_is_zeroed() {
+        let lm = LaneMetrics::default();
+        assert_eq!(lm.admitted, 0);
+        assert_eq!(lm.rejected, 0);
+        assert_eq!(lm.served, 0);
+        assert_eq!(lm.wait.count(), 0);
     }
 
     #[test]

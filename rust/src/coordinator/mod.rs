@@ -5,7 +5,8 @@
 //! experts on AIMC tiles. This engine is that deployment's request path:
 //!
 //! ```text
-//!   requests → Session (admission queue + dynamic batcher) → pipeline
+//!   clients → Server (per-lane bounded queues + weighted-deficit
+//!             scheduler + completion queue) → pipeline
 //!   pipeline (per batch):
 //!     embed + pos            (host gather — coordinator)
 //!     per layer:
@@ -46,6 +47,18 @@
 //! byte-identical for every worker count (`workers(1)` is the
 //! sequential reference).
 //!
+//! The request path in front of the engine is the multi-tenant
+//! [`Server`] ([`server`]): clients hold cheap [`ClientHandle`]s and
+//! `enqueue(Request, Lane) -> Ticket` into per-lane bounded queues
+//! ([`Lane::Interactive`] / [`Lane::Bulk`]); a weighted-deficit
+//! scheduler with an aged-first starvation bound
+//! ([`batcher::LaneScheduler`]) composes mixed-lane batches against
+//! the compiled batch size; completed [`Response`]s land in a
+//! completion queue consumed via [`Server::try_recv`] /
+//! [`Server::recv_all`], keyed by ticket. The legacy two-call
+//! [`Session`] (`submit` → `drain`) survives as a thin single-lane
+//! adapter over `Server`.
+//!
 //! Long-lived deployments add one more loop: AIMC conductances drift
 //! after programming (power-law decay on a token-count clock — see
 //! [`crate::aimc::drift`]), so the placement that was safe at
@@ -59,20 +72,29 @@
 //! ([`Engine::apply_replacement`] swaps an expert's device buffers and
 //! backend slot, re-projects the Appendix-A cost models, and records
 //! `migrations` / `sentinel_deviation` / `drift_clock` in [`Metrics`]).
-//! [`Session::maintenance`] exposes the tick to serving loops.
+//! The [`Server`] owns the tick's cadence ([`MaintenancePolicy`]) and
+//! runs it between batches; [`Server::maintenance`] /
+//! [`Session::maintenance`] expose manual ticks.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod server;
 pub mod session;
 
 pub use backend::{
     AnalogBackend, BatchOutput, ChunkBatch, ChunkSpec, DigitalBackend, ExpertBackend,
     ExpertOutput, ExpertWeights, StageCost,
 };
-pub use batcher::{Batcher, ReleaseReason, Request, RequestId, Response};
-pub use metrics::{BackendMetrics, Metrics};
-pub use session::Session;
+pub use batcher::{
+    Batcher, LaneParams, LaneScheduler, Released, ReleaseReason, Request, RequestId, Response,
+};
+pub use metrics::{BackendMetrics, LaneMetrics, Metrics, WaitHistogram};
+pub use server::{
+    ClientHandle, ClientId, Completion, DrainReport, Lane, MaintenancePolicy, Server,
+    ServerConfig, Ticket,
+};
+pub use session::{Session, SubmitOutcome};
 
 use std::rc::Rc;
 

@@ -1,0 +1,554 @@
+//! Multi-tenant serving front-end: tickets, priority lanes, and a
+//! completion queue.
+//!
+//! The [`Server`] replaces the blocking two-call `submit`/`drain`
+//! [`Session`](super::Session) flow with a poll-driven API built for
+//! mixed traffic:
+//!
+//! ```text
+//!   let mut server = Server::new(&rt, engine, ServerConfig::new(cfg.batch));
+//!   let alice = server.client();
+//!   let bob = server.client();
+//!   let t1 = server.enqueue(&alice, req_a, Lane::Interactive)?; // -> Ticket
+//!   let t2 = server.enqueue(&bob, req_b, Lane::Bulk)?;
+//!   server.poll()?;                       // serve whatever released
+//!   while let Some(c) = server.try_recv() { /* c.ticket, c.response */ }
+//!   let (report, engine) = server.shutdown()?;   // drain + final tick
+//! ```
+//!
+//! - **Clients are cheap.** A [`ClientHandle`] is an id the server
+//!   hands out; every admitted request gets a [`Ticket`] carrying the
+//!   globally unique request id, the lane, and the issuing client, so
+//!   interleaved multi-tenant traffic stays exactly attributable.
+//! - **Lanes are bounded priority classes.** Requests enqueue into one
+//!   of the per-lane FIFO queues ([`Lane::Interactive`] /
+//!   [`Lane::Bulk`]), each with its own weight, aging bound
+//!   (`max_wait_ticks`) and queue bound
+//!   ([`LaneParams`](super::batcher::LaneParams)). A full lane rejects
+//!   **non-destructively**: [`Server::enqueue`] hands the `Request`
+//!   back so the caller can retry after a poll or shed load explicitly.
+//! - **Batches mix lanes by weighted deficit round robin** with an
+//!   aged-first starvation bound (see
+//!   [`LaneScheduler`](super::batcher::LaneScheduler)): a bulk request
+//!   can wait at most its lane's `max_wait_ticks` (plus the tick gap
+//!   between polls) no matter how hard the interactive lane floods.
+//! - **Completions land in a queue, keyed by ticket.** Serving happens
+//!   inside [`Server::poll`] / [`Server::drain`]; responses surface
+//!   through [`Server::try_recv`] / [`Server::recv_all`] as
+//!   [`Completion`]s whenever the caller chooses to look.
+//! - **The server owns the maintenance cadence.** With
+//!   [`MaintenancePolicy::every`], the drift tick
+//!   ([`Engine::maintenance`]) runs between batches after every N
+//!   served requests — call sites no longer hand-roll `--replace-every`
+//!   counters. [`Server::shutdown`] drains every lane, runs one final
+//!   tick, and returns a [`DrainReport`] plus the engine.
+//!
+//! The legacy [`Session`](super::Session) survives as a thin
+//! single-lane adapter over this type (one client, everything on
+//! [`Lane::Interactive`]) and is pinned byte-identical to a direct
+//! single-lane `Server` by the `single_lane_server_matches_session`
+//! integration test.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::batcher::{LaneParams, LaneScheduler, Released, Request, Response};
+use super::metrics::{LaneMetrics, Metrics};
+use super::{Engine, MaintenanceReport};
+use crate::runtime::Runtime;
+
+/// A priority lane of the [`Server`]. Two ship: latency-sensitive
+/// interactive traffic and throughput-oriented bulk traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Latency-sensitive traffic: high scheduler weight, tight aging
+    /// bound.
+    Interactive,
+    /// Throughput traffic: lower weight, generous aging bound (the
+    /// starvation bound keeps its wait finite under interactive
+    /// floods).
+    Bulk,
+}
+
+impl Lane {
+    /// Number of lanes a [`Server`] schedules.
+    pub const COUNT: usize = 2;
+    /// All lanes, in scheduler-index order.
+    pub const ALL: [Lane; Lane::COUNT] = [Lane::Interactive, Lane::Bulk];
+
+    /// The lane's index in the scheduler / `ServerConfig::lanes`.
+    pub fn index(self) -> usize {
+        match self {
+            Lane::Interactive => 0,
+            Lane::Bulk => 1,
+        }
+    }
+
+    /// Lane name as reported in tables and `BENCH_serve.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Bulk => "bulk",
+        }
+    }
+
+    /// Inverse of [`Lane::index`].
+    pub fn from_index(i: usize) -> Option<Lane> {
+        Lane::ALL.get(i).copied()
+    }
+}
+
+/// Identifies one client of a [`Server`] (embedded in every
+/// [`Ticket`]).
+pub type ClientId = u32;
+
+/// A cheap per-tenant handle issued by [`Server::client`]. Cloning is
+/// fine — the handle is just the id the server stamps into tickets.
+#[derive(Clone, Debug)]
+pub struct ClientHandle {
+    id: ClientId,
+}
+
+impl ClientHandle {
+    /// The client id embedded in this handle's tickets.
+    pub fn id(&self) -> ClientId {
+        self.id
+    }
+}
+
+/// Receipt for one admitted request: the globally unique request id
+/// (echoed on the matching [`Response`]), the lane it was admitted on,
+/// and the client that enqueued it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ticket {
+    /// Server-assigned request id (sequential per server; the engine
+    /// echoes it on the response).
+    pub id: u64,
+    /// The lane the request was admitted on.
+    pub lane: Lane,
+    /// The enqueueing client.
+    pub client: ClientId,
+}
+
+/// One served request, delivered through the completion queue
+/// ([`Server::try_recv`] / [`Server::recv_all`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Completion {
+    /// The ticket [`Server::enqueue`] issued for the request.
+    pub ticket: Ticket,
+    /// The engine's answer (`response.id == ticket.id`).
+    pub response: Response,
+    /// Arrival ticks the request spent queued before its batch
+    /// released.
+    pub wait_ticks: u64,
+}
+
+impl Completion {
+    /// Whether this completion belongs to `client`'s tickets.
+    pub fn belongs_to(&self, client: &ClientHandle) -> bool {
+        self.ticket.client == client.id
+    }
+}
+
+/// When the server runs the drift-maintenance tick
+/// ([`Engine::maintenance`]) on its own: after every
+/// `every_n_requests` served requests, between batches. `0` (the
+/// default) means no automatic cadence — maintenance still runs once
+/// at [`Server::shutdown`], and [`Server::maintenance`] stays
+/// available for manual ticks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MaintenancePolicy {
+    /// Served-request cadence of the automatic tick (0 = off).
+    pub every_n_requests: u64,
+}
+
+impl MaintenancePolicy {
+    /// Tick after every `n` served requests (`0` disables the cadence).
+    pub fn every(n: u64) -> MaintenancePolicy {
+        MaintenancePolicy { every_n_requests: n }
+    }
+}
+
+/// Configuration of a [`Server`]: the compiled batch size, one
+/// [`LaneParams`] per [`Lane`], and the maintenance cadence.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Compiled batch size — releases never exceed it.
+    pub max_batch: usize,
+    /// Per-lane scheduling parameters, indexed by [`Lane::index`].
+    pub lanes: [LaneParams; Lane::COUNT],
+    /// Server-owned drift-maintenance cadence.
+    pub maintenance: MaintenancePolicy,
+}
+
+impl ServerConfig {
+    /// Defaults for a `max_batch`-sized engine: interactive weight 3
+    /// with a 4-tick aging bound over a `4·max_batch` queue; bulk
+    /// weight 1 with a 64-tick aging bound over an `8·max_batch`
+    /// queue; no automatic maintenance cadence.
+    pub fn new(max_batch: usize) -> ServerConfig {
+        ServerConfig {
+            max_batch,
+            lanes: [
+                LaneParams { weight: 3, max_wait_ticks: 4, max_queue: max_batch * 4 },
+                LaneParams { weight: 1, max_wait_ticks: 64, max_queue: max_batch * 8 },
+            ],
+            maintenance: MaintenancePolicy::default(),
+        }
+    }
+
+    /// Single-lane scheduling identical to the legacy
+    /// `Batcher::new(max_batch, max_wait_ticks, max_queue)` flow: both
+    /// lanes share one weight-1 parameter set, so a caller enqueueing
+    /// on [`Lane::Interactive`] only gets release-for-release `Batcher`
+    /// behavior (the [`Session`](super::Session) adapter and the
+    /// single-lane compatibility tests are built on this).
+    pub fn single_lane(max_batch: usize, max_wait_ticks: u64, max_queue: usize) -> ServerConfig {
+        let lane = LaneParams { weight: 1, max_wait_ticks, max_queue };
+        ServerConfig::new(max_batch).lane(Lane::Interactive, lane).lane(Lane::Bulk, lane)
+    }
+
+    /// Override one lane's scheduling parameters.
+    pub fn lane(mut self, lane: Lane, params: LaneParams) -> ServerConfig {
+        self.lanes[lane.index()] = params;
+        self
+    }
+
+    /// Set the server-owned maintenance cadence.
+    pub fn maintenance(mut self, policy: MaintenancePolicy) -> ServerConfig {
+        self.maintenance = policy;
+        self
+    }
+}
+
+/// What a graceful [`Server::shutdown`] flushed and observed.
+#[derive(Debug)]
+pub struct DrainReport {
+    /// Requests served by the final flush (excludes earlier polls).
+    pub drained: usize,
+    /// Every completion still unconsumed at shutdown (earlier
+    /// `try_recv`/`recv_all` calls may have consumed some already).
+    pub completions: Vec<Completion>,
+    /// Final per-lane accounting (admitted / rejected / served / wait
+    /// histogram).
+    pub lanes: Vec<LaneMetrics>,
+    /// Average fill fraction of released batches over the server's
+    /// lifetime.
+    pub occupancy: f64,
+    /// The final maintenance tick shutdown always runs (a cheap
+    /// clock-report no-op when drift is disabled).
+    pub maintenance: MaintenanceReport,
+    /// Reports of the automatic cadence ticks not yet taken via
+    /// [`Server::take_maintenance_reports`].
+    pub maintenance_log: Vec<MaintenanceReport>,
+}
+
+/// Poll-driven multi-tenant serving front-end for one [`Engine`]: lane
+/// queues in, completion queue out (see the module docs for the
+/// lifecycle).
+pub struct Server<'rt> {
+    rt: &'rt Runtime,
+    engine: Engine,
+    sched: LaneScheduler<(Ticket, Request)>,
+    lanes: Vec<LaneMetrics>,
+    done: VecDeque<Completion>,
+    policy: MaintenancePolicy,
+    served_since_maintenance: u64,
+    maintenance_log: Vec<MaintenanceReport>,
+    next_ticket: u64,
+    next_client: ClientId,
+    /// released-batch scratch, reused across every pump tick
+    batch: Vec<Released<(Ticket, Request)>>,
+    /// request staging for `Engine::serve_batch`, reused per batch
+    reqs: Vec<Request>,
+    /// (ticket, wait) staging parallel to `reqs`, reused per batch
+    meta: Vec<(Ticket, u64)>,
+}
+
+impl<'rt> Server<'rt> {
+    /// Wrap an engine into a multi-tenant server. Ticket ids restart
+    /// from 0 per server.
+    pub fn new(rt: &'rt Runtime, engine: Engine, cfg: ServerConfig) -> Server<'rt> {
+        let lanes = Lane::ALL
+            .iter()
+            .map(|l| LaneMetrics {
+                name: l.name().to_string(),
+                weight: cfg.lanes[l.index()].weight,
+                ..LaneMetrics::default()
+            })
+            .collect();
+        Server {
+            rt,
+            engine,
+            sched: LaneScheduler::new(cfg.max_batch, cfg.lanes.to_vec()),
+            lanes,
+            done: VecDeque::new(),
+            policy: cfg.maintenance,
+            served_since_maintenance: 0,
+            maintenance_log: Vec::new(),
+            next_ticket: 0,
+            next_client: 0,
+            batch: Vec::new(),
+            reqs: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+
+    /// Issue a new client handle (cheap; any number of tenants).
+    pub fn client(&mut self) -> ClientHandle {
+        let id = self.next_client;
+        self.next_client += 1;
+        ClientHandle { id }
+    }
+
+    /// Admit one request on `lane` for `client`, advancing the arrival
+    /// clock by one tick. Returns the [`Ticket`] the matching
+    /// [`Completion`] will carry; a full lane rejects
+    /// **non-destructively** — the request comes back in `Err` so the
+    /// caller can [`Server::poll`] (which always frees space) and
+    /// retry, or shed the load explicitly. Admission never touches the
+    /// engine: serving happens in [`Server::poll`] / [`Server::drain`].
+    pub fn enqueue(
+        &mut self,
+        client: &ClientHandle,
+        mut req: Request,
+        lane: Lane,
+    ) -> std::result::Result<Ticket, Request> {
+        let ticket = Ticket { id: self.next_ticket, lane, client: client.id };
+        let caller_id = req.id;
+        req.id = ticket.id;
+        match self.sched.submit(lane.index(), (ticket, req)) {
+            Ok(()) => {
+                self.next_ticket += 1;
+                self.lanes[lane.index()].admitted += 1;
+                self.sched.tick(1);
+                Ok(ticket)
+            }
+            Err((_, mut req)) => {
+                // the ticket was never issued — hand the request back
+                // exactly as the caller submitted it
+                req.id = caller_id;
+                self.lanes[lane.index()].rejected += 1;
+                Err(req)
+            }
+        }
+    }
+
+    /// Serve every batch the scheduler releases right now (full batches
+    /// and aged deadlines; partial tails stay queued), appending the
+    /// responses to the completion queue and running the maintenance
+    /// cadence between batches. Returns the number of requests served.
+    pub fn poll(&mut self) -> Result<usize> {
+        self.pump(false)
+    }
+
+    /// [`Server::poll`], then flush the partial tail of every lane.
+    /// Unlike [`Server::shutdown`] this keeps the server alive and does
+    /// not force a maintenance tick.
+    pub fn drain(&mut self) -> Result<usize> {
+        self.pump(true)
+    }
+
+    fn pump(&mut self, drain: bool) -> Result<usize> {
+        let mut served = 0usize;
+        // the release buffer is a server-lifetime scratch: one
+        // allocation serves every pump tick
+        let mut batch = std::mem::take(&mut self.batch);
+        loop {
+            if self.sched.next_batch_into(drain, &mut batch).is_none() {
+                break;
+            }
+            self.reqs.clear();
+            self.meta.clear();
+            for r in batch.drain(..) {
+                let (ticket, req) = r.item;
+                self.meta.push((ticket, r.wait_ticks));
+                self.reqs.push(req);
+            }
+            let responses = match self.engine.serve_batch(self.rt, &self.reqs) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.batch = batch;
+                    return Err(e);
+                }
+            };
+            for (resp, &(ticket, wait)) in responses.iter().zip(&self.meta) {
+                debug_assert_eq!(resp.id, ticket.id, "engine must echo the ticket id");
+                let lm = &mut self.lanes[ticket.lane.index()];
+                lm.served += 1;
+                lm.wait.record(wait);
+                self.done.push_back(Completion { ticket, response: *resp, wait_ticks: wait });
+            }
+            served += self.meta.len();
+            self.served_since_maintenance += self.meta.len() as u64;
+            if self.policy.every_n_requests > 0
+                && self.served_since_maintenance >= self.policy.every_n_requests
+            {
+                self.served_since_maintenance = 0;
+                match self.engine.maintenance(self.rt) {
+                    Ok(rep) => self.maintenance_log.push(rep),
+                    Err(e) => {
+                        self.batch = batch;
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        self.batch = batch;
+        Ok(served)
+    }
+
+    /// Pop the oldest unconsumed completion, if any.
+    pub fn try_recv(&mut self) -> Option<Completion> {
+        self.done.pop_front()
+    }
+
+    /// Take every unconsumed completion, in serve order.
+    pub fn recv_all(&mut self) -> Vec<Completion> {
+        self.done.drain(..).collect()
+    }
+
+    /// Completions waiting in the queue.
+    pub fn completed(&self) -> usize {
+        self.done.len()
+    }
+
+    /// Requests admitted but not yet served, across all lanes.
+    pub fn pending(&self) -> usize {
+        self.sched.depth()
+    }
+
+    /// Requests queued on one lane.
+    pub fn lane_depth(&self, lane: Lane) -> usize {
+        self.sched.lane_depth(lane.index())
+    }
+
+    /// Per-lane accounting (admitted / rejected / served / waits), in
+    /// [`Lane::ALL`] order.
+    pub fn lane_metrics(&self) -> &[LaneMetrics] {
+        &self.lanes
+    }
+
+    /// Average fill fraction of the batches released so far.
+    pub fn occupancy(&self) -> f64 {
+        self.sched.occupancy()
+    }
+
+    /// Run one manual drift-maintenance tick (see
+    /// [`Engine::maintenance`]); the automatic cadence is
+    /// [`MaintenancePolicy`].
+    pub fn maintenance(&mut self) -> Result<MaintenanceReport> {
+        self.engine.maintenance(self.rt)
+    }
+
+    /// Drain the reports of the automatic maintenance ticks run since
+    /// the last call (serving loops print migrations from these).
+    pub fn take_maintenance_reports(&mut self) -> Vec<MaintenanceReport> {
+        std::mem::take(&mut self.maintenance_log)
+    }
+
+    /// The engine's serving metrics (wall + simulated clocks).
+    pub fn metrics(&self) -> &Metrics {
+        &self.engine.metrics
+    }
+
+    /// Shared view of the wrapped engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Mutable view of the wrapped engine (e.g. to reset metrics).
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Tear down without draining, recovering the engine. Queued
+    /// requests and unconsumed completions are dropped — prefer
+    /// [`Server::shutdown`] for a graceful exit.
+    pub fn into_engine(self) -> Engine {
+        self.engine
+    }
+
+    /// Graceful shutdown: flush every lane through the engine, run one
+    /// final maintenance tick, and hand back the [`DrainReport`]
+    /// (remaining completions + final per-lane accounting) together
+    /// with the engine.
+    pub fn shutdown(mut self) -> Result<(DrainReport, Engine)> {
+        let drained = self.pump(true)?;
+        let maintenance = self.engine.maintenance(self.rt)?;
+        let occupancy = self.sched.occupancy();
+        let report = DrainReport {
+            drained,
+            completions: self.done.into_iter().collect(),
+            lanes: self.lanes,
+            occupancy,
+            maintenance,
+            maintenance_log: self.maintenance_log,
+        };
+        Ok((report, self.engine))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_indices_round_trip() {
+        for l in Lane::ALL {
+            assert_eq!(Lane::from_index(l.index()), Some(l));
+        }
+        assert_eq!(Lane::from_index(Lane::COUNT), None);
+        assert_eq!(Lane::Interactive.name(), "interactive");
+        assert_eq!(Lane::Bulk.name(), "bulk");
+    }
+
+    #[test]
+    fn server_config_defaults_and_overrides() {
+        let cfg = ServerConfig::new(8);
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.lanes[Lane::Interactive.index()].weight, 3);
+        assert_eq!(cfg.lanes[Lane::Bulk.index()].weight, 1);
+        assert!(
+            cfg.lanes[Lane::Bulk.index()].max_wait_ticks
+                > cfg.lanes[Lane::Interactive.index()].max_wait_ticks,
+            "bulk ages slower than interactive"
+        );
+        assert_eq!(cfg.maintenance.every_n_requests, 0);
+
+        let cfg = cfg
+            .lane(Lane::Bulk, LaneParams { weight: 2, max_wait_ticks: 9, max_queue: 8 })
+            .maintenance(MaintenancePolicy::every(16));
+        assert_eq!(cfg.lanes[Lane::Bulk.index()].weight, 2);
+        assert_eq!(cfg.lanes[Lane::Bulk.index()].max_wait_ticks, 9);
+        assert_eq!(cfg.maintenance.every_n_requests, 16);
+    }
+
+    #[test]
+    fn maintenance_policy_every() {
+        assert_eq!(MaintenancePolicy::every(8).every_n_requests, 8);
+        assert_eq!(MaintenancePolicy::default().every_n_requests, 0);
+    }
+
+    #[test]
+    fn completion_client_attribution() {
+        let alice = ClientHandle { id: 1 };
+        let bob = ClientHandle { id: 2 };
+        let c = Completion {
+            ticket: Ticket { id: 42, lane: Lane::Bulk, client: 1 },
+            response: Response { id: 42, score: -1.25 },
+            wait_ticks: 3,
+        };
+        assert!(c.belongs_to(&alice));
+        assert!(!c.belongs_to(&bob));
+        assert_eq!(c.ticket.id, c.response.id);
+    }
+
+    // Server itself needs a live Engine (PJRT + artifacts); its
+    // end-to-end behavior — single-lane equivalence to Session, ticket
+    // association under interleaved multi-client enqueues, the
+    // server-owned maintenance cadence — is pinned in
+    // rust/tests/integration.rs. The scheduler underneath is
+    // property-tested in batcher.rs.
+}

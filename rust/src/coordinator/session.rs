@@ -1,8 +1,5 @@
-//! A serving session: admission queue + dynamic batcher + engine, behind
-//! a two-call API.
-//!
-//! Callers used to hand-roll the batch loop (submit → tick → poll →
-//! serve → collect) at every call site; a [`Session`] owns that loop:
+//! The legacy two-call serving flow, kept as a **single-lane adapter**
+//! over the multi-tenant [`Server`].
 //!
 //! ```text
 //!   let mut session = Session::new(&rt, engine, Batcher::new(b, 8, 4*b));
@@ -10,141 +7,179 @@
 //!   let responses = session.drain()?;             // flushes the tail
 //! ```
 //!
-//! `submit` advances the batcher clock by one tick per request (the
-//! deterministic arrival model the batcher's deadline policy is defined
-//! over) and immediately serves any batch the release policy produces,
-//! so the admission queue can never exceed one compiled batch.
+//! Every request rides [`Lane::Interactive`] of one internal client;
+//! `submit` advances the arrival clock by one tick and serves whatever
+//! the release policy produces, exactly like the pre-`Server` code —
+//! the `single_lane_server_matches_session` integration test pins the
+//! adapter's response stream byte-identical to driving a single-lane
+//! [`Server`] directly. New code should use [`Server`]: it adds
+//! priority lanes, per-client tickets, non-blocking completion
+//! consumption, and a server-owned maintenance cadence this adapter
+//! cannot express. In-repo, the adapter's only consumer is its
+//! compatibility test.
+//!
+//! Backpressure here is **non-destructive** where the old
+//! implementation was lossy: [`Session::try_submit`] hands a rejected
+//! `Request` back to the caller, and [`Session::submit_all`] reports
+//! the admitted prefix *and* returns the unadmitted remainder instead
+//! of silently stopping mid-stream.
 
 use anyhow::{anyhow, Result};
 
 use super::batcher::{Batcher, Request, RequestId, Response};
 use super::metrics::Metrics;
+use super::server::{ClientHandle, Lane, Server, ServerConfig};
 use super::{Engine, MaintenanceReport};
 use crate::runtime::Runtime;
 
-/// Request handling for one [`Engine`]: owns the admission queue and the
-/// dynamic [`Batcher`], assigns request ids, and collects responses.
+/// Outcome of [`Session::submit_all`]: the ids of the admitted prefix
+/// plus the unadmitted remainder (the first rejected request included,
+/// returned non-destructively so the caller can retry or shed load
+/// explicitly).
+#[derive(Debug, Default)]
+pub struct SubmitOutcome {
+    /// Ids assigned to the admitted prefix, in admission order.
+    pub admitted: Vec<RequestId>,
+    /// The requests that were not admitted: the first one rejected by
+    /// backpressure followed by everything after it, in order.
+    pub rejected: Vec<Request>,
+}
+
+impl SubmitOutcome {
+    /// Whether every request was admitted.
+    pub fn all_admitted(&self) -> bool {
+        self.rejected.is_empty()
+    }
+}
+
+/// Single-tenant request handling for one [`Engine`]: the legacy
+/// submit/drain API, implemented as one client on
+/// [`Lane::Interactive`] of an internal [`Server`].
 pub struct Session<'rt> {
-    rt: &'rt Runtime,
-    engine: Engine,
-    batcher: Batcher,
-    done: Vec<Response>,
-    next_id: RequestId,
-    /// released-batch scratch, reused across every drain tick
-    batch: Vec<Request>,
+    server: Server<'rt>,
+    client: ClientHandle,
 }
 
 impl<'rt> Session<'rt> {
     /// Wrap an engine and a batching policy into a serving session.
-    /// Request ids restart from 0 per session.
+    /// The [`Batcher`] acts as the configuration carrier (batch size,
+    /// deadline, queue bound map onto the interactive lane); request
+    /// ids restart from 0 per session.
     pub fn new(rt: &'rt Runtime, engine: Engine, batcher: Batcher) -> Session<'rt> {
-        Session { rt, engine, batcher, done: Vec::new(), next_id: 0, batch: Vec::new() }
+        let cfg = ServerConfig::single_lane(
+            batcher.max_batch,
+            batcher.max_wait_ticks,
+            batcher.max_queue,
+        );
+        let mut server = Server::new(rt, engine, cfg);
+        let client = server.client();
+        Session { server, client }
     }
 
-    /// Admit one request. The session assigns and returns the request id
-    /// (the caller-set `req.id` is overwritten); any batch released by
-    /// the policy (full batch, or the oldest request's deadline) is
+    /// Admit one request. The session assigns and returns the request
+    /// id (the caller-set `req.id` is overwritten); any batch released
+    /// by the policy (full batch, or the oldest request's deadline) is
     /// served inline and its responses buffered for [`Session::drain`].
-    pub fn submit(&mut self, mut req: Request) -> Result<RequestId> {
-        let id = self.next_id;
-        req.id = id;
-        if !self.batcher.submit(req) {
-            return Err(anyhow!(
-                "admission queue full ({} pending): backpressure",
-                self.batcher.depth()
-            ));
-        }
-        self.next_id += 1;
-        self.batcher.tick(1);
-        self.pump(false)?;
+    /// A full queue is an error — use [`Session::try_submit`] to get
+    /// the request back instead.
+    pub fn submit(&mut self, req: Request) -> Result<RequestId> {
+        let id = match self.server.enqueue(&self.client, req, Lane::Interactive) {
+            Ok(ticket) => ticket.id,
+            Err(_) => {
+                return Err(anyhow!(
+                    "admission queue full ({} pending): backpressure",
+                    self.server.pending()
+                ));
+            }
+        };
+        self.server.poll()?;
         Ok(id)
     }
 
-    /// Admit a whole request stream in order, returning the assigned
-    /// ids. Stops at the first backpressure rejection or engine error.
-    pub fn submit_all<I>(&mut self, reqs: I) -> Result<Vec<RequestId>>
+    /// Admission-only variant of [`Session::submit`]: a full queue
+    /// rejects **non-destructively**, handing the request back in
+    /// `Err` so the caller can retry after a [`Session::drain`] or
+    /// shed the load explicitly. Nothing is served inline; the next
+    /// `submit`/`drain` picks the admitted request up.
+    pub fn try_submit(&mut self, req: Request) -> std::result::Result<RequestId, Request> {
+        self.server.enqueue(&self.client, req, Lane::Interactive).map(|t| t.id)
+    }
+
+    /// Admit a request stream in order, serving full batches inline.
+    /// Stops admitting at the first backpressure rejection and returns
+    /// the admitted ids **and** the unadmitted remainder (rejected
+    /// request first) — nothing is dropped. Engine errors abort with
+    /// `Err`.
+    pub fn submit_all<I>(&mut self, reqs: I) -> Result<SubmitOutcome>
     where
         I: IntoIterator<Item = Request>,
     {
-        reqs.into_iter().map(|r| self.submit(r)).collect()
+        let mut out = SubmitOutcome::default();
+        let mut iter = reqs.into_iter();
+        for req in iter.by_ref() {
+            match self.try_submit(req) {
+                Ok(id) => {
+                    out.admitted.push(id);
+                    self.server.poll()?;
+                }
+                Err(req) => {
+                    out.rejected.push(req);
+                    break;
+                }
+            }
+        }
+        out.rejected.extend(iter);
+        Ok(out)
     }
 
     /// Requests admitted but not yet served.
     pub fn pending(&self) -> usize {
-        self.batcher.depth()
+        self.server.pending()
     }
 
     /// Flush the admission queue and return every buffered response (in
     /// serve order; response ids are the ids `submit` returned).
-    ///
-    /// Batches released here run through the engine's parallel pipeline:
-    /// host-side stages fan out across the engine's worker pool, and
-    /// the expert-chunk packing covers the digital and analog queues
-    /// concurrently rather than one backend at a time. The response
-    /// stream is byte-identical to a `workers(1)` sequential engine (see
-    /// the `parallel_drain_matches_sequential_drain` integration test).
     pub fn drain(&mut self) -> Result<Vec<Response>> {
-        self.pump(true)?;
-        Ok(std::mem::take(&mut self.done))
+        self.server.drain()?;
+        Ok(self.server.recv_all().into_iter().map(|c| c.response).collect())
     }
 
-    fn pump(&mut self, drain: bool) -> Result<()> {
-        // the release buffer is a session-lifetime scratch: one
-        // allocation serves every drain tick (Batcher::next_batch_into)
-        let mut batch = std::mem::take(&mut self.batch);
-        while self.batcher.next_batch_into(drain, &mut batch).is_some() {
-            match self.engine.serve_batch(self.rt, &batch) {
-                Ok(responses) => self.done.extend(responses),
-                Err(e) => {
-                    self.batch = batch;
-                    return Err(e);
-                }
-            }
-        }
-        self.batch = batch;
-        Ok(())
-    }
-
-    /// Run one drift-maintenance tick on the wrapped engine: decay the
-    /// analog experts to the current token clock, sentinel-probe every
-    /// drift-tracked expert, and execute the re-placement policy's
-    /// migrations live (see [`Engine::maintenance`]). Call it between
-    /// submits on whatever cadence the deployment needs — `hetmoe
-    /// serve --replace-every N` calls it every N admitted requests.
-    /// Pending (queued, unserved) requests are unaffected: maintenance
-    /// never runs mid-batch.
+    /// Run one drift-maintenance tick on the wrapped engine (see
+    /// [`Engine::maintenance`]). The [`Server`] API runs this on its
+    /// own cadence ([`super::MaintenancePolicy`]); the adapter keeps
+    /// the manual call for compatibility.
     pub fn maintenance(&mut self) -> Result<MaintenanceReport> {
-        self.engine.maintenance(self.rt)
+        self.server.maintenance()
     }
 
-    /// Average fill fraction of the batches released so far (see
-    /// [`Batcher::occupancy`]).
+    /// Average fill fraction of the batches released so far.
     pub fn occupancy(&self) -> f64 {
-        self.batcher.occupancy()
+        self.server.occupancy()
     }
 
     /// The engine's serving metrics (wall + simulated clocks).
     pub fn metrics(&self) -> &Metrics {
-        &self.engine.metrics
+        self.server.metrics()
     }
 
     /// Shared view of the wrapped engine.
     pub fn engine(&self) -> &Engine {
-        &self.engine
+        self.server.engine()
     }
 
     /// Mutable view of the wrapped engine (e.g. to reset metrics).
     pub fn engine_mut(&mut self) -> &mut Engine {
-        &mut self.engine
+        self.server.engine_mut()
     }
 
     /// Tear down the session, recovering the engine (e.g. to read
     /// `router_stats` or reuse it with a new batcher).
     pub fn into_engine(self) -> Engine {
-        self.engine
+        self.server.into_engine()
     }
 }
 
-// Session logic that doesn't need a live engine (id assignment, the
-// pump policy) is exercised through the Batcher unit tests; end-to-end
-// Session behavior over real artifacts lives in rust/tests/.
+// Session logic that doesn't need a live engine (id assignment, lane
+// release policy) is exercised through the LaneScheduler/Batcher unit
+// tests; end-to-end adapter behavior over real artifacts lives in
+// rust/tests/integration.rs (single_lane_server_matches_session).

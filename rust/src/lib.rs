@@ -43,11 +43,15 @@
 //!   dispatch via [`coordinator::ExpertBackend::dispatch_many`] — one
 //!   device round trip per backend tier, not per chunk), assemble with
 //!   [`coordinator::EngineBuilder`] (worker count via `.workers(n)`),
-//!   serve request streams through [`coordinator::Session`] (see
-//!   `DESIGN.md` §serving API), and keep long-lived deployments healthy
-//!   with the drift-maintenance tick
-//!   ([`coordinator::Session::maintenance`]: sentinel probes → live
-//!   expert re-placement, no rebuild)
+//!   and serve multi-tenant traffic through the poll-driven
+//!   [`coordinator::Server`]: `enqueue(Request, Lane) -> Ticket` into
+//!   bounded priority lanes (interactive/bulk), weighted-deficit batch
+//!   composition with a starvation bound, completions consumed via
+//!   `try_recv`/`recv_all`, and a server-owned drift-maintenance
+//!   cadence ([`coordinator::MaintenancePolicy`]: sentinel probes →
+//!   live expert re-placement, no rebuild; see `DESIGN.md` §serving
+//!   API). The legacy [`coordinator::Session`] survives as a
+//!   single-lane adapter.
 //! - [`theory`] — §4 analytical setup (Lemma 4.1, Theorem 4.2)
 //! - [`bench`] — shared bench machinery + the `BENCH_*.json` harness
 //!   (`docs/BENCHMARKS.md`)

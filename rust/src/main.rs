@@ -20,7 +20,9 @@ use anyhow::{bail, Result};
 use hetmoe::aimc::drift::DriftModel;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
-use hetmoe::coordinator::{Batcher, EngineBuilder, Request, Session};
+use hetmoe::coordinator::{
+    EngineBuilder, Lane, LaneParams, MaintenancePolicy, Request, Server, ServerConfig,
+};
 use hetmoe::moe::placement::RePlacerOptions;
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
@@ -49,8 +51,11 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     ("gamma", "0.25", "digital expert fraction Γ"),
     ("noise", "1.0", "programming-noise scale (eq 3)"),
     ("requests", "64", "number of scoring requests to stream"),
+    ("lanes", "2", "priority lanes: 2 = interactive + bulk, 1 = interactive only"),
+    ("interactive-share", "0.75", "weighted-deficit share of the interactive lane (0-1)"),
+    ("bulk-wait", "64", "bulk-lane aging bound in arrival ticks (starvation bound)"),
     ("drift-nu", "0.0", "conductance-drift exponent ν (0 = no drift)"),
-    ("replace-every", "0", "maintenance tick every N requests (0 = only at end)"),
+    ("replace-every", "0", "server maintenance tick every N served requests (0 = shutdown only)"),
     ("migration-budget", "2", "max live migrations per maintenance tick"),
 ];
 const BENCH_FLAGS: &[FlagSpec] = &[
@@ -289,6 +294,21 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Print one maintenance tick's migrations (the greppable `maintenance
+/// @ … tokens` lines of `hetmoe serve`).
+fn print_migrations(label: &str, rep: &hetmoe::coordinator::MaintenanceReport) {
+    for mg in &rep.migrations {
+        println!(
+            "  {label} @ {} tokens: expert ({},{}) {} (|dev| {:.4})",
+            rep.drift_clock,
+            mg.layer,
+            mg.expert,
+            if mg.is_promotion() { "analog → digital" } else { "digital → analog" },
+            mg.deviation
+        );
+    }
+}
+
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let artifacts = hetmoe::artifacts_dir();
     let meta = Meta::load(&artifacts)?;
@@ -301,6 +321,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let gamma = cli.get_f64("gamma");
     let noise = cli.get_f64("noise");
     let n_requests = cli.get_usize("requests");
+    let lanes_n = cli.get_usize("lanes");
+    if !(1..=2).contains(&lanes_n) {
+        bail!("--lanes must be 1 (interactive only) or 2 (interactive + bulk)");
+    }
+    let share = cli.get_f64("interactive-share");
+    if !(0.0..=1.0).contains(&share) {
+        bail!("--interactive-share must be in 0..1");
+    }
+    let bulk_wait = cli.get_usize("bulk-wait").max(1) as u64;
     let drift_nu = cli.get_f64("drift-nu");
     let replace_every = cli.get_usize("replace-every");
     let budget = cli.get_usize("migration-budget");
@@ -323,48 +352,94 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     }
     let engine = builder.build(&mut rt, &paths, &params)?;
 
-    // stream requests from task items through the session; with drift
-    // enabled, run a maintenance tick (drift decay → sentinel probes →
-    // live re-placement) every `replace-every` admitted requests
-    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 4, cfg.batch * 4));
+    // multi-tenant front-end: interactive-share splits 8 deficit
+    // credits between the lanes; the server owns the maintenance
+    // cadence (drift decay → sentinel probes → live re-placement every
+    // `replace-every` served requests, plus a final tick at shutdown)
+    let wi = ((share * 8.0).round() as u64).clamp(1, 7);
+    let server_cfg = ServerConfig::new(cfg.batch)
+        .lane(
+            Lane::Interactive,
+            LaneParams { weight: wi, max_wait_ticks: 4, max_queue: cfg.batch * 4 },
+        )
+        .lane(
+            Lane::Bulk,
+            LaneParams { weight: 8 - wi, max_wait_ticks: bulk_wait, max_queue: cfg.batch * 8 },
+        )
+        .maintenance(MaintenancePolicy::every(replace_every as u64));
+    let mut server = Server::new(&rt, engine, server_cfg);
+    let client = server.client();
+
+    // traffic: bursty interactive over steady bulk — interactive
+    // arrives in bursts of one compiled batch, bulk fills the gaps
+    // (single-lane mode routes everything interactive)
     let mut submitted = 0usize;
     'outer: for task in &tasks {
         for item in &task.items {
             let choice = &item.choices[item.gold];
             let (tk, tg, mk) = pack_choice(&item.ctx, choice, cfg.seq_len);
-            session.submit(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 })?;
-            submitted += 1;
-            if replace_every > 0 && submitted % replace_every == 0 {
-                let rep = session.maintenance()?;
-                for mg in &rep.migrations {
-                    println!(
-                        "  maintenance @ {} tokens: expert ({},{}) {} (|dev| {:.4})",
-                        rep.drift_clock,
-                        mg.layer,
-                        mg.expert,
-                        if mg.is_promotion() { "analog → digital" } else { "digital → analog" },
-                        mg.deviation
-                    );
+            let lane = if lanes_n < 2 || (submitted / cfg.batch.max(1)) % 2 == 0 {
+                Lane::Interactive
+            } else {
+                Lane::Bulk
+            };
+            let mut req = Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 };
+            // backpressure rejection is non-destructive: the request
+            // comes back; one poll frees space (serves a batch)
+            if let Err(back) = server.enqueue(&client, req, lane) {
+                req = back;
+                server.poll()?;
+                if server.enqueue(&client, req, lane).is_err() {
+                    bail!("admission queue still full after poll ({} lane)", lane.name());
                 }
+            }
+            submitted += 1;
+            server.poll()?;
+            for rep in server.take_maintenance_reports() {
+                print_migrations("maintenance", &rep);
             }
             if submitted >= n_requests {
                 break 'outer;
             }
         }
     }
-    let responses = session.drain()?;
-    if drift_nu > 0.0 {
-        // final tick so the reported sentinel deviation reflects the
-        // end-of-stream chip state
-        session.maintenance()?;
+    // graceful shutdown: drain every lane, final maintenance tick (so
+    // the reported sentinel deviation reflects the end-of-stream chip
+    // state), hand back per-lane accounting + the engine
+    let (report, engine) = server.shutdown()?;
+    // cadence ticks that fired inside shutdown's tail flush, then the
+    // final tick shutdown always runs
+    for rep in &report.maintenance_log {
+        print_migrations("maintenance", rep);
     }
+    print_migrations("shutdown tick", &report.maintenance);
     println!(
-        "served {} scoring requests (Γ={gamma}, prog-noise={noise}, drift ν={drift_nu})",
-        responses.len()
+        "served {} scoring requests (Γ={gamma}, prog-noise={noise}, drift ν={drift_nu}, \
+         {lanes_n} lane(s))",
+        report.completions.len()
     );
 
-    let occupancy = session.occupancy();
-    let m = session.metrics();
+    let mut lt = Table::new(
+        "per-lane traffic",
+        &["lane", "weight", "admitted", "rejected", "served", "wait p50", "p95", "p99", "max"],
+    );
+    for lm in &report.lanes {
+        lt.row(vec![
+            lm.name.clone(),
+            lm.weight.to_string(),
+            lm.admitted.to_string(),
+            lm.rejected.to_string(),
+            lm.served.to_string(),
+            format!("{:.1}", lm.wait.quantile(0.5)),
+            format!("{:.1}", lm.wait.quantile(0.95)),
+            format!("{:.1}", lm.wait.quantile(0.99)),
+            lm.wait.max_ticks().to_string(),
+        ]);
+    }
+    lt.print();
+
+    let occupancy = report.occupancy;
+    let m = &engine.metrics;
     let mut t = Table::new("serve summary", &["metric", "value"]);
     t.row(vec!["requests".into(), m.requests.to_string()]);
     t.row(vec!["batches".into(), m.batches.to_string()]);
@@ -381,7 +456,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     t.row(vec![
         "scratch arena".into(),
         format!("{} B allocated, hit rate {:.2}",
-                m.alloc_bytes, session.engine().scratch().hit_rate()),
+                m.alloc_bytes, engine.scratch().hit_rate()),
     ]);
     t.row(vec![
         "wall throughput".into(),
@@ -389,7 +464,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     ]);
     t.row(vec![
         "host workers".into(),
-        session.engine().workers().to_string(),
+        engine.workers().to_string(),
     ]);
     t.row(vec![
         "drift clock".into(),
@@ -503,6 +578,22 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
                         b.get("device_round_trips")?.as_f64()?,
                         b.get("chunks_per_round_trip")?.as_f64()?,
                         b.get("transfer_bytes")?.as_f64()?,
+                    );
+                }
+                let mp = entry.get("mixed_priority")?;
+                for lane in mp.get("lanes")?.as_arr()? {
+                    println!(
+                        "  {} lane (w={:.0}): {:.0} served / {:.0} admitted \
+                         ({:.0} rejected), wait p50/p95/p99 = \
+                         {:.1}/{:.1}/{:.1} ticks",
+                        lane.get("lane")?.as_str()?,
+                        lane.get("weight")?.as_f64()?,
+                        lane.get("served")?.as_f64()?,
+                        lane.get("admitted")?.as_f64()?,
+                        lane.get("rejected")?.as_f64()?,
+                        lane.get("wait_p50")?.as_f64()?,
+                        lane.get("wait_p95")?.as_f64()?,
+                        lane.get("wait_p99")?.as_f64()?,
                     );
                 }
                 let soak = entry.get("drift_soak")?;

@@ -12,7 +12,8 @@ use hetmoe::aimc::quant::{adc_quant, dac_quant};
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{
     AnalogBackend, Batcher, DigitalBackend, EngineBuilder, ExpertBackend, ExpertOutput,
-    ExpertWeights, Request, Response, Session, StageCost,
+    ExpertWeights, Lane, MaintenancePolicy, Request, Response, Server, ServerConfig,
+    Session, StageCost,
 };
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
@@ -344,10 +345,10 @@ fn dsmoe_model_also_evaluates() {
 }
 
 #[test]
-fn session_serves_heterogeneous_stream_through_backend_registry() {
-    // Session + EngineBuilder end to end: a Γ=0.25 placement must route
+fn server_serves_heterogeneous_stream_through_backend_registry() {
+    // Server + EngineBuilder end to end: a Γ=0.25 placement must route
     // dispatches to BOTH registered backends, report per-backend clocks,
-    // and hand back one response per submitted request in order.
+    // and complete one ticket per enqueued request in order.
     require_artifacts!();
     let (mut rt, meta, paths, params) = setup("olmoe_mini");
     let cfg = meta.config("olmoe_mini").unwrap().clone();
@@ -369,30 +370,41 @@ fn session_serves_heterogeneous_stream_through_backend_registry() {
         .unwrap();
     assert_eq!(engine.backend_names(), vec!["digital", "analog"]);
 
-    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+    let mut server =
+        Server::new(&rt, engine, ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4));
+    let client = server.client();
     let n = cfg.batch + 1; // force one full release + one drained tail
     let mut submitted = 0;
     'outer: for task in &tasks {
         for item in &task.items {
             let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
-            let id = session
-                .submit(Request { id: 99, tokens: tk, targets: tg, mask: mk, arrived: 0 })
+            let ticket = server
+                .enqueue(
+                    &client,
+                    Request { id: 99, tokens: tk, targets: tg, mask: mk, arrived: 0 },
+                    Lane::Interactive,
+                )
                 .unwrap();
-            assert_eq!(id, submitted as u64, "session assigns sequential ids");
+            assert_eq!(ticket.id, submitted as u64, "server assigns sequential ids");
+            assert_eq!(ticket.lane, Lane::Interactive);
+            assert_eq!(ticket.client, client.id());
+            server.poll().unwrap();
             submitted += 1;
             if submitted == n {
                 break 'outer;
             }
         }
     }
-    let responses = session.drain().unwrap();
-    assert_eq!(responses.len(), n);
-    for (i, r) in responses.iter().enumerate() {
-        assert_eq!(r.id, i as u64, "responses in admission order");
-        assert!(r.score.is_finite());
+    server.drain().unwrap();
+    let completions = server.recv_all();
+    assert_eq!(completions.len(), n);
+    for (i, c) in completions.iter().enumerate() {
+        assert_eq!(c.ticket.id, i as u64, "completions in admission order");
+        assert_eq!(c.response.id, c.ticket.id, "response keyed by ticket");
+        assert!(c.response.score.is_finite());
     }
 
-    let m = session.metrics();
+    let m = server.metrics();
     assert_eq!(m.requests, n as u64);
     assert_eq!(m.backends.len(), 2);
     let dig = &m.backends[0];
@@ -403,6 +415,10 @@ fn session_serves_heterogeneous_stream_through_backend_registry() {
     assert!(dig.energy_j > 0.0 && ana.energy_j > 0.0);
     let u = m.utilization();
     assert!(u > 0.0 && u <= 1.0, "utilization {u} out of range");
+    let lm = server.lane_metrics();
+    assert_eq!(lm[Lane::Interactive.index()].admitted, n as u64);
+    assert_eq!(lm[Lane::Interactive.index()].served, n as u64);
+    assert_eq!(lm[Lane::Bulk.index()].admitted, 0);
 }
 
 #[test]
@@ -433,24 +449,31 @@ fn parallel_drain_matches_sequential_drain() {
             .workers(workers)
             .build(rt, &paths, &params)
             .unwrap();
-        let mut session =
-            Session::new(rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+        let mut server =
+            Server::new(rt, engine, ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4));
+        let client = server.client();
         let n = cfg.batch * 2 + 1; // full releases + a drained tail
         let mut submitted = 0;
         'outer: for task in &tasks {
             for item in &task.items {
                 let (tk, tg, mk) =
                     pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
-                session
-                    .submit(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 })
+                server
+                    .enqueue(
+                        &client,
+                        Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 },
+                        Lane::Interactive,
+                    )
                     .unwrap();
+                server.poll().unwrap();
                 submitted += 1;
                 if submitted == n {
                     break 'outer;
                 }
             }
         }
-        session.drain().unwrap()
+        server.drain().unwrap();
+        server.recv_all().into_iter().map(|c| c.response).collect()
     };
     let seq = serve(&mut rt, 1);
     let par = serve(&mut rt, 4);
@@ -466,6 +489,247 @@ fn parallel_drain_matches_sequential_drain() {
             a.score
         );
     }
+}
+
+#[test]
+fn single_lane_server_matches_session() {
+    // The legacy Session is a thin single-lane adapter over Server;
+    // this is its compatibility pin (and its one remaining in-repo
+    // consumer): the same request sequence through the adapter and
+    // through a direct single-lane Server must produce byte-identical
+    // response streams (ids + f64 score bits). Also exercises the
+    // non-destructive try_submit path and the submit_all outcome.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+
+    let mut reqs = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            reqs.push(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 });
+            if reqs.len() == cfg.batch * 2 + 1 {
+                break 'outer;
+            }
+        }
+    }
+
+    let build = |rt: &mut Runtime| {
+        EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .build(rt, &paths, &params)
+            .unwrap()
+    };
+
+    // legacy adapter flow: submit → drain
+    let engine = build(&mut rt);
+    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+    for (i, r) in reqs.iter().enumerate() {
+        let id = session.submit(r.clone()).unwrap();
+        assert_eq!(id, i as u64);
+    }
+    let via_session = session.drain().unwrap();
+
+    // direct single-lane Server flow: enqueue → poll → drain → recv
+    let engine = build(&mut rt);
+    let mut server =
+        Server::new(&rt, engine, ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4));
+    let client = server.client();
+    for r in &reqs {
+        server.enqueue(&client, r.clone(), Lane::Interactive).unwrap();
+        server.poll().unwrap();
+    }
+    server.drain().unwrap();
+    let via_server = server.recv_all();
+
+    assert_eq!(via_session.len(), reqs.len());
+    assert_eq!(via_session.len(), via_server.len());
+    for (a, c) in via_session.iter().zip(&via_server) {
+        assert_eq!(a.id, c.ticket.id);
+        assert_eq!(a.id, c.response.id);
+        assert_eq!(
+            a.score.to_bits(),
+            c.response.score.to_bits(),
+            "request {}: session {} != server {}",
+            a.id,
+            a.score,
+            c.response.score
+        );
+    }
+
+    // non-destructive backpressure: fill the admission queue without
+    // polling; the overflow request must come back intact
+    let engine = build(&mut rt);
+    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, u64::MAX, cfg.batch));
+    for r in reqs.iter().take(cfg.batch) {
+        session.try_submit(r.clone()).unwrap();
+    }
+    let bounced = session.try_submit(reqs[0].clone()).unwrap_err();
+    assert_eq!(bounced.tokens, reqs[0].tokens, "rejected request survives");
+    let served = session.drain().unwrap();
+    assert_eq!(served.len(), cfg.batch);
+    // after the drain the bounced request is admittable again
+    let id = session.try_submit(bounced).unwrap();
+    assert_eq!(id, cfg.batch as u64);
+    session.drain().unwrap();
+
+    // submit_all reports the admitted prefix AND returns the remainder
+    let outcome = session
+        .submit_all(reqs.iter().take(cfg.batch * 2).cloned())
+        .unwrap();
+    assert!(outcome.all_admitted(), "poll-per-submit keeps the queue clear");
+    assert_eq!(outcome.admitted.len(), cfg.batch * 2);
+}
+
+#[test]
+fn tickets_track_interleaved_multi_client_enqueues() {
+    // Ticket ↔ response association must be exact under interleaved
+    // multi-client traffic. Phase 1 (exactness): two clients alternate
+    // on ONE lane, so batching matches a single-client reference
+    // serving the same merged sequence — every completion must carry
+    // its client's ticket and the byte-identical score of the
+    // reference stream. Phase 2 (both lanes): tickets stay unique and
+    // complete when the scheduler reorders across lanes.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+
+    let mut reqs = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            reqs.push(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 });
+            if reqs.len() == cfg.batch * 2 + 1 {
+                break 'outer;
+            }
+        }
+    }
+
+    let build = |rt: &mut Runtime| {
+        EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .build(rt, &paths, &params)
+            .unwrap()
+    };
+
+    // reference stream: the same merged order through one client
+    let engine = build(&mut rt);
+    let mut reference_server =
+        Server::new(&rt, engine, ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4));
+    let solo = reference_server.client();
+    for r in &reqs {
+        reference_server.enqueue(&solo, r.clone(), Lane::Interactive).unwrap();
+        reference_server.poll().unwrap();
+    }
+    reference_server.drain().unwrap();
+    let reference: Vec<Response> =
+        reference_server.recv_all().into_iter().map(|c| c.response).collect();
+
+    // phase 1: two clients interleave on the interactive lane
+    let engine = build(&mut rt);
+    let mut server =
+        Server::new(&rt, engine, ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4));
+    let alice = server.client();
+    let bob = server.client();
+    assert_ne!(alice.id(), bob.id());
+    let mut issued = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        let who = if i % 2 == 0 { &alice } else { &bob };
+        let ticket = server.enqueue(who, r.clone(), Lane::Interactive).unwrap();
+        assert_eq!(ticket.id, i as u64);
+        assert_eq!(ticket.client, who.id());
+        issued.push(ticket);
+        server.poll().unwrap();
+    }
+    server.drain().unwrap();
+    let completions = server.recv_all();
+    assert_eq!(completions.len(), reference.len());
+    for (c, want) in completions.iter().zip(&reference) {
+        let i = c.ticket.id as usize;
+        assert_eq!(c.ticket.id, want.id, "serve order matches the reference");
+        assert_eq!(issued[i], c.ticket, "completion carries the issued ticket");
+        assert_eq!(c.response.id, c.ticket.id);
+        assert_eq!(
+            c.ticket.client,
+            if i % 2 == 0 { alice.id() } else { bob.id() },
+            "ticket {i} attributed to the wrong client"
+        );
+        assert!(c.belongs_to(if i % 2 == 0 { &alice } else { &bob }));
+        assert_eq!(
+            c.response.score.to_bits(),
+            want.score.to_bits(),
+            "ticket {i}: multi-client score diverged from the reference stream"
+        );
+    }
+
+    // phase 2: the same clients split across BOTH lanes — the
+    // scheduler may reorder, but every issued ticket completes exactly
+    // once with its own response id
+    let engine = build(&mut rt);
+    let mut server = Server::new(&rt, engine, ServerConfig::new(cfg.batch));
+    let alice = server.client();
+    let bob = server.client();
+    let mut issued = std::collections::HashSet::new();
+    for (i, r) in reqs.iter().enumerate() {
+        let (who, lane) = if i % 2 == 0 {
+            (&alice, Lane::Interactive)
+        } else {
+            (&bob, Lane::Bulk)
+        };
+        let mut req = r.clone();
+        loop {
+            match server.enqueue(who, req, lane) {
+                Ok(t) => {
+                    assert_eq!(t.lane, lane);
+                    assert!(issued.insert(t), "duplicate ticket issued");
+                    break;
+                }
+                Err(back) => {
+                    req = back;
+                    server.poll().unwrap();
+                }
+            }
+        }
+    }
+    server.drain().unwrap();
+    let mut seen = std::collections::HashSet::new();
+    for c in server.recv_all() {
+        assert_eq!(c.response.id, c.ticket.id);
+        assert!(issued.contains(&c.ticket), "completion for unknown ticket");
+        assert!(seen.insert(c.ticket), "ticket completed twice");
+        assert!(c.response.score.is_finite());
+    }
+    assert_eq!(seen.len(), issued.len(), "every ticket completes exactly once");
+    let lm = server.lane_metrics();
+    assert_eq!(
+        lm[Lane::Interactive.index()].served + lm[Lane::Bulk.index()].served,
+        reqs.len() as u64
+    );
+    assert!(lm[Lane::Bulk.index()].served > 0, "bulk lane actually served");
 }
 
 /// Forwards everything to the wrapped backend but deliberately does NOT
@@ -563,13 +827,16 @@ fn batched_dispatch_matches_per_chunk_dispatch() {
                 ))));
         }
         let engine = builder.build(rt, &paths, &params).unwrap();
-        let mut session =
-            Session::new(rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+        let mut server =
+            Server::new(rt, engine, ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4));
+        let client = server.client();
         for r in &reqs {
-            session.submit(r.clone()).unwrap();
+            server.enqueue(&client, r.clone(), Lane::Interactive).unwrap();
+            server.poll().unwrap();
         }
-        let responses = session.drain().unwrap();
-        let metrics = session.metrics().clone();
+        server.drain().unwrap();
+        let responses = server.recv_all().into_iter().map(|c| c.response).collect();
+        let metrics = server.metrics().clone();
         (responses, metrics)
     };
 
@@ -869,11 +1136,13 @@ fn live_migration_preserves_unrouted_outputs() {
 
 #[test]
 fn drift_soak_migrates_and_deviation_recovers() {
-    // Long-horizon soak: aggressive drift + a maintenance tick per wave
-    // must (a) detect sentinel deviation, (b) perform at least one live
-    // analog → digital promotion, and (c) keep the deviation of every
-    // migrated expert at zero afterwards (served from the exact digital
-    // reference), with the drift clock tracking served tokens.
+    // Long-horizon soak through the SERVER-OWNED maintenance cadence:
+    // aggressive drift + MaintenancePolicy::every(batch) must (a) tick
+    // automatically between batches and detect sentinel deviation,
+    // (b) perform at least one live analog → digital promotion, and
+    // (c) keep the deviation of every migrated expert at zero
+    // afterwards (served from the exact digital reference), with the
+    // drift clock tracking served tokens.
     require_artifacts!();
     let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
     let cfg = meta.config("olmoe_mini").unwrap().clone();
@@ -896,7 +1165,13 @@ fn drift_soak_migrates_and_deviation_recovers() {
         .replacer(RePlacerOptions { budget: 8, ..Default::default() })
         .build(&mut rt, &paths, &params)
         .unwrap();
-    let mut session = Session::new(&rt, engine, Batcher::new(cfg.batch, 8, cfg.batch * 4));
+    let mut server = Server::new(
+        &rt,
+        engine,
+        ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4)
+            .maintenance(MaintenancePolicy::every(cfg.batch as u64)),
+    );
+    let client = server.client();
 
     let mut stream = Vec::new();
     'outer: for task in &tasks {
@@ -913,24 +1188,38 @@ fn drift_soak_migrates_and_deviation_recovers() {
     let mut all_migrations: Vec<Migration> = Vec::new();
     for wave in stream.chunks(cfg.batch) {
         for (tk, tg, mk) in wave {
-            session
-                .submit(Request {
-                    id: 0,
-                    tokens: tk.clone(),
-                    targets: tg.clone(),
-                    mask: mk.clone(),
-                    arrived: 0,
-                })
+            server
+                .enqueue(
+                    &client,
+                    Request {
+                        id: 0,
+                        tokens: tk.clone(),
+                        targets: tg.clone(),
+                        mask: mk.clone(),
+                        arrived: 0,
+                    },
+                    Lane::Interactive,
+                )
                 .unwrap();
+            server.poll().unwrap();
         }
-        session.drain().unwrap();
-        let rep = session.maintenance().unwrap();
-        assert!(rep.probed > 0, "drift-enabled maintenance must probe");
-        peak_dev = peak_dev.max(rep.max_deviation);
-        all_migrations.extend(rep.migrations);
+        server.drain().unwrap();
+        // the cadence (one tick per served batch) fired inside the
+        // polls — the serving loop never calls maintenance itself
+        let reports = server.take_maintenance_reports();
+        assert!(!reports.is_empty(), "maintenance cadence must have ticked");
+        for rep in reports {
+            assert!(rep.probed > 0, "drift-enabled maintenance must probe");
+            peak_dev = peak_dev.max(rep.max_deviation);
+            all_migrations.extend(rep.migrations);
+        }
     }
 
-    let m = session.metrics();
+    let (report, engine) = server.shutdown().unwrap();
+    // shutdown always runs one final tick
+    peak_dev = peak_dev.max(report.maintenance.max_deviation);
+    all_migrations.extend(report.maintenance.migrations.iter().copied());
+    let m = &engine.metrics;
     assert_eq!(m.drift_clock, m.tokens, "drift clock ticks in served tokens");
     assert!(peak_dev > 0.0, "aggressive drift must register on the sentinel");
     assert!(peak_dev.is_finite());
@@ -945,7 +1234,6 @@ fn drift_soak_migrates_and_deviation_recovers() {
 
     // every promotion is live in the deployed placement, and no
     // migrated-and-still-digital expert carries sentinel deviation
-    let engine = session.into_engine();
     for mg in &all_migrations {
         let still_digital = engine.placement.backend_of(mg.layer, mg.expert) == BACKEND_DIGITAL;
         if mg.is_promotion() && still_digital {

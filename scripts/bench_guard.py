@@ -1,18 +1,28 @@
 #!/usr/bin/env python3
-"""Bench-regression guard for BENCH_kernels.json trajectories.
+"""Bench-regression guard for BENCH_kernels.json / BENCH_serve.json.
 
 Compares the current kernel-bench dump against the previous CI run's
 artifact and fails when any case's throughput regressed by more than
 the allowed fraction. Correctness gates (``eps_ok``) in the *current*
 dump fail hard regardless of the baseline.
 
-Warn-only when the baseline file is missing (first run on a repo whose
+With ``--serve-prev``/``--serve-cur`` it additionally guards the
+``mixed_priority`` scenario of BENCH_serve.json: per model, the
+**interactive** lane's ``wait_p95`` (the serving-latency promise of the
+priority scheduler) must not grow by more than the allowed fraction
+over the baseline, and lane conservation (``served == admitted``) in
+the current dump fails hard regardless of any baseline.
+
+Warn-only when a baseline file is missing (first run on a repo whose
 trajectory is still empty) or a case has no counterpart — CI shared
 runners also make timing noisy, which is why the default threshold is a
-generous 25%.
+generous 25%. A missing *current* serve dump is also warn-only: the
+serve suite legitimately skips when the artifact tree is absent.
 
 Usage:
-    python3 scripts/bench_guard.py PREV.json CUR.json [--max-regression 0.25]
+    python3 scripts/bench_guard.py PREV.json CUR.json \
+        [--serve-prev PREV_SERVE.json --serve-cur CUR_SERVE.json] \
+        [--max-regression 0.25]
 
 Exit codes: 0 ok / baseline missing, 1 regression or correctness gate.
 """
@@ -37,20 +47,94 @@ def load_cases(path):
     return {case_key(c): c for c in dump.get("cases", [])}
 
 
+def serve_lanes(path):
+    """{model: {lane_name: lane_obj}} for every mixed_priority block."""
+    with open(path) as f:
+        dump = json.load(f)
+    out = {}
+    for entry in dump.get("models", []):
+        mp = entry.get("mixed_priority")
+        if mp is None:
+            continue
+        out[entry.get("model", "?")] = {
+            lane.get("lane", "?"): lane for lane in mp.get("lanes", [])
+        }
+    return out
+
+
+def guard_serve(prev_path, cur_path, max_regression):
+    """Failures for the mixed_priority serve scenario (see module doc)."""
+    failures = []
+    if not os.path.exists(cur_path):
+        # the serve suite skips without an artifact tree — not an error
+        print(f"serve guard: current dump {cur_path} missing — skipped")
+        return failures
+    cur = serve_lanes(cur_path)
+    if not cur:
+        print(f"serve guard: {cur_path} has no mixed_priority blocks — skipped")
+        return failures
+
+    # conservation is a correctness gate, baseline or not: every
+    # admitted request must have been served by shutdown
+    for model, lanes in cur.items():
+        for name, lane in lanes.items():
+            if lane.get("served") != lane.get("admitted"):
+                failures.append(
+                    f"{model}/{name}: served {lane.get('served')} != "
+                    f"admitted {lane.get('admitted')} — requests lost")
+
+    if not os.path.exists(prev_path):
+        print(f"serve guard: no baseline at {prev_path} — warn-only first run "
+              f"({len(cur)} model(s) recorded)")
+        return failures
+
+    prev = serve_lanes(prev_path)
+    compared = 0
+    for model, lanes in prev.items():
+        lane = lanes.get("interactive")
+        cur_lane = cur.get(model, {}).get("interactive")
+        if lane is None or cur_lane is None:
+            print(f"warn: no interactive mixed_priority lane to compare for {model}")
+            continue
+        old, new = float(lane.get("wait_p95", 0.0)), float(cur_lane.get("wait_p95", 0.0))
+        compared += 1
+        # latency: higher is worse — guard the relative growth, with a
+        # one-tick absolute dead-band so sub-tick wiggles on a tiny
+        # baseline (0 → 0.5 ticks) can't fail the build
+        growth = (new - old) / max(old, 1.0)
+        regressed = growth > max_regression and (new - old) > 1.0
+        status = "FAIL" if regressed else "ok"
+        print(f"{status:>4} {model} interactive wait_p95: {old:.3g} -> {new:.3g} "
+              f"({growth * 100:+.1f}%)")
+        if regressed:
+            failures.append(
+                f"{model}: interactive wait_p95 regressed {growth * 100:.1f}% "
+                f"(> {max_regression * 100:.0f}% allowed)")
+    print(f"serve guard: {compared} model(s) compared")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("prev", help="baseline BENCH_kernels.json (previous run)")
     ap.add_argument("cur", help="current BENCH_kernels.json")
+    ap.add_argument("--serve-prev", help="baseline BENCH_serve.json (previous run)")
+    ap.add_argument("--serve-cur", help="current BENCH_serve.json")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="allowed fractional drop per guarded metric")
     args = ap.parse_args()
+
+    serve_failures = []
+    if args.serve_cur:
+        serve_failures = guard_serve(args.serve_prev or "", args.serve_cur,
+                                     args.max_regression)
 
     if not os.path.exists(args.cur):
         print(f"bench guard: current dump {args.cur} missing", file=sys.stderr)
         return 1
     cur = load_cases(args.cur)
 
-    failures = []
+    failures = list(serve_failures)
     # correctness gates are not perf numbers: a false fails regardless
     # of any baseline (docs/BENCHMARKS.md §Comparing runs)
     for key, case in cur.items():

@@ -27,13 +27,13 @@ use crate::aimc::drift::DriftModel;
 use crate::aimc::program::NoiseModel;
 use crate::config::{AimcConfig, Meta, ModelConfig};
 use crate::coordinator::{
-    EngineBuilder, Lane, LaneMetrics, LaneParams, MaintenancePolicy, Metrics, Request, Response,
-    Server, ServerConfig,
+    Cluster, EngineBuilder, Executor, Lane, LaneMetrics, LaneParams, MaintenancePolicy, Metrics,
+    Request, Response, Server, ServerConfig, ThreadExecutor,
 };
 use crate::eval::data::{load_rows, load_tasks, Task};
 use crate::eval::Evaluator;
 use crate::moe::placement::{
-    apply_placement, plan_placement, Placement, PlacementOptions, RePlacerOptions,
+    apply_placement, plan_placement, Placement, PlacementOptions, RePlacerOptions, ShardPlan,
 };
 use crate::moe::score::{RouterStats, SelectionMetric};
 use crate::runtime::pool::{default_workers, WorkerPool};
@@ -443,6 +443,9 @@ fn lane_json(l: &LaneMetrics) -> Json {
         ("wait_p99", Json::num(l.wait.quantile(0.99))),
         ("wait_max", Json::num(l.wait.max_ticks() as f64)),
         ("wait_mean", Json::num(l.wait.mean())),
+        ("wait_us_p50", Json::num(l.wait_us.quantile(0.5))),
+        ("wait_us_p95", Json::num(l.wait_us.quantile(0.95))),
+        ("wait_us_p99", Json::num(l.wait_us.quantile(0.99))),
     ])
 }
 
@@ -474,11 +477,14 @@ fn metrics_backends_json(m: &Metrics) -> Json {
 /// throughput, per-wave trajectory, aggregate and per-backend
 /// utilization ([`Metrics::utilization`]), the simulated Appendix-A
 /// clocks, and a byte-identity check between the two response streams.
-/// Two scenario blocks ride along: `drift_soak` (aggressive drift with
-/// the server-owned maintenance cadence) and `mixed_priority` (bursty
-/// interactive over steady bulk through the [`Server`] lanes, with
-/// per-lane p50/p95/p99 wait ticks — the latency trajectory the CI
-/// guard watches). Requires the AOT artifact tree. Schema:
+/// Three scenario blocks ride along: `drift_soak` (aggressive drift
+/// with the server-owned maintenance cadence), `mixed_priority`
+/// (bursty interactive over steady bulk through the [`Server`] lanes,
+/// with per-lane p50/p95/p99 wait ticks — the latency trajectory the
+/// CI guard watches), and `replica_scaling` (the same mixed stream
+/// through an expert-sharded [`Cluster`] of worker-thread replicas at
+/// 1/2/4 replicas, with per-replica utilization and wall-clock
+/// interactive percentiles). Requires the AOT artifact tree. Schema:
 /// `docs/BENCHMARKS.md`.
 pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
     let artifacts = crate::artifacts_dir();
@@ -675,6 +681,111 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         ])
     };
 
+    // --- replica scaling: the same mixed-priority stream through an
+    // expert-sharded cluster of worker-thread replicas at 1/2/4
+    // replicas — wall throughput, per-replica utilization, and the
+    // merged interactive wall-clock (µs) percentiles
+    // (docs/BENCHMARKS.md §Replica scaling) ---
+    let replica_scaling = {
+        let burst = cfg.batch.max(1);
+        let mut scales = Vec::new();
+        for n in [1usize, 2, 4] {
+            let shard = ShardPlan::hashed(&cfg, n);
+            let mut execs: Vec<Box<dyn Executor>> = Vec::with_capacity(n);
+            for r in 0..n {
+                let cfg_r = cfg.clone();
+                let aimc = meta.aimc;
+                let serve_cap = meta.serve_cap;
+                let paths_r = paths.clone();
+                let local = shard.replica_placement(&placement, r);
+                let factory = Box::new(move |rt: &mut Runtime| {
+                    let mut params =
+                        ParamStore::load(&paths_r.manifest(), &paths_r.params_bin())?;
+                    apply_placement(
+                        &cfg_r,
+                        &mut params,
+                        &local,
+                        &NoiseModel::with_scale(1.0),
+                        0,
+                    )?;
+                    EngineBuilder::new()
+                        .model(cfg_r.clone())
+                        .aimc(aimc)
+                        .placement(local)
+                        .serve_cap(serve_cap)
+                        .build(rt, &paths_r, &params)
+                });
+                execs.push(Box::new(ThreadExecutor::new(
+                    format!("replica{r}"),
+                    ServerConfig::new(cfg.batch)
+                        .lane(
+                            Lane::Interactive,
+                            LaneParams {
+                                weight: mp_weights.0,
+                                max_wait_ticks: mp_interactive_wait,
+                                max_queue: cfg.batch * 4,
+                            },
+                        )
+                        .lane(
+                            Lane::Bulk,
+                            LaneParams {
+                                weight: mp_weights.1,
+                                max_wait_ticks: mp_bulk_wait,
+                                max_queue: cfg.batch * 8,
+                            },
+                        ),
+                    factory,
+                )?));
+            }
+            let mut cluster = Cluster::new(execs, shard, cfg.batch.max(1))?;
+            let t0 = Instant::now();
+            for (i, r) in reqs.iter().enumerate() {
+                let lane = if i % (3 * burst) < burst {
+                    Lane::Interactive
+                } else {
+                    Lane::Bulk
+                };
+                cluster.submit(r.clone(), lane)?;
+                cluster.pump()?;
+            }
+            cluster.drain()?;
+            let wall = t0.elapsed().as_secs_f64();
+            let report = cluster.shutdown()?;
+            let cm = &report.metrics;
+            let per_replica: Vec<Json> = report
+                .replicas
+                .iter()
+                .map(|rep| {
+                    Json::obj(vec![
+                        ("name", Json::str(rep.name.clone())),
+                        ("requests", Json::num(rep.metrics.requests as f64)),
+                        ("tokens", Json::num(rep.metrics.tokens as f64)),
+                        ("utilization", Json::num(rep.metrics.utilization())),
+                    ])
+                })
+                .collect();
+            let interactive = &cm.lanes[Lane::Interactive.index()];
+            scales.push(Json::obj(vec![
+                ("replicas", Json::num(n as f64)),
+                ("wall_s", Json::num(wall)),
+                ("tokens_per_s", Json::num(cm.tokens() as f64 / wall.max(1e-12))),
+                ("requests", Json::num(cm.requests as f64)),
+                ("served", Json::num(cm.requests_served() as f64)),
+                ("steals", Json::num(cm.steals as f64)),
+                ("interactive_wait_p50", Json::num(interactive.wait.quantile(0.5))),
+                ("interactive_wait_p95", Json::num(interactive.wait.quantile(0.95))),
+                ("interactive_us_p50", Json::num(interactive.wait_us.quantile(0.5))),
+                ("interactive_us_p95", Json::num(interactive.wait_us.quantile(0.95))),
+                ("interactive_us_p99", Json::num(interactive.wait_us.quantile(0.99))),
+                ("per_replica", Json::Arr(per_replica)),
+            ]));
+        }
+        Json::obj(vec![
+            ("requests", Json::num(n_requests as f64)),
+            ("scales", Json::Arr(scales)),
+        ])
+    };
+
     let identical = seq_r.len() == par_r.len()
         && seq_r
             .iter()
@@ -715,6 +826,7 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         ("drift_clock", Json::num(par_m.drift_clock as f64)),
         ("drift_soak", soak),
         ("mixed_priority", mixed),
+        ("replica_scaling", replica_scaling),
         ("backends", metrics_backends_json(&par_m)),
         ("simulated_tokens_per_s", Json::num(par_m.simulated_tokens_per_s())),
         (

@@ -1,0 +1,543 @@
+//! Replica-sharded concurrent serving: N engine replicas behind one
+//! completion-queue surface.
+//!
+//! The [`Cluster`] scales the single-engine [`Server`](super::Server)
+//! out the way the paper's heterogeneous-placement argument suggests:
+//! each replica owns a *subset* of the analog expert tiles (a
+//! [`ShardPlan`] partition), while digital-placed experts and the
+//! densely-activated shared modules are replicated everywhere — the
+//! noise-sensitive analog capacity is what's scarce, so that is what
+//! gets sharded. Requests route to the replica owning their prompt's
+//! token-hash shard; the bulk lane is staged in per-replica backlogs so
+//! idle replicas can steal work from overloaded ones.
+//!
+//! ```text
+//!   submit(req, lane) ──route: ShardPlan::route(tokens)──┐
+//!                                                        ▼
+//!     interactive ───────────────immediately──────▶ Executor[r]
+//!     bulk ──▶ backlog[r] ──pump: feed while under watermark──▶
+//!                  │
+//!                  └──steal: idle replica takes backlog tail──▶ Executor[j]
+//! ```
+//!
+//! Replicas are [`Executor`]s: [`TickExecutor`] keeps everything on the
+//! caller's thread (deterministic; a single-replica cluster is
+//! byte-identical to a plain `Server`), [`ThreadExecutor`] gives each
+//! replica a dedicated worker thread so replicas serve wall-clock
+//! concurrently. At [`Cluster::shutdown`] every replica's
+//! [`DrainReport`] and engine [`Metrics`] roll up into a
+//! [`ClusterMetrics`]: lane counters and both wait histograms (ticks
+//! and wall-µs) merge across replicas via
+//! [`LaneMetrics::merge`](super::metrics::LaneMetrics::merge), so
+//! cluster-wide p50/p95/p99 come from the same log₂ buckets as the
+//! single-engine view.
+//!
+//! [`TickExecutor`]: super::executor::TickExecutor
+//! [`ThreadExecutor`]: super::executor::ThreadExecutor
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::Request;
+use super::executor::{Executor, ExecutorReport};
+use super::metrics::{LaneMetrics, Metrics};
+use super::server::{Completion, DrainReport, Lane};
+use crate::moe::placement::ShardPlan;
+
+/// Aggregate serving accounting across every replica of a [`Cluster`],
+/// assembled at [`Cluster::shutdown`].
+#[derive(Debug)]
+pub struct ClusterMetrics {
+    /// Replica count the cluster ran with.
+    pub replicas: usize,
+    /// Requests submitted through the cluster (all lanes).
+    pub requests: u64,
+    /// Bulk requests an idle replica stole from another replica's
+    /// backlog.
+    pub steals: u64,
+    /// Per-lane accounting merged across replicas: counter sums plus
+    /// bucket-wise merges of both the tick and wall-µs wait
+    /// histograms, so cluster-wide percentiles read exactly like the
+    /// single-engine ones.
+    pub lanes: Vec<LaneMetrics>,
+    /// Each replica engine's final serving metrics, indexed by replica.
+    pub per_replica: Vec<Metrics>,
+}
+
+impl ClusterMetrics {
+    /// Tokens served across all replicas.
+    pub fn tokens(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.tokens).sum()
+    }
+
+    /// Requests served to completion across all replicas.
+    pub fn requests_served(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.requests).sum()
+    }
+
+    /// Each replica's expert-batch padding utilization — the load
+    /// balance view: a starved replica shows up as low utilization
+    /// next to its siblings.
+    pub fn utilization_per_replica(&self) -> Vec<f64> {
+        self.per_replica.iter().map(Metrics::utilization).collect()
+    }
+}
+
+/// One replica's slice of a [`Cluster::shutdown`]: its name plus the
+/// inner server's drain report and engine metrics.
+#[derive(Debug)]
+pub struct ReplicaReport {
+    /// The replica's display name (e.g. `"replica0"`).
+    pub name: String,
+    /// The replica server's graceful-shutdown report (ticket ids
+    /// already mapped back to cluster-global request ids).
+    pub report: DrainReport,
+    /// The replica engine's final serving metrics.
+    pub metrics: Metrics,
+}
+
+/// What a graceful [`Cluster::shutdown`] observed.
+#[derive(Debug)]
+pub struct ClusterReport {
+    /// Every completion still unconsumed at shutdown, across all
+    /// replicas (earlier [`Cluster::try_recv`] calls may have consumed
+    /// some already).
+    pub completions: Vec<Completion>,
+    /// Per-replica shutdown reports, indexed by replica.
+    pub replicas: Vec<ReplicaReport>,
+    /// The cluster-wide rollup.
+    pub metrics: ClusterMetrics,
+}
+
+/// N engine replicas behind one submit/recv surface.
+///
+/// Requests get cluster-global sequential ids (the id on the submitted
+/// [`Request`] is overwritten; [`Cluster::submit`] returns the assigned
+/// id, and the matching [`Completion`] echoes it on both ticket and
+/// response). Interactive requests forward to the owning replica
+/// immediately — a single-replica cluster therefore drives its replica
+/// exactly like a directly-driven [`Server`](super::Server), which is
+/// what the `cluster_single_replica_matches_server` byte-identity test
+/// pins. Bulk requests stage in per-replica backlogs that
+/// [`Cluster::pump`] feeds out under an inflight watermark, with idle
+/// replicas stealing from the longest backlog's tail.
+pub struct Cluster<'rt> {
+    execs: Vec<Box<dyn Executor + 'rt>>,
+    shard: ShardPlan,
+    backlog: Vec<VecDeque<Request>>,
+    watermark: usize,
+    next_id: u64,
+    requests: u64,
+    steals: u64,
+    rr: usize,
+}
+
+impl<'rt> Cluster<'rt> {
+    /// Assemble a cluster from one executor per shard-plan replica.
+    ///
+    /// `watermark` bounds how many requests [`Cluster::pump`] keeps
+    /// inflight per replica when feeding bulk backlogs — small enough
+    /// that work stays stealable, large enough to keep batches full
+    /// (the replica's max batch size is a good default).
+    pub fn new(
+        execs: Vec<Box<dyn Executor + 'rt>>,
+        shard: ShardPlan,
+        watermark: usize,
+    ) -> Result<Cluster<'rt>> {
+        if execs.is_empty() {
+            return Err(anyhow!("cluster needs at least one executor"));
+        }
+        if execs.len() != shard.n_replicas() {
+            return Err(anyhow!(
+                "shard plan expects {} replicas, got {} executors",
+                shard.n_replicas(),
+                execs.len()
+            ));
+        }
+        let backlog = (0..execs.len()).map(|_| VecDeque::new()).collect();
+        Ok(Cluster {
+            execs,
+            shard,
+            backlog,
+            watermark: watermark.max(1),
+            next_id: 0,
+            requests: 0,
+            steals: 0,
+            rr: 0,
+        })
+    }
+
+    /// Replica count.
+    pub fn replicas(&self) -> usize {
+        self.execs.len()
+    }
+
+    /// The expert partition this cluster routes on.
+    pub fn shard(&self) -> &ShardPlan {
+        &self.shard
+    }
+
+    /// Bulk requests staged but not yet forwarded to a replica.
+    pub fn backlog_depth(&self) -> usize {
+        self.backlog.iter().map(VecDeque::len).sum()
+    }
+
+    /// Requests submitted whose completions have not been made
+    /// visible yet (staged backlogs + every replica's inflight count).
+    pub fn pending(&self) -> usize {
+        self.backlog_depth() + self.execs.iter().map(|e| e.inflight()).sum::<usize>()
+    }
+
+    /// Bulk requests stolen across replicas so far.
+    pub fn steals(&self) -> u64 {
+        self.steals
+    }
+
+    /// Submit one request; returns its cluster-global id (also written
+    /// into the request, echoed by the completion). Interactive
+    /// requests forward to the owning replica immediately; bulk
+    /// requests stage in the owner's backlog until [`Cluster::pump`] /
+    /// [`Cluster::drain`] feed them out (possibly to a stealing
+    /// replica).
+    pub fn submit(&mut self, mut req: Request, lane: Lane) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        req.id = id;
+        self.requests += 1;
+        let owner = self.shard.route(&req.tokens);
+        match lane {
+            Lane::Interactive => self.execs[owner].submit(req, lane)?,
+            Lane::Bulk => self.backlog[owner].push_back(req),
+        }
+        Ok(id)
+    }
+
+    /// Feed staged bulk work to replicas (own backlog first, then work
+    /// stealing) and give inline executors a chance to serve.
+    pub fn pump(&mut self) -> Result<()> {
+        self.feed()?;
+        for e in &mut self.execs {
+            e.pump()?;
+        }
+        Ok(())
+    }
+
+    /// Barrier: forward every staged request, then drain every
+    /// replica. On return, every submit before this call has a
+    /// completion visible to [`Cluster::try_recv`].
+    pub fn drain(&mut self) -> Result<()> {
+        for r in 0..self.execs.len() {
+            while let Some(req) = self.backlog[r].pop_front() {
+                self.execs[r].submit(req, Lane::Bulk)?;
+            }
+        }
+        for e in &mut self.execs {
+            e.drain()?;
+        }
+        Ok(())
+    }
+
+    /// Pop the oldest unconsumed completion from some replica
+    /// (round-robin across replicas, so no replica's queue starves the
+    /// consumer).
+    pub fn try_recv(&mut self) -> Option<Completion> {
+        let n = self.execs.len();
+        for k in 0..n {
+            let r = (self.rr + k) % n;
+            if let Some(c) = self.execs[r].try_recv() {
+                self.rr = (r + 1) % n;
+                return Some(c);
+            }
+        }
+        None
+    }
+
+    /// Drain every currently visible completion, across all replicas.
+    pub fn recv_all(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while let Some(c) = self.try_recv() {
+            out.push(c);
+        }
+        out
+    }
+
+    /// Graceful teardown: flush backlogs, drain and shut down every
+    /// replica, and roll the per-replica reports up into a
+    /// [`ClusterMetrics`].
+    pub fn shutdown(mut self) -> Result<ClusterReport> {
+        self.drain()?;
+        let replicas = self.execs.len();
+        let mut reports: Vec<ReplicaReport> = Vec::with_capacity(replicas);
+        for e in self.execs {
+            let name = e.name().to_string();
+            let ExecutorReport { report, metrics } = e.shutdown()?;
+            reports.push(ReplicaReport { name, report, metrics });
+        }
+        let mut completions = Vec::new();
+        let mut lanes: Vec<LaneMetrics> = Vec::new();
+        for rep in &mut reports {
+            completions.append(&mut rep.report.completions);
+            if lanes.is_empty() {
+                lanes = rep.report.lanes.clone();
+            } else {
+                for (merged, lane) in lanes.iter_mut().zip(&rep.report.lanes) {
+                    merged.merge(lane);
+                }
+            }
+        }
+        let metrics = ClusterMetrics {
+            replicas,
+            requests: self.requests,
+            steals: self.steals,
+            lanes,
+            per_replica: reports.iter().map(|r| r.metrics.clone()).collect(),
+        };
+        Ok(ClusterReport { completions, replicas: reports, metrics })
+    }
+
+    /// Feed bulk backlogs: each replica takes from its own backlog
+    /// while under the inflight watermark; then any idle replica
+    /// (empty backlog, nothing inflight) steals from the tail of the
+    /// longest backlog — the coldest work of the most loaded replica.
+    fn feed(&mut self) -> Result<()> {
+        let n = self.execs.len();
+        for r in 0..n {
+            while self.execs[r].inflight() < self.watermark {
+                match self.backlog[r].pop_front() {
+                    Some(req) => self.execs[r].submit(req, Lane::Bulk)?,
+                    None => break,
+                }
+            }
+        }
+        loop {
+            let thief = (0..n)
+                .find(|&r| self.backlog[r].is_empty() && self.execs[r].inflight() == 0);
+            let Some(thief) = thief else { break };
+            let victim = (0..n)
+                .filter(|&r| !self.backlog[r].is_empty())
+                .max_by_key(|&r| self.backlog[r].len());
+            let Some(victim) = victim else { break };
+            let req = self.backlog[victim].pop_back().expect("victim backlog non-empty");
+            self.steals += 1;
+            self.execs[thief].submit(req, Lane::Bulk)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batcher::Response;
+    use super::super::server::Ticket;
+    use super::*;
+    use crate::config::ModelConfig;
+
+    /// Engine-free replica stub: completions materialize on
+    /// pump/drain, scores echo the request id.
+    struct MockExecutor {
+        name: String,
+        queue: VecDeque<(Request, Lane)>,
+        out: VecDeque<Completion>,
+        served_ids: Vec<u64>,
+        submitted: usize,
+        completed: usize,
+    }
+
+    impl MockExecutor {
+        fn new(name: &str) -> MockExecutor {
+            MockExecutor {
+                name: name.to_string(),
+                queue: VecDeque::new(),
+                out: VecDeque::new(),
+                served_ids: Vec::new(),
+                submitted: 0,
+                completed: 0,
+            }
+        }
+
+        fn serve_all(&mut self) {
+            while let Some((req, lane)) = self.queue.pop_front() {
+                self.served_ids.push(req.id);
+                self.completed += 1;
+                self.out.push_back(Completion {
+                    ticket: Ticket { id: req.id, lane, client: 0 },
+                    response: Response { id: req.id, score: req.id as f64 },
+                    wait_ticks: 0,
+                    wait_us: 0,
+                });
+            }
+        }
+    }
+
+    impl Executor for MockExecutor {
+        fn name(&self) -> &str {
+            &self.name
+        }
+
+        fn submit(&mut self, req: Request, lane: Lane) -> Result<()> {
+            self.submitted += 1;
+            self.queue.push_back((req, lane));
+            Ok(())
+        }
+
+        fn pump(&mut self) -> Result<()> {
+            self.serve_all();
+            Ok(())
+        }
+
+        fn drain(&mut self) -> Result<()> {
+            self.serve_all();
+            Ok(())
+        }
+
+        fn try_recv(&mut self) -> Option<Completion> {
+            self.out.pop_front()
+        }
+
+        fn inflight(&self) -> usize {
+            self.submitted - self.completed
+        }
+
+        fn shutdown(mut self: Box<Self>) -> Result<ExecutorReport> {
+            self.serve_all();
+            let report = DrainReport {
+                drained: 0,
+                completions: self.out.into_iter().collect(),
+                lanes: vec![
+                    LaneMetrics {
+                        name: "interactive".into(),
+                        served: self.served_ids.len() as u64,
+                        ..LaneMetrics::default()
+                    },
+                    LaneMetrics { name: "bulk".into(), ..LaneMetrics::default() },
+                ],
+                occupancy: 1.0,
+                maintenance: Default::default(),
+                maintenance_log: Vec::new(),
+            };
+            Ok(ExecutorReport { report, metrics: Metrics::default() })
+        }
+    }
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 32,
+            seq_len: 8,
+            d_model: 4,
+            n_heads: 2,
+            n_layers: 2,
+            n_experts: 4,
+            top_k: 2,
+            d_expert: 3,
+            d_shared: 0,
+            dense_first_layer: false,
+            d_dense_ffn: 8,
+            batch: 2,
+            train_steps: 1,
+            flags_len: 2 * 4 + 2 * 2 + 1,
+            n_params: 0,
+        }
+    }
+
+    fn req(id: u64, tokens: Vec<i32>) -> Request {
+        let n = tokens.len();
+        Request { id, tokens, targets: vec![0; n], mask: vec![1.0; n], arrived: 0 }
+    }
+
+    /// Token vector that [`ShardPlan::route`]s to `want`.
+    fn tokens_for(plan: &ShardPlan, want: usize) -> Vec<i32> {
+        for seed in 0..1000i32 {
+            let t = vec![seed, seed + 1, seed + 2];
+            if plan.route(&t) == want {
+                return t;
+            }
+        }
+        panic!("no token vector routes to replica {want}");
+    }
+
+    #[test]
+    fn cluster_rejects_replica_mismatch() {
+        let plan = ShardPlan::hashed(&cfg(), 2);
+        let execs: Vec<Box<dyn Executor>> = vec![Box::new(MockExecutor::new("r0"))];
+        assert!(Cluster::new(execs, plan, 4).is_err());
+    }
+
+    #[test]
+    fn interactive_requests_route_to_the_owning_replica() {
+        let plan = ShardPlan::hashed(&cfg(), 3);
+        let execs: Vec<Box<dyn Executor>> = (0..3)
+            .map(|i| Box::new(MockExecutor::new(&format!("r{i}"))) as Box<dyn Executor>)
+            .collect();
+        let mut cluster = Cluster::new(execs, plan, 4).unwrap();
+        let want = 1;
+        let tokens = tokens_for(cluster.shard(), want);
+        let id = cluster.submit(req(999, tokens), Lane::Interactive).unwrap();
+        assert_eq!(id, 0, "cluster assigns its own sequential ids");
+        cluster.pump().unwrap();
+        let c = cluster.try_recv().expect("completion visible after pump");
+        assert_eq!(c.ticket.id, id);
+        assert_eq!(c.response.id, id);
+        let report = cluster.shutdown().unwrap();
+        // only the owning replica served anything
+        assert_eq!(report.metrics.requests, 1);
+        assert_eq!(report.metrics.lanes[0].served, 1);
+    }
+
+    #[test]
+    fn bulk_backlog_is_stolen_by_idle_replicas() {
+        let plan = ShardPlan::hashed(&cfg(), 2);
+        let execs: Vec<Box<dyn Executor>> = (0..2)
+            .map(|i| Box::new(MockExecutor::new(&format!("r{i}"))) as Box<dyn Executor>)
+            .collect();
+        let mut cluster = Cluster::new(execs, plan, 1).unwrap();
+        // pile every bulk request onto replica 0's shard
+        let tokens = tokens_for(cluster.shard(), 0);
+        let mut ids = Vec::new();
+        for i in 0..8 {
+            ids.push(cluster.submit(req(i, tokens.clone()), Lane::Bulk).unwrap());
+        }
+        assert_eq!(cluster.backlog_depth(), 8);
+        cluster.pump().unwrap();
+        assert!(cluster.steals() > 0, "idle replica must steal from the hot backlog");
+        cluster.drain().unwrap();
+        let got: Vec<u64> = {
+            let mut v: Vec<u64> =
+                cluster.recv_all().into_iter().map(|c| c.ticket.id).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(got, ids, "every bulk request completes exactly once");
+        assert_eq!(cluster.pending(), 0);
+        let steals = cluster.steals();
+        let report = cluster.shutdown().unwrap();
+        assert_eq!(report.metrics.steals, steals);
+        assert_eq!(report.metrics.requests, 8);
+    }
+
+    #[test]
+    fn shutdown_merges_lane_metrics_across_replicas() {
+        let plan = ShardPlan::hashed(&cfg(), 2);
+        let execs: Vec<Box<dyn Executor>> = (0..2)
+            .map(|i| Box::new(MockExecutor::new(&format!("r{i}"))) as Box<dyn Executor>)
+            .collect();
+        let mut cluster = Cluster::new(execs, plan, 2).unwrap();
+        for r in 0..2 {
+            let tokens = tokens_for(cluster.shard(), r);
+            for i in 0..3 {
+                cluster.submit(req(i, tokens.clone()), Lane::Interactive).unwrap();
+            }
+        }
+        cluster.drain().unwrap();
+        let report = cluster.shutdown().unwrap();
+        assert_eq!(report.metrics.replicas, 2);
+        assert_eq!(report.metrics.requests, 6);
+        // the mock reports everything on the interactive lane
+        assert_eq!(report.metrics.lanes[0].served, 6);
+        assert_eq!(report.replicas.len(), 2);
+        assert_eq!(report.metrics.per_replica.len(), 2);
+        // unconsumed completions surface in the cluster report
+        assert_eq!(report.completions.len(), 6);
+    }
+}

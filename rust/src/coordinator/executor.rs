@@ -1,0 +1,509 @@
+//! Replica executors: the seam between the tick-driven [`Server`] and
+//! the multi-replica [`Cluster`](super::cluster::Cluster).
+//!
+//! The [`Executor`] trait re-frames one engine replica as a passive
+//! request sink + completion source, with two implementations:
+//!
+//! - [`TickExecutor`] — the current inline behavior: every call runs on
+//!   the caller's thread against a borrowed [`Runtime`], so tests stay
+//!   deterministic and single-replica clusters remain byte-identical to
+//!   a plain [`Server`] (`cluster_single_replica_matches_server`).
+//! - [`ThreadExecutor`] — one dedicated worker thread per replica, fed
+//!   through a real [`std::sync::mpsc`] request channel, completions
+//!   surfaced through a `Mutex`-guarded queue (std-only; no crossbeam).
+//!   PJRT handles are raw pointers (`Runtime` is not `Send`), so the
+//!   worker builds its *own* runtime and engine in-thread from a
+//!   `Send` [`EngineFactory`] closure and drops them there too.
+//!
+//! Both executors preserve the caller's request ids: the inner
+//! [`Server`] stamps its own sequential ticket ids, and the executor
+//! maps them back, so a cluster can hand out globally unique ids across
+//! replicas while each replica keeps its private ticket space.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::Request;
+use super::metrics::Metrics;
+use super::server::{ClientHandle, Completion, DrainReport, Lane, Server, ServerConfig};
+use super::Engine;
+use crate::runtime::Runtime;
+
+/// A `Send` recipe for building one replica's engine against a runtime
+/// the replica owns. [`ThreadExecutor`] invokes it once, inside the
+/// worker thread, against a thread-local [`Runtime`] — the only way to
+/// move an engine's construction across threads, because the engine
+/// itself (PJRT buffers, `Rc` executables) is not `Send`. The closure
+/// should capture only plain data (config, paths, a placement) and load
+/// parameters itself.
+pub type EngineFactory = Box<dyn FnOnce(&mut Runtime) -> Result<Engine> + Send + 'static>;
+
+/// What one replica hands back at [`Executor::shutdown`]: the inner
+/// server's drain report (ids already mapped back to the caller's
+/// request ids) plus a clone of the replica engine's serving metrics.
+#[derive(Debug)]
+pub struct ExecutorReport {
+    /// The replica server's graceful-shutdown report.
+    pub report: DrainReport,
+    /// The replica engine's final serving metrics.
+    pub metrics: Metrics,
+}
+
+/// One engine replica behind a submit/recv surface.
+///
+/// Contract shared by both implementations:
+/// - [`Executor::submit`] admits a request on a lane, retrying
+///   non-destructive backpressure internally (a poll always frees
+///   space), and preserves `req.id` end to end — the matching
+///   [`Completion`] carries the submitted id on both ticket and
+///   response.
+/// - [`Executor::drain`] is a barrier: when it returns, every request
+///   submitted before it has a completion visible to
+///   [`Executor::try_recv`].
+/// - [`Executor::shutdown`] flushes everything and returns the final
+///   [`ExecutorReport`]; unconsumed completions appear in
+///   `report.completions`.
+pub trait Executor {
+    /// The replica's display name (e.g. `"replica0"`).
+    fn name(&self) -> &str;
+
+    /// Admit one request on `lane`. The completion will echo `req.id`.
+    fn submit(&mut self, req: Request, lane: Lane) -> Result<()>;
+
+    /// Give the replica a chance to serve released batches. Inline
+    /// executors serve here on the caller's thread; threaded executors
+    /// serve autonomously and treat this as a no-op.
+    fn pump(&mut self) -> Result<()>;
+
+    /// Flush partial batch tails. On return every prior submit has a
+    /// visible completion.
+    fn drain(&mut self) -> Result<()>;
+
+    /// Pop the oldest unconsumed completion, if any.
+    fn try_recv(&mut self) -> Option<Completion>;
+
+    /// Requests submitted but whose completions have not yet been made
+    /// visible — the load signal the cluster's work stealing reads.
+    fn inflight(&self) -> usize;
+
+    /// Graceful teardown: drain, run the final maintenance tick, and
+    /// report. The replica's engine is dropped on its owning thread.
+    fn shutdown(self: Box<Self>) -> Result<ExecutorReport>;
+}
+
+/// Remap one completion's inner ticket id back to the submitted
+/// request id recorded in `ids`.
+fn remap(c: &mut Completion, ids: &mut HashMap<u64, u64>) {
+    if let Some(orig) = ids.remove(&c.ticket.id) {
+        c.ticket.id = orig;
+        c.response.id = orig;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TickExecutor: inline, deterministic
+// ---------------------------------------------------------------------------
+
+/// Inline executor: wraps a [`Server`] on the caller's thread. Serving
+/// happens inside [`Executor::submit`] / [`Executor::pump`] /
+/// [`Executor::drain`], exactly like driving the server directly, so a
+/// single-replica cluster built on this stays byte-identical to the
+/// tick-driven reference.
+pub struct TickExecutor<'rt> {
+    name: String,
+    server: Server<'rt>,
+    client: ClientHandle,
+    ids: HashMap<u64, u64>,
+    out: VecDeque<Completion>,
+    submitted: usize,
+    completed: usize,
+}
+
+impl<'rt> TickExecutor<'rt> {
+    /// Wrap `engine` into an inline executor against the caller's
+    /// runtime.
+    pub fn new(
+        name: impl Into<String>,
+        rt: &'rt Runtime,
+        engine: Engine,
+        cfg: ServerConfig,
+    ) -> TickExecutor<'rt> {
+        let mut server = Server::new(rt, engine, cfg);
+        let client = server.client();
+        TickExecutor {
+            name: name.into(),
+            server,
+            client,
+            ids: HashMap::new(),
+            out: VecDeque::new(),
+            submitted: 0,
+            completed: 0,
+        }
+    }
+
+    fn harvest(&mut self) {
+        for mut c in self.server.recv_all() {
+            remap(&mut c, &mut self.ids);
+            self.completed += 1;
+            self.out.push_back(c);
+        }
+    }
+}
+
+impl Executor for TickExecutor<'_> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&mut self, mut req: Request, lane: Lane) -> Result<()> {
+        let orig = req.id;
+        loop {
+            match self.server.enqueue(&self.client, req, lane) {
+                Ok(t) => {
+                    self.ids.insert(t.id, orig);
+                    self.submitted += 1;
+                    break;
+                }
+                Err(back) => {
+                    // non-destructive rejection: a poll releases full
+                    // batches; a drain flushes partial tails, so a
+                    // non-empty queue always makes progress
+                    req = back;
+                    if self.server.poll()? == 0 {
+                        self.server.drain()?;
+                    }
+                    self.harvest();
+                }
+            }
+        }
+        self.server.poll()?;
+        self.harvest();
+        Ok(())
+    }
+
+    fn pump(&mut self) -> Result<()> {
+        self.server.poll()?;
+        self.harvest();
+        Ok(())
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        self.server.drain()?;
+        self.harvest();
+        Ok(())
+    }
+
+    fn try_recv(&mut self) -> Option<Completion> {
+        self.out.pop_front()
+    }
+
+    fn inflight(&self) -> usize {
+        self.submitted - self.completed
+    }
+
+    fn shutdown(mut self: Box<Self>) -> Result<ExecutorReport> {
+        let (mut report, engine) = self.server.shutdown()?;
+        let metrics = engine.metrics.clone();
+        for c in &mut report.completions {
+            remap(c, &mut self.ids);
+        }
+        // completions harvested but never consumed come first: they
+        // were served earlier than anything still in the server queue
+        let mut completions: Vec<Completion> = self.out.into_iter().collect();
+        completions.extend(report.completions);
+        report.completions = completions;
+        Ok(ExecutorReport { report, metrics })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThreadExecutor: one worker thread per replica
+// ---------------------------------------------------------------------------
+
+enum Command {
+    Submit(Request, Lane),
+    Drain(Sender<Result<()>>),
+    Shutdown(Sender<Result<ExecutorReport>>),
+}
+
+/// State shared between the front handle and the worker thread.
+struct Shared {
+    /// Completions the worker has served, ids already remapped.
+    done: Mutex<VecDeque<Completion>>,
+    /// Submitted minus completed — the stealing load signal.
+    inflight: AtomicUsize,
+    /// First worker-side error; the worker parks after setting it.
+    error: Mutex<Option<String>>,
+}
+
+/// Threaded executor: a dedicated worker thread owns this replica's
+/// [`Runtime`] + [`Engine`] + [`Server`] (none of which are `Send`) and
+/// drains a std [`mpsc`] command channel; completions cross back
+/// through a `Mutex`-guarded queue. [`Executor::submit`] never blocks
+/// on serving — backpressure is absorbed by the worker's own
+/// poll-and-retry loop — and [`Executor::drain`] round-trips a reply
+/// channel, making it a true barrier.
+pub struct ThreadExecutor {
+    name: String,
+    tx: Option<Sender<Command>>,
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ThreadExecutor {
+    /// Spawn the worker thread, build the replica's runtime + engine
+    /// in-thread via `factory`, and wait for the build to finish so
+    /// construction errors surface here rather than on first submit.
+    pub fn new(
+        name: impl Into<String>,
+        cfg: ServerConfig,
+        factory: EngineFactory,
+    ) -> Result<ThreadExecutor> {
+        let name = name.into();
+        let shared = Arc::new(Shared {
+            done: Mutex::new(VecDeque::new()),
+            inflight: AtomicUsize::new(0),
+            error: Mutex::new(None),
+        });
+        let (tx, rx) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let worker_shared = shared.clone();
+        let thread_name = name.clone();
+        let handle = std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || worker(rx, worker_shared, cfg, factory, ready_tx))
+            .map_err(|e| anyhow!("spawning replica worker: {e}"))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                return Err(e.context("building replica engine in worker thread"));
+            }
+            Err(_) => {
+                let _ = handle.join();
+                return Err(anyhow!("replica worker died before reporting readiness"));
+            }
+        }
+        Ok(ThreadExecutor { name, tx: Some(tx), shared, handle: Some(handle) })
+    }
+
+    /// The worker's recorded error, if it failed.
+    fn error(&self) -> anyhow::Error {
+        match self.shared.error.lock().unwrap().clone() {
+            Some(msg) => anyhow!("replica '{}' worker failed: {msg}", self.name),
+            None => anyhow!("replica '{}' worker exited unexpectedly", self.name),
+        }
+    }
+}
+
+impl Executor for ThreadExecutor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&mut self, req: Request, lane: Lane) -> Result<()> {
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("executor already shut down"))?;
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        tx.send(Command::Submit(req, lane)).map_err(|_| self.error())
+    }
+
+    fn pump(&mut self) -> Result<()> {
+        // the worker serves autonomously; surface its error if it died
+        if self.shared.error.lock().unwrap().is_some() {
+            return Err(self.error());
+        }
+        Ok(())
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("executor already shut down"))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Command::Drain(reply_tx)).map_err(|_| self.error())?;
+        match reply_rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(self.error()),
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<Completion> {
+        self.shared.done.lock().unwrap().pop_front()
+    }
+
+    fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    fn shutdown(mut self: Box<Self>) -> Result<ExecutorReport> {
+        let tx = self.tx.take().ok_or_else(|| anyhow!("executor already shut down"))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Command::Shutdown(reply_tx)).map_err(|_| self.error())?;
+        let out = match reply_rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(self.error()),
+        };
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let mut out = out?;
+        // completions served but never consumed through try_recv come
+        // first — they predate anything still in the server queue
+        let mut completions: Vec<Completion> =
+            self.shared.done.lock().unwrap().drain(..).collect();
+        completions.extend(out.report.completions);
+        out.report.completions = completions;
+        Ok(out)
+    }
+}
+
+impl Drop for ThreadExecutor {
+    fn drop(&mut self) {
+        // closing the channel ends the worker loop; join so the
+        // replica's engine is torn down before the handle goes away
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Move every served completion into the shared queue, remapping inner
+/// ticket ids back to the submitted request ids.
+fn harvest(server: &mut Server<'_>, ids: &mut HashMap<u64, u64>, shared: &Shared) {
+    let served = server.recv_all();
+    if served.is_empty() {
+        return;
+    }
+    let mut done = shared.done.lock().unwrap();
+    for mut c in served {
+        remap(&mut c, ids);
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        done.push_back(c);
+    }
+}
+
+fn set_error(shared: &Shared, e: &anyhow::Error) {
+    let mut slot = shared.error.lock().unwrap();
+    if slot.is_none() {
+        *slot = Some(format!("{e:#}"));
+    }
+}
+
+/// The replica worker loop. Owns runtime, engine, and server for the
+/// replica's whole life; everything is dropped here when the loop ends
+/// (none of it is `Send`).
+fn worker(
+    rx: Receiver<Command>,
+    shared: Arc<Shared>,
+    cfg: ServerConfig,
+    factory: EngineFactory,
+    ready: Sender<Result<()>>,
+) {
+    let mut rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let engine = match factory(&mut rt) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let rt = rt; // frozen: the server borrows it for its whole life
+    let mut server = Server::new(&rt, engine, cfg);
+    let client = server.client();
+    let mut ids: HashMap<u64, u64> = HashMap::new();
+    let _ = ready.send(Ok(()));
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Submit(mut req, lane) => {
+                let orig = req.id;
+                let res = loop {
+                    match server.enqueue(&client, req, lane) {
+                        Ok(t) => {
+                            ids.insert(t.id, orig);
+                            break server.poll().map(|_| ());
+                        }
+                        Err(back) => {
+                            req = back;
+                            match server.poll() {
+                                Ok(0) => {
+                                    if let Err(e) = server.drain() {
+                                        break Err(e);
+                                    }
+                                }
+                                Ok(_) => {}
+                                Err(e) => break Err(e),
+                            }
+                            harvest(&mut server, &mut ids, &shared);
+                        }
+                    }
+                };
+                harvest(&mut server, &mut ids, &shared);
+                if let Err(e) = res {
+                    set_error(&shared, &e);
+                    return;
+                }
+            }
+            Command::Drain(reply) => {
+                let res = server.drain().map(|_| ());
+                harvest(&mut server, &mut ids, &shared);
+                if let Err(e) = &res {
+                    set_error(&shared, e);
+                }
+                let failed = res.is_err();
+                let _ = reply.send(res);
+                if failed {
+                    return;
+                }
+            }
+            Command::Shutdown(reply) => {
+                let out = server.shutdown().map(|(mut report, engine)| {
+                    let metrics = engine.metrics.clone();
+                    for c in &mut report.completions {
+                        remap(&mut *c, &mut ids);
+                    }
+                    ExecutorReport { report, metrics }
+                });
+                if let Err(e) = &out {
+                    set_error(&shared, e);
+                }
+                let _ = reply.send(out);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_executor_surfaces_factory_errors_at_construction() {
+        let cfg = ServerConfig::new(4);
+        let err = ThreadExecutor::new(
+            "replica0",
+            cfg,
+            Box::new(|_rt| Err(anyhow!("no artifacts on this box"))),
+        )
+        .expect_err("factory failure must fail construction");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no artifacts"), "unhelpful error: {msg}");
+    }
+
+    // End-to-end Executor behavior (byte identity of a single-replica
+    // ThreadExecutor vs the tick-driven Server, request conservation
+    // across replicas) needs a live engine + artifacts and lives in
+    // rust/tests/integration.rs.
+}

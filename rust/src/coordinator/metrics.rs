@@ -63,6 +63,22 @@ impl WaitHistogram {
         self.sum as f64 / self.total as f64
     }
 
+    /// Fold another histogram into this one: bucket-wise count sums,
+    /// summed totals, max of maxes. The cluster rollup merges every
+    /// replica's per-lane histograms through this; the quantile
+    /// estimates of the merged histogram are exactly what a single
+    /// histogram fed the union of both wait streams would report
+    /// (buckets are position-aligned, so the merge loses nothing the
+    /// bucketing had not already lost).
+    pub fn merge(&mut self, other: &WaitHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
     /// q-quantile estimate (`0 ≤ q ≤ 1`) of the recorded waits, in
     /// ticks: locate the bucket holding rank `q·(count−1)` and
     /// interpolate linearly across the bucket's tick range (clamped to
@@ -118,6 +134,27 @@ pub struct LaneMetrics {
     pub served: u64,
     /// Queueing-wait histogram (ticks between admission and release).
     pub wait: WaitHistogram,
+    /// Wall-clock latency histogram in **microseconds** between
+    /// admission and completion — the SLO view next to the
+    /// load-relative tick view ([`LaneMetrics::wait`]). Same log₂
+    /// buckets, so sub-millisecond latencies keep near-exact
+    /// resolution while multi-second tails stay O(1) memory.
+    pub wait_us: WaitHistogram,
+}
+
+impl LaneMetrics {
+    /// Fold another replica's accounting for the *same* lane into this
+    /// one (counter sums + histogram merges) — the primitive behind the
+    /// cluster-wide rollup. Name and weight are taken from `self`;
+    /// merging metrics of different lanes is a caller bug.
+    pub fn merge(&mut self, other: &LaneMetrics) {
+        debug_assert_eq!(self.name, other.name, "merging different lanes");
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.served += other.served;
+        self.wait.merge(&other.wait);
+        self.wait_us.merge(&other.wait_us);
+    }
 }
 
 /// Per-backend accounting: real dispatch wall time plus the simulated
@@ -511,6 +548,76 @@ mod tests {
         assert_eq!(lm.rejected, 0);
         assert_eq!(lm.served, 0);
         assert_eq!(lm.wait.count(), 0);
+        assert_eq!(lm.wait_us.count(), 0);
+    }
+
+    #[test]
+    fn wait_histogram_merge_matches_single_stream() {
+        // merging two histograms must agree exactly with one histogram
+        // fed the union of both wait streams, across every statistic
+        let (a_waits, b_waits): (Vec<u64>, Vec<u64>) =
+            ((0..50u64).collect(), (25..120u64).step_by(3).collect());
+        let mut a = WaitHistogram::default();
+        let mut b = WaitHistogram::default();
+        let mut union = WaitHistogram::default();
+        for &w in &a_waits {
+            a.record(w);
+            union.record(w);
+        }
+        for &w in &b_waits {
+            b.record(w);
+            union.record(w);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), union.count());
+        assert_eq!(a.max_ticks(), union.max_ticks());
+        assert!((a.mean() - union.mean()).abs() < 1e-12);
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), union.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn wait_histogram_merge_with_empty_is_identity() {
+        let mut h = WaitHistogram::default();
+        for w in [1u64, 4, 9] {
+            h.record(w);
+        }
+        let before = (h.count(), h.max_ticks(), h.mean(), h.quantile(0.5));
+        h.merge(&WaitHistogram::default());
+        assert_eq!(before, (h.count(), h.max_ticks(), h.mean(), h.quantile(0.5)));
+        // empty.merge(h) adopts h wholesale
+        let mut empty = WaitHistogram::default();
+        empty.merge(&h);
+        assert_eq!(empty.count(), h.count());
+        assert_eq!(empty.quantile(1.0), h.quantile(1.0));
+    }
+
+    #[test]
+    fn lane_metrics_merge_rolls_up_counters_and_histograms() {
+        let mut a = LaneMetrics {
+            name: "interactive".into(),
+            weight: 3,
+            admitted: 10,
+            rejected: 1,
+            served: 9,
+            ..LaneMetrics::default()
+        };
+        a.wait.record(2);
+        a.wait_us.record(150);
+        let mut b = LaneMetrics { name: "interactive".into(), weight: 3, ..LaneMetrics::default() };
+        b.admitted = 5;
+        b.served = 5;
+        b.wait.record(7);
+        b.wait_us.record(900);
+        a.merge(&b);
+        assert_eq!(a.admitted, 15);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.served, 14);
+        assert_eq!(a.wait.count(), 2);
+        assert_eq!(a.wait.max_ticks(), 7);
+        assert_eq!(a.wait_us.count(), 2);
+        assert_eq!(a.wait_us.max_ticks(), 900);
     }
 
     #[test]

@@ -59,6 +59,17 @@
 //! [`Session`] (`submit` → `drain`) survives as a thin single-lane
 //! adapter over `Server`.
 //!
+//! Scaling out, [`cluster::Cluster`] runs N engine replicas behind the
+//! same completion-queue surface: a
+//! [`ShardPlan`](crate::moe::placement::ShardPlan) partitions the
+//! analog expert tiles across replicas (digital experts and shared
+//! modules are replicated), requests route by prompt token hash, and
+//! bulk work is stealable across replicas. Replicas sit behind the
+//! [`executor::Executor`] seam — [`TickExecutor`] inline and
+//! deterministic, [`ThreadExecutor`] one worker thread per replica —
+//! and per-replica metrics roll up into a [`ClusterMetrics`] with
+//! wall-clock (µs) wait percentiles next to the tick-relative ones.
+//!
 //! Long-lived deployments add one more loop: AIMC conductances drift
 //! after programming (power-law decay on a token-count clock — see
 //! [`crate::aimc::drift`]), so the placement that was safe at
@@ -78,6 +89,8 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod cluster;
+pub mod executor;
 pub mod metrics;
 pub mod server;
 pub mod session;
@@ -89,6 +102,8 @@ pub use backend::{
 pub use batcher::{
     Batcher, LaneParams, LaneScheduler, Released, ReleaseReason, Request, RequestId, Response,
 };
+pub use cluster::{Cluster, ClusterMetrics, ClusterReport, ReplicaReport};
+pub use executor::{EngineFactory, Executor, ExecutorReport, ThreadExecutor, TickExecutor};
 pub use metrics::{BackendMetrics, LaneMetrics, Metrics, WaitHistogram};
 pub use server::{
     ClientHandle, ClientId, Completion, DrainReport, Lane, MaintenancePolicy, Server,

@@ -50,6 +50,7 @@
 //! integration test.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -142,6 +143,10 @@ pub struct Completion {
     /// Arrival ticks the request spent queued before its batch
     /// released.
     pub wait_ticks: u64,
+    /// Wall-clock latency in microseconds from admission to
+    /// completion — the SLO clock next to the load-relative
+    /// [`Completion::wait_ticks`].
+    pub wait_us: u64,
 }
 
 impl Completion {
@@ -250,7 +255,7 @@ pub struct DrainReport {
 pub struct Server<'rt> {
     rt: &'rt Runtime,
     engine: Engine,
-    sched: LaneScheduler<(Ticket, Request)>,
+    sched: LaneScheduler<(Ticket, Request, Instant)>,
     lanes: Vec<LaneMetrics>,
     done: VecDeque<Completion>,
     policy: MaintenancePolicy,
@@ -259,11 +264,12 @@ pub struct Server<'rt> {
     next_ticket: u64,
     next_client: ClientId,
     /// released-batch scratch, reused across every pump tick
-    batch: Vec<Released<(Ticket, Request)>>,
+    batch: Vec<Released<(Ticket, Request, Instant)>>,
     /// request staging for `Engine::serve_batch`, reused per batch
     reqs: Vec<Request>,
-    /// (ticket, wait) staging parallel to `reqs`, reused per batch
-    meta: Vec<(Ticket, u64)>,
+    /// (ticket, wait, admitted-at) staging parallel to `reqs`, reused
+    /// per batch
+    meta: Vec<(Ticket, u64, Instant)>,
 }
 
 impl<'rt> Server<'rt> {
@@ -318,14 +324,14 @@ impl<'rt> Server<'rt> {
         let ticket = Ticket { id: self.next_ticket, lane, client: client.id };
         let caller_id = req.id;
         req.id = ticket.id;
-        match self.sched.submit(lane.index(), (ticket, req)) {
+        match self.sched.submit(lane.index(), (ticket, req, Instant::now())) {
             Ok(()) => {
                 self.next_ticket += 1;
                 self.lanes[lane.index()].admitted += 1;
                 self.sched.tick(1);
                 Ok(ticket)
             }
-            Err((_, mut req)) => {
+            Err((_, mut req, _)) => {
                 // the ticket was never issued — hand the request back
                 // exactly as the caller submitted it
                 req.id = caller_id;
@@ -362,8 +368,8 @@ impl<'rt> Server<'rt> {
             self.reqs.clear();
             self.meta.clear();
             for r in batch.drain(..) {
-                let (ticket, req) = r.item;
-                self.meta.push((ticket, r.wait_ticks));
+                let (ticket, req, admitted) = r.item;
+                self.meta.push((ticket, r.wait_ticks, admitted));
                 self.reqs.push(req);
             }
             let responses = match self.engine.serve_batch(self.rt, &self.reqs) {
@@ -373,12 +379,19 @@ impl<'rt> Server<'rt> {
                     return Err(e);
                 }
             };
-            for (resp, &(ticket, wait)) in responses.iter().zip(&self.meta) {
+            for (resp, &(ticket, wait, admitted)) in responses.iter().zip(&self.meta) {
                 debug_assert_eq!(resp.id, ticket.id, "engine must echo the ticket id");
+                let wait_us = admitted.elapsed().as_micros().min(u64::MAX as u128) as u64;
                 let lm = &mut self.lanes[ticket.lane.index()];
                 lm.served += 1;
                 lm.wait.record(wait);
-                self.done.push_back(Completion { ticket, response: *resp, wait_ticks: wait });
+                lm.wait_us.record(wait_us);
+                self.done.push_back(Completion {
+                    ticket,
+                    response: *resp,
+                    wait_ticks: wait,
+                    wait_us,
+                });
             }
             served += self.meta.len();
             self.served_since_maintenance += self.meta.len() as u64;
@@ -471,12 +484,18 @@ impl<'rt> Server<'rt> {
     }
 
     /// Graceful shutdown: flush every lane through the engine, run one
-    /// final maintenance tick, and hand back the [`DrainReport`]
-    /// (remaining completions + final per-lane accounting) together
-    /// with the engine.
+    /// final maintenance tick, flush again so completions enqueued by
+    /// that tick are drained into the report rather than silently
+    /// dropped, and hand back the [`DrainReport`] (remaining
+    /// completions + final per-lane accounting) together with the
+    /// engine.
     pub fn shutdown(mut self) -> Result<(DrainReport, Engine)> {
-        let drained = self.pump(true)?;
+        let mut drained = self.pump(true)?;
         let maintenance = self.engine.maintenance(self.rt)?;
+        // flush once more AFTER the final tick, then collect the
+        // completion queue: anything a maintenance hook released late is
+        // counted in the report instead of dropped with the scheduler
+        drained += self.pump(true)?;
         let occupancy = self.sched.occupancy();
         let report = DrainReport {
             drained,
@@ -539,6 +558,7 @@ mod tests {
             ticket: Ticket { id: 42, lane: Lane::Bulk, client: 1 },
             response: Response { id: 42, score: -1.25 },
             wait_ticks: 3,
+            wait_us: 1500,
         };
         assert!(c.belongs_to(&alice));
         assert!(!c.belongs_to(&bob));

@@ -21,12 +21,14 @@ use hetmoe::aimc::drift::DriftModel;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{
-    EngineBuilder, Lane, LaneParams, MaintenancePolicy, Request, Server, ServerConfig,
+    Cluster, EngineBuilder, Executor, Lane, LaneParams, MaintenancePolicy, Request, Server,
+    ServerConfig, ThreadExecutor,
 };
-use hetmoe::moe::placement::RePlacerOptions;
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
-use hetmoe::moe::placement::{apply_placement, plan_placement, Placement, PlacementOptions};
+use hetmoe::moe::placement::{
+    apply_placement, plan_placement, Placement, PlacementOptions, RePlacerOptions, ShardPlan,
+};
 use hetmoe::moe::score::SelectionMetric;
 use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
 use hetmoe::theory::{lemma41_experiment, theorem42_experiment, TheoryConfig};
@@ -57,6 +59,7 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     ("drift-nu", "0.0", "conductance-drift exponent ν (0 = no drift)"),
     ("replace-every", "0", "server maintenance tick every N served requests (0 = shutdown only)"),
     ("migration-budget", "2", "max live migrations per maintenance tick"),
+    ("replicas", "1", "engine replicas (1 = tick-driven server; >1 = expert-sharded worker threads)"),
 ];
 const BENCH_FLAGS: &[FlagSpec] = &[
     ("suite", "all", "which benches to run: kernels|serve|all"),
@@ -310,6 +313,10 @@ fn print_migrations(label: &str, rep: &hetmoe::coordinator::MaintenanceReport) {
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
+    let replicas = cli.get_usize("replicas").max(1);
+    if replicas > 1 {
+        return cmd_serve_cluster(cli, replicas);
+    }
     let artifacts = hetmoe::artifacts_dir();
     let meta = Meta::load(&artifacts)?;
     let model = cli.get("model");
@@ -421,7 +428,10 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
 
     let mut lt = Table::new(
         "per-lane traffic",
-        &["lane", "weight", "admitted", "rejected", "served", "wait p50", "p95", "p99", "max"],
+        &[
+            "lane", "weight", "admitted", "rejected", "served", "wait p50", "p95", "p99", "max",
+            "µs p50", "µs p95", "µs p99",
+        ],
     );
     for lm in &report.lanes {
         lt.row(vec![
@@ -434,6 +444,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             format!("{:.1}", lm.wait.quantile(0.95)),
             format!("{:.1}", lm.wait.quantile(0.99)),
             lm.wait.max_ticks().to_string(),
+            format!("{:.0}", lm.wait_us.quantile(0.5)),
+            format!("{:.0}", lm.wait_us.quantile(0.95)),
+            format!("{:.0}", lm.wait_us.quantile(0.99)),
         ]);
     }
     lt.print();
@@ -513,6 +526,170 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     ]);
     t.print();
     println!("\n{}", m.report());
+    Ok(())
+}
+
+/// `hetmoe serve --replicas N` (N > 1): an expert-sharded cluster of
+/// worker-thread replicas behind one completion queue. The analog
+/// expert tiles are partitioned across replicas by a token-hash
+/// [`ShardPlan`]; digital experts and shared modules are replicated.
+fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
+    let artifacts = hetmoe::artifacts_dir();
+    let meta = Meta::load(&artifacts)?;
+    let model = cli.get("model");
+    let cfg = meta.config(&model)?.clone();
+    let paths = ArtifactPaths::new(&artifacts, &model);
+    let tasks = load_tasks(&artifacts)?;
+    let gamma = cli.get_f64("gamma");
+    let noise = cli.get_f64("noise");
+    let n_requests = cli.get_usize("requests");
+    let lanes_n = cli.get_usize("lanes");
+    if !(1..=2).contains(&lanes_n) {
+        bail!("--lanes must be 1 (interactive only) or 2 (interactive + bulk)");
+    }
+    let share = cli.get_f64("interactive-share");
+    if !(0.0..=1.0).contains(&share) {
+        bail!("--interactive-share must be in 0..1");
+    }
+    let bulk_wait = cli.get_usize("bulk-wait").max(1) as u64;
+    let drift_nu = cli.get_f64("drift-nu");
+    let replace_every = cli.get_usize("replace-every");
+    let budget = cli.get_usize("migration-budget");
+
+    // plan the global placement on clean parameters; each replica
+    // worker then loads and perturbs its own shard-local copy
+    let params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma, seed: 0 },
+        None,
+    )?;
+    drop(params);
+    let shard = ShardPlan::hashed(&cfg, replicas);
+    let owned: Vec<usize> = (0..replicas).map(|r| shard.owned_slots(r)).collect();
+
+    let wi = ((share * 8.0).round() as u64).clamp(1, 7);
+    let server_cfg = ServerConfig::new(cfg.batch)
+        .lane(
+            Lane::Interactive,
+            LaneParams { weight: wi, max_wait_ticks: 4, max_queue: cfg.batch * 4 },
+        )
+        .lane(
+            Lane::Bulk,
+            LaneParams { weight: 8 - wi, max_wait_ticks: bulk_wait, max_queue: cfg.batch * 8 },
+        )
+        .maintenance(MaintenancePolicy::every(replace_every as u64));
+
+    let mut execs: Vec<Box<dyn Executor>> = Vec::with_capacity(replicas);
+    for r in 0..replicas {
+        let cfg_r = cfg.clone();
+        let aimc = meta.aimc;
+        let serve_cap = meta.serve_cap;
+        let paths_r = paths.clone();
+        let local = shard.replica_placement(&placement, r);
+        let factory = Box::new(move |rt: &mut Runtime| {
+            let mut params = ParamStore::load(&paths_r.manifest(), &paths_r.params_bin())?;
+            apply_placement(&cfg_r, &mut params, &local, &NoiseModel::with_scale(noise), 0)?;
+            let mut b = EngineBuilder::new()
+                .model(cfg_r.clone())
+                .aimc(aimc)
+                .placement(local)
+                .serve_cap(serve_cap)
+                .replacer(RePlacerOptions { budget, ..Default::default() });
+            if drift_nu > 0.0 {
+                b = b.drift(DriftModel::with_nu(drift_nu));
+            }
+            b.build(rt, &paths_r, &params)
+        });
+        let exec = ThreadExecutor::new(format!("replica{r}"), server_cfg.clone(), factory)?;
+        execs.push(Box::new(exec));
+    }
+    let mut cluster = Cluster::new(execs, shard, cfg.batch.max(1))?;
+
+    // same bursty interactive / steady bulk traffic as the
+    // single-engine path; bulk stages in stealable per-replica
+    // backlogs that pump() feeds out
+    let started = std::time::Instant::now();
+    let mut submitted = 0usize;
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let choice = &item.choices[item.gold];
+            let (tk, tg, mk) = pack_choice(&item.ctx, choice, cfg.seq_len);
+            let lane = if lanes_n < 2 || (submitted / cfg.batch.max(1)) % 2 == 0 {
+                Lane::Interactive
+            } else {
+                Lane::Bulk
+            };
+            let req = Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 };
+            cluster.submit(req, lane)?;
+            submitted += 1;
+            cluster.pump()?;
+            if submitted >= n_requests {
+                break 'outer;
+            }
+        }
+    }
+    let report = cluster.shutdown()?;
+    let wall_s = started.elapsed().as_secs_f64();
+    for rep in &report.replicas {
+        for m in &rep.report.maintenance_log {
+            print_migrations(&format!("{} maintenance", rep.name), m);
+        }
+        print_migrations(&format!("{} shutdown tick", rep.name), &rep.report.maintenance);
+    }
+    let cm = &report.metrics;
+    println!(
+        "served {} scoring requests across {replicas} replicas (Γ={gamma}, \
+         prog-noise={noise}, drift ν={drift_nu}, {lanes_n} lane(s), {} bulk steals) \
+         in {wall_s:.2}s",
+        cm.requests_served(),
+        cm.steals,
+    );
+
+    let mut lt = Table::new(
+        "cluster per-lane traffic (merged across replicas)",
+        &["lane", "admitted", "served", "wait p50", "p95", "p99", "µs p50", "µs p95", "µs p99"],
+    );
+    for lm in &cm.lanes {
+        lt.row(vec![
+            lm.name.clone(),
+            lm.admitted.to_string(),
+            lm.served.to_string(),
+            format!("{:.1}", lm.wait.quantile(0.5)),
+            format!("{:.1}", lm.wait.quantile(0.95)),
+            format!("{:.1}", lm.wait.quantile(0.99)),
+            format!("{:.0}", lm.wait_us.quantile(0.5)),
+            format!("{:.0}", lm.wait_us.quantile(0.95)),
+            format!("{:.0}", lm.wait_us.quantile(0.99)),
+        ]);
+    }
+    lt.print();
+
+    let mut t = Table::new("cluster summary", &["metric", "value"]);
+    t.row(vec!["replicas".into(), replicas.to_string()]);
+    t.row(vec!["requests".into(), cm.requests.to_string()]);
+    t.row(vec!["served".into(), cm.requests_served().to_string()]);
+    t.row(vec!["tokens".into(), cm.tokens().to_string()]);
+    t.row(vec!["bulk steals".into(), cm.steals.to_string()]);
+    t.row(vec![
+        "wall throughput".into(),
+        format!("{:.0} tokens/s over {wall_s:.2}s", cm.tokens() as f64 / wall_s.max(1e-9)),
+    ]);
+    for (r, rep) in report.replicas.iter().enumerate() {
+        let m = &rep.metrics;
+        t.row(vec![
+            rep.name.clone(),
+            format!(
+                "{} requests, {} tokens, util {:.1}%, {} owned expert slots",
+                m.requests,
+                m.tokens,
+                m.utilization() * 100.0,
+                owned[r]
+            ),
+        ]);
+    }
+    t.print();
     Ok(())
 }
 

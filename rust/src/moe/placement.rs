@@ -496,6 +496,137 @@ impl RePlacer {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Expert sharding across engine replicas (coordinator::cluster)
+// ---------------------------------------------------------------------------
+
+/// Partition of the routed experts across N engine replicas.
+///
+/// The cluster's sharding rule mirrors the paper's placement argument:
+/// noise-sensitive, densely activated compute (attention, shared FFN,
+/// LM head, *digital-placed* experts) is replicated on every replica,
+/// while each **analog-placed** expert's AIMC tiles live on exactly one
+/// replica — the owner recorded here. [`ShardPlan::replica_placement`]
+/// derives replica `r`'s deployment from the global [`Placement`] by
+/// keeping only `r`'s owned experts analog and serving every other
+/// expert from the replicated digital tier, so the partition is
+/// *disjoint and covering* by construction (pinned by
+/// `prop_shard_plan_partitions_experts`). With one replica the derived
+/// placement equals the global one, which is what makes a single-replica
+/// cluster byte-identical to the plain tick-driven server.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// `owner[l][e]` — replica index owning expert `e` of layer `l`.
+    owner: Vec<Vec<usize>>,
+    n_replicas: usize,
+}
+
+impl ShardPlan {
+    /// Hash-sharded plan: expert `(l, e)` goes to
+    /// `fnv1a(l, e) mod n_replicas`. Deterministic, placement-agnostic,
+    /// and uniform in expectation. Panics if `n_replicas == 0`.
+    pub fn hashed(cfg: &ModelConfig, n_replicas: usize) -> ShardPlan {
+        assert!(n_replicas > 0, "a cluster needs at least one replica");
+        let owner = (0..cfg.n_layers)
+            .map(|l| {
+                (0..cfg.n_experts)
+                    .map(|e| {
+                        let key = [(l as u64).to_le_bytes(), (e as u64).to_le_bytes()];
+                        (crate::util::fnv1a(key.iter().flatten().copied()) % n_replicas as u64)
+                            as usize
+                    })
+                    .collect()
+            })
+            .collect();
+        ShardPlan { owner, n_replicas }
+    }
+
+    /// Norm-balanced plan: greedily assign experts (heaviest first) to
+    /// the least-loaded replica, where `weights[l][e]` is the expert's
+    /// load proxy (e.g. its MaxNN score or weight norm). The greedy
+    /// rule bounds the load spread by one expert's weight. Ties break
+    /// by replica index, then `(layer, expert)`, so the plan is
+    /// deterministic. Panics if `n_replicas == 0` or the weight grid
+    /// does not cover `cfg`'s experts.
+    pub fn balanced(cfg: &ModelConfig, weights: &[Vec<f64>], n_replicas: usize) -> ShardPlan {
+        assert!(n_replicas > 0, "a cluster needs at least one replica");
+        assert!(
+            weights.len() >= cfg.n_layers
+                && weights.iter().take(cfg.n_layers).all(|l| l.len() >= cfg.n_experts),
+            "weight grid smaller than the model's expert grid"
+        );
+        let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                entries.push((l, e, weights[l][e]));
+            }
+        }
+        entries.sort_by(|a, b| {
+            b.2.partial_cmp(&a.2).unwrap().then_with(|| (a.0, a.1).cmp(&(b.0, b.1)))
+        });
+        let mut owner = vec![vec![0usize; cfg.n_experts]; cfg.n_layers];
+        let mut load = vec![0.0f64; n_replicas];
+        for (l, e, w) in entries {
+            let r = load
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            owner[l][e] = r;
+            load[r] += w;
+        }
+        ShardPlan { owner, n_replicas }
+    }
+
+    /// Number of replicas this plan shards across.
+    pub fn n_replicas(&self) -> usize {
+        self.n_replicas
+    }
+
+    /// Replica owning expert `e` of layer `l`.
+    pub fn owner_of(&self, l: usize, e: usize) -> usize {
+        self.owner[l][e]
+    }
+
+    /// Total expert slots owned by `replica` across all layers.
+    pub fn owned_slots(&self, replica: usize) -> usize {
+        self.owner
+            .iter()
+            .map(|l| l.iter().filter(|&&r| r == replica).count())
+            .sum()
+    }
+
+    /// Route a request to a replica by token-content affinity: requests
+    /// with the same prompt hash to the same replica, spreading a mixed
+    /// stream uniformly without running the router. (True expert
+    /// affinity is only known after routing; the hash keeps dispatch
+    /// O(1) and deterministic — the cluster's work stealing absorbs the
+    /// imbalance this approximation leaves.)
+    pub fn route(&self, tokens: &[i32]) -> usize {
+        (crate::util::fnv1a(tokens.iter().flat_map(|t| t.to_le_bytes())) % self.n_replicas as u64)
+            as usize
+    }
+
+    /// Replica `replica`'s deployment, derived from the global
+    /// placement: analog experts owned elsewhere fall back to the
+    /// replicated digital tier; digital experts and dense modules are
+    /// untouched (replicated everywhere). With `n_replicas == 1` this
+    /// returns the global placement unchanged — including its noise
+    /// realisation, since `apply_placement` seeds per tensor.
+    pub fn replica_placement(&self, global: &Placement, replica: usize) -> Placement {
+        let mut p = global.clone();
+        for (l, layer) in self.owner.iter().enumerate() {
+            for (e, &owner) in layer.iter().enumerate() {
+                if p.is_analog(l, e) && owner != replica {
+                    p.set_backend(l, e, BACKEND_DIGITAL);
+                }
+            }
+        }
+        p
+    }
+}
+
 fn hash_name(name: &str) -> u64 {
     // FNV-1a — stable across runs, distinct per tensor name (same
     // stream-tag hash the drift model uses for per-tile ν draws)
@@ -793,6 +924,152 @@ mod tests {
                     "layer {l}: {digital} digital, want {k_digital}"
                 );
             }
+            Ok(())
+        });
+    }
+
+    // --- ShardPlan ---
+
+    #[test]
+    fn shard_plan_single_replica_is_identity() {
+        let c = cfg();
+        let plan = ShardPlan::hashed(&c, 1);
+        assert_eq!(plan.n_replicas(), 1);
+        let mut global = Placement::all_experts_analog(&c);
+        global.set_backend(0, 1, BACKEND_DIGITAL);
+        let derived = plan.replica_placement(&global, 0);
+        for l in 0..c.n_layers {
+            for e in 0..c.n_experts {
+                assert_eq!(
+                    derived.backend_of(l, e),
+                    global.backend_of(l, e),
+                    "N=1 must not move expert ({l},{e})"
+                );
+            }
+        }
+        // routing with one replica always lands on it
+        assert_eq!(plan.route(&[1, 2, 3]), 0);
+        assert_eq!(plan.owned_slots(0), c.n_layers * c.n_experts);
+    }
+
+    #[test]
+    fn shard_plan_routing_is_deterministic_and_in_range() {
+        let c = cfg();
+        let plan = ShardPlan::hashed(&c, 3);
+        let tokens: Vec<i32> = (0..c.seq_len as i32).collect();
+        let r = plan.route(&tokens);
+        assert!(r < 3);
+        assert_eq!(r, plan.route(&tokens), "same prompt, same replica");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one replica")]
+    fn shard_plan_rejects_zero_replicas() {
+        ShardPlan::hashed(&cfg(), 0);
+    }
+
+    #[test]
+    fn prop_shard_plan_partitions_experts() {
+        // property (issue acceptance): any ShardPlan partition is
+        // disjoint and covers all experts — every slot has exactly one
+        // owner in range, and the per-replica analog sets derived from
+        // a global placement are pairwise disjoint with union equal to
+        // the global analog set; digital experts stay digital on every
+        // replica
+        crate::util::proptest::check("shard plan partitions experts", 60, |rng| {
+            let c = cfg();
+            let n = rng.range(1, 5);
+            let plan = if rng.uniform() < 0.5 {
+                ShardPlan::hashed(&c, n)
+            } else {
+                let weights: Vec<Vec<f64>> = (0..c.n_layers)
+                    .map(|_| (0..c.n_experts).map(|_| rng.uniform() + 0.01).collect())
+                    .collect();
+                ShardPlan::balanced(&c, &weights, n)
+            };
+            let mut owned_total = 0usize;
+            for r in 0..n {
+                owned_total += plan.owned_slots(r);
+            }
+            crate::prop_assert!(
+                owned_total == c.n_layers * c.n_experts,
+                "owned slots {} != grid {}",
+                owned_total,
+                c.n_layers * c.n_experts
+            );
+            // random global placement over the two standard slots
+            let mut global = Placement::all_digital(&c);
+            for l in 0..c.n_layers {
+                for e in 0..c.n_experts {
+                    if rng.uniform() < 0.6 {
+                        global.set_backend(l, e, BACKEND_ANALOG);
+                    }
+                }
+            }
+            let replicas: Vec<Placement> =
+                (0..n).map(|r| plan.replica_placement(&global, r)).collect();
+            for l in 0..c.n_layers {
+                for e in 0..c.n_experts {
+                    let owner = plan.owner_of(l, e);
+                    crate::prop_assert!(owner < n, "owner {owner} out of range");
+                    let analog_replicas =
+                        replicas.iter().filter(|p| p.is_analog(l, e)).count();
+                    if global.is_analog(l, e) {
+                        crate::prop_assert!(
+                            analog_replicas == 1,
+                            "analog expert ({l},{e}) on {analog_replicas} replicas"
+                        );
+                        crate::prop_assert!(
+                            replicas[owner].is_analog(l, e),
+                            "analog expert ({l},{e}) not on its owner {owner}"
+                        );
+                    } else {
+                        crate::prop_assert!(
+                            analog_replicas == 0,
+                            "digital expert ({l},{e}) went analog on a replica"
+                        );
+                        for p in &replicas {
+                            crate::prop_assert!(
+                                p.backend_of(l, e) == global.backend_of(l, e),
+                                "digital expert ({l},{e}) moved"
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_balanced_shard_load_spread_is_bounded() {
+        // property: the greedy heaviest-first rule keeps the load
+        // spread within one expert's weight of optimal packing
+        crate::util::proptest::check("balanced shard load spread", 40, |rng| {
+            let c = cfg();
+            let n = rng.range(2, 5);
+            let weights: Vec<Vec<f64>> = (0..c.n_layers)
+                .map(|_| (0..c.n_experts).map(|_| rng.uniform() + 0.01).collect())
+                .collect();
+            let plan = ShardPlan::balanced(&c, &weights, n);
+            let mut load = vec![0.0f64; n];
+            let mut w_max = 0.0f64;
+            for l in 0..c.n_layers {
+                for e in 0..c.n_experts {
+                    load[plan.owner_of(l, e)] += weights[l][e];
+                    w_max = w_max.max(weights[l][e]);
+                }
+            }
+            let (lo, hi) = (
+                load.iter().cloned().fold(f64::INFINITY, f64::min),
+                load.iter().cloned().fold(0.0, f64::max),
+            );
+            crate::prop_assert!(
+                hi - lo <= w_max + 1e-9,
+                "load spread {:.4} exceeds max weight {:.4}",
+                hi - lo,
+                w_max
+            );
             Ok(())
         });
     }

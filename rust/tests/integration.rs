@@ -11,15 +11,15 @@ use hetmoe::aimc::program::NoiseModel;
 use hetmoe::aimc::quant::{adc_quant, dac_quant};
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{
-    AnalogBackend, Batcher, DigitalBackend, EngineBuilder, ExpertBackend, ExpertOutput,
-    ExpertWeights, Lane, MaintenancePolicy, Request, Response, Server, ServerConfig,
-    Session, StageCost,
+    AnalogBackend, Batcher, Cluster, DigitalBackend, EngineBuilder, Executor, ExpertBackend,
+    ExpertOutput, ExpertWeights, Lane, MaintenancePolicy, Request, Response, Server,
+    ServerConfig, Session, StageCost, ThreadExecutor,
 };
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{
     apply_placement, plan_placement, Migration, Placement, PlacementOptions, RePlacerOptions,
-    BACKEND_ANALOG, BACKEND_DIGITAL,
+    ShardPlan, BACKEND_ANALOG, BACKEND_DIGITAL,
 };
 use hetmoe::moe::score::{maxnn_scores, SelectionMetric};
 use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
@@ -1248,6 +1248,243 @@ fn drift_soak_migrates_and_deviation_recovers() {
         engine.placement.n_analog_experts() < placement.n_analog_experts(),
         "at least one expert must have left the analog chip"
     );
+}
+
+/// Build the standard Γ=0.25 test fixture request stream.
+fn fixture_requests(cfg: &hetmoe::config::ModelConfig, n: usize) -> Vec<Request> {
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let mut reqs = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            reqs.push(Request { id: 0, tokens: tk, targets: tg, mask: mk, arrived: 0 });
+            if reqs.len() == n {
+                break 'outer;
+            }
+        }
+    }
+    reqs
+}
+
+/// A `Send` engine recipe for one cluster replica: loads its own
+/// parameter copy from disk and applies the replica's placement with
+/// the same deterministic per-tensor noise seeding as the main thread.
+fn replica_factory(
+    cfg: &hetmoe::config::ModelConfig,
+    meta: &Meta,
+    paths: &ArtifactPaths,
+    local: Placement,
+) -> hetmoe::coordinator::EngineFactory {
+    let cfg = cfg.clone();
+    let aimc = meta.aimc;
+    let serve_cap = meta.serve_cap;
+    let paths = paths.clone();
+    Box::new(move |rt: &mut Runtime| {
+        let mut params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
+        apply_placement(&cfg, &mut params, &local, &NoiseModel::with_scale(1.0), 0)?;
+        EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(aimc)
+            .placement(local)
+            .serve_cap(serve_cap)
+            .build(rt, &paths, &params)
+    })
+}
+
+#[test]
+fn cluster_single_replica_matches_server() {
+    // The issue-6 acceptance pin: a single-replica cluster on a
+    // ThreadExecutor (worker thread, MPSC channel, in-thread engine
+    // build from a fresh parameter load) must produce byte-identical
+    // response streams to the tick-driven Server on the same request
+    // stream. ShardPlan N=1 keeps the placement (and therefore the
+    // per-tensor noise realisation) unchanged, and the worker's
+    // enqueue → poll loop mirrors the direct driving pattern.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    let reqs = fixture_requests(&cfg, cfg.batch * 2 + 1);
+    let server_cfg = ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4);
+
+    // reference: tick-driven Server on the main thread
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+    let engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement.clone())
+        .serve_cap(meta.serve_cap)
+        .build(&mut rt, &paths, &params)
+        .unwrap();
+    let mut server = Server::new(&rt, engine, server_cfg.clone());
+    let client = server.client();
+    for r in &reqs {
+        server.enqueue(&client, r.clone(), Lane::Interactive).unwrap();
+        server.poll().unwrap();
+    }
+    server.drain().unwrap();
+    let mut reference: Vec<_> =
+        server.recv_all().into_iter().map(|c| c.response).collect();
+    reference.sort_by_key(|r| r.id);
+
+    // cluster: one ThreadExecutor replica behind the same surface
+    let shard = ShardPlan::hashed(&cfg, 1);
+    let local = shard.replica_placement(&placement, 0);
+    let factory = replica_factory(&cfg, &meta, &paths, local);
+    let exec = ThreadExecutor::new("replica0", server_cfg, factory).unwrap();
+    let execs: Vec<Box<dyn Executor>> = vec![Box::new(exec)];
+    let mut cluster = Cluster::new(execs, shard, cfg.batch).unwrap();
+    for (i, r) in reqs.iter().enumerate() {
+        let id = cluster.submit(r.clone(), Lane::Interactive).unwrap();
+        assert_eq!(id, i as u64, "cluster assigns sequential global ids");
+    }
+    cluster.drain().unwrap();
+    let mut via_cluster: Vec<_> =
+        cluster.recv_all().into_iter().map(|c| c.response).collect();
+    via_cluster.sort_by_key(|r| r.id);
+
+    assert_eq!(via_cluster.len(), reference.len());
+    for (a, b) in reference.iter().zip(&via_cluster) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "request {}: cluster {} != server {}",
+            a.id,
+            b.score,
+            a.score
+        );
+    }
+    let report = cluster.shutdown().unwrap();
+    assert_eq!(report.metrics.replicas, 1);
+    assert_eq!(report.metrics.requests, reqs.len() as u64);
+    assert_eq!(report.metrics.requests_served(), reqs.len() as u64);
+    assert_eq!(report.metrics.steals, 0, "one replica has nobody to steal from");
+}
+
+#[test]
+fn cluster_two_replicas_conserve_requests() {
+    // Expert-sharded 2-replica cluster under mixed-priority traffic:
+    // every submitted request must complete exactly once with a finite
+    // score, the per-replica metrics must sum to the stream, and the
+    // merged lane rollup must account for every admission (including
+    // the wall-µs histograms).
+    require_artifacts!();
+    let (_rt, meta, paths, params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    drop(params);
+    let n = cfg.batch * 3;
+    let reqs = fixture_requests(&cfg, n);
+    let server_cfg = ServerConfig::new(cfg.batch);
+
+    let shard = ShardPlan::hashed(&cfg, 2);
+    let mut execs: Vec<Box<dyn Executor>> = Vec::new();
+    for r in 0..2 {
+        let local = shard.replica_placement(&placement, r);
+        let factory = replica_factory(&cfg, &meta, &paths, local);
+        execs.push(Box::new(
+            ThreadExecutor::new(format!("replica{r}"), server_cfg.clone(), factory).unwrap(),
+        ));
+    }
+    let mut cluster = Cluster::new(execs, shard, cfg.batch).unwrap();
+
+    let mut ids = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        let lane = if i % 3 == 0 { Lane::Interactive } else { Lane::Bulk };
+        ids.push(cluster.submit(r.clone(), lane).unwrap());
+        cluster.pump().unwrap();
+    }
+    cluster.drain().unwrap();
+    assert_eq!(cluster.pending(), 0, "drain is a barrier");
+    let report = cluster.shutdown().unwrap();
+
+    let mut seen = std::collections::HashSet::new();
+    for c in &report.completions {
+        assert_eq!(c.response.id, c.ticket.id);
+        assert!(c.response.score.is_finite());
+        assert!(seen.insert(c.ticket.id), "request {} completed twice", c.ticket.id);
+    }
+    assert_eq!(seen.len(), ids.len(), "every request completes exactly once");
+    for id in &ids {
+        assert!(seen.contains(id), "request {id} never completed");
+    }
+
+    let cm = &report.metrics;
+    assert_eq!(cm.replicas, 2);
+    assert_eq!(cm.requests, n as u64);
+    assert_eq!(cm.requests_served(), n as u64);
+    let admitted: u64 = cm.lanes.iter().map(|l| l.admitted).sum();
+    let served: u64 = cm.lanes.iter().map(|l| l.served).sum();
+    assert_eq!(admitted, n as u64);
+    assert_eq!(served, n as u64);
+    // every served request carries one sample in each merged histogram
+    let ticks: u64 = cm.lanes.iter().map(|l| l.wait.count()).sum();
+    let us: u64 = cm.lanes.iter().map(|l| l.wait_us.count()).sum();
+    assert_eq!(ticks, n as u64);
+    assert_eq!(us, n as u64);
+    // both replicas exist in the rollup and their engines agree with it
+    assert_eq!(cm.per_replica.len(), 2);
+    let replica_reqs: u64 = cm.per_replica.iter().map(|m| m.requests).sum();
+    assert_eq!(replica_reqs, n as u64);
+}
+
+#[test]
+fn shutdown_drains_all_completions() {
+    // Regression (issue 6 satellite): Server::shutdown must flush the
+    // completion queue AFTER the final maintenance tick, so nothing a
+    // late tick enqueues is dropped — every admitted request appears
+    // in DrainReport::completions even when the caller never polled.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+    let engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement)
+        .serve_cap(meta.serve_cap)
+        .build(&mut rt, &paths, &params)
+        .unwrap();
+    let mut server =
+        Server::new(&rt, engine, ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4));
+    let client = server.client();
+    let n = cfg.batch + 1; // one full release + a tail only shutdown can flush
+    for r in fixture_requests(&cfg, n) {
+        server.enqueue(&client, r, Lane::Interactive).unwrap();
+        // deliberately never poll: shutdown owns the entire flush
+    }
+    let (report, engine) = server.shutdown().unwrap();
+    assert_eq!(report.drained, n, "shutdown served everything itself");
+    assert_eq!(report.completions.len(), n, "no completion silently dropped");
+    let lm = &report.lanes[Lane::Interactive.index()];
+    assert_eq!(lm.admitted, n as u64);
+    assert_eq!(lm.served, n as u64, "served must equal admitted at shutdown");
+    assert_eq!(lm.wait_us.count(), n as u64, "every completion records wall time");
+    assert_eq!(engine.metrics.requests, n as u64);
+    for (i, c) in report.completions.iter().enumerate() {
+        assert_eq!(c.ticket.id, i as u64);
+        assert!(c.response.score.is_finite());
+    }
 }
 
 #[test]

@@ -11,7 +11,11 @@ With ``--serve-prev``/``--serve-cur`` it additionally guards the
 **interactive** lane's ``wait_p95`` (the serving-latency promise of the
 priority scheduler) must not grow by more than the allowed fraction
 over the baseline, and lane conservation (``served == admitted``) in
-the current dump fails hard regardless of any baseline.
+the current dump fails hard regardless of any baseline. The
+``replica_scaling`` scenario is guarded the same way: per model and
+replica count, the cluster's ``tokens_per_s`` must not drop by more
+than the allowed fraction vs the baseline scale with the same replica
+count, and request conservation (``served == requests``) fails hard.
 
 Warn-only when a baseline file is missing (first run on a repo whose
 trajectory is still empty) or a case has no counterpart — CI shared
@@ -60,6 +64,69 @@ def serve_lanes(path):
             lane.get("lane", "?"): lane for lane in mp.get("lanes", [])
         }
     return out
+
+
+def serve_scales(path):
+    """{model: {replicas: scale_obj}} for every replica_scaling block."""
+    with open(path) as f:
+        dump = json.load(f)
+    out = {}
+    for entry in dump.get("models", []):
+        rs = entry.get("replica_scaling")
+        if rs is None:
+            continue
+        out[entry.get("model", "?")] = {
+            int(s.get("replicas", 0)): s for s in rs.get("scales", [])
+        }
+    return out
+
+
+def guard_replica_scaling(prev_path, cur_path, max_regression):
+    """Failures for the replica_scaling serve scenario (see module doc)."""
+    failures = []
+    cur = serve_scales(cur_path)
+    if not cur:
+        print(f"replica guard: {cur_path} has no replica_scaling blocks — skipped")
+        return failures
+
+    # conservation is a correctness gate, baseline or not: every request
+    # submitted to the cluster must have completed by shutdown
+    for model, scales in cur.items():
+        for n, scale in scales.items():
+            if scale.get("served") != scale.get("requests"):
+                failures.append(
+                    f"{model}@{n} replicas: served {scale.get('served')} != "
+                    f"requests {scale.get('requests')} — requests lost")
+
+    if not os.path.exists(prev_path):
+        print(f"replica guard: no baseline at {prev_path} — warn-only first "
+              f"run ({len(cur)} model(s) recorded)")
+        return failures
+
+    prev = serve_scales(prev_path)
+    compared = 0
+    for model, scales in prev.items():
+        for n, scale in scales.items():
+            cur_scale = cur.get(model, {}).get(n)
+            if cur_scale is None:
+                print(f"warn: no replica_scaling scale to compare for {model}@{n}")
+                continue
+            old = float(scale.get("tokens_per_s", 0.0))
+            new = float(cur_scale.get("tokens_per_s", 0.0))
+            if old <= 0:
+                continue
+            compared += 1
+            drop = (old - new) / old
+            regressed = drop > max_regression
+            status = "FAIL" if regressed else "ok"
+            print(f"{status:>4} {model}@{n} replicas tokens_per_s: "
+                  f"{old:.3g} -> {new:.3g} ({-drop * 100:+.1f}%)")
+            if regressed:
+                failures.append(
+                    f"{model}@{n} replicas: cluster tokens_per_s regressed "
+                    f"{drop * 100:.1f}% (> {max_regression * 100:.0f}% allowed)")
+    print(f"replica guard: {compared} scale(s) compared")
+    return failures
 
 
 def guard_serve(prev_path, cur_path, max_regression):
@@ -128,6 +195,9 @@ def main():
     if args.serve_cur:
         serve_failures = guard_serve(args.serve_prev or "", args.serve_cur,
                                      args.max_regression)
+        if os.path.exists(args.serve_cur):
+            serve_failures += guard_replica_scaling(
+                args.serve_prev or "", args.serve_cur, args.max_regression)
 
     if not os.path.exists(args.cur):
         print(f"bench guard: current dump {args.cur} missing", file=sys.stderr)

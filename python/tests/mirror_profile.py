@@ -1,0 +1,428 @@
+"""Python mirror of the Rust nonideality/profile stack (`aimc::profile`).
+
+Integer-exact ports of the deterministic pieces — `util::Prng`
+(SplitMix64-seeded xoshiro256** with Box-Muller gaussians), `fnv1a`
+tile addressing, and the `util::stats` rank/Pearson/Spearman chain used
+by `selection_predictiveness` — plus float32-faithful ports of every
+`NonidealityModel` and the `DriftMonitor` sentinel-probe math.
+
+The Spearman port matches Rust bit-for-bit (identical sequential
+operation order on IEEE doubles); the perturbation/probe ports match to
+f32 rounding (the Rust serving kernel accumulates its gated MLP in a
+blocked order numpy does not replicate), which is why the golden
+fixtures carry a small tolerance while the Spearman fuzz fixture
+demands 1e-12.
+
+Used by scripts/gen_profile_fixtures.py (writes the checked-in fixtures
+the Rust integration tests consume) and tests/test_profile_mirror.py.
+"""
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+_F64_MIN_POSITIVE = 2.2250738585072014e-308
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & _MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & _MASK
+
+
+class Prng:
+    """util::Prng — xoshiro256** + Box-Muller with a cached spare."""
+
+    def __init__(self, seed):
+        s = []
+        sm = seed & _MASK
+        for _ in range(4):
+            sm, z = _splitmix64(sm)
+            s.append(z)
+        self.s = s
+        self.spare = None
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & _MASK, 7) * 9) & _MASK
+        t = (s[1] << 17) & _MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def gaussian(self):
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        while True:
+            u1 = self.uniform()
+            if u1 <= _F64_MIN_POSITIVE:
+                continue
+            u2 = self.uniform()
+            r = math.sqrt(-2.0 * math.log(u1))
+            theta = 2.0 * math.pi * u2
+            self.spare = r * math.sin(theta)
+            return r * math.cos(theta)
+
+    def gaussian_f32(self):
+        return np.float32(self.gaussian())
+
+
+def fnv1a(data):
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & _MASK
+    return h
+
+
+@dataclass(frozen=True)
+class Site:
+    layer: int = 0
+    expert: int = 0
+    mat: int = 0
+
+
+@dataclass(frozen=True)
+class Clock:
+    elapsed_tokens: int = 0
+    birth_tokens: int = 0
+    cycle: int = 0
+
+
+def _words_tag(words):
+    return fnv1a(b"".join(int(w).to_bytes(8, "little") for w in words))
+
+
+def tile_rng(seed, site, rt, ct, epoch):
+    """profile::tile_rng — one stream per (site, tile, epoch)."""
+    tag = _words_tag([site.layer, site.expert, site.mat, rt, ct, epoch])
+    return Prng(seed ^ tag)
+
+
+def _tiles(d, n, tile):
+    tile = max(tile, 1)
+    r0 = 0
+    while r0 < d:
+        r1 = min(r0 + tile, d)
+        c0 = 0
+        while c0 < n:
+            c1 = min(c0 + tile, n)
+            yield r0, r1, c0, c1
+            c0 = c1
+        r0 = r1
+
+
+# ---------------------------------------------------------------- models
+# Each perturb(w, d, n, site, clock) mutates a 1-D float32 numpy array of
+# length d*n in place, replicating the Rust loop order and f32 casts.
+
+
+@dataclass
+class ReadNoise:
+    sigma: float = 0.0
+    conductance_dependent: bool = False
+    tile: int = 512
+    seed: int = 0
+
+    def enabled(self):
+        return self.sigma > 0.0
+
+    def perturb(self, w, d, n, site, clock):
+        if not self.enabled():
+            return
+        tile = max(self.tile, 1)
+        for r0, r1, c0, c1 in _tiles(d, n, tile):
+            rng = tile_rng(self.seed, site, r0 // tile, c0 // tile, clock.cycle)
+            for r in range(r0, r1):
+                for c in range(c0, c1):
+                    v = float(w[r * n + c])
+                    g = rng.gaussian()
+                    s = self.sigma * abs(v) if self.conductance_dependent else self.sigma
+                    w[r * n + c] = np.float32(v + g * s)
+
+
+PCM_SPLIT = 0.292
+PCM_COEF_HI = [0.012, 0.245, -0.54, 0.40]
+PCM_COEF_LO = [0.014, 0.224, -0.72, 0.952]
+
+
+def programming_sigma(w, w_max):
+    """program::programming_sigma — eq (3) σ for one weight."""
+    w_max = max(w_max, 1e-12)
+    aw = abs(w)
+    c = PCM_COEF_HI if aw / w_max > PCM_SPLIT else PCM_COEF_LO
+    sigma = (
+        c[0] * w_max
+        + c[1] * aw
+        + c[2] * aw * aw / w_max
+        + c[3] * aw * aw * aw / (w_max * w_max)
+    )
+    return max(sigma, 0.0)
+
+
+@dataclass
+class ProgrammingError:
+    scale: float = 0.0
+    tile: int = 512
+    seed: int = 0
+
+    def enabled(self):
+        return self.scale > 0.0
+
+    def perturb(self, w, d, n, site, clock):
+        if not self.enabled():
+            return
+        tile = max(self.tile, 1)
+        for r0, r1, c0, c1 in _tiles(d, n, tile):
+            rng = tile_rng(self.seed, site, r0 // tile, c0 // tile, clock.birth_tokens)
+            for c in range(c0, c1):
+                w_max = 0.0
+                for r in range(r0, r1):
+                    w_max = max(w_max, abs(float(w[r * n + c])))
+                if w_max <= 0.0:
+                    continue
+                for r in range(r0, r1):
+                    v = float(w[r * n + c])
+                    sigma = programming_sigma(v, w_max) * self.scale
+                    w[r * n + c] = np.float32(v + rng.gaussian() * sigma)
+
+
+@dataclass
+class AdcClip:
+    fsr: float = 0.0
+    relative: bool = False
+
+    def enabled(self):
+        return self.fsr > 0.0
+
+    def perturb(self, w, d, n, site, clock):
+        if not self.enabled():
+            return
+        if self.relative:
+            mx = np.max(np.abs(w)) if w.size else np.float32(0.0)
+            bound = np.float32(self.fsr * float(mx))
+        else:
+            bound = np.float32(self.fsr)
+        np.clip(w, -bound, bound, out=w)
+
+
+@dataclass
+class IrDrop:
+    strength: float = 0.0
+    row_weight: float = 0.5
+
+    def enabled(self):
+        return self.strength > 0.0
+
+    def factor(self, r, c, d, n):
+        rho = min(max(self.row_weight, 0.0), 1.0)
+        rd = r / max(d - 1, 1)
+        cd = c / max(n - 1, 1)
+        return max(1.0 - self.strength * (rho * rd + (1.0 - rho) * cd), 0.0)
+
+    def perturb(self, w, d, n, site, clock):
+        if not self.enabled():
+            return
+        for r in range(d):
+            for c in range(n):
+                w[r * n + c] = np.float32(w[r * n + c] * np.float32(self.factor(r, c, d, n)))
+
+
+@dataclass
+class DriftModel:
+    nu: float = 0.0
+    nu_jitter: float = 0.0
+    t0_tokens: int = 256
+    tile: int = 512
+    seed: int = 0
+
+    @classmethod
+    def with_nu(cls, nu, **kw):
+        return cls(nu=nu, nu_jitter=nu / 10.0, **kw)
+
+    def enabled(self):
+        return self.nu > 0.0 or self.nu_jitter > 0.0
+
+    def factor(self, nu, elapsed_tokens):
+        if nu <= 0.0 or elapsed_tokens <= self.t0_tokens:
+            return 1.0
+        t = elapsed_tokens / max(self.t0_tokens, 1)
+        return t ** (-nu)
+
+    def tile_nu(self, layer, expert, mat, rt, ct):
+        if self.nu_jitter <= 0.0:
+            return max(self.nu, 0.0)
+        tag = _words_tag([layer, expert, mat, rt, ct])
+        rng = Prng(self.seed ^ tag)
+        return max(self.nu + rng.gaussian() * self.nu_jitter, 0.0)
+
+    def perturb(self, w, d, n, site, clock):
+        if not self.enabled() or clock.elapsed_tokens <= self.t0_tokens:
+            return
+        tile = max(self.tile, 1)
+        for r0, r1, c0, c1 in _tiles(d, n, tile):
+            nu = self.tile_nu(site.layer, site.expert, site.mat, r0 // tile, c0 // tile)
+            f = np.float32(self.factor(nu, clock.elapsed_tokens))
+            if f != np.float32(1.0):
+                for r in range(r0, r1):
+                    for c in range(c0, c1):
+                        w[r * n + c] = np.float32(w[r * n + c] * f)
+
+
+PRESETS = {
+    "ideal": lambda: [],
+    "pcm-drift": lambda: [
+        DriftModel.with_nu(0.3, seed=0xD01F),
+        ProgrammingError(scale=0.5, seed=0x5C01),
+    ],
+    "reram-noisy": lambda: [
+        ReadNoise(sigma=0.08, conductance_dependent=True, seed=0x2EAD),
+    ],
+    "adc-limited": lambda: [
+        ReadNoise(sigma=0.01, conductance_dependent=False, seed=0xADC0),
+        AdcClip(fsr=0.5, relative=True),
+    ],
+    "worst-case": lambda: [
+        DriftModel.with_nu(0.4, seed=0xBAD0),
+        ProgrammingError(scale=0.5, seed=0xBAD1),
+        ReadNoise(sigma=0.08, conductance_dependent=True, seed=0xBAD2),
+        IrDrop(strength=0.15),
+        AdcClip(fsr=0.75, relative=True),
+    ],
+}
+
+
+def preset(name):
+    """DeviceProfile::preset — the model stack, in application order."""
+    return PRESETS[name]()
+
+
+def perturb_matrix(models, w, d, n, site, clock):
+    for m in models:
+        if m.enabled():
+            m.perturb(w, d, n, site, clock)
+
+
+# ------------------------------------------------------------ probe math
+
+
+def silu(x):
+    return x / (np.float32(1.0) + np.exp(-x))
+
+
+def gated_mlp(x, up, gate, down, n, d, m):
+    """tensor::gated_mlp — `(silu(x@up) * (x@gate)) @ down` in float32.
+
+    numpy's matmul accumulation order differs from the Rust blocked
+    kernel, so agreement is to f32 rounding, not bit-exact.
+    """
+    X = np.asarray(x, np.float32).reshape(n, d)
+    U = X @ np.asarray(up, np.float32).reshape(d, m)
+    G = X @ np.asarray(gate, np.float32).reshape(d, m)
+    act = (silu(U) * G).astype(np.float32)
+    return (act @ np.asarray(down, np.float32).reshape(m, d)).reshape(-1)
+
+
+def sentinel(rows, d, seed):
+    """DriftMonitor's cached probe input: Prng(seed ^ 0xD21F_7001)."""
+    rng = Prng(seed ^ 0xD21F_7001)
+    return np.array(
+        [rng.gaussian_f32() * np.float32(0.5) for _ in range(rows * d)], np.float32
+    )
+
+
+def probe_deviation(got, want):
+    """Relative ℓ2 output deviation, Rust op order (f32 diff, f64 sums)."""
+    num = 0.0
+    den = 0.0
+    for a, b in zip(got, want):
+        diff = float(np.float32(a) - np.float32(b))
+        num += diff * diff
+        den += float(b) ** 2
+    return math.sqrt(num / max(den, 1e-24))
+
+
+def col_norms(w, d, m):
+    """tensor::col_norms — f64 column ℓ2 norms, row-sequential sums."""
+    acc = [0.0] * m
+    for r in range(d):
+        for c in range(m):
+            v = float(w[r * m + c])
+            acc[c] += v * v
+    return [math.sqrt(a) for a in acc]
+
+
+def maxnn_score(up, gate, down, d, m):
+    """profile::maxnn_score — product of the three max column norms."""
+    def mx(w, r, c):
+        best = 0.0
+        for v in col_norms(w, r, c):
+            best = max(best, v)
+        return best
+
+    return mx(up, d, m) * mx(gate, d, m) * mx(down, m, d)
+
+
+# -------------------------------------------------- predictiveness scorer
+# Bit-exact port of util::stats — sequential f64 sums, stable sorts.
+
+
+def ranks(xs):
+    idx = sorted(range(len(xs)), key=lambda i: xs[i])
+    r = [0.0] * len(xs)
+    for rank, i in enumerate(idx):
+        r[i] = float(rank)
+    return r
+
+
+def _mean(xs):
+    s = 0.0
+    for x in xs:
+        s += x
+    return s / len(xs)
+
+
+def pearson(xs, ys):
+    assert len(xs) == len(ys)
+    n = len(xs)
+    if n < 2:
+        return 0.0
+    mx = _mean(xs)
+    my = _mean(ys)
+    num = 0.0
+    dx = 0.0
+    dy = 0.0
+    for i in range(n):
+        a = xs[i] - mx
+        b = ys[i] - my
+        num += a * b
+        dx += a * a
+        dy += b * b
+    if dx <= 0.0 or dy <= 0.0:
+        return 0.0
+    return num / (math.sqrt(dx) * math.sqrt(dy))
+
+
+def spearman(xs, ys):
+    return pearson(ranks(xs), ranks(ys))
+
+
+def selection_predictiveness(maxnn, degradation):
+    """profile::selection_predictiveness — Spearman rank correlation."""
+    return spearman(maxnn, degradation)

@@ -1,0 +1,156 @@
+"""Device-profile mirror tests (issue 7 satellite).
+
+Fuzzes the Python port of the selection-predictiveness scorer against
+the checked-in fixtures the Rust side consumes (≥ 200 cases, bit-exact)
+and re-derives the golden per-profile sentinel deviations to pin the
+fixture to the mirror that generated it. Pure numpy — no jax, no
+artifacts.
+"""
+
+import json
+import math
+import os
+import random
+
+import numpy as np
+import pytest
+
+import mirror_profile as mp
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def load(name):
+    with open(os.path.join(FIXTURES, name)) as f:
+        return json.load(f)
+
+
+# ------------------------------------------------------- spearman scorer
+
+
+def test_spearman_fuzz_fixture_is_reproducible():
+    # every dumped rho must recompute bit-for-bit: the JSON round-trip
+    # (shortest repr) and the scorer itself are both exact
+    fx = load("spearman_fuzz.json")
+    assert len(fx["cases"]) >= 200
+    for i, case in enumerate(fx["cases"]):
+        rho = mp.spearman(case["xs"], case["ys"])
+        assert rho == case["rho"], f"case {i}"
+        assert -1.0 - 1e-12 <= rho <= 1.0 + 1e-12
+
+
+def test_spearman_rank_semantics():
+    # monotone transforms preserve rank: rho is exactly ±1
+    xs = [1.0, 2.0, 3.0, 4.0, 5.0]
+    ys = [math.exp(x) for x in xs]
+    assert mp.spearman(xs, ys) == pytest.approx(1.0, abs=1e-12)
+    assert mp.spearman(xs, ys[::-1]) == pytest.approx(-1.0, abs=1e-12)
+    # constant input: ties rank by index (stable sort), so the ranks
+    # are 0..n-1 and correlate perfectly with an increasing ys — the
+    # documented (if surprising) Rust semantics the mirror must share
+    assert mp.spearman([1.0, 1.0, 1.0], [1.0, 2.0, 3.0]) == pytest.approx(1.0, abs=1e-12)
+    # fewer than two points → 0 by convention (matches Rust pearson)
+    assert mp.spearman([2.0], [3.0]) == 0.0
+
+
+def test_spearman_ties_break_by_index():
+    # Rust ranks() uses a stable sort (ties keep index order); the
+    # mirror must agree on inputs with exact duplicates
+    rng = random.Random(7)
+    for _ in range(200):
+        n = rng.randint(2, 20)
+        xs = [float(rng.randint(0, 4)) for _ in range(n)]
+        ys = [float(rng.randint(0, 4)) for _ in range(n)]
+        rho = mp.spearman(xs, ys)
+        assert -1.0 - 1e-12 <= rho <= 1.0 + 1e-12
+        # rank vectors are permutations of 0..n-1 regardless of ties
+        assert sorted(mp.ranks(xs)) == [float(i) for i in range(n)]
+
+
+# ------------------------------------------------------- golden fixture
+
+
+def test_golden_fixture_matches_mirror():
+    # the checked-in deviations must re-derive from the mirror — guards
+    # against the fixture and generator drifting apart
+    fx = load("profile_golden.json")
+    d, m, rows, seed = fx["d"], fx["m"], fx["rows"], fx["seed"]
+    clock = mp.Clock(
+        elapsed_tokens=fx["elapsed_tokens"], birth_tokens=0, cycle=fx["elapsed_tokens"]
+    )
+    rng = mp.Prng(42)
+
+    def draw(length):
+        return np.array(
+            [rng.gaussian_f32() * np.float32(0.3) for _ in range(length)], np.float32
+        )
+
+    experts = [
+        {"up": draw(d * m), "gate": draw(d * m), "down": draw(m * d)}
+        for _ in range(fx["experts"])
+    ]
+    x = mp.sentinel(rows, d, seed)
+    names = [p["profile"] for p in fx["profiles"]]
+    assert names == ["ideal", "pcm-drift", "reram-noisy", "adc-limited", "worst-case"]
+    for prof in fx["profiles"]:
+        models = mp.preset(prof["profile"])
+        for e, host in enumerate(experts):
+            want = mp.gated_mlp(x, host["up"], host["gate"], host["down"], rows, d, m)
+            up, gate, down = host["up"].copy(), host["gate"].copy(), host["down"].copy()
+            mp.perturb_matrix(models, up, d, m, mp.Site(0, e, 0), clock)
+            mp.perturb_matrix(models, gate, d, m, mp.Site(0, e, 1), clock)
+            mp.perturb_matrix(models, down, m, d, mp.Site(0, e, 2), clock)
+            got = mp.probe_deviation(mp.gated_mlp(x, up, gate, down, rows, d, m), want)
+            assert got == pytest.approx(prof["deviations"][e], rel=1e-6, abs=1e-12), (
+                prof["profile"],
+                e,
+            )
+    ideal = fx["profiles"][0]["deviations"]
+    assert all(v == 0.0 for v in ideal), "ideal profile must probe exactly clean"
+
+
+# ------------------------------------------------ model property mirrors
+
+
+def test_models_are_seed_deterministic():
+    rng = random.Random(11)
+    for _ in range(20):
+        d, n = rng.randint(1, 12), rng.randint(1, 12)
+        w0 = np.array([rng.gauss(0, 0.3) for _ in range(d * n)], np.float32)
+        site = mp.Site(rng.randrange(4), rng.randrange(8), rng.randrange(3))
+        clock = mp.Clock(rng.randrange(1 << 16), rng.randrange(1 << 16), rng.randrange(1 << 16))
+        for model in (
+            mp.ReadNoise(sigma=0.1, tile=4, seed=5),
+            mp.ProgrammingError(scale=1.0, tile=4, seed=5),
+        ):
+            a, b = w0.copy(), w0.copy()
+            model.perturb(a, d, n, site, clock)
+            model.perturb(b, d, n, site, clock)
+            assert np.array_equal(a, b)
+            assert not np.array_equal(a, w0)
+
+
+def test_adc_clip_bounds_and_ir_drop_monotone():
+    w = np.array([-2.0, -0.4, 0.1, 3.0], np.float32)
+    clip = mp.AdcClip(fsr=0.5, relative=False)
+    clip.perturb(w, 2, 2, mp.Site(), mp.Clock())
+    assert np.all(np.abs(w) <= np.float32(0.5))
+
+    d, n = 6, 3
+    ones = np.ones(d * n, np.float32)
+    drop = mp.IrDrop(strength=0.4)
+    drop.perturb(ones, d, n, mp.Site(), mp.Clock())
+    for c in range(n):
+        col = [float(ones[r * n + c]) for r in range(d)]
+        assert all(b <= a + 1e-7 for a, b in zip(col, col[1:]))
+        assert all(v >= 0.0 for v in col)
+
+
+def test_predictiveness_sign_convention():
+    maxnn = [1.0, 2.0, 3.0, 4.0]
+    assert mp.selection_predictiveness(maxnn, [0.1, 0.2, 0.3, 0.4]) == pytest.approx(
+        1.0, abs=1e-12
+    )
+    assert mp.selection_predictiveness(maxnn, [0.4, 0.3, 0.2, 0.1]) == pytest.approx(
+        -1.0, abs=1e-12
+    )

@@ -36,6 +36,7 @@
 //! experts migrate between backends; the engine executes the migration
 //! live (see `coordinator::Engine::maintenance`).
 
+use crate::aimc::profile::{maxnn_score, Clock, NonidealityModel, Site};
 use crate::tensor;
 use crate::util::Prng;
 
@@ -147,6 +148,24 @@ impl DriftModel {
     }
 }
 
+/// Drift is one [`NonidealityModel`] among several: the stack variant of
+/// the decay, keyed on [`Clock::elapsed_tokens`] (tokens since the
+/// tile's last (re)programming). The inherent
+/// [`DriftModel::apply_matrix`] remains the drift-only entry point.
+impl NonidealityModel for DriftModel {
+    fn name(&self) -> &'static str {
+        "drift"
+    }
+
+    fn enabled(&self) -> bool {
+        self.nu > 0.0 || self.nu_jitter > 0.0
+    }
+
+    fn perturb(&self, w: &mut [f32], d: usize, n: usize, site: Site, clock: Clock) {
+        self.apply_matrix(w, d, n, site.layer, site.expert, site.mat, clock.elapsed_tokens);
+    }
+}
+
 /// One expert's host-side reference weights (the values programmed at
 /// deployment, post eq (3) noise) — what the digital backend serves
 /// exactly and what drift decays from.
@@ -180,6 +199,9 @@ pub struct DriftMonitor {
     /// weights, which are fixed between (re)programmings — halves the
     /// per-tick probe cost (cleared by [`DriftMonitor::record_migrated`])
     ref_cache: Vec<Vec<Option<(Vec<f32>, f64)>>>,
+    /// slots whose recorded values predate a migration and await a
+    /// fresh probe (see [`DriftMonitor::record_migrated`])
+    stale: Vec<Vec<bool>>,
 }
 
 impl DriftMonitor {
@@ -203,6 +225,7 @@ impl DriftMonitor {
             deviations: vec![vec![0.0; n_experts]; n_layers],
             norm_ratios: vec![vec![1.0; n_experts]; n_layers],
             ref_cache: vec![vec![None; n_experts]; n_layers],
+            stale: vec![vec![false; n_experts]; n_layers],
         }
     }
 
@@ -242,7 +265,7 @@ impl DriftMonitor {
                 d,
                 m,
             );
-            let nn = maxnn(&reference.up, &reference.gate, &reference.down, d, m);
+            let nn = maxnn_score(&reference.up, &reference.gate, &reference.down, d, m);
             *slot = Some((want, nn));
         }
         let (want, ref_nn) = slot.as_ref().expect("reference cache just filled");
@@ -254,22 +277,34 @@ impl DriftMonitor {
         }
         let dev = (num / den.max(1e-24)).sqrt();
         self.deviations[layer][expert] = dev;
-        self.norm_ratios[layer][expert] = maxnn(up, gate, down, d, m) / ref_nn.max(1e-24);
+        self.norm_ratios[layer][expert] = maxnn_score(up, gate, down, d, m) / ref_nn.max(1e-24);
+        self.stale[layer][expert] = false;
         dev
     }
 
-    /// Mark an expert as freshly migrated / reprogrammed: deviation 0,
-    /// norm ratio 1 (its serving weights equal the reference again).
-    /// Also drops the expert's memoized reference probe, so a caller
-    /// that re-programs with *different* reference weights stays
-    /// correct on the next probe.
+    /// Mark an expert as freshly migrated / reprogrammed: the slot is
+    /// flagged **stale** and its memoized reference probe dropped, so
+    /// the next [`DriftMonitor::probe`] re-measures from scratch
+    /// (including against re-programmed reference weights).
+    ///
+    /// The old behavior zeroed the deviation outright — correct when
+    /// drift was the only imperfection (a reprogrammed tile really is
+    /// exact until the clock advances), but wrong for cycle-to-cycle
+    /// nonidealities like read noise, which perturb the very next
+    /// inference regardless of any clock reset. A migrated expert's
+    /// health is therefore *unknown* until re-probed: stale slots keep
+    /// their last measured values for inspection but are excluded from
+    /// [`DriftMonitor::max_deviation`] and report 0.0 through
+    /// [`DriftMonitor::planning_deviations`] so the re-placer never
+    /// acts on pre-migration numbers.
     pub fn record_migrated(&mut self, layer: usize, expert: usize) {
-        self.deviations[layer][expert] = 0.0;
-        self.norm_ratios[layer][expert] = 1.0;
+        self.stale[layer][expert] = true;
         self.ref_cache[layer][expert] = None;
     }
 
     /// Last measured relative output deviation per `[layer][expert]`.
+    /// Stale slots (see [`DriftMonitor::record_migrated`]) retain their
+    /// pre-migration values.
     pub fn deviations(&self) -> &[Vec<f64>] {
         &self.deviations
     }
@@ -279,22 +314,42 @@ impl DriftMonitor {
         &self.norm_ratios
     }
 
-    /// Largest recorded deviation across all experts — the headline
-    /// "sentinel deviation" serving metric.
+    /// Does this slot's recorded deviation predate a migration? Stale
+    /// slots need a fresh [`DriftMonitor::probe`] before their values
+    /// mean anything again.
+    pub fn needs_probe(&self, layer: usize, expert: usize) -> bool {
+        self.stale[layer][expert]
+    }
+
+    /// The deviation grid the re-placer may act on: measured values for
+    /// fresh slots, 0.0 for stale ones (a just-migrated expert must not
+    /// be re-migrated on pre-migration evidence).
+    pub fn planning_deviations(&self) -> Vec<Vec<f64>> {
+        self.deviations
+            .iter()
+            .zip(&self.stale)
+            .map(|(l, s)| {
+                l.iter()
+                    .zip(s)
+                    .map(|(&d, &st)| if st { 0.0 } else { d })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Largest *currently valid* deviation across all experts — the
+    /// headline "sentinel deviation" serving metric. Stale slots are
+    /// skipped: their numbers describe weights that are no longer
+    /// serving.
     pub fn max_deviation(&self) -> f64 {
         self.deviations
             .iter()
-            .flat_map(|l| l.iter().copied())
+            .zip(&self.stale)
+            .flat_map(|(l, s)| l.iter().zip(s))
+            .filter(|&(_, &st)| !st)
+            .map(|(&d, _)| d)
             .fold(0.0, f64::max)
     }
-}
-
-/// MaxNNScore (eq 7) of one expert's three projections.
-fn maxnn(up: &[f32], gate: &[f32], down: &[f32], d: usize, m: usize) -> f64 {
-    let mx = |w: &[f32], r: usize, c: usize| {
-        tensor::col_norms(w, r, c).into_iter().fold(0.0, f64::max)
-    };
-    mx(up, d, m) * mx(gate, d, m) * mx(down, m, d)
 }
 
 #[cfg(test)]
@@ -410,11 +465,87 @@ mod tests {
         assert!(d_late > d_early, "{d_late} !> {d_early}");
         // uniform decay shrinks every neuron norm: proxy ratio < 1
         assert!(mon.norm_ratios()[0][0] < 1.0);
-        // migration resets the slot
+        // migration marks the slot stale: the last measurement stays
+        // inspectable but no longer counts as current or plannable
         mon.record_migrated(0, 0);
-        assert_eq!(mon.deviations()[0][0], 0.0);
-        assert_eq!(mon.norm_ratios()[0][0], 1.0);
+        assert!(mon.needs_probe(0, 0));
+        assert_eq!(mon.deviations()[0][0], d_late);
+        assert_eq!(mon.planning_deviations()[0][0], 0.0);
         assert_eq!(mon.max_deviation(), 0.0);
+        // a fresh probe on clean weights re-validates the slot
+        let d_clean = dev_at(0);
+        assert_eq!(d_clean, 0.0);
+        assert!(!mon.needs_probe(0, 0));
+        assert_eq!(mon.planning_deviations()[0][0], 0.0);
+    }
+
+    #[test]
+    fn migrated_slot_reprobes_instead_of_zeroing() {
+        // regression for the drift-only assumption: record_migrated used
+        // to hard-zero the deviation, which is a lie under cycle-to-cycle
+        // nonidealities (read noise hits the very next inference despite
+        // the clock reset). post-migration the slot must (a) not report
+        // its stale number as current, and (b) measure the true nonzero
+        // deviation on the next probe — including against re-programmed
+        // reference weights (the ref cache must not survive migration).
+        let (d, m) = (6, 4);
+        let mut rng = Prng::new(21);
+        let mut mk = |scale: f32| ExpertHostWeights {
+            up: (0..d * m).map(|_| rng.gaussian_f32() * scale).collect(),
+            gate: (0..d * m).map(|_| rng.gaussian_f32() * scale).collect(),
+            down: (0..m * d).map(|_| rng.gaussian_f32() * scale).collect(),
+        };
+        let reference = mk(0.3);
+        let reprogrammed = mk(0.4);
+        let mut mon = DriftMonitor::new(1, 1, d, m, 4, 3);
+
+        // noisy serving weights vs the original reference
+        let noise = crate::aimc::profile::ReadNoise {
+            sigma: 0.1,
+            conductance_dependent: false,
+            tile: 4,
+            seed: 17,
+        };
+        let perturbed = |host: &ExpertHostWeights, cycle: u64| {
+            let site = |mat| Site { layer: 0, expert: 0, mat };
+            let ck = Clock { elapsed_tokens: 0, birth_tokens: 0, cycle };
+            let mut up = host.up.clone();
+            let mut gate = host.gate.clone();
+            let mut down = host.down.clone();
+            noise.perturb(&mut up, d, m, site(0), ck);
+            noise.perturb(&mut gate, d, m, site(1), ck);
+            noise.perturb(&mut down, m, d, site(2), ck);
+            (up, gate, down)
+        };
+        let (up, gate, down) = perturbed(&reference, 1);
+        let before = mon.probe(0, 0, (&up, &gate, &down), &reference);
+        assert!(before > 0.0);
+
+        // migrate: weights reprogrammed to a *different* reference
+        mon.record_migrated(0, 0);
+        assert!(mon.needs_probe(0, 0));
+        assert_eq!(mon.max_deviation(), 0.0, "stale value leaked into max");
+
+        // next probe: still noisy (no drift clock involved) — the
+        // deviation must come back nonzero against the NEW reference
+        let (up, gate, down) = perturbed(&reprogrammed, 2);
+        let after = mon.probe(0, 0, (&up, &gate, &down), &reprogrammed);
+        assert!(after > 0.0, "post-migration probe zeroed under read noise");
+        assert!(!mon.needs_probe(0, 0));
+        assert_eq!(mon.max_deviation(), after);
+        // and the exact reprogrammed weights probe clean, proving the
+        // reference cache really was rebuilt from the new weights
+        let exact = mon.probe(
+            0,
+            0,
+            (
+                reprogrammed.up.as_slice(),
+                reprogrammed.gate.as_slice(),
+                reprogrammed.down.as_slice(),
+            ),
+            &reprogrammed,
+        );
+        assert_eq!(exact, 0.0);
     }
 
     #[test]

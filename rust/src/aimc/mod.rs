@@ -19,6 +19,12 @@
 //!   that tracks per-expert degradation at serve time via sentinel
 //!   probes against the digital reference path — the runtime signal
 //!   behind live expert re-placement (`coordinator::Engine::maintenance`).
+//! - [`profile`] — the device nonideality library beyond drift
+//!   ([`NonidealityModel`]: read noise, programming error, ADC clip,
+//!   IR drop — drift implements the same trait) and the
+//!   [`DeviceProfile`] registry of named model stacks (`pcm-drift`,
+//!   `reram-noisy`, `adc-limited`, `worst-case`) the engine replays at
+//!   maintenance time.
 //! - [`calib`] — κ/λ calibration à la §2.2 + Appendix B.
 //! - [`tiles`] — crossbar tile geometry and the tile allocator mapping
 //!   weight matrices onto 512×512 arrays.
@@ -28,6 +34,7 @@
 pub mod calib;
 pub mod drift;
 pub mod energy;
+pub mod profile;
 pub mod program;
 pub mod quant;
 pub mod tiles;
@@ -35,6 +42,10 @@ pub mod tiles;
 pub use calib::Calibrator;
 pub use drift::{DriftModel, DriftMonitor, ExpertHostWeights};
 pub use energy::AnalogCost;
+pub use profile::{
+    maxnn_score, selection_predictiveness, AdcClip, Clock, DeviceProfile, IrDrop,
+    NonidealityModel, ProgrammingError, ReadNoise, Site,
+};
 pub use program::{program_matrix, programming_sigma, NoiseModel};
 pub use quant::{adc_quant, dac_quant};
 pub use tiles::{TileAllocator, TileMap};

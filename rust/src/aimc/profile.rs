@@ -1,0 +1,829 @@
+//! Device nonideality profiles — the library of analog imperfections
+//! beyond conductance drift, and the named stacks the runtime deploys.
+//!
+//! The paper's selection rule (max-neuron-norm keeps the noise-sensitive
+//! experts digital, eqs 6-7) was validated in this repo against a single
+//! device imperfection: the power-law drift of [`crate::aimc::drift`].
+//! Real analog chips misbehave in more ways — the hardware-aware-training
+//! survey (arXiv 2302.08469) catalogs cycle-to-cycle read noise,
+//! programming error, ADC saturation, and IR drop as the dominant ones.
+//! This module turns each of those into a [`NonidealityModel`]:
+//! a deterministic, seed-addressed, per-tile weight perturbation with the
+//! same replay guarantees as [`DriftModel`](crate::aimc::DriftModel)
+//! (which also implements the trait), so the maintenance loop
+//! ([`Engine::maintenance`](crate::coordinator::Engine::maintenance)) and
+//! the [`DriftMonitor`](crate::aimc::DriftMonitor) sentinel probes react
+//! to *any* stack of imperfections, not just drift.
+//!
+//! A [`DeviceProfile`] is a named, ordered stack of models. Presets
+//! ([`DeviceProfile::preset`]) describe recognizable device families:
+//!
+//! ```text
+//! ideal        []                                        the digital fiction
+//! pcm-drift    [drift ν=0.3, programming-error 0.5]      a PCM chip aging under load
+//! reram-noisy  [read-noise σ=0.08 conductance-dep.]      a ReRAM chip with noisy reads
+//! adc-limited  [read-noise σ=0.01, adc-clip 0.5·FSR]     a converter-starved readout
+//! worst-case   [drift, prog-err, read-noise, ir-drop, adc-clip]
+//! ```
+//!
+//! Order matters where models do not commute: multiplicative stages
+//! (drift, IR drop) commute with each other up to f32 rounding, but
+//! [`AdcClip`] saturates whatever precedes it and must come **last** in a
+//! stack (the converter is physically the final element of the readout
+//! chain); the presets follow that convention and the property tests pin
+//! which compositions are order-invariant.
+//!
+//! Determinism contract (shared with `DriftModel`): every stochastic
+//! model derives one [`Prng`] stream per (layer, expert, matrix,
+//! row-tile, col-tile, epoch) via [`fnv1a`](crate::util::fnv1a) over the
+//! little-endian coordinates XOR the model seed. The *epoch* selects the
+//! replay semantics — [`ReadNoise`] folds in [`Clock::cycle`] (a fresh
+//! realisation every maintenance tick: cycle-to-cycle noise),
+//! [`ProgrammingError`] folds in [`Clock::birth_tokens`] (one realisation
+//! per (re)programming event: write-time error), and the deterministic
+//! models ([`AdcClip`], [`IrDrop`]) draw nothing at all.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::aimc::program::programming_sigma;
+use crate::tensor;
+use crate::util::Prng;
+
+/// Which matrix of the model a perturbation targets. The coordinates
+/// address the seed streams, so two sites never share a realisation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Site {
+    /// Owning transformer layer.
+    pub layer: usize,
+    /// Owning expert index within the layer.
+    pub expert: usize,
+    /// Projection tag: 0 = up, 1 = gate, 2 = down.
+    pub mat: usize,
+}
+
+/// The clocks a perturbation may depend on, all on the serving
+/// token-count clock (the engine's wall-time proxy).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Clock {
+    /// Tokens since the tile was last (re)programmed — drift's time axis.
+    pub elapsed_tokens: u64,
+    /// Clock value at the last (re)programming — the epoch of write-time
+    /// perturbations ([`ProgrammingError`] redraws only when this moves).
+    pub birth_tokens: u64,
+    /// Current clock value — the epoch of cycle-to-cycle perturbations
+    /// ([`ReadNoise`] redraws whenever this moves).
+    pub cycle: u64,
+}
+
+/// One composable analog device imperfection: a deterministic in-place
+/// perturbation of a row-major weight matrix.
+///
+/// Implementations must be pure functions of `(weights, dims, site,
+/// clock, own config)` — replaying a serve run replays its nonideality
+/// realisation exactly, which is what makes the bench matrices and the
+/// golden regression fixtures reproducible.
+pub trait NonidealityModel: std::fmt::Debug + Send + Sync {
+    /// Stable short name for registry listings and reports.
+    fn name(&self) -> &'static str;
+
+    /// Does this model perturb at all? Disabled models make
+    /// [`NonidealityModel::perturb`] the identity at every clock value
+    /// (pinned by the identity-at-zero-magnitude property tests).
+    fn enabled(&self) -> bool;
+
+    /// Perturb a row-major `[d, n]` matrix in place.
+    fn perturb(&self, w: &mut [f32], d: usize, n: usize, site: Site, clock: Clock);
+}
+
+/// Seed-addressed per-tile stream: one independent [`Prng`] per
+/// (site, row-tile, col-tile, epoch), exactly the `DriftModel::tile_nu`
+/// construction with the epoch appended.
+fn tile_rng(seed: u64, site: Site, rt: usize, ct: usize, epoch: u64) -> Prng {
+    let tag = crate::util::fnv1a(
+        [
+            site.layer as u64,
+            site.expert as u64,
+            site.mat as u64,
+            rt as u64,
+            ct as u64,
+            epoch,
+        ]
+        .iter()
+        .flat_map(|w| w.to_le_bytes()),
+    );
+    Prng::new(seed ^ tag)
+}
+
+/// Walk a `[d, n]` matrix in `tile × tile` blocks, handing each block's
+/// bounds and tile coordinates to `f`.
+fn for_each_tile(d: usize, n: usize, tile: usize, mut f: impl FnMut(usize, usize, usize, usize)) {
+    let tile = tile.max(1);
+    let mut r0 = 0;
+    while r0 < d {
+        let r1 = (r0 + tile).min(d);
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + tile).min(n);
+            f(r0, r1, c0, c1);
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+}
+
+/// Cycle-to-cycle read noise: every read of the crossbar sees a fresh
+/// Gaussian perturbation of the conductances (2302.08469 §2, the
+/// dominant ReRAM imperfection). A new realisation is drawn whenever
+/// [`Clock::cycle`] moves; within one cycle the perturbation is fixed,
+/// so replaying a maintenance tick replays its noise.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadNoise {
+    /// Noise std. Absolute in weight units, or relative to each
+    /// weight's magnitude when `conductance_dependent` (σ_ij = σ·|W_ij|,
+    /// the "multiplicative" variant of the survey). 0.0 disables.
+    pub sigma: f64,
+    /// Scale σ by |W_ij| (larger conductances are noisier).
+    pub conductance_dependent: bool,
+    /// Crossbar tile side (rows × cols per independent noise stream).
+    pub tile: usize,
+    /// Seed of the per-tile noise streams.
+    pub seed: u64,
+}
+
+impl Default for ReadNoise {
+    fn default() -> Self {
+        ReadNoise { sigma: 0.0, conductance_dependent: false, tile: 512, seed: 0 }
+    }
+}
+
+impl ReadNoise {
+    /// Conductance-dependent read noise of relative std `sigma`.
+    pub fn relative(sigma: f64) -> ReadNoise {
+        ReadNoise { sigma, conductance_dependent: true, ..Default::default() }
+    }
+}
+
+impl NonidealityModel for ReadNoise {
+    fn name(&self) -> &'static str {
+        "read-noise"
+    }
+
+    fn enabled(&self) -> bool {
+        self.sigma > 0.0
+    }
+
+    fn perturb(&self, w: &mut [f32], d: usize, n: usize, site: Site, clock: Clock) {
+        assert_eq!(w.len(), d * n, "read-noise matrix buffer size mismatch");
+        if !self.enabled() {
+            return;
+        }
+        let tile = self.tile.max(1);
+        for_each_tile(d, n, tile, |r0, r1, c0, c1| {
+            // row-major element order within the tile
+            let mut rng = tile_rng(self.seed, site, r0 / tile, c0 / tile, clock.cycle);
+            for r in r0..r1 {
+                for v in &mut w[r * n + c0..r * n + c1] {
+                    let g = rng.gaussian();
+                    let s = if self.conductance_dependent {
+                        self.sigma * (*v as f64).abs()
+                    } else {
+                        self.sigma
+                    };
+                    *v = (*v as f64 + g * s) as f32;
+                }
+            }
+        });
+    }
+}
+
+/// Write-time programming error: the eq (3) σ(W) perturbation drawn
+/// **once per (re)programming event** — the realisation is keyed on
+/// [`Clock::birth_tokens`], so re-materializing the same programmed
+/// state replays the same error, and a live migration (which resets the
+/// birth clock) draws a fresh one, exactly like a real reprogramming.
+///
+/// This is the maintenance-path twin of
+/// [`program_matrix`](crate::aimc::program::program_matrix) (which
+/// perturbs the deployed parameters once at placement time): same
+/// σ_ij = eq (3) magnitude with per-(tile, column) Wmax, but
+/// site-addressed rather than tensor-name-addressed, so it can be
+/// re-derived per expert without replaying the whole parameter store.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgrammingError {
+    /// Scalar multiplier on the eq (3) σ (1.0 = the as-fitted PCM chip;
+    /// 0.0 disables).
+    pub scale: f64,
+    /// NVM tile side for the per-column Wmax convention.
+    pub tile: usize,
+    /// Seed of the per-tile error streams.
+    pub seed: u64,
+}
+
+impl Default for ProgrammingError {
+    fn default() -> Self {
+        ProgrammingError { scale: 0.0, tile: 512, seed: 0 }
+    }
+}
+
+impl ProgrammingError {
+    /// Programming error at `scale`× the eq (3) fit.
+    pub fn with_scale(scale: f64) -> ProgrammingError {
+        ProgrammingError { scale, ..Default::default() }
+    }
+}
+
+impl NonidealityModel for ProgrammingError {
+    fn name(&self) -> &'static str {
+        "programming-error"
+    }
+
+    fn enabled(&self) -> bool {
+        self.scale > 0.0
+    }
+
+    fn perturb(&self, w: &mut [f32], d: usize, n: usize, site: Site, clock: Clock) {
+        assert_eq!(w.len(), d * n, "programming-error matrix buffer size mismatch");
+        if !self.enabled() {
+            return;
+        }
+        let tile = self.tile.max(1);
+        for_each_tile(d, n, tile, |r0, r1, c0, c1| {
+            // column-major within the tile: the per-column Wmax
+            // convention of program_matrix (eq 3)
+            let mut rng = tile_rng(self.seed, site, r0 / tile, c0 / tile, clock.birth_tokens);
+            for c in c0..c1 {
+                let mut w_max = 0f64;
+                for r in r0..r1 {
+                    w_max = w_max.max((w[r * n + c] as f64).abs());
+                }
+                if w_max <= 0.0 {
+                    continue;
+                }
+                for r in r0..r1 {
+                    let v = w[r * n + c] as f64;
+                    let sigma = programming_sigma(v, w_max) * self.scale;
+                    w[r * n + c] = (v + rng.gaussian() * sigma) as f32;
+                }
+            }
+        });
+    }
+}
+
+/// ADC saturation: the readout converter clips at a programmable
+/// full-scale range, so any conductance whose (noisy, dropped, drifted)
+/// effective weight exceeds the range reads back at the rail
+/// (2302.08469 §2.3, output-referred saturation folded onto the weight
+/// domain). Deterministic — no seed stream.
+///
+/// **Not** order-invariant with stochastic stages: clip-then-noise can
+/// exceed the range again, noise-then-clip cannot. Stacks must place the
+/// clip last (the converter is the final element of the readout chain);
+/// the presets do, and a property test documents the asymmetry.
+#[derive(Clone, Copy, Debug)]
+pub struct AdcClip {
+    /// Full-scale range. Absolute in weight units, or a fraction of the
+    /// matrix's max |W| when `relative` (so the clip tracks each
+    /// matrix's natural scale). Non-positive disables the stage.
+    pub fsr: f64,
+    /// Interpret `fsr` as a fraction of the matrix's max |W|.
+    pub relative: bool,
+}
+
+impl Default for AdcClip {
+    fn default() -> Self {
+        AdcClip { fsr: 0.0, relative: false }
+    }
+}
+
+impl AdcClip {
+    /// Clip at `fsr` × the matrix's max |W|.
+    pub fn relative(fsr: f64) -> AdcClip {
+        AdcClip { fsr, relative: true }
+    }
+
+    /// The effective clip bound for one matrix.
+    pub fn bound(&self, w: &[f32]) -> f64 {
+        if self.relative {
+            let mx = w.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            self.fsr * mx as f64
+        } else {
+            self.fsr
+        }
+    }
+}
+
+impl NonidealityModel for AdcClip {
+    fn name(&self) -> &'static str {
+        "adc-clip"
+    }
+
+    fn enabled(&self) -> bool {
+        self.fsr > 0.0
+    }
+
+    fn perturb(&self, w: &mut [f32], d: usize, n: usize, _site: Site, _clock: Clock) {
+        assert_eq!(w.len(), d * n, "adc-clip matrix buffer size mismatch");
+        if !self.enabled() {
+            return;
+        }
+        let bound = self.bound(w) as f32;
+        for v in w.iter_mut() {
+            *v = v.clamp(-bound, bound);
+        }
+    }
+}
+
+/// IR drop: parasitic wire resistance attenuates cells far from the
+/// row/column drivers (2302.08469 §2.4). Modeled as a deterministic
+/// position-dependent scale `1 − strength · (ρ·r/(d−1) + (1−ρ)·c/(n−1))`
+/// clamped at 0 — monotone non-increasing in the row distance from the
+/// driver (and in column distance when `row_weight < 1`).
+#[derive(Clone, Copy, Debug)]
+pub struct IrDrop {
+    /// Attenuation at the far corner of the array (0.0 disables; 1.0
+    /// silences the far corner completely).
+    pub strength: f64,
+    /// ρ — the share of the attenuation attributed to row distance
+    /// (the rest follows column distance). 0.5 by default.
+    pub row_weight: f64,
+}
+
+impl Default for IrDrop {
+    fn default() -> Self {
+        IrDrop { strength: 0.0, row_weight: 0.5 }
+    }
+}
+
+impl IrDrop {
+    /// IR drop with far-corner attenuation `strength` and the default
+    /// even row/column split.
+    pub fn with_strength(strength: f64) -> IrDrop {
+        IrDrop { strength, ..Default::default() }
+    }
+
+    /// The attenuation factor of cell `(r, c)` in a `[d, n]` array.
+    pub fn factor(&self, r: usize, c: usize, d: usize, n: usize) -> f64 {
+        let rho = self.row_weight.clamp(0.0, 1.0);
+        let rd = r as f64 / (d.saturating_sub(1).max(1)) as f64;
+        let cd = c as f64 / (n.saturating_sub(1).max(1)) as f64;
+        (1.0 - self.strength * (rho * rd + (1.0 - rho) * cd)).max(0.0)
+    }
+}
+
+impl NonidealityModel for IrDrop {
+    fn name(&self) -> &'static str {
+        "ir-drop"
+    }
+
+    fn enabled(&self) -> bool {
+        self.strength > 0.0
+    }
+
+    fn perturb(&self, w: &mut [f32], d: usize, n: usize, _site: Site, _clock: Clock) {
+        assert_eq!(w.len(), d * n, "ir-drop matrix buffer size mismatch");
+        if !self.enabled() {
+            return;
+        }
+        for r in 0..d {
+            for c in 0..n {
+                let f = self.factor(r, c, d, n) as f32;
+                w[r * n + c] *= f;
+            }
+        }
+    }
+}
+
+/// A named, ordered stack of [`NonidealityModel`]s — everything the
+/// runtime knows about one device family. Selected via
+/// `EngineBuilder::device_profile` and `hetmoe serve/bench --profile`;
+/// the maintenance loop re-derives each tracked expert's effective
+/// weights by replaying the stack over the clean host reference every
+/// tick, so sentinel deviations reflect the *composed* imperfection.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    name: String,
+    seed: u64,
+    models: Vec<Arc<dyn NonidealityModel>>,
+}
+
+impl Default for DeviceProfile {
+    fn default() -> Self {
+        DeviceProfile::ideal()
+    }
+}
+
+impl DeviceProfile {
+    /// The empty stack: a perfect device (every perturbation disabled).
+    pub fn ideal() -> DeviceProfile {
+        DeviceProfile { name: "ideal".into(), seed: 0, models: Vec::new() }
+    }
+
+    /// An empty named profile to push models onto via
+    /// [`DeviceProfile::model`].
+    pub fn named(name: impl Into<String>) -> DeviceProfile {
+        DeviceProfile { name: name.into(), seed: 0, models: Vec::new() }
+    }
+
+    /// Append a model to the stack (applied in push order).
+    pub fn model(mut self, m: impl NonidealityModel + 'static) -> DeviceProfile {
+        self.models.push(Arc::new(m));
+        self
+    }
+
+    /// Set the profile-level seed folded into the drift monitor's
+    /// sentinel stream (model seeds are per-model).
+    pub fn with_seed(mut self, seed: u64) -> DeviceProfile {
+        self.seed = seed;
+        self
+    }
+
+    /// Registry name of this profile.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Profile-level seed (sentinel stream addressing).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The stack, in application order.
+    pub fn models(&self) -> &[Arc<dyn NonidealityModel>] {
+        &self.models
+    }
+
+    /// Does any stage perturb at all? Mirrors `DriftModel::enabled`:
+    /// a disabled profile makes maintenance materialization a no-op.
+    pub fn enabled(&self) -> bool {
+        self.models.iter().any(|m| m.enabled())
+    }
+
+    /// Replay the whole stack over a row-major `[d, n]` matrix in place,
+    /// in push order.
+    pub fn perturb_matrix(
+        &self,
+        w: &mut [f32],
+        d: usize,
+        n: usize,
+        site: Site,
+        clock: Clock,
+    ) {
+        for m in &self.models {
+            if m.enabled() {
+                m.perturb(w, d, n, site, clock);
+            }
+        }
+    }
+
+    /// The preset registry. Magnitudes are soak-test aggressive (like
+    /// the drift bench's ν = 0.4), not as-fitted physical values: the
+    /// point of the matrix is to exercise the promote path and the
+    /// selection rule within a CI-sized token budget.
+    pub fn preset(name: &str) -> Result<DeviceProfile> {
+        Ok(match name {
+            "ideal" => DeviceProfile::ideal(),
+            // a PCM chip aging under load: power-law conductance decay
+            // over a write-time programming error
+            "pcm-drift" => DeviceProfile::named("pcm-drift")
+                .model(crate::aimc::DriftModel {
+                    seed: 0xD01F,
+                    ..crate::aimc::DriftModel::with_nu(0.3)
+                })
+                .model(ProgrammingError { scale: 0.5, seed: 0x5C01, ..Default::default() }),
+            // a ReRAM chip with noisy reads and no drift: every cycle
+            // sees a fresh conductance-dependent Gaussian
+            "reram-noisy" => DeviceProfile::named("reram-noisy")
+                .model(ReadNoise { seed: 0x2EAD, ..ReadNoise::relative(0.08) }),
+            // a converter-starved readout: mild read noise saturated at
+            // half the natural full-scale range (clip last — the ADC is
+            // the final element of the chain)
+            "adc-limited" => DeviceProfile::named("adc-limited")
+                .model(ReadNoise {
+                    sigma: 0.01,
+                    conductance_dependent: false,
+                    seed: 0xADC0,
+                    ..Default::default()
+                })
+                .model(AdcClip::relative(0.5)),
+            // everything at once, each stage aggressive
+            "worst-case" => DeviceProfile::named("worst-case")
+                .model(crate::aimc::DriftModel {
+                    seed: 0xBAD0,
+                    ..crate::aimc::DriftModel::with_nu(0.4)
+                })
+                .model(ProgrammingError { scale: 0.5, seed: 0xBAD1, ..Default::default() })
+                .model(ReadNoise { seed: 0xBAD2, ..ReadNoise::relative(0.08) })
+                .model(IrDrop::with_strength(0.15))
+                .model(AdcClip::relative(0.75)),
+            other => bail!(
+                "unknown device profile '{other}' (known: {})",
+                DeviceProfile::preset_names().join(", ")
+            ),
+        })
+    }
+
+    /// Every preset name, in registry order.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["ideal", "pcm-drift", "reram-noisy", "adc-limited", "worst-case"]
+    }
+}
+
+/// MaxNNScore (eq 7) of one expert's three projections — the static
+/// selection metric whose predictiveness the profile stress matrix
+/// scores against measured degradation.
+pub fn maxnn_score(up: &[f32], gate: &[f32], down: &[f32], d: usize, m: usize) -> f64 {
+    let mx = |w: &[f32], r: usize, c: usize| {
+        tensor::col_norms(w, r, c).into_iter().fold(0.0, f64::max)
+    };
+    mx(up, d, m) * mx(gate, d, m) * mx(down, m, d)
+}
+
+/// Selection-rule predictiveness: Spearman rank correlation between the
+/// static MaxNNScore of each expert and its measured degradation under a
+/// profile. +1 means the paper's rule ranks experts exactly by how much
+/// the device hurts them; ~0 means the rule carries no signal for this
+/// imperfection (the number the `BENCH_profiles.json` guard watches).
+pub fn selection_predictiveness(maxnn: &[f64], degradation: &[f64]) -> f64 {
+    crate::util::stats::spearman(maxnn, degradation)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_matrix(rng: &mut Prng, d: usize, n: usize) -> Vec<f32> {
+        (0..d * n).map(|_| rng.gaussian_f32() * 0.3).collect()
+    }
+
+    fn site(rng: &mut Prng) -> Site {
+        Site { layer: rng.below(4), expert: rng.below(8), mat: rng.below(3) }
+    }
+
+    fn clock(rng: &mut Prng) -> Clock {
+        let birth = rng.below(1 << 16) as u64;
+        Clock {
+            birth_tokens: birth,
+            elapsed_tokens: rng.below(1 << 16) as u64,
+            cycle: birth + rng.below(1 << 16) as u64,
+        }
+    }
+
+    #[test]
+    fn prop_models_are_seed_deterministic() {
+        // same seed → byte-identical perturbation; a different model
+        // seed → a different realisation (for the stochastic models)
+        crate::util::proptest::check("profile seed determinism", 40, |rng| {
+            let (d, n) = (1 + rng.below(12), 1 + rng.below(12));
+            let w0 = test_matrix(rng, d, n);
+            let st = site(rng);
+            let ck = clock(rng);
+            let seed = rng.next_u64();
+            let stochastic: [Box<dyn NonidealityModel>; 2] = [
+                Box::new(ReadNoise { sigma: 0.1, conductance_dependent: false, tile: 4, seed }),
+                Box::new(ProgrammingError { scale: 1.0, tile: 4, seed }),
+            ];
+            for m in &stochastic {
+                let mut a = w0.clone();
+                let mut b = w0.clone();
+                m.perturb(&mut a, d, n, st, ck);
+                m.perturb(&mut b, d, n, st, ck);
+                crate::prop_assert!(a == b, "{} not deterministic", m.name());
+                crate::prop_assert!(a != w0, "{} did not perturb", m.name());
+            }
+            let mut a = w0.clone();
+            let mut b = w0.clone();
+            ReadNoise { sigma: 0.1, conductance_dependent: false, tile: 4, seed }
+                .perturb(&mut a, d, n, st, ck);
+            ReadNoise {
+                sigma: 0.1,
+                conductance_dependent: false,
+                tile: 4,
+                seed: seed ^ 1,
+            }
+            .perturb(&mut b, d, n, st, ck);
+            crate::prop_assert!(a != b, "read-noise ignored its seed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_identity_at_zero_magnitude() {
+        crate::util::proptest::check("profile zero magnitude identity", 40, |rng| {
+            let (d, n) = (1 + rng.below(10), 1 + rng.below(10));
+            let w0 = test_matrix(rng, d, n);
+            let st = site(rng);
+            let ck = clock(rng);
+            let zeros: [Box<dyn NonidealityModel>; 5] = [
+                Box::new(ReadNoise::default()),
+                Box::new(ProgrammingError::default()),
+                Box::new(AdcClip::default()),
+                Box::new(IrDrop::default()),
+                Box::new(crate::aimc::DriftModel::default()),
+            ];
+            for m in &zeros {
+                crate::prop_assert!(!m.enabled(), "{} enabled at zero magnitude", m.name());
+                let mut w = w0.clone();
+                m.perturb(&mut w, d, n, st, ck);
+                crate::prop_assert!(w == w0, "{} perturbed at zero magnitude", m.name());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_adc_clip_bounded_by_full_scale_range() {
+        crate::util::proptest::check("adc clip bound", 60, |rng| {
+            let (d, n) = (1 + rng.below(10), 1 + rng.below(10));
+            let mut w = test_matrix(rng, d, n);
+            let clip = if rng.below(2) == 0 {
+                AdcClip { fsr: 0.05 + rng.uniform() * 0.5, relative: false }
+            } else {
+                AdcClip::relative(0.1 + rng.uniform() * 0.8)
+            };
+            let bound = clip.bound(&w);
+            clip.perturb(&mut w, d, n, site(rng), clock(rng));
+            for &v in &w {
+                crate::prop_assert!(
+                    (v as f64).abs() <= bound + 1e-12,
+                    "|{v}| exceeds full-scale {bound}"
+                );
+            }
+            // relative clip keeps at least the rail value representable
+            if clip.relative {
+                let mx = w.iter().fold(0f32, |a, &v| a.max(v.abs()));
+                crate::prop_assert!((mx as f64) <= bound + 1e-12, "rail exceeded");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ir_drop_monotone_in_row_distance() {
+        crate::util::proptest::check("ir drop row monotone", 60, |rng| {
+            let (d, n) = (2 + rng.below(12), 1 + rng.below(8));
+            let drop = IrDrop { strength: rng.uniform(), row_weight: rng.uniform() };
+            // constant-magnitude input isolates the positional factor
+            let mut w = vec![1.0f32; d * n];
+            drop.perturb(&mut w, d, n, site(rng), clock(rng));
+            for c in 0..n {
+                for r in 1..d {
+                    crate::prop_assert!(
+                        w[r * n + c] <= w[(r - 1) * n + c] + 1e-7,
+                        "attenuation not monotone in row distance at ({r},{c})"
+                    );
+                    crate::prop_assert!(w[r * n + c] >= 0.0, "negative attenuation");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_multiplicative_stages_commute_adc_clip_does_not() {
+        // drift and IR drop are elementwise scalings independent of the
+        // weight values → order-invariant up to f32 rounding. AdcClip is
+        // NOT order-invariant with stochastic stages (clip-then-noise
+        // can exceed the range again), which is why every preset places
+        // the clip last.
+        crate::util::proptest::check("composition order", 30, |rng| {
+            let (d, n) = (2 + rng.below(8), 2 + rng.below(8));
+            let w0 = test_matrix(rng, d, n);
+            let st = site(rng);
+            let ck = Clock {
+                elapsed_tokens: 4096,
+                birth_tokens: 0,
+                cycle: 4096,
+            };
+            let drift = crate::aimc::DriftModel {
+                nu: 0.3,
+                nu_jitter: 0.03,
+                t0_tokens: 256,
+                tile: 4,
+                seed: rng.next_u64(),
+            };
+            let drop = IrDrop::with_strength(0.3);
+            let mut ab = w0.clone();
+            drift.perturb(&mut ab, d, n, st, ck);
+            drop.perturb(&mut ab, d, n, st, ck);
+            let mut ba = w0.clone();
+            drop.perturb(&mut ba, d, n, st, ck);
+            drift.perturb(&mut ba, d, n, st, ck);
+            for (x, y) in ab.iter().zip(&ba) {
+                crate::prop_assert!(
+                    (x - y).abs() <= 1e-5 * x.abs().max(1.0),
+                    "multiplicative stages did not commute: {x} vs {y}"
+                );
+            }
+            // the clip asymmetry: saturate hard, then add noise — some
+            // weight must escape the rail again (noise std 10× the rail,
+            // so the escape probability per element is ~0.92 and the
+            // whole ≥4-element matrix staying railed is ~4e-5)
+            let noise = ReadNoise {
+                sigma: 0.5,
+                conductance_dependent: false,
+                tile: 4,
+                seed: rng.next_u64(),
+            };
+            let clip = AdcClip { fsr: 0.05, relative: false };
+            let mut clip_then_noise = w0.clone();
+            clip.perturb(&mut clip_then_noise, d, n, st, ck);
+            noise.perturb(&mut clip_then_noise, d, n, st, ck);
+            let mut noise_then_clip = w0.clone();
+            noise.perturb(&mut noise_then_clip, d, n, st, ck);
+            clip.perturb(&mut noise_then_clip, d, n, st, ck);
+            let escaped = clip_then_noise.iter().any(|v| v.abs() > 0.05 + 1e-6);
+            let bounded = noise_then_clip.iter().all(|v| v.abs() <= 0.05 + 1e-6);
+            crate::prop_assert!(bounded, "noise-then-clip must stay within the range");
+            crate::prop_assert!(escaped, "clip-then-noise should escape the rail");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn read_noise_redraws_per_cycle_programming_error_per_birth() {
+        let (d, n) = (6, 5);
+        let mut rng = Prng::new(3);
+        let w0 = test_matrix(&mut rng, d, n);
+        let st = Site { layer: 1, expert: 2, mat: 0 };
+        let noise = ReadNoise { sigma: 0.05, conductance_dependent: true, tile: 4, seed: 7 };
+        let prog = ProgrammingError { scale: 1.0, tile: 4, seed: 7 };
+
+        let apply = |m: &dyn NonidealityModel, ck: Clock| {
+            let mut w = w0.clone();
+            m.perturb(&mut w, d, n, st, ck);
+            w
+        };
+        let c0 = Clock { elapsed_tokens: 100, birth_tokens: 0, cycle: 100 };
+        let c1 = Clock { elapsed_tokens: 200, birth_tokens: 0, cycle: 200 };
+        // read noise: fresh realisation per cycle, elapsed is irrelevant
+        assert_ne!(apply(&noise, c0), apply(&noise, c1));
+        // programming error: fixed per birth epoch, cycle is irrelevant
+        assert_eq!(apply(&prog, c0), apply(&prog, c1));
+        let reborn = Clock { elapsed_tokens: 100, birth_tokens: 64, cycle: 100 };
+        assert_ne!(apply(&prog, c0), apply(&prog, reborn));
+    }
+
+    #[test]
+    fn registry_resolves_presets_and_rejects_unknown() {
+        for name in DeviceProfile::preset_names() {
+            let p = DeviceProfile::preset(name).unwrap();
+            assert_eq!(p.name(), *name);
+            if *name == "ideal" {
+                assert!(!p.enabled() && p.models().is_empty());
+            } else {
+                assert!(p.enabled(), "{name} preset disabled");
+            }
+        }
+        assert!(DeviceProfile::preset("pcm").is_err());
+        let wc = DeviceProfile::preset("worst-case").unwrap();
+        assert!(wc.models().len() >= 4, "worst-case should stack most stages");
+        // the clip-last convention
+        assert_eq!(wc.models().last().unwrap().name(), "adc-clip");
+    }
+
+    #[test]
+    fn profile_stack_applies_in_order() {
+        let (d, n) = (4, 4);
+        let w0 = vec![1.0f32; d * n];
+        let st = Site::default();
+        let ck = Clock::default();
+        // clip at 0.5 then scale by ir-drop vs the reverse — the stack
+        // must honor push order
+        let a = DeviceProfile::named("a")
+            .model(AdcClip { fsr: 0.5, relative: false })
+            .model(IrDrop { strength: 0.5, row_weight: 1.0 });
+        let b = DeviceProfile::named("b")
+            .model(IrDrop { strength: 0.5, row_weight: 1.0 })
+            .model(AdcClip { fsr: 0.5, relative: false });
+        let mut wa = w0.clone();
+        a.perturb_matrix(&mut wa, d, n, st, ck);
+        let mut wb = w0.clone();
+        b.perturb_matrix(&mut wb, d, n, st, ck);
+        // row 0 is undropped: clip-then-drop leaves 0.5, drop-then-clip
+        // also 0.5; row 3 dropped to 0.5 then... they agree — but the
+        // relative clip bound differs, so use the first row of a taller
+        // check: drop halves row 2 (factor 1-0.5*(2/3)=2/3) — clipped
+        // first: 0.5*2/3 = 1/3; dropped first: 2/3 clipped to 0.5
+        assert!((wa[2 * n] - 1.0 / 3.0).abs() < 1e-6, "{}", wa[2 * n]);
+        assert!((wb[2 * n] - 0.5).abs() < 1e-6, "{}", wb[2 * n]);
+    }
+
+    #[test]
+    fn maxnn_and_predictiveness_agree_with_stats() {
+        let mut rng = Prng::new(9);
+        let (d, m) = (6, 4);
+        let up = test_matrix(&mut rng, d, m);
+        let gate = test_matrix(&mut rng, d, m);
+        let down = test_matrix(&mut rng, m, d);
+        let s = maxnn_score(&up, &gate, &down, d, m);
+        assert!(s > 0.0 && s.is_finite());
+        // perfectly aligned ranking → +1; anti-aligned → −1
+        let scores = [1.0, 2.0, 3.0, 4.0];
+        let deg = [0.1, 0.2, 0.3, 0.4];
+        assert!((selection_predictiveness(&scores, &deg) - 1.0).abs() < 1e-12);
+        let anti = [0.4, 0.3, 0.2, 0.1];
+        assert!((selection_predictiveness(&scores, &anti) + 1.0).abs() < 1e-12);
+    }
+}

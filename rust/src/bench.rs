@@ -23,7 +23,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::aimc::drift::DriftModel;
+use crate::aimc::drift::{DriftModel, DriftMonitor, ExpertHostWeights};
+use crate::aimc::profile::{maxnn_score, selection_predictiveness, Clock, DeviceProfile, Site};
 use crate::aimc::program::NoiseModel;
 use crate::config::{AimcConfig, Meta, ModelConfig};
 use crate::coordinator::{
@@ -834,6 +835,214 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
             Json::num(par_m.simulated_tokens_per_joule()),
         ),
         ("trajectory_tokens_per_s", Json::arr_f64(&trajectory)),
+    ]))
+}
+
+/// Named profiles of the device stress matrix — every non-trivial
+/// preset of the [`DeviceProfile`] registry (`ideal` is excluded: with
+/// no perturbation the per-expert degradation is identically zero and a
+/// rank correlation against it is meaningless).
+pub const PROFILE_BENCH_PROFILES: [&str; 4] =
+    ["pcm-drift", "reram-noisy", "adc-limited", "worst-case"];
+
+/// Analog placement fractions the matrix sweeps per profile.
+pub const PROFILE_BENCH_GAMMAS: [f64; 2] = [0.25, 0.5];
+
+/// Maintenance cadences swept per (profile, Γ), in compiled batches
+/// between ticks (1 = react every batch, 4 = a lazy operator).
+pub const PROFILE_BENCH_EVERY: [usize; 2] = [1, 4];
+
+/// The perturbation clock of the offline predictiveness probe: far
+/// enough past `t0` that drift-bearing profiles have decayed visibly.
+const PROFILE_PROBE_TOKENS: u64 = 4096;
+
+/// Offline per-expert ground truth for one profile: for every MoE
+/// (layer, expert) of the *clean* parameters, the static MaxNNScore
+/// (eq 7) and the measured sentinel deviation after replaying `profile`
+/// at a fixed clock ([`PROFILE_PROBE_TOKENS`]). Pooled over layers —
+/// the selection rule ranks experts within a deployment, and the bench
+/// scores that ranking in one rank correlation per (model, profile).
+fn profile_degradation_sweep(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    profile: &DeviceProfile,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let (d, m) = (cfg.d_model, cfg.d_expert);
+    let mut monitor = DriftMonitor::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        d,
+        m,
+        crate::coordinator::SENTINEL_ROWS,
+        profile.seed(),
+    );
+    let clock = Clock {
+        elapsed_tokens: PROFILE_PROBE_TOKENS,
+        birth_tokens: 0,
+        cycle: PROFILE_PROBE_TOKENS,
+    };
+    let mut maxnn = Vec::new();
+    let mut degradation = Vec::new();
+    for l in 0..cfg.n_layers {
+        if !cfg.is_moe_layer(l) {
+            continue;
+        }
+        let up = params.tensor(&format!("layers.{l}.experts.up"))?;
+        let gate = params.tensor(&format!("layers.{l}.experts.gate"))?;
+        let down = params.tensor(&format!("layers.{l}.experts.down"))?;
+        for e in 0..cfg.n_experts {
+            let (u, g, dn) = (
+                &up[e * d * m..(e + 1) * d * m],
+                &gate[e * d * m..(e + 1) * d * m],
+                &down[e * m * d..(e + 1) * m * d],
+            );
+            maxnn.push(maxnn_score(u, g, dn, d, m));
+            let host = ExpertHostWeights {
+                up: u.to_vec(),
+                gate: g.to_vec(),
+                down: dn.to_vec(),
+            };
+            let mut ub = host.up.clone();
+            let mut gb = host.gate.clone();
+            let mut db = host.down.clone();
+            profile.perturb_matrix(&mut ub, d, m, Site { layer: l, expert: e, mat: 0 }, clock);
+            profile.perturb_matrix(&mut gb, d, m, Site { layer: l, expert: e, mat: 1 }, clock);
+            profile.perturb_matrix(&mut db, m, d, Site { layer: l, expert: e, mat: 2 }, clock);
+            degradation.push(monitor.probe(
+                l,
+                e,
+                (ub.as_slice(), gb.as_slice(), db.as_slice()),
+                &host,
+            ));
+        }
+    }
+    Ok((maxnn, degradation))
+}
+
+/// The device-profile stress matrix behind `BENCH_profiles.json` for
+/// one model: every non-trivial [`DeviceProfile`] preset ×
+/// [`PROFILE_BENCH_GAMMAS`] placement fractions ×
+/// [`PROFILE_BENCH_EVERY`] maintenance cadences, each cell a full
+/// serve of the request stream with the profile replayed at every
+/// maintenance tick — reporting migrations (promotions/demotions),
+/// final and peak sentinel deviation, throughput, and request
+/// conservation. Each profile block additionally carries the
+/// **selection-rule predictiveness score**: the Spearman rank
+/// correlation between the static MaxNNScore of every MoE expert and
+/// its measured sentinel degradation under that profile
+/// ([`profile_degradation_sweep`] — the `maxnn` / `degradation`
+/// arrays are dumped verbatim so the Python mirror can recompute the
+/// correlation 1:1). Requires the AOT artifact tree. Schema:
+/// `docs/BENCHMARKS.md` §Device-profile matrix.
+pub fn run_profile_bench(model: &str, n_requests: usize) -> Result<Json> {
+    let artifacts = crate::artifacts_dir();
+    let meta = Meta::load(&artifacts)?;
+    let cfg = meta.config(model)?.clone();
+    let paths = ArtifactPaths::new(&artifacts, model);
+    let mut rt = Runtime::cpu()?;
+
+    let t = cfg.seq_len;
+    let vocab = cfg.vocab;
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|i| Request {
+            id: i as u64,
+            tokens: (0..t).map(|j| ((i * 17 + j * 5) % vocab) as i32).collect(),
+            targets: (0..t).map(|j| ((i * 13 + j * 7) % vocab) as i32).collect(),
+            mask: vec![1.0; t],
+            arrived: 0,
+        })
+        .collect();
+    let budget = 4usize;
+
+    let mut profiles = Vec::new();
+    for name in PROFILE_BENCH_PROFILES {
+        let profile = DeviceProfile::preset(name)?;
+        // offline ground truth on clean parameters (no programming
+        // noise: the score must rank device sensitivity, not the eq (3)
+        // realisation of one placement)
+        let clean = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
+        let (maxnn, degradation) = profile_degradation_sweep(&cfg, &clean, &profile)?;
+        let rho = selection_predictiveness(&maxnn, &degradation);
+
+        let mut rows = Vec::new();
+        for gamma in PROFILE_BENCH_GAMMAS {
+            // fresh parameters per Γ: apply_placement perturbs the
+            // store, and stacking realisations would corrupt the sweep
+            let mut params = ParamStore::load(&paths.manifest(), &paths.params_bin())?;
+            let placement = plan_placement(
+                &cfg,
+                &params,
+                &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma, seed: 0 },
+                None,
+            )?;
+            apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0)?;
+            for every in PROFILE_BENCH_EVERY {
+                let engine = EngineBuilder::new()
+                    .model(cfg.clone())
+                    .aimc(meta.aimc)
+                    .placement(placement.clone())
+                    .serve_cap(meta.serve_cap)
+                    .device_profile(profile.clone())
+                    .replacer(RePlacerOptions { budget, ..Default::default() })
+                    .build(&mut rt, &paths, &params)?;
+                let analog_before = engine.placement.n_analog_experts();
+                let mut server = Server::new(
+                    &rt,
+                    engine,
+                    ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4).maintenance(
+                        MaintenancePolicy::every((every * cfg.batch.max(1)) as u64),
+                    ),
+                );
+                let client = server.client();
+                let t0 = Instant::now();
+                for wave in reqs.chunks(cfg.batch.max(1)) {
+                    for r in wave {
+                        server
+                            .enqueue(&client, r.clone(), Lane::Interactive)
+                            .map_err(|_| anyhow::anyhow!("profile-bench queue rejected"))?;
+                        server.poll()?;
+                    }
+                    server.drain()?;
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                let (report, engine) = server.shutdown()?;
+                let mut peak_dev = report.maintenance.max_deviation;
+                for rep in &report.maintenance_log {
+                    peak_dev = peak_dev.max(rep.max_deviation);
+                }
+                let m = engine.metrics.clone();
+                rows.push(Json::obj(vec![
+                    ("gamma", Json::num(gamma)),
+                    ("analog_experts", Json::num(analog_before as f64)),
+                    ("maintenance_every_batches", Json::num(every as f64)),
+                    ("migration_budget", Json::num(budget as f64)),
+                    ("requests", Json::num(n_requests as f64)),
+                    ("served", Json::num(report.completions.len() as f64)),
+                    ("migrations", Json::num(m.migrations as f64)),
+                    ("promotions", Json::num(m.promotions as f64)),
+                    ("demotions", Json::num(m.demotions as f64)),
+                    ("sentinel_deviation", Json::num(m.sentinel_deviation)),
+                    ("peak_sentinel_deviation", Json::num(peak_dev)),
+                    ("predictiveness", Json::num(rho)),
+                    ("tokens_per_s", Json::num((n_requests * t) as f64 / wall.max(1e-12))),
+                ]));
+            }
+        }
+        profiles.push(Json::obj(vec![
+            ("profile", Json::str(name)),
+            ("predictiveness", Json::num(rho)),
+            ("probe_tokens", Json::num(PROFILE_PROBE_TOKENS as f64)),
+            ("maxnn", Json::arr_f64(&maxnn)),
+            ("degradation", Json::arr_f64(&degradation)),
+            ("rows", Json::Arr(rows)),
+        ]));
+    }
+
+    Ok(Json::obj(vec![
+        ("bench", Json::str("profiles")),
+        ("model", Json::str(model)),
+        ("requests", Json::num(n_requests as f64)),
+        ("profiles", Json::Arr(profiles)),
     ]))
 }
 

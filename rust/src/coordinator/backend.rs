@@ -228,6 +228,37 @@ pub trait ExpertBackend {
         })
     }
 
+    /// Materialize one expert's host weight matrices into the
+    /// device-resident buffers this backend serves from, tagged with the
+    /// registry `slot` the expert will occupy. `weights` is the
+    /// `(up [d,m], gate [d,m], down [m,d])` triple, row-major — for the
+    /// analog slot the engine has already replayed the active
+    /// [`DeviceProfile`](crate::aimc::DeviceProfile) over it, so what a
+    /// backend uploads here is the *effective* (nonideal) conductance
+    /// state, not the clean reference.
+    ///
+    /// The maintenance loop and live migration both stage uploads
+    /// through this method; the default is a plain three-buffer upload,
+    /// which is what the standard backends serve from. Custom backends
+    /// with their own device layout (packed tiles, quantized formats)
+    /// override it.
+    fn materialize(
+        &self,
+        rt: &Runtime,
+        weights: (&[f32], &[f32], &[f32]),
+        d: usize,
+        m: usize,
+        slot: BackendId,
+    ) -> Result<ExpertWeights> {
+        let (up, gate, down) = weights;
+        Ok(ExpertWeights {
+            up: rt.upload_f32(up, &[d, m])?,
+            gate: rt.upload_f32(gate, &[d, m])?,
+            down: rt.upload_f32(down, &[m, d])?,
+            backend: slot,
+        })
+    }
+
     /// Appendix-A simulated cost of one batch of `batch_tokens` tokens
     /// flowing through this backend's share of the model.
     fn cost(&self, batch_tokens: usize) -> StageCost;

@@ -116,6 +116,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::aimc::drift::{DriftModel, DriftMonitor, ExpertHostWeights};
+use crate::aimc::profile::{Clock, DeviceProfile, Site};
 use crate::config::{AimcConfig, ModelConfig};
 use crate::moe::placement::{
     Migration, Placement, RePlacer, RePlacerOptions, BACKEND_ANALOG, BACKEND_DIGITAL,
@@ -166,6 +167,7 @@ pub struct EngineBuilder {
     serve_cap: Option<usize>,
     workers: Option<usize>,
     drift: Option<DriftModel>,
+    profile: Option<DeviceProfile>,
     replacer: Option<RePlacerOptions>,
     backends: Vec<Box<dyn ExpertBackend>>,
 }
@@ -220,6 +222,17 @@ impl EngineBuilder {
     /// policy.
     pub fn drift(mut self, model: DriftModel) -> Self {
         self.drift = Some(model);
+        self
+    }
+
+    /// The device nonideality profile the engine replays over the
+    /// analog experts at every maintenance tick (optional; default
+    /// [`DeviceProfile::ideal`] — no imperfections). Composes with
+    /// [`EngineBuilder::drift`]: an enabled drift model is appended to
+    /// the profile's stack at build time, so `--drift-nu` keeps working
+    /// alone or on top of a named preset.
+    pub fn device_profile(mut self, profile: DeviceProfile) -> Self {
+        self.profile = Some(profile);
         self
     }
 
@@ -374,14 +387,22 @@ impl EngineBuilder {
         }
         let pool = WorkerPool::new(self.workers.unwrap_or_else(default_workers));
         let route_groups = vec![Vec::new(); cfg.n_experts];
+        // compose the effective nonideality stack: the named profile's
+        // models first, then a standalone drift law if one was supplied
+        // via .drift() — so `--drift-nu` works alone (the pre-profile
+        // configuration surface) or stacked on a preset
         let drift = self.drift.unwrap_or_default();
+        let mut profile = self.profile.unwrap_or_default();
+        if drift.enabled() {
+            profile = profile.model(drift);
+        }
         let monitor = DriftMonitor::new(
             cfg.n_layers,
             cfg.n_experts,
             d,
             m,
             SENTINEL_ROWS,
-            drift.seed,
+            drift.seed ^ profile.seed(),
         );
         let replacer = RePlacer::new(
             self.replacer.unwrap_or_default(),
@@ -400,7 +421,7 @@ impl EngineBuilder {
             scratch: ScratchArena::new(),
             route_groups,
             backends,
-            drift,
+            profile,
             monitor,
             replacer,
             drift_tokens: 0,
@@ -462,9 +483,10 @@ pub struct Engine {
     route_groups: Vec<Vec<(usize, f32)>>,
     backends: Vec<Box<dyn ExpertBackend>>,
 
-    // drift + live re-placement subsystem (Engine::maintenance)
-    /// conductance-drift law on the token clock (disabled by default)
-    drift: DriftModel,
+    // nonideality + live re-placement subsystem (Engine::maintenance)
+    /// the composed device nonideality stack replayed at maintenance
+    /// time (ideal — empty — by default; drift is one model in it)
+    profile: DeviceProfile,
     /// per-expert sentinel-probe deviations + norm proxy
     monitor: DriftMonitor,
     /// hysteresis-banded, budget-bounded migration planner
@@ -638,33 +660,47 @@ impl Engine {
         Ok(responses)
     }
 
-    /// One drift-maintenance tick, run between batches (never mid-batch):
+    /// The composed device nonideality profile this engine replays at
+    /// maintenance time (the builder's named profile plus any
+    /// standalone drift model appended at build).
+    pub fn device_profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// One nonideality-maintenance tick, run between batches (never
+    /// mid-batch):
     ///
-    /// 1. **Materialize drift** — for every analog-resident expert,
-    ///    decay the host reference weights to the current clock
-    ///    ([`DriftModel::apply_matrix`], staged through the
-    ///    [`ScratchArena`]) and re-upload the decayed conductances into
-    ///    the serving buffers, so subsequent dispatches run the drifted
-    ///    chip, not the deployment-time one.
-    /// 2. **Sentinel-probe** each drift-tracked expert (analog
-    ///    residents, plus the *shadow* tiles of promoted experts, which
-    ///    keep drifting while the expert is served digitally): replay
-    ///    the cached sentinel input against the digital reference path
-    ///    and record the relative output deviation + the
-    ///    max-neuron-norm proxy ([`DriftMonitor`]).
-    /// 3. **Re-place** — hand the deviations to the hysteresis-banded
+    /// 1. **Materialize the device state** — for every analog-resident
+    ///    expert, replay the composed [`DeviceProfile`] over the host
+    ///    reference weights at the current clock (drift decay, read
+    ///    noise of this cycle, the birth-epoch programming error, ADC
+    ///    clip, IR drop — whatever the stack holds; staged through the
+    ///    [`ScratchArena`]) and re-upload the effective conductances
+    ///    into the serving buffers via
+    ///    [`ExpertBackend::materialize`], so subsequent dispatches run
+    ///    the imperfect chip, not the deployment-time fiction.
+    /// 2. **Sentinel-probe** each tracked expert (analog residents,
+    ///    plus the *shadow* tiles of promoted experts, which keep
+    ///    degrading while the expert is served digitally): replay the
+    ///    cached sentinel input against the digital reference path and
+    ///    record the relative output deviation + the max-neuron-norm
+    ///    proxy ([`DriftMonitor`]).
+    /// 3. **Re-place** — hand the *currently valid* deviations
+    ///    ([`DriftMonitor::planning_deviations`]: freshly migrated
+    ///    slots report 0.0 until re-probed) to the hysteresis-banded
     ///    [`RePlacer`] and execute the planned migrations live via
     ///    [`Engine::apply_replacement`].
     ///
-    /// With drift disabled (the default) steps 1–2 are skipped and the
-    /// tick is a cheap no-op that still reports the clock.
+    /// With an ideal profile and no drift (the default) steps 1–2 are
+    /// skipped and the tick is a cheap no-op that still reports the
+    /// clock.
     pub fn maintenance(&mut self, rt: &Runtime) -> Result<MaintenanceReport> {
         let t0 = std::time::Instant::now();
         let mut probed = 0usize;
-        if self.drift.enabled() {
+        if self.profile.enabled() {
             let Engine {
                 cfg,
-                drift,
+                profile,
                 monitor,
                 replacer,
                 scratch,
@@ -672,6 +708,7 @@ impl Engine {
                 host_experts,
                 birth,
                 drift_tokens,
+                backends,
                 ..
             } = self;
             let (d, m) = (cfg.d_model, cfg.d_expert);
@@ -681,33 +718,40 @@ impl Engine {
                 }
                 for e in 0..cfg.n_experts {
                     let owner = experts[l][e].backend;
-                    // custom slots (≥ 2) have no drift semantics; a
+                    // custom slots (≥ 2) have no device semantics; a
                     // digital expert only stays tracked while it is a
-                    // drift rescue (its shadow tiles await recovery)
+                    // rescue (its shadow tiles await recovery)
                     let tracked = owner == BACKEND_ANALOG
                         || (owner == BACKEND_DIGITAL && replacer.is_promoted(l, e));
                     if !tracked {
                         continue;
                     }
-                    let elapsed = drift_tokens.saturating_sub(birth[l][e]);
+                    let clock = Clock {
+                        elapsed_tokens: drift_tokens.saturating_sub(birth[l][e]),
+                        birth_tokens: birth[l][e],
+                        cycle: *drift_tokens,
+                    };
                     let host = &host_experts[l][e];
                     let mut up = scratch.take(d * m);
                     up.copy_from_slice(&host.up);
-                    drift.apply_matrix(&mut up, d, m, l, e, 0, elapsed);
+                    profile.perturb_matrix(&mut up, d, m, Site { layer: l, expert: e, mat: 0 }, clock);
                     let mut gate = scratch.take(d * m);
                     gate.copy_from_slice(&host.gate);
-                    drift.apply_matrix(&mut gate, d, m, l, e, 1, elapsed);
+                    profile.perturb_matrix(&mut gate, d, m, Site { layer: l, expert: e, mat: 1 }, clock);
                     let mut down = scratch.take(m * d);
                     down.copy_from_slice(&host.down);
-                    drift.apply_matrix(&mut down, m, d, l, e, 2, elapsed);
+                    profile.perturb_matrix(&mut down, m, d, Site { layer: l, expert: e, mat: 2 }, clock);
                     monitor.probe(l, e, (up.as_slice(), gate.as_slice(), down.as_slice()), host);
                     probed += 1;
                     if owner == BACKEND_ANALOG {
-                        // the serving buffers now hold the drifted chip
-                        let w = &mut experts[l][e];
-                        w.up = rt.upload_f32(&up, &[d, m])?;
-                        w.gate = rt.upload_f32(&gate, &[d, m])?;
-                        w.down = rt.upload_f32(&down, &[m, d])?;
+                        // the serving buffers now hold the effective chip
+                        experts[l][e] = backends[owner].materialize(
+                            rt,
+                            (up.as_slice(), gate.as_slice(), down.as_slice()),
+                            d,
+                            m,
+                            owner,
+                        )?;
                     }
                     scratch.give(up);
                     scratch.give(gate);
@@ -715,7 +759,8 @@ impl Engine {
                 }
             }
         }
-        let migrations = self.replacer.plan(&self.placement, self.monitor.deviations());
+        let planning = self.monitor.planning_deviations();
+        let migrations = self.replacer.plan(&self.placement, &planning);
         self.apply_replacement(rt, &migrations)?;
         self.metrics.sentinel_deviation = self.monitor.max_deviation();
         self.metrics.drift_clock = self.drift_tokens;
@@ -773,24 +818,18 @@ impl Engine {
                 ));
             }
             let (d, m) = (self.cfg.d_model, self.cfg.d_expert);
+            // the target backend owns its device layout: clean reference
+            // weights go through its materialize hook (a demotion's
+            // programming error / decay is replayed by the next
+            // maintenance tick against the reset birth epoch)
             let host = &self.host_experts[l][e];
-            // stage through the arena: zero steady-state allocation once
-            // the serving working set has warmed it
-            let mut buf = self.scratch.take(d * m);
-            buf.copy_from_slice(&host.up);
-            let up = rt.upload_f32(&buf, &[d, m])?;
-            buf.copy_from_slice(&host.gate);
-            let gate = rt.upload_f32(&buf, &[d, m])?;
-            self.scratch.give(buf);
-            let mut buf = self.scratch.take(m * d);
-            buf.copy_from_slice(&host.down);
-            let down = rt.upload_f32(&buf, &[m, d])?;
-            self.scratch.give(buf);
-            let w = &mut self.experts[l][e];
-            w.up = up;
-            w.gate = gate;
-            w.down = down;
-            w.backend = mg.to;
+            self.experts[l][e] = self.backends[mg.to].materialize(
+                rt,
+                (host.up.as_slice(), host.gate.as_slice(), host.down.as_slice()),
+                d,
+                m,
+                mg.to,
+            )?;
             self.placement.set_backend(l, e, mg.to);
             self.birth[l][e] = self.drift_tokens;
             self.monitor.record_migrated(l, e);
@@ -1126,6 +1165,25 @@ mod tests {
         let b = EngineBuilder::new();
         assert!(b.drift.is_none() && b.replacer.is_none());
         assert!(!DriftModel::default().enabled());
+    }
+
+    #[test]
+    fn builder_device_profile_roundtrip_and_drift_composition() {
+        let b = EngineBuilder::new()
+            .device_profile(DeviceProfile::preset("reram-noisy").unwrap());
+        assert_eq!(b.profile.as_ref().unwrap().name(), "reram-noisy");
+        // unset → the ideal (empty, disabled) profile at build time
+        let b = EngineBuilder::new();
+        assert!(b.profile.is_none());
+        assert!(!DeviceProfile::default().enabled());
+        // the build-time composition rule: an enabled .drift() model is
+        // appended to the profile stack, so either knob alone — or both
+        // together — yields an enabled stack
+        let drift = DriftModel::with_nu(0.25);
+        let composed = DeviceProfile::preset("reram-noisy").unwrap().model(drift);
+        assert!(composed.enabled());
+        assert_eq!(composed.models().last().unwrap().name(), "drift");
+        assert_eq!(composed.models().len(), 2);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 use anyhow::{bail, Result};
 
 use hetmoe::aimc::drift::DriftModel;
+use hetmoe::aimc::profile::DeviceProfile;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{
@@ -57,12 +58,13 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     ("interactive-share", "0.75", "weighted-deficit share of the interactive lane (0-1)"),
     ("bulk-wait", "64", "bulk-lane aging bound in arrival ticks (starvation bound)"),
     ("drift-nu", "0.0", "conductance-drift exponent ν (0 = no drift)"),
+    ("profile", "", "device nonideality profile: pcm-drift|reram-noisy|adc-limited|worst-case (empty = none; stacks with --drift-nu)"),
     ("replace-every", "0", "server maintenance tick every N served requests (0 = shutdown only)"),
     ("migration-budget", "2", "max live migrations per maintenance tick"),
     ("replicas", "1", "engine replicas (1 = tick-driven server; >1 = expert-sharded worker threads)"),
 ];
 const BENCH_FLAGS: &[FlagSpec] = &[
-    ("suite", "all", "which benches to run: kernels|serve|all"),
+    ("suite", "all", "which benches to run: kernels|serve|profiles|all"),
     ("out", "bench_out", "BENCH_*.json output dir (overrides $HETMOE_BENCH_OUT)"),
     ("reps", "8", "timing repetitions per kernel case (overrides $HETMOE_BENCH_REPS)"),
     ("requests", "64", "scoring requests per model in the serve bench"),
@@ -338,6 +340,12 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     }
     let bulk_wait = cli.get_usize("bulk-wait").max(1) as u64;
     let drift_nu = cli.get_f64("drift-nu");
+    let profile_name = cli.get("profile");
+    let profile = if profile_name.is_empty() {
+        None
+    } else {
+        Some(DeviceProfile::preset(&profile_name)?)
+    };
     let replace_every = cli.get_usize("replace-every");
     let budget = cli.get_usize("migration-budget");
 
@@ -354,6 +362,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         .placement(placement)
         .serve_cap(meta.serve_cap)
         .replacer(RePlacerOptions { budget, ..Default::default() });
+    if let Some(p) = &profile {
+        builder = builder.device_profile(p.clone());
+    }
     if drift_nu > 0.0 {
         builder = builder.drift(DriftModel::with_nu(drift_nu));
     }
@@ -422,8 +433,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     print_migrations("shutdown tick", &report.maintenance);
     println!(
         "served {} scoring requests (Γ={gamma}, prog-noise={noise}, drift ν={drift_nu}, \
-         {lanes_n} lane(s))",
-        report.completions.len()
+         profile={}, {lanes_n} lane(s))",
+        report.completions.len(),
+        profile.as_ref().map_or("none", |p| p.name()),
     );
 
     let mut lt = Table::new(
@@ -553,6 +565,12 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
     }
     let bulk_wait = cli.get_usize("bulk-wait").max(1) as u64;
     let drift_nu = cli.get_f64("drift-nu");
+    let profile_name = cli.get("profile");
+    let profile = if profile_name.is_empty() {
+        None
+    } else {
+        Some(DeviceProfile::preset(&profile_name)?)
+    };
     let replace_every = cli.get_usize("replace-every");
     let budget = cli.get_usize("migration-budget");
 
@@ -588,6 +606,7 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
         let serve_cap = meta.serve_cap;
         let paths_r = paths.clone();
         let local = shard.replica_placement(&placement, r);
+        let profile_r = profile.clone();
         let factory = Box::new(move |rt: &mut Runtime| {
             let mut params = ParamStore::load(&paths_r.manifest(), &paths_r.params_bin())?;
             apply_placement(&cfg_r, &mut params, &local, &NoiseModel::with_scale(noise), 0)?;
@@ -597,6 +616,9 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
                 .placement(local)
                 .serve_cap(serve_cap)
                 .replacer(RePlacerOptions { budget, ..Default::default() });
+            if let Some(p) = &profile_r {
+                b = b.device_profile(p.clone());
+            }
             if drift_nu > 0.0 {
                 b = b.drift(DriftModel::with_nu(drift_nu));
             }
@@ -695,8 +717,8 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
 
 fn cmd_bench(cli: &Cli) -> Result<()> {
     let suite = cli.get("suite");
-    if !matches!(suite.as_str(), "kernels" | "serve" | "all") {
-        bail!("unknown suite '{suite}' (expected kernels, serve, or all)");
+    if !matches!(suite.as_str(), "kernels" | "serve" | "profiles" | "all") {
+        bail!("unknown suite '{suite}' (expected kernels, serve, profiles, or all)");
     }
     // explicit flags win over the environment knobs; the FlagSpec
     // defaults mirror the knob defaults
@@ -791,6 +813,50 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
                 ("models", Json::Arr(entries)),
             ]);
             let path = hetmoe::bench::write_bench_json(&out, "BENCH_serve.json", &json)?;
+            println!("wrote {}", path.display());
+        }
+    }
+
+    if suite == "profiles" || suite == "all" {
+        if !hetmoe::artifacts_dir().join("meta.json").exists() {
+            println!(
+                "profile bench skipped: artifact tree missing at {} \
+                 (run `make artifacts`; kernel bench needs no artifacts)",
+                hetmoe::artifacts_dir().display()
+            );
+        } else {
+            let mut entries = Vec::new();
+            for model in &models {
+                println!(
+                    "profile bench: {model} ({requests} requests per cell, {} profiles × \
+                     {} gammas × {} cadences)…",
+                    hetmoe::bench::PROFILE_BENCH_PROFILES.len(),
+                    hetmoe::bench::PROFILE_BENCH_GAMMAS.len(),
+                    hetmoe::bench::PROFILE_BENCH_EVERY.len(),
+                );
+                let entry = hetmoe::bench::run_profile_bench(model, requests)?;
+                for prof in entry.get("profiles")?.as_arr()? {
+                    let rows = prof.get("rows")?.as_arr()?;
+                    let migrations: f64 = rows
+                        .iter()
+                        .map(|r| r.get("migrations").and_then(|m| m.as_f64()).unwrap_or(0.0))
+                        .sum();
+                    println!(
+                        "  {}: selection predictiveness ρ={:.3}, {:.0} migrations \
+                         across {} matrix cells",
+                        prof.get("profile")?.as_str()?,
+                        prof.get("predictiveness")?.as_f64()?,
+                        migrations,
+                        rows.len(),
+                    );
+                }
+                entries.push(entry);
+            }
+            let json = Json::obj(vec![
+                ("bench", Json::str("profiles")),
+                ("models", Json::Arr(entries)),
+            ]);
+            let path = hetmoe::bench::write_bench_json(&out, "BENCH_profiles.json", &json)?;
             println!("wrote {}", path.display());
         }
     }

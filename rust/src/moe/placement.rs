@@ -385,8 +385,10 @@ impl Default for RePlacerOptions {
 
 /// Hysteresis-banded live re-placement planner.
 ///
-/// Each maintenance step the serving engine probes every drift-tracked
-/// expert (see `aimc::drift::DriftMonitor`) and hands the deviations to
+/// Each maintenance step the serving engine probes every tracked expert
+/// (see `aimc::drift::DriftMonitor`) against the active device
+/// nonideality stack (`aimc::profile::DeviceProfile` — drift, read
+/// noise, ADC clipping, … composed) and hands the deviations to
 /// [`RePlacer::plan`]:
 ///
 /// - analog experts whose deviation reached `promote` are moved to the
@@ -396,7 +398,11 @@ impl Default for RePlacerOptions {
 ///   `demote` — i.e. whose reprogrammed tiles have recovered — return
 ///   to analog, best first. Experts the planner never promoted are
 ///   left alone: a hand-placed digital expert is a placement decision,
-///   not a drift rescue.
+///   not a degradation rescue. Note that under cycle-to-cycle
+///   imperfections (read noise) a promoted expert's deviation never
+///   recovers below the noise floor, so it correctly stays digital —
+///   only clock-driven imperfections (drift after a birth reset) close
+///   the loop back to analog.
 ///
 /// The two thresholds form a hysteresis band: after a demotion the
 /// deviation must climb the full band width
@@ -444,7 +450,11 @@ impl RePlacer {
     /// Plan this step's migrations from the monitor's deviations
     /// (`deviations[layer][expert]`), bounded by the budget, and commit
     /// the promoted-set bookkeeping. The caller must execute every
-    /// returned migration (the engine's `apply_replacement`).
+    /// returned migration (the engine's `apply_replacement`) and must
+    /// hand in *currently valid* measurements — the engine passes
+    /// `DriftMonitor::planning_deviations`, which reports 0.0 for
+    /// freshly migrated slots until they are re-probed, so a plan can
+    /// never chain a second migration off pre-migration evidence.
     pub fn plan(&mut self, placement: &Placement, deviations: &[Vec<f64>]) -> Vec<Migration> {
         let mut promote: Vec<Migration> = Vec::new();
         let mut demote: Vec<Migration> = Vec::new();

@@ -6,7 +6,8 @@
 //! artifacts tree is missing they fail with a clear message rather than
 //! silently passing.
 
-use hetmoe::aimc::drift::DriftModel;
+use hetmoe::aimc::drift::{DriftModel, DriftMonitor, ExpertHostWeights};
+use hetmoe::aimc::profile::{Clock, DeviceProfile, Site};
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::aimc::quant::{adc_quant, dac_quant};
 use hetmoe::config::Meta;
@@ -1484,6 +1485,192 @@ fn shutdown_drains_all_completions() {
     for (i, c) in report.completions.iter().enumerate() {
         assert_eq!(c.ticket.id, i as u64);
         assert!(c.response.score.is_finite());
+    }
+}
+
+#[test]
+fn replacer_responds_to_read_noise() {
+    // Issue 7 satellite: the re-placement loop must react to device
+    // imperfections that are NOT drift. Under the `reram-noisy` profile
+    // (conductance-dependent read noise, zero drift) the sentinel
+    // deviation appears immediately — no clock warm-up — so the
+    // hysteresis band must promote noise-sensitive experts to digital
+    // within the migration budget, and (because read noise never decays)
+    // promoted experts must STAY digital rather than churn back.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let tasks = load_tasks(&hetmoe::artifacts_dir()).unwrap();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+
+    let engine = EngineBuilder::new()
+        .model(cfg.clone())
+        .aimc(meta.aimc)
+        .placement(placement.clone())
+        .serve_cap(meta.serve_cap)
+        .device_profile(DeviceProfile::preset("reram-noisy").unwrap())
+        .replacer(RePlacerOptions { promote: 0.05, demote: 0.01, budget: 4 })
+        .build(&mut rt, &paths, &params)
+        .unwrap();
+    assert_eq!(engine.device_profile().name(), "reram-noisy");
+    let mut server = Server::new(
+        &rt,
+        engine,
+        ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4)
+            .maintenance(MaintenancePolicy::every(cfg.batch as u64)),
+    );
+    let client = server.client();
+
+    let mut stream = Vec::new();
+    'outer: for task in &tasks {
+        for item in &task.items {
+            let (tk, tg, mk) = pack_choice(&item.ctx, &item.choices[item.gold], cfg.seq_len);
+            stream.push((tk, tg, mk));
+            if stream.len() == cfg.batch * 3 {
+                break 'outer;
+            }
+        }
+    }
+    let mut peak_dev = 0.0f64;
+    for wave in stream.chunks(cfg.batch) {
+        for (tk, tg, mk) in wave {
+            server
+                .enqueue(
+                    &client,
+                    Request {
+                        id: 0,
+                        tokens: tk.clone(),
+                        targets: tg.clone(),
+                        mask: mk.clone(),
+                        arrived: 0,
+                    },
+                    Lane::Interactive,
+                )
+                .unwrap();
+            server.poll().unwrap();
+        }
+        server.drain().unwrap();
+        for rep in server.take_maintenance_reports() {
+            assert!(rep.probed > 0, "profile-enabled maintenance must probe");
+            peak_dev = peak_dev.max(rep.max_deviation);
+        }
+    }
+    let (report, engine) = server.shutdown().unwrap();
+    peak_dev = peak_dev.max(report.maintenance.max_deviation);
+    let m = &engine.metrics;
+    assert!(peak_dev > 0.0, "read noise must register on the sentinel without drift");
+    assert!(
+        m.promotions >= 1,
+        "read noise above the band must force an analog → digital promotion \
+         (got {} migrations, {} promotions)",
+        m.migrations,
+        m.promotions
+    );
+    assert_eq!(
+        m.demotions, 0,
+        "read noise never recovers below the noise floor — promoted experts \
+         must not churn back to analog"
+    );
+    assert!(
+        engine.placement.n_analog_experts() < placement.n_analog_experts(),
+        "at least one noise-sensitive expert must have left the analog chip"
+    );
+}
+
+#[test]
+fn profile_golden_deviations_within_tolerance() {
+    // Golden-fixture regression (issue 7 satellite): a checked-in tiny
+    // model with known per-profile sentinel deviations, generated by the
+    // Python mirror (scripts/gen_profile_fixtures.py). Guards the whole
+    // deterministic chain — Prng, fnv1a tile addressing, each
+    // NonidealityModel's loop order, gated-MLP probe math — against
+    // accidental re-seeding or reordering on either side of the
+    // language boundary. Needs no artifacts.
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../python/tests/fixtures/profile_golden.json"
+    );
+    let fx = hetmoe::util::Json::parse_file(std::path::Path::new(path)).expect("golden fixture");
+    let d = fx.get("d").unwrap().as_usize().unwrap();
+    let m = fx.get("m").unwrap().as_usize().unwrap();
+    let rows = fx.get("rows").unwrap().as_usize().unwrap();
+    let seed = fx.get("seed").unwrap().as_usize().unwrap() as u64;
+    let n_experts = fx.get("experts").unwrap().as_usize().unwrap();
+    let clock = Clock {
+        elapsed_tokens: fx.get("elapsed_tokens").unwrap().as_usize().unwrap() as u64,
+        birth_tokens: 0,
+        cycle: fx.get("elapsed_tokens").unwrap().as_usize().unwrap() as u64,
+    };
+
+    // the tiny model: one layer of `n_experts` experts, weights drawn
+    // sequentially (up → gate → down per expert) from one Prng stream
+    let mut wrng = Prng::new(42);
+    let mut experts = Vec::new();
+    for _ in 0..n_experts {
+        let mut draw = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| wrng.gaussian_f32() * 0.3).collect()
+        };
+        experts.push(ExpertHostWeights { up: draw(d * m), gate: draw(d * m), down: draw(m * d) });
+    }
+
+    for prof in fx.get("profiles").unwrap().as_arr().unwrap() {
+        let name = prof.get("profile").unwrap().as_str().unwrap();
+        let profile = DeviceProfile::preset(name).unwrap();
+        let want = prof.get("deviations").unwrap().as_f64_vec().unwrap();
+        assert_eq!(want.len(), n_experts, "{name}: fixture expert count");
+        let mut monitor = DriftMonitor::new(1, n_experts, d, m, rows, seed);
+        for (e, host) in experts.iter().enumerate() {
+            let mut up = host.up.clone();
+            let mut gate = host.gate.clone();
+            let mut down = host.down.clone();
+            profile.perturb_matrix(&mut up, d, m, Site { layer: 0, expert: e, mat: 0 }, clock);
+            profile.perturb_matrix(&mut gate, d, m, Site { layer: 0, expert: e, mat: 1 }, clock);
+            profile.perturb_matrix(&mut down, m, d, Site { layer: 0, expert: e, mat: 2 }, clock);
+            let got = monitor.probe(0, e, (&up, &gate, &down), host);
+            let tol = 5e-3 + 0.02 * want[e];
+            assert!(
+                (got - want[e]).abs() <= tol,
+                "{name} expert {e}: sentinel deviation {got} drifted from \
+                 golden {} (tol {tol})",
+                want[e]
+            );
+            if name == "ideal" {
+                assert_eq!(got, 0.0, "ideal profile must probe exactly clean");
+            }
+        }
+    }
+}
+
+#[test]
+fn spearman_matches_python_mirror_fixture() {
+    // Cross-language agreement for the selection-predictiveness scorer
+    // (issue 7 satellite): the Python mirror fuzzes ≥ 200 random cases
+    // through its rank-correlation port and dumps inputs + expected ρ;
+    // the Rust side must agree bit-for-bit (identical rank and Pearson
+    // op order). Needs no artifacts.
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../python/tests/fixtures/spearman_fuzz.json"
+    );
+    let fx = hetmoe::util::Json::parse_file(std::path::Path::new(path)).expect("fuzz fixture");
+    let cases = fx.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 200, "fuzz fixture must hold at least 200 cases");
+    for (i, case) in cases.iter().enumerate() {
+        let xs = case.get("xs").unwrap().as_f64_vec().unwrap();
+        let ys = case.get("ys").unwrap().as_f64_vec().unwrap();
+        let want = case.get("rho").unwrap().as_f64().unwrap();
+        let got = hetmoe::aimc::selection_predictiveness(&xs, &ys);
+        assert!(
+            (got - want).abs() <= 1e-12,
+            "case {i}: Rust spearman {got} != Python mirror {want}"
+        );
     }
 }
 

@@ -17,15 +17,27 @@ replica count, the cluster's ``tokens_per_s`` must not drop by more
 than the allowed fraction vs the baseline scale with the same replica
 count, and request conservation (``served == requests``) fails hard.
 
+With ``--profiles-prev``/``--profiles-cur`` it also guards
+BENCH_profiles.json (the device-profile stress matrix): per model and
+profile, the selection-rule **predictiveness** (Spearman ρ between
+MaxNNScore and measured degradation) must not drop below the baseline
+by more than the allowed fraction (absolute, since ρ lives in [-1, 1]).
+Two correctness gates in the *current* dump fail hard regardless of any
+baseline: every matrix row must conserve requests (``served ==
+requests``), and the ``worst-case`` profile must exercise the promote
+path (≥ 1 migration summed over its rows).
+
 Warn-only when a baseline file is missing (first run on a repo whose
 trajectory is still empty) or a case has no counterpart — CI shared
 runners also make timing noisy, which is why the default threshold is a
-generous 25%. A missing *current* serve dump is also warn-only: the
-serve suite legitimately skips when the artifact tree is absent.
+generous 25%. A missing *current* serve or profiles dump is also
+warn-only: those suites legitimately skip when the artifact tree is
+absent.
 
 Usage:
     python3 scripts/bench_guard.py PREV.json CUR.json \
         [--serve-prev PREV_SERVE.json --serve-cur CUR_SERVE.json] \
+        [--profiles-prev PREV_PROFILES.json --profiles-cur CUR_PROFILES.json] \
         [--max-regression 0.25]
 
 Exit codes: 0 ok / baseline missing, 1 regression or correctness gate.
@@ -181,12 +193,87 @@ def guard_serve(prev_path, cur_path, max_regression):
     return failures
 
 
+def profile_entries(path):
+    """{model: {profile_name: profile_obj}} from BENCH_profiles.json."""
+    with open(path) as f:
+        dump = json.load(f)
+    out = {}
+    for entry in dump.get("models", []):
+        out[entry.get("model", "?")] = {
+            p.get("profile", "?"): p for p in entry.get("profiles", [])
+        }
+    return out
+
+
+def guard_profiles(prev_path, cur_path, max_regression):
+    """Failures for the device-profile stress matrix (see module doc)."""
+    failures = []
+    if not os.path.exists(cur_path):
+        # the profiles suite skips without an artifact tree — not an error
+        print(f"profile guard: current dump {cur_path} missing — skipped")
+        return failures
+    cur = profile_entries(cur_path)
+    if not cur:
+        print(f"profile guard: {cur_path} has no profile blocks — skipped")
+        return failures
+
+    # correctness gates, baseline or not: conservation per matrix row,
+    # and the worst-case profile must actually promote something
+    for model, profiles in cur.items():
+        for name, prof in profiles.items():
+            migrations = 0
+            for row in prof.get("rows", []):
+                migrations += int(row.get("migrations", 0))
+                if row.get("served") != row.get("requests"):
+                    failures.append(
+                        f"{model}/{name} (gamma={row.get('gamma')}, "
+                        f"every={row.get('maintenance_every_batches')}): served "
+                        f"{row.get('served')} != requests {row.get('requests')} "
+                        f"— requests lost")
+            if name == "worst-case" and migrations < 1:
+                failures.append(
+                    f"{model}/worst-case: 0 migrations across the matrix — "
+                    f"the promote path was never exercised")
+
+    if not os.path.exists(prev_path):
+        print(f"profile guard: no baseline at {prev_path} — warn-only first "
+              f"run ({len(cur)} model(s) recorded)")
+        return failures
+
+    prev = profile_entries(prev_path)
+    compared = 0
+    for model, profiles in prev.items():
+        for name, prof in profiles.items():
+            cur_prof = cur.get(model, {}).get(name)
+            if cur_prof is None:
+                print(f"warn: no profile block to compare for {model}/{name}")
+                continue
+            old = float(prof.get("predictiveness", 0.0))
+            new = float(cur_prof.get("predictiveness", 0.0))
+            compared += 1
+            # ρ lives in [-1, 1]: guard the absolute drop, not a ratio
+            drop = old - new
+            regressed = drop > max_regression
+            status = "FAIL" if regressed else "ok"
+            print(f"{status:>4} {model}/{name} predictiveness: "
+                  f"{old:.3f} -> {new:.3f} ({-drop:+.3f})")
+            if regressed:
+                failures.append(
+                    f"{model}/{name}: selection predictiveness dropped "
+                    f"{drop:.3f} (> {max_regression:.2f} allowed)")
+    print(f"profile guard: {compared} profile(s) compared")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("prev", help="baseline BENCH_kernels.json (previous run)")
     ap.add_argument("cur", help="current BENCH_kernels.json")
     ap.add_argument("--serve-prev", help="baseline BENCH_serve.json (previous run)")
     ap.add_argument("--serve-cur", help="current BENCH_serve.json")
+    ap.add_argument("--profiles-prev",
+                    help="baseline BENCH_profiles.json (previous run)")
+    ap.add_argument("--profiles-cur", help="current BENCH_profiles.json")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="allowed fractional drop per guarded metric")
     args = ap.parse_args()
@@ -198,6 +285,9 @@ def main():
         if os.path.exists(args.serve_cur):
             serve_failures += guard_replica_scaling(
                 args.serve_prev or "", args.serve_cur, args.max_regression)
+    if args.profiles_cur:
+        serve_failures += guard_profiles(args.profiles_prev or "",
+                                         args.profiles_cur, args.max_regression)
 
     if not os.path.exists(args.cur):
         print(f"bench guard: current dump {args.cur} missing", file=sys.stderr)

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Generate the checked-in device-profile fixtures.
+
+Writes two files under python/tests/fixtures/:
+
+- profile_golden.json — a tiny one-layer model (weights drawn from the
+  mirrored Prng stream, seed 42) with the sentinel-probe deviation of
+  every preset profile at a fixed clock. Consumed by the Rust
+  integration test `profile_golden_deviations_within_tolerance` and
+  re-verified by tests/test_profile_mirror.py: any accidental change to
+  the Prng, the fnv1a tile addressing, a model's loop order, or the
+  probe math on either side of the language boundary shows up as a
+  deviation mismatch.
+
+- spearman_fuzz.json — ≥ 200 random (xs, ys, rho) cases through the
+  bit-exact Spearman port, consumed by the Rust test
+  `spearman_matches_python_mirror_fixture` at 1e-12.
+
+Deterministic: re-running reproduces both files byte-for-byte.
+"""
+
+import json
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python", "tests"))
+
+import mirror_profile as mp  # noqa: E402
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "..", "python", "tests", "fixtures")
+
+GOLDEN = {
+    "d": 8,
+    "m": 6,
+    "rows": 4,
+    "seed": 9,
+    "experts": 2,
+    "elapsed_tokens": 4096,
+}
+
+
+def draw_experts(d, m, n_experts):
+    """The Rust test's weight stream: Prng(42), up → gate → down."""
+    import numpy as np
+
+    rng = mp.Prng(42)
+
+    def draw(length):
+        return np.array(
+            [rng.gaussian_f32() * np.float32(0.3) for _ in range(length)], np.float32
+        )
+
+    return [
+        {"up": draw(d * m), "gate": draw(d * m), "down": draw(m * d)}
+        for _ in range(n_experts)
+    ]
+
+
+def golden_fixture():
+    d, m = GOLDEN["d"], GOLDEN["m"]
+    rows, seed = GOLDEN["rows"], GOLDEN["seed"]
+    clock = mp.Clock(
+        elapsed_tokens=GOLDEN["elapsed_tokens"],
+        birth_tokens=0,
+        cycle=GOLDEN["elapsed_tokens"],
+    )
+    experts = draw_experts(d, m, GOLDEN["experts"])
+    x = mp.sentinel(rows, d, seed)
+    profiles = []
+    for name in ["ideal", "pcm-drift", "reram-noisy", "adc-limited", "worst-case"]:
+        models = mp.preset(name)
+        deviations = []
+        for e, host in enumerate(experts):
+            want = mp.gated_mlp(x, host["up"], host["gate"], host["down"], rows, d, m)
+            up = host["up"].copy()
+            gate = host["gate"].copy()
+            down = host["down"].copy()
+            mp.perturb_matrix(models, up, d, m, mp.Site(0, e, 0), clock)
+            mp.perturb_matrix(models, gate, d, m, mp.Site(0, e, 1), clock)
+            mp.perturb_matrix(models, down, m, d, mp.Site(0, e, 2), clock)
+            got = mp.gated_mlp(x, up, gate, down, rows, d, m)
+            deviations.append(mp.probe_deviation(got, want))
+        profiles.append({"profile": name, "deviations": deviations})
+    return dict(GOLDEN, profiles=profiles)
+
+
+def spearman_fixture(n_cases=220, seed=0x5EED):
+    rng = random.Random(seed)
+    cases = []
+    for i in range(n_cases):
+        n = rng.randint(2, 40)
+        xs = [rng.uniform(-10.0, 10.0) for _ in range(n)]
+        if i % 4 == 0:
+            # exercise the stable tie-break: duplicate some values
+            for _ in range(max(1, n // 4)):
+                a, b = rng.randrange(n), rng.randrange(n)
+                xs[a] = xs[b]
+        if i % 7 == 0:
+            ys = [x * rng.choice([-2.0, 3.0]) + rng.uniform(-0.1, 0.1) for x in xs]
+        else:
+            ys = [rng.uniform(-5.0, 5.0) for _ in range(n)]
+        cases.append({"xs": xs, "ys": ys, "rho": mp.spearman(xs, ys)})
+    return {"cases": cases}
+
+
+def main():
+    os.makedirs(FIXTURE_DIR, exist_ok=True)
+    golden = golden_fixture()
+    with open(os.path.join(FIXTURE_DIR, "profile_golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+        f.write("\n")
+    fuzz = spearman_fixture()
+    with open(os.path.join(FIXTURE_DIR, "spearman_fuzz.json"), "w") as f:
+        json.dump(fuzz, f)
+        f.write("\n")
+    for p in golden["profiles"]:
+        devs = ", ".join(f"{v:.4f}" for v in p["deviations"])
+        print(f"{p['profile']:>12}: [{devs}]")
+    print(f"wrote {len(fuzz['cases'])} spearman fuzz cases")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Routing-traffic EWMA mirror tests (issue 8 satellite).
+
+Pure-python port of ``rust/src/moe/traffic.rs``'s ``TrafficStats``
+semantics — EWMA update, per-layer sum-to-one invariant, pooled
+frequency, and the update-count-weighted replica merge — fuzzed against
+a reference implementation and pinned to the exact binary constants the
+Rust unit test ``ewma_matches_python_mirror_constants`` asserts. No
+numpy needed beyond convenience; no artifacts.
+"""
+
+import random
+
+DEFAULT_ALPHA = 0.2
+
+
+class TrafficMirror:
+    """Line-for-line mirror of TrafficStats (the EWMA parts)."""
+
+    def __init__(self, n_layers, n_experts, alpha=DEFAULT_ALPHA):
+        assert 0.0 < alpha <= 1.0
+        self.alpha = alpha
+        self.shares = [[0.0] * n_experts for _ in range(n_layers)]
+        self.updates = [0] * n_layers
+
+    def update(self, layer, counts):
+        total = sum(counts)
+        if total == 0:
+            return
+        first = self.updates[layer] == 0
+        row = self.shares[layer]
+        for e, c in enumerate(counts):
+            share = c / total
+            row[e] = share if first else (1.0 - self.alpha) * row[e] + self.alpha * share
+        self.updates[layer] += 1
+
+    def frequency(self):
+        n_experts = len(self.shares[0]) if self.shares else 0
+        freq = [0.0] * n_experts
+        active = sum(1 for u in self.updates if u > 0)
+        if active == 0:
+            return freq
+        for l, row in enumerate(self.shares):
+            if self.updates[l] == 0:
+                continue
+            for e, s in enumerate(row):
+                freq[e] += s / active
+        return freq
+
+    def merge(self, other):
+        for l in range(len(self.shares)):
+            a, b = self.updates[l], other.updates[l]
+            if b == 0:
+                continue
+            if a == 0:
+                self.shares[l] = list(other.shares[l])
+            else:
+                wa, wb = a / (a + b), b / (a + b)
+                self.shares[l] = [
+                    wa * x + wb * y for x, y in zip(self.shares[l], other.shares[l])
+                ]
+            self.updates[l] = a + b
+
+
+# ------------------------------------------------------ pinned constants
+
+
+def test_ewma_pinned_constants_match_rust_unit_test():
+    # the exact scenario rust pins in ewma_matches_python_mirror_constants:
+    # alpha 0.25, seed [3,1]/4 then fold [1,3]/4. Every operand is a
+    # dyadic rational, so the result is exact in binary on both sides.
+    t = TrafficMirror(1, 2, alpha=0.25)
+    t.update(0, [3, 1])
+    assert t.shares[0] == [0.75, 0.25]
+    t.update(0, [1, 3])
+    assert t.shares[0] == [0.625, 0.375]
+    assert t.updates[0] == 2
+
+
+def test_first_update_seeds_directly_and_zero_total_is_noop():
+    t = TrafficMirror(2, 4)
+    t.update(0, [3, 1, 0, 0])
+    assert t.shares[0] == [0.75, 0.25, 0.0, 0.0]
+    assert t.updates == [1, 0]
+    before = list(t.shares[0])
+    t.update(0, [0, 0, 0, 0])
+    assert t.shares[0] == before and t.updates[0] == 1
+
+
+# ------------------------------------------------------------ invariants
+
+
+def test_layer_shares_sum_to_one_under_fuzzed_streams():
+    rng = random.Random(0x7AFF1C)
+    for _ in range(200):
+        n_experts = rng.randint(1, 8)
+        alpha = 0.05 + 0.9 * rng.random()
+        t = TrafficMirror(1, n_experts, alpha=alpha)
+        updated = False
+        for _ in range(rng.randint(1, 20)):
+            counts = [rng.randrange(5) for _ in range(n_experts)]
+            updated |= sum(counts) > 0
+            t.update(0, counts)
+        if updated:
+            assert abs(sum(t.shares[0]) - 1.0) < 1e-9
+            assert abs(sum(t.frequency()) - 1.0) < 1e-9
+
+
+def test_frequency_pools_updated_layers_only():
+    t = TrafficMirror(3, 2)
+    t.update(0, [1, 0])
+    t.update(2, [0, 1])
+    # layer 1 never updated: mean over layers 0 and 2 only
+    assert t.frequency() == [0.5, 0.5]
+    assert TrafficMirror(2, 2).frequency() == [0.0, 0.0]
+
+
+def test_ewma_converges_to_a_steady_distribution():
+    # feeding the same skewed batch forever must converge on its share
+    t = TrafficMirror(1, 4)
+    for _ in range(200):
+        t.update(0, [5, 2, 2, 1])
+    want = [0.5, 0.2, 0.2, 0.1]
+    assert all(abs(s - w) < 1e-9 for s, w in zip(t.shares[0], want))
+
+
+# ----------------------------------------------------------------- merge
+
+
+def test_merge_is_update_count_weighted():
+    # rust's merge_is_update_count_weighted, exactly
+    a = TrafficMirror(1, 2, alpha=1.0)
+    b = TrafficMirror(1, 2, alpha=1.0)
+    a.update(0, [1, 0])
+    b.update(0, [0, 1])
+    b.update(0, [0, 1])
+    a.merge(b)
+    assert a.shares[0] == [1.0 / 3.0, 2.0 / 3.0]
+    assert a.updates[0] == 3
+
+
+def test_merge_preserves_sum_and_adds_updates_fuzzed():
+    rng = random.Random(8)
+    for _ in range(100):
+        n = rng.randint(1, 6)
+        a, b = TrafficMirror(1, n), TrafficMirror(1, n)
+        for _ in range(rng.randint(1, 6)):
+            a.update(0, [1 + rng.randrange(4) for _ in range(n)])
+        for _ in range(rng.randint(1, 6)):
+            b.update(0, [1 + rng.randrange(4) for _ in range(n)])
+        ua, ub = a.updates[0], b.updates[0]
+        a.merge(b)
+        assert a.updates[0] == ua + ub
+        assert abs(sum(a.shares[0]) - 1.0) < 1e-9

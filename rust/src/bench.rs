@@ -29,7 +29,7 @@ use crate::aimc::program::NoiseModel;
 use crate::config::{AimcConfig, Meta, ModelConfig};
 use crate::coordinator::{
     Cluster, EngineBuilder, Executor, Lane, LaneMetrics, LaneParams, MaintenancePolicy, Metrics,
-    Request, Response, Server, ServerConfig, ThreadExecutor,
+    Request, Response, Server, ServerConfig, ShedPolicy, ThreadExecutor,
 };
 use crate::eval::data::{load_rows, load_tasks, Task};
 use crate::eval::Evaluator;
@@ -478,15 +478,18 @@ fn metrics_backends_json(m: &Metrics) -> Json {
 /// throughput, per-wave trajectory, aggregate and per-backend
 /// utilization ([`Metrics::utilization`]), the simulated Appendix-A
 /// clocks, and a byte-identity check between the two response streams.
-/// Three scenario blocks ride along: `drift_soak` (aggressive drift
+/// Four scenario blocks ride along: `drift_soak` (aggressive drift
 /// with the server-owned maintenance cadence), `mixed_priority`
 /// (bursty interactive over steady bulk through the [`Server`] lanes,
 /// with per-lane p50/p95/p99 wait ticks — the latency trajectory the
-/// CI guard watches), and `replica_scaling` (the same mixed stream
+/// CI guard watches), `replica_scaling` (the same mixed stream
 /// through an expert-sharded [`Cluster`] of worker-thread replicas at
 /// 1/2/4 replicas, with per-replica utilization and wall-clock
-/// interactive percentiles). Requires the AOT artifact tree. Schema:
-/// `docs/BENCHMARKS.md`.
+/// interactive percentiles), and `hot_traffic` (a Zipf-skewed stream
+/// under drift served with traffic-aware placement off vs on, an
+/// overload flood with and without the [`ShedPolicy`] shed, and the
+/// shed-disarmed byte-identity regression flag). Requires the AOT
+/// artifact tree. Schema: `docs/BENCHMARKS.md`.
 pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
     let artifacts = crate::artifacts_dir();
     let meta = Meta::load(&artifacts)?;
@@ -522,7 +525,7 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
     // serve the same stream through one engine configuration; waves of
     // one compiled batch give the per-wave throughput trajectory
     let mut serve =
-        |workers: usize| -> Result<(Vec<Response>, Metrics, f64, Vec<f64>, f64)> {
+        |workers: usize| -> Result<(Vec<Response>, Metrics, f64, Vec<f64>, f64, f64)> {
             let engine = EngineBuilder::new()
                 .model(cfg.clone())
                 .aimc(meta.aimc)
@@ -552,13 +555,14 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
             }
             let wall = t0.elapsed().as_secs_f64();
             let occupancy = server.occupancy();
+            let hit_rate = server.engine().scratch().hit_rate();
             let metrics = server.metrics().clone();
-            Ok((responses, metrics, wall, trajectory, occupancy))
+            Ok((responses, metrics, wall, trajectory, occupancy, hit_rate))
         };
 
-    let (seq_r, _seq_m, seq_wall, _, _) = serve(1)?;
+    let (seq_r, _seq_m, seq_wall, _, _, _) = serve(1)?;
     let workers = default_workers();
-    let (par_r, par_m, par_wall, trajectory, occupancy) = serve(workers)?;
+    let (par_r, par_m, par_wall, trajectory, occupancy, scratch_hit_rate) = serve(workers)?;
 
     // --- drift soak: the long-horizon serving scenario — aggressive
     // conductance drift with the server-owned maintenance cadence
@@ -787,6 +791,178 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         ])
     };
 
+    // --- hot-expert traffic: a Zipf-skewed stream under aggressive
+    // drift, served four ways — traffic-aware placement off vs on
+    // (same stream, same cadence; the hot-expert caching comparison),
+    // and an overload flood with and without the load-shed policy
+    // (docs/BENCHMARKS.md §Hot-expert caching, §Load shedding) ---
+    let hot_nu = 0.4;
+    let hot_budget = 4usize;
+    let hot_weight = 4.0;
+    let shed_wm = 2 * cfg.batch.max(1);
+    let moe_layers = cfg.n_moe_layers();
+    let hot_traffic = {
+        // Zipf-ish skew: log-uniform token draws concentrate routing
+        // mass on a few experts — the regime hot-expert caching pays
+        // off in (deterministic stream: fixed Prng seed)
+        let mut rng = Prng::new(0x7AFF1C);
+        let skewed: Vec<Request> = (0..n_requests)
+            .map(|i| Request {
+                id: i as u64,
+                tokens: (0..t)
+                    .map(|_| ((vocab as f64).powf(rng.uniform()) as usize % vocab) as i32)
+                    .collect(),
+                targets: (0..t).map(|j| ((i * 13 + j * 7) % vocab) as i32).collect(),
+                mask: vec![1.0; t],
+                arrived: 0,
+            })
+            .collect();
+
+        struct ArmOut {
+            responses: Vec<Response>,
+            m: Metrics,
+            wall: f64,
+            hit_rate: f64,
+            wait_p95_us: f64,
+            admitted: u64,
+            served: u64,
+        }
+
+        // one arm: serve the skewed stream with drift + a maintenance
+        // tick every compiled batch. `weight` 0.0 is the deviation-only
+        // planner (the pre-traffic baseline); > 0 turns on traffic-
+        // aware planning + prefetch staging. `flood` floods the
+        // interactive queue (poll only on rejection) so a shed
+        // watermark is actually crossed.
+        let mut arm = |weight: f64, flood: bool, shed: Option<ShedPolicy>| -> Result<ArmOut> {
+            let engine = EngineBuilder::new()
+                .model(cfg.clone())
+                .aimc(meta.aimc)
+                .placement(placement.clone())
+                .serve_cap(meta.serve_cap)
+                .drift(DriftModel::with_nu(hot_nu))
+                .replacer(RePlacerOptions {
+                    budget: hot_budget,
+                    traffic_weight: weight,
+                    ..Default::default()
+                })
+                .build(&mut rt, &paths, &params)?;
+            let mut server_cfg = single_lane(cfg.batch)
+                .maintenance(MaintenancePolicy::every(cfg.batch.max(1) as u64));
+            if let Some(p) = shed {
+                server_cfg = server_cfg.shed(p);
+            }
+            let mut server = Server::new(&rt, engine, server_cfg);
+            let client = server.client();
+            let t0 = Instant::now();
+            if flood {
+                for r in &skewed {
+                    let mut req = r.clone();
+                    loop {
+                        match server.enqueue(&client, req, Lane::Interactive) {
+                            Ok(_) => break,
+                            Err(back) => {
+                                server.poll()?;
+                                req = back;
+                            }
+                        }
+                    }
+                }
+                server.drain()?;
+            } else {
+                for wave in skewed.chunks(cfg.batch.max(1)) {
+                    for r in wave {
+                        server
+                            .enqueue(&client, r.clone(), Lane::Interactive)
+                            .map_err(|_| anyhow::anyhow!("hot-traffic queue rejected"))?;
+                        server.poll()?;
+                    }
+                    server.drain()?;
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let responses: Vec<Response> =
+                server.recv_all().into_iter().map(|c| c.response).collect();
+            let (report, engine) = server.shutdown()?;
+            let interactive = &report.lanes[Lane::Interactive.index()];
+            Ok(ArmOut {
+                responses,
+                wall,
+                hit_rate: engine.scratch().hit_rate(),
+                wait_p95_us: interactive.wait_us.quantile(0.95),
+                admitted: report.lanes.iter().map(|l| l.admitted).sum(),
+                served: report.lanes.iter().map(|l| l.served).sum(),
+                m: engine.metrics,
+            })
+        };
+
+        let off = arm(0.0, false, None)?;
+        // same weight-0 stream with a never-reached watermark: the
+        // disarmed shed must be byte-identical to no policy at all
+        let never = ShedPolicy {
+            watermark: usize::MAX,
+            resume: 0,
+            top_k_cut: 1,
+            cold_share: 0.5,
+        };
+        let disarmed = arm(0.0, false, Some(never))?;
+        let aware = arm(hot_weight, false, None)?;
+        let overload = arm(hot_weight, true, None)?;
+        let shedded = arm(hot_weight, true, Some(ShedPolicy::watermark(shed_wm)))?;
+
+        let ident = |a: &[Response], b: &[Response]| {
+            a.len() == b.len()
+                && a.iter()
+                    .zip(b)
+                    .all(|(x, y)| x.id == y.id && x.score.to_bits() == y.score.to_bits())
+        };
+        let shed_disarmed_identical = ident(&off.responses, &disarmed.responses);
+
+        let arm_json = |a: &ArmOut| {
+            // every served token routes top_k picks per MoE layer —
+            // the denominator of the shed fraction
+            let assigns = a.m.tokens as f64 * (moe_layers * cfg.top_k) as f64;
+            Json::obj(vec![
+                ("wall_s", Json::num(a.wall)),
+                ("tokens_per_s", Json::num(a.m.tokens as f64 / a.wall.max(1e-12))),
+                ("scratch_hit_rate", Json::num(a.hit_rate)),
+                ("migrations", Json::num(a.m.migrations as f64)),
+                ("promotions", Json::num(a.m.promotions as f64)),
+                ("demotions", Json::num(a.m.demotions as f64)),
+                ("admitted", Json::num(a.admitted as f64)),
+                ("served", Json::num(a.served as f64)),
+                ("shed_batches", Json::num(a.m.shed_batches as f64)),
+                ("shed_tokens", Json::num(a.m.shed_tokens as f64)),
+                (
+                    "shed_fraction",
+                    Json::num(if assigns > 0.0 {
+                        a.m.shed_tokens as f64 / assigns
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("interactive_wait_us_p95", Json::num(a.wait_p95_us)),
+            ])
+        };
+        let caching_speedup = (aware.m.tokens as f64 / aware.wall.max(1e-12))
+            / (off.m.tokens as f64 / off.wall.max(1e-12)).max(1e-12);
+
+        Json::obj(vec![
+            ("requests", Json::num(n_requests as f64)),
+            ("nu", Json::num(hot_nu)),
+            ("migration_budget", Json::num(hot_budget as f64)),
+            ("traffic_weight", Json::num(hot_weight)),
+            ("shed_watermark", Json::num(shed_wm as f64)),
+            ("baseline", arm_json(&off)),
+            ("traffic_aware", arm_json(&aware)),
+            ("overload", arm_json(&overload)),
+            ("overload_shed", arm_json(&shedded)),
+            ("caching_speedup", Json::num(caching_speedup)),
+            ("shed_disarmed_identical", Json::Bool(shed_disarmed_identical)),
+            ("routing_frequency", Json::arr_f64(&aware.m.traffic.frequency())),
+        ])
+    };
+
     let identical = seq_r.len() == par_r.len()
         && seq_r
             .iter()
@@ -819,6 +995,10 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         ("utilization", Json::num(par_m.utilization())),
         ("batch_occupancy", Json::num(occupancy)),
         ("alloc_bytes", Json::num(par_m.alloc_bytes as f64)),
+        ("scratch_hit_rate", Json::num(scratch_hit_rate)),
+        // per-expert routing frequency of the parallel run (mean EWMA
+        // share across MoE layers; sums to 1) — skew at a glance
+        ("routing_frequency", Json::arr_f64(&par_m.traffic.frequency())),
         // drift accounting of the (drift-free) parallel run — the
         // clock ticks regardless, migrations/deviation stay zero; the
         // drift_soak block is where they move
@@ -828,6 +1008,7 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         ("drift_soak", soak),
         ("mixed_priority", mixed),
         ("replica_scaling", replica_scaling),
+        ("hot_traffic", hot_traffic),
         ("backends", metrics_backends_json(&par_m)),
         ("simulated_tokens_per_s", Json::num(par_m.simulated_tokens_per_s())),
         (

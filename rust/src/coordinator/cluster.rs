@@ -44,6 +44,7 @@ use super::executor::{Executor, ExecutorReport};
 use super::metrics::{LaneMetrics, Metrics};
 use super::server::{Completion, DrainReport, Lane};
 use crate::moe::placement::ShardPlan;
+use crate::moe::traffic::TrafficStats;
 
 /// Aggregate serving accounting across every replica of a [`Cluster`],
 /// assembled at [`Cluster::shutdown`].
@@ -63,6 +64,10 @@ pub struct ClusterMetrics {
     pub lanes: Vec<LaneMetrics>,
     /// Each replica engine's final serving metrics, indexed by replica.
     pub per_replica: Vec<Metrics>,
+    /// Cluster-wide routing-share EWMA: every replica's
+    /// [`TrafficStats`] merged with update-count weighting
+    /// ([`TrafficStats::merge`]), so per-layer shares still sum to one.
+    pub traffic: TrafficStats,
 }
 
 impl ClusterMetrics {
@@ -286,12 +291,17 @@ impl<'rt> Cluster<'rt> {
                 }
             }
         }
+        let mut traffic = TrafficStats::default();
+        for rep in &reports {
+            traffic.merge(&rep.metrics.traffic);
+        }
         let metrics = ClusterMetrics {
             replicas,
             requests: self.requests,
             steals: self.steals,
             lanes,
             per_replica: reports.iter().map(|r| r.metrics.clone()).collect(),
+            traffic,
         };
         Ok(ClusterReport { completions, replicas: reports, metrics })
     }
@@ -416,7 +426,13 @@ mod tests {
                 maintenance: Default::default(),
                 maintenance_log: Vec::new(),
             };
-            Ok(ExecutorReport { report, metrics: Metrics::default() })
+            // every mock replica reports the same small routing EWMA so
+            // rollup tests can pin the cluster-wide merge
+            let mut metrics = Metrics::default();
+            let mut traffic = TrafficStats::new(1, 2);
+            traffic.update(0, &[3, 1]);
+            metrics.traffic = traffic;
+            Ok(ExecutorReport { report, metrics })
         }
     }
 
@@ -539,5 +555,11 @@ mod tests {
         assert_eq!(report.metrics.per_replica.len(), 2);
         // unconsumed completions surface in the cluster report
         assert_eq!(report.completions.len(), 6);
+        // both replicas reported the same [0.75, 0.25] routing EWMA;
+        // the update-count-weighted merge preserves it exactly
+        let t = &report.metrics.traffic;
+        assert!(!t.is_empty(), "cluster rollup must carry the merged traffic");
+        assert!((t.share(0, 0) - 0.75).abs() < 1e-12);
+        assert!((t.share(0, 1) - 0.25).abs() < 1e-12);
     }
 }

@@ -14,6 +14,8 @@
 
 use std::time::Duration;
 
+use crate::moe::traffic::TrafficStats;
+
 /// Log₂-bucketed histogram of queueing waits in arrival ticks.
 ///
 /// Bucket `b` covers waits in `[2^b − 1, 2^(b+1) − 2]` (bucket 0 is
@@ -251,6 +253,20 @@ pub struct Metrics {
     /// migrations)
     pub maintenance_wall: Duration,
 
+    // routing-traffic + load-shedding accounting
+    /// live per-expert routing-share EWMA, fed from the router's top-k
+    /// output every batch (`moe::traffic`). Empty (zero layers) until
+    /// an engine is built around this metrics value; the traffic-aware
+    /// re-placer, prefetch staging, and the serve routing-frequency
+    /// reports all read it. Merged across replicas by the cluster
+    /// rollup ([`TrafficStats::merge`]).
+    pub traffic: TrafficStats,
+    /// batches served with the load-shed policy armed (overload mode)
+    pub shed_batches: u64,
+    /// (token, expert) routing assignments dropped by the armed shed
+    /// policy (adaptive top-k cuts + cold-expert skips)
+    pub shed_tokens: u64,
+
     // real wall time per coordinator stage
     /// end-to-end batch wall time
     pub total_wall: Duration,
@@ -355,12 +371,29 @@ impl Metrics {
                 b.transfer_bytes,
             ));
         }
+        let traffic_line = if self.traffic.total_updates() > 0 || self.shed_batches > 0 {
+            let hottest = self
+                .traffic
+                .hottest(1)
+                .first()
+                .map(|&(l, e, s)| format!("L{l}/E{e} share={s:.3}"))
+                .unwrap_or_else(|| "-".to_string());
+            format!(
+                "\ntraffic: ewma updates={} hottest={} shed batches={} shed tokens={}",
+                self.traffic.total_updates(),
+                hottest,
+                self.shed_batches,
+                self.shed_tokens
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests={} batches={} tokens={}\n\
              dispatches: {dispatch_line} utilization={:.2}\n\
              transfers:{transfer_line} alloc={} B\n\
              drift: clock={} tokens migrations={} ({} promoted, {} demoted) \
-             sentinel max |dev|={:.4}\n\
+             sentinel max |dev|={:.4}{traffic_line}\n\
              wall: total={:.3}s attn={:.3}s route={:.3}s pack={:.3}s \
              scatter={:.3}s{backend_wall} \
              shared={:.3}s lm={:.3}s maint={:.3}s → {:.0} tok/s\n\
@@ -630,5 +663,23 @@ mod tests {
         assert!((m.backends[0].chunks_per_round_trip() - 4.0).abs() < 1e-12);
         // untouched backend reports 0 without dividing by zero
         assert_eq!(BackendMetrics::default().chunks_per_round_trip(), 0.0);
+    }
+
+    #[test]
+    fn traffic_line_is_gated_on_activity() {
+        // a default Metrics has never seen routing traffic nor shed work:
+        // the report must not grow a traffic line (pins PR 7 output shape)
+        let quiet = Metrics::default();
+        assert!(!quiet.report().contains("traffic:"));
+
+        let mut m = Metrics::default();
+        m.traffic = crate::moe::traffic::TrafficStats::new(1, 4);
+        m.traffic.update(0, &[0, 1, 9, 0]);
+        m.shed_batches = 2;
+        m.shed_tokens = 17;
+        let report = m.report();
+        assert!(report.contains("traffic: ewma updates=1"));
+        assert!(report.contains("hottest=L0/E2 share=0.900"));
+        assert!(report.contains("shed batches=2 shed tokens=17"));
     }
 }

@@ -107,7 +107,7 @@ pub use executor::{EngineFactory, Executor, ExecutorReport, ThreadExecutor, Tick
 pub use metrics::{BackendMetrics, LaneMetrics, Metrics, WaitHistogram};
 pub use server::{
     ClientHandle, ClientId, Completion, DrainReport, Lane, MaintenancePolicy, Server,
-    ServerConfig, Ticket,
+    ServerConfig, ShedPolicy, Ticket,
 };
 pub use session::{Session, SubmitOutcome};
 
@@ -122,6 +122,7 @@ use crate::moe::placement::{
     Migration, Placement, RePlacer, RePlacerOptions, BACKEND_ANALOG, BACKEND_DIGITAL,
 };
 use crate::moe::score::RouterStats;
+use crate::moe::traffic::TrafficStats;
 use crate::runtime::pool::{default_workers, WorkerPool};
 use crate::runtime::{ArtifactPaths, Executable, ParamStore, Runtime, ScratchArena};
 use crate::tensor;
@@ -385,6 +386,9 @@ impl EngineBuilder {
         for (i, b) in backends.iter().enumerate() {
             engine_metrics.backend_mut(i, b.name()); // pre-register names
         }
+        // routing-share EWMA: fed from every batch's top-k output, read
+        // by the traffic-aware re-placer and the prefetch stage
+        engine_metrics.traffic = TrafficStats::new(cfg.n_layers, cfg.n_experts);
         let pool = WorkerPool::new(self.workers.unwrap_or_else(default_workers));
         let route_groups = vec![Vec::new(); cfg.n_experts];
         // compose the effective nonideality stack: the named profile's
@@ -426,6 +430,8 @@ impl EngineBuilder {
             replacer,
             drift_tokens: 0,
             birth,
+            shed_cut: 0,
+            shed_cold_share: 0.0,
             host_experts,
             attn_exe,
             lm_exe,
@@ -445,6 +451,10 @@ impl EngineBuilder {
 /// Sentinel rows the drift monitor replays per expert probe (small on
 /// purpose: one probe is `3 · SENTINEL_ROWS · d · m` MACs on the host).
 pub const SENTINEL_ROWS: usize = 8;
+
+/// Hottest experts whose pack buffers the maintenance tick pre-stages
+/// in the [`ScratchArena`] when traffic-aware placement is on.
+pub const PREFETCH_EXPERTS: usize = 4;
 
 /// What one [`Engine::maintenance`] tick did.
 #[derive(Clone, Debug, Default)]
@@ -495,6 +505,12 @@ pub struct Engine {
     drift_tokens: u64,
     /// drift clock value at each expert's last (re)programming
     birth: Vec<Vec<u64>>,
+    /// armed load-shed: per-token top-k picks dropped (0 = disarmed,
+    /// the dispatch path is byte-identical to a shed-free build)
+    shed_cut: usize,
+    /// armed load-shed: non-primary picks to experts whose normalized
+    /// routing share sits below this are skipped too
+    shed_cold_share: f64,
     /// host reference weights per `[layer][expert]` (empty for dense
     /// layers): digital ground truth + migration source. Kept even
     /// with drift disabled so operator-driven [`Engine::apply_replacement`]
@@ -539,6 +555,34 @@ impl Engine {
     /// The engine's scratch arena (hit rate / allocation accounting).
     pub fn scratch(&self) -> &ScratchArena {
         &self.scratch
+    }
+
+    /// Arm the overload load-shed: drop each token's `top_k_cut`
+    /// lowest-gate expert picks (the highest-gate pick always serves),
+    /// and additionally skip non-primary picks to experts whose
+    /// normalized routing share sits below `cold_share` (1.0 = the
+    /// uniform share). The [`Server`] arms and disarms this from its
+    /// [`ShedPolicy`] watermark; callable directly for operator-driven
+    /// degradation. A `top_k_cut` of 0 disarms; while disarmed the
+    /// dispatch path is byte-identical to a shed-free build.
+    pub fn set_shed(&mut self, top_k_cut: usize, cold_share: f64) {
+        assert!(
+            cold_share.is_finite() && cold_share >= 0.0,
+            "shed cold_share must be finite and >= 0, got {cold_share}"
+        );
+        self.shed_cut = top_k_cut.min(self.cfg.top_k.saturating_sub(1));
+        self.shed_cold_share = cold_share;
+    }
+
+    /// Disarm the load-shed; dispatch returns to full top-k routing.
+    pub fn clear_shed(&mut self) {
+        self.shed_cut = 0;
+        self.shed_cold_share = 0.0;
+    }
+
+    /// Is the load-shed currently armed?
+    pub fn shed_armed(&self) -> bool {
+        self.shed_cut > 0
     }
 
     /// Serve one batch of requests through the full pipeline, returning
@@ -649,6 +693,9 @@ impl Engine {
         }
 
         self.metrics.batches += 1;
+        if self.shed_cut > 0 {
+            self.metrics.shed_batches += 1;
+        }
         self.metrics.requests += reqs.len() as u64;
         self.metrics.tokens += batch_tokens as u64;
         // the drift clock ticks in served tokens — the serving proxy
@@ -760,8 +807,25 @@ impl Engine {
             }
         }
         let planning = self.monitor.planning_deviations();
-        let migrations = self.replacer.plan(&self.placement, &planning);
+        let traffic_weight = self.replacer.options().traffic_weight;
+        let migrations = if traffic_weight > 0.0 {
+            // traffic-aware plan: hot noise-sensitive experts get first
+            // claim on digital residency, cold residents demote first
+            self.replacer
+                .plan_with_traffic(&self.placement, &planning, Some(&self.metrics.traffic))
+        } else {
+            self.replacer.plan(&self.placement, &planning)
+        };
         self.apply_replacement(rt, &migrations)?;
+        if traffic_weight > 0.0 {
+            // prefetch staging: pre-warm pack/dispatch buffers for the
+            // predicted-hot experts so the first post-migration batch
+            // hits recycled arena buffers instead of cold allocs
+            let hot = self.metrics.traffic.hottest(PREFETCH_EXPERTS);
+            if !hot.is_empty() {
+                self.scratch.reserve(self.serve_cap.max(1) * self.cfg.d_model, hot.len());
+            }
+        }
         self.metrics.sentinel_deviation = self.monitor.max_deviation();
         self.metrics.drift_clock = self.drift_tokens;
         self.metrics.maintenance_wall += t0.elapsed();
@@ -889,6 +953,8 @@ impl Engine {
             router_stats,
             scratch,
             route_groups,
+            shed_cut,
+            shed_cold_share,
             ..
         } = self;
         let d = cfg.d_model;
@@ -934,11 +1000,53 @@ impl Engine {
         for g in route_groups.iter_mut() {
             g.clear();
         }
-        for i in 0..n {
-            for &(e, g) in &picks[i * top_k..(i + 1) * top_k] {
-                route_groups[e].push((i, g));
-                router_stats.record(layer, e, g as f64);
+        if *shed_cut == 0 {
+            for i in 0..n {
+                for &(e, g) in &picks[i * top_k..(i + 1) * top_k] {
+                    route_groups[e].push((i, g));
+                    router_stats.record(layer, e, g as f64);
+                }
             }
+            // routing-share EWMA off the groups just built (alloc-free)
+            metrics.traffic.update_from_groups(layer, route_groups);
+        } else {
+            // armed load-shed. The EWMA and router stats still measure
+            // the router's raw top-k output — shedding must not bias
+            // the traffic signal it consults — only the dispatch groups
+            // are thinned. Per token: keep the (top_k − cut)
+            // highest-gate picks (the highest-gate pick always serves)
+            // and skip surviving non-primary picks routed to experts
+            // colder than the cold-share floor.
+            let mut counts = vec![0usize; e_n];
+            for i in 0..n {
+                for &(e, g) in &picks[i * top_k..(i + 1) * top_k] {
+                    counts[e] += 1;
+                    router_stats.record(layer, e, g as f64);
+                }
+            }
+            metrics.traffic.update(layer, &counts);
+            let keep = top_k.saturating_sub(*shed_cut).max(1);
+            let cold = *shed_cold_share;
+            let mut shed = 0u64;
+            for i in 0..n {
+                let tok = &picks[i * top_k..(i + 1) * top_k];
+                for (j, &(e, g)) in tok.iter().enumerate() {
+                    // gate rank without sorting; ties break on pick slot
+                    let rank = tok
+                        .iter()
+                        .enumerate()
+                        .filter(|&(o, &(_, og))| og > g || (og == g && o < j))
+                        .count();
+                    let drop = rank >= keep
+                        || (rank > 0 && metrics.traffic.normalized_share(layer, e) < cold);
+                    if drop {
+                        shed += 1;
+                    } else {
+                        route_groups[e].push((i, g));
+                    }
+                }
+            }
+            metrics.shed_tokens += shed;
         }
         metrics.route_wall += tr.elapsed();
 
@@ -1156,9 +1264,8 @@ mod tests {
 
     #[test]
     fn builder_drift_and_replacer_roundtrip() {
-        let b = EngineBuilder::new()
-            .drift(DriftModel::with_nu(0.25))
-            .replacer(RePlacerOptions { promote: 0.2, demote: 0.05, budget: 3 });
+        let opts = RePlacerOptions { promote: 0.2, demote: 0.05, budget: 3, traffic_weight: 0.0 };
+        let b = EngineBuilder::new().drift(DriftModel::with_nu(0.25)).replacer(opts);
         assert!((b.drift.unwrap().nu - 0.25).abs() < 1e-12);
         assert_eq!(b.replacer.unwrap().budget, 3);
         // unset → disabled drift + default policy at build time

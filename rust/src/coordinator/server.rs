@@ -36,6 +36,12 @@
 //!   inside [`Server::poll`] / [`Server::drain`]; responses surface
 //!   through [`Server::try_recv`] / [`Server::recv_all`] as
 //!   [`Completion`]s whenever the caller chooses to look.
+//! - **Overload load-shedding is opt-in.** A [`ShedPolicy`] watermark
+//!   on the interactive queue arms the engine's adaptive top-k shed
+//!   (drop the lowest-gate expert picks, skip cold experts) and
+//!   disarms with hysteresis once the queue drains to the resume
+//!   depth. Off by default; while disarmed the dispatch path is
+//!   byte-identical to a shed-free build.
 //! - **The server owns the maintenance cadence.** With
 //!   [`MaintenancePolicy::every`], the drift tick
 //!   ([`Engine::maintenance`]) runs between batches after every N
@@ -175,8 +181,52 @@ impl MaintenancePolicy {
     }
 }
 
+/// Overload load-shedding policy of a [`Server`]. When the interactive
+/// lane's queue depth reaches `watermark`, the server arms the engine's
+/// shed ([`Engine::set_shed`]): each token serves only its
+/// `top_k - top_k_cut` highest-gate expert picks, and surviving
+/// non-primary picks routed to experts colder than `cold_share` are
+/// skipped too — bounded quality traded for queue drain. The shed
+/// disarms with hysteresis once the queue falls to `resume`. Off by
+/// default (`watermark` 0); a disarmed shed never touches the dispatch
+/// path, so outputs stay byte-identical to a shed-free server.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShedPolicy {
+    /// Interactive queue depth that arms the shed (0 = policy off).
+    pub watermark: usize,
+    /// Queue depth at or below which the armed shed disarms (clamped
+    /// below `watermark` at server construction — the hysteresis gap).
+    pub resume: usize,
+    /// Per-token lowest-gate picks dropped while armed (the
+    /// highest-gate pick always serves).
+    pub top_k_cut: usize,
+    /// While armed, non-primary picks to experts whose normalized
+    /// routing share sits below this are skipped (1.0 = uniform).
+    pub cold_share: f64,
+}
+
+impl Default for ShedPolicy {
+    fn default() -> ShedPolicy {
+        ShedPolicy { watermark: 0, resume: 0, top_k_cut: 1, cold_share: 0.0 }
+    }
+}
+
+impl ShedPolicy {
+    /// Arm at `n` queued interactive requests, disarm at `n / 2`, with
+    /// a top-k cut of 1 and a 0.5 cold-share floor.
+    pub fn watermark(n: usize) -> ShedPolicy {
+        ShedPolicy { watermark: n, resume: n / 2, top_k_cut: 1, cold_share: 0.5 }
+    }
+
+    /// Is the policy active (a zero watermark means off)?
+    pub fn enabled(&self) -> bool {
+        self.watermark > 0
+    }
+}
+
 /// Configuration of a [`Server`]: the compiled batch size, one
-/// [`LaneParams`] per [`Lane`], and the maintenance cadence.
+/// [`LaneParams`] per [`Lane`], the maintenance cadence, and the
+/// overload shed policy.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Compiled batch size — releases never exceed it.
@@ -185,6 +235,8 @@ pub struct ServerConfig {
     pub lanes: [LaneParams; Lane::COUNT],
     /// Server-owned drift-maintenance cadence.
     pub maintenance: MaintenancePolicy,
+    /// Overload load-shedding policy (default: off).
+    pub shed: ShedPolicy,
 }
 
 impl ServerConfig {
@@ -200,6 +252,7 @@ impl ServerConfig {
                 LaneParams { weight: 1, max_wait_ticks: 64, max_queue: max_batch * 8 },
             ],
             maintenance: MaintenancePolicy::default(),
+            shed: ShedPolicy::default(),
         }
     }
 
@@ -223,6 +276,12 @@ impl ServerConfig {
     /// Set the server-owned maintenance cadence.
     pub fn maintenance(mut self, policy: MaintenancePolicy) -> ServerConfig {
         self.maintenance = policy;
+        self
+    }
+
+    /// Set the overload load-shedding policy.
+    pub fn shed(mut self, policy: ShedPolicy) -> ServerConfig {
+        self.shed = policy;
         self
     }
 }
@@ -259,6 +318,8 @@ pub struct Server<'rt> {
     lanes: Vec<LaneMetrics>,
     done: VecDeque<Completion>,
     policy: MaintenancePolicy,
+    shed: ShedPolicy,
+    shed_armed: bool,
     served_since_maintenance: u64,
     maintenance_log: Vec<MaintenanceReport>,
     next_ticket: u64,
@@ -284,6 +345,11 @@ impl<'rt> Server<'rt> {
                 ..LaneMetrics::default()
             })
             .collect();
+        let mut shed = cfg.shed;
+        if shed.enabled() {
+            // the hysteresis gap must be real: resume strictly below arm
+            shed.resume = shed.resume.min(shed.watermark - 1);
+        }
         Server {
             rt,
             engine,
@@ -291,6 +357,8 @@ impl<'rt> Server<'rt> {
             lanes,
             done: VecDeque::new(),
             policy: cfg.maintenance,
+            shed,
+            shed_armed: false,
             served_since_maintenance: 0,
             maintenance_log: Vec::new(),
             next_ticket: 0,
@@ -356,12 +424,35 @@ impl<'rt> Server<'rt> {
         self.pump(true)
     }
 
+    /// Arm or disarm the engine's load-shed against the current
+    /// interactive queue depth (hysteresis: arm at the watermark,
+    /// disarm at the lower resume depth). No-op with the policy off.
+    fn update_shed(&mut self) {
+        if !self.shed.enabled() {
+            return;
+        }
+        let depth = self.sched.lane_depth(Lane::Interactive.index());
+        if !self.shed_armed && depth >= self.shed.watermark {
+            self.shed_armed = true;
+            self.engine.set_shed(self.shed.top_k_cut, self.shed.cold_share);
+        } else if self.shed_armed && depth <= self.shed.resume {
+            self.shed_armed = false;
+            self.engine.clear_shed();
+        }
+    }
+
+    /// Is the overload shed currently armed?
+    pub fn shed_armed(&self) -> bool {
+        self.shed_armed
+    }
+
     fn pump(&mut self, drain: bool) -> Result<usize> {
         let mut served = 0usize;
         // the release buffer is a server-lifetime scratch: one
         // allocation serves every pump tick
         let mut batch = std::mem::take(&mut self.batch);
         loop {
+            self.update_shed();
             if self.sched.next_batch_into(drain, &mut batch).is_none() {
                 break;
             }
@@ -548,6 +639,26 @@ mod tests {
     fn maintenance_policy_every() {
         assert_eq!(MaintenancePolicy::every(8).every_n_requests, 8);
         assert_eq!(MaintenancePolicy::default().every_n_requests, 0);
+    }
+
+    #[test]
+    fn shed_policy_defaults_off_with_hysteresis_ctor() {
+        let off = ShedPolicy::default();
+        assert!(!off.enabled());
+        assert_eq!(off.watermark, 0);
+        assert_eq!(off.top_k_cut, 1);
+        assert_eq!(off.cold_share, 0.0);
+
+        let p = ShedPolicy::watermark(16);
+        assert!(p.enabled());
+        assert_eq!(p.resume, 8, "disarm depth defaults to half the arm depth");
+        assert_eq!(p.top_k_cut, 1);
+        assert!((p.cold_share - 0.5).abs() < 1e-12);
+
+        // a ServerConfig carries the policy through the builder
+        let cfg = ServerConfig::new(8).shed(p);
+        assert_eq!(cfg.shed, p);
+        assert!(!ServerConfig::new(8).shed.enabled(), "off by default");
     }
 
     #[test]

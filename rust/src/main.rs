@@ -23,7 +23,7 @@ use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{
     Cluster, EngineBuilder, Executor, Lane, LaneParams, MaintenancePolicy, Request, Server,
-    ServerConfig, ThreadExecutor,
+    ServerConfig, ShedPolicy, ThreadExecutor,
 };
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
@@ -62,6 +62,8 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     ("replace-every", "0", "server maintenance tick every N served requests (0 = shutdown only)"),
     ("migration-budget", "2", "max live migrations per maintenance tick"),
     ("replicas", "1", "engine replicas (1 = tick-driven server; >1 = expert-sharded worker threads)"),
+    ("traffic-weight", "0.0", "traffic-aware placement weight (0 = deviation-only planner)"),
+    ("shed-watermark", "0", "interactive queue depth that arms load-shedding (0 = off)"),
 ];
 const BENCH_FLAGS: &[FlagSpec] = &[
     ("suite", "all", "which benches to run: kernels|serve|profiles|all"),
@@ -348,6 +350,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     };
     let replace_every = cli.get_usize("replace-every");
     let budget = cli.get_usize("migration-budget");
+    let traffic_weight = cli.get_f64("traffic-weight");
+    if !traffic_weight.is_finite() || traffic_weight < 0.0 {
+        bail!("--traffic-weight must be finite and >= 0");
+    }
+    let shed_watermark = cli.get_usize("shed-watermark");
 
     let placement = plan_placement(
         &cfg,
@@ -361,7 +368,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         .aimc(meta.aimc)
         .placement(placement)
         .serve_cap(meta.serve_cap)
-        .replacer(RePlacerOptions { budget, ..Default::default() });
+        .replacer(RePlacerOptions { budget, traffic_weight, ..Default::default() });
     if let Some(p) = &profile {
         builder = builder.device_profile(p.clone());
     }
@@ -375,7 +382,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     // cadence (drift decay → sentinel probes → live re-placement every
     // `replace-every` served requests, plus a final tick at shutdown)
     let wi = ((share * 8.0).round() as u64).clamp(1, 7);
-    let server_cfg = ServerConfig::new(cfg.batch)
+    let mut server_cfg = ServerConfig::new(cfg.batch)
         .lane(
             Lane::Interactive,
             LaneParams { weight: wi, max_wait_ticks: 4, max_queue: cfg.batch * 4 },
@@ -385,6 +392,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             LaneParams { weight: 8 - wi, max_wait_ticks: bulk_wait, max_queue: cfg.batch * 8 },
         )
         .maintenance(MaintenancePolicy::every(replace_every as u64));
+    if shed_watermark > 0 {
+        server_cfg = server_cfg.shed(ShedPolicy::watermark(shed_watermark));
+    }
     let mut server = Server::new(&rt, engine, server_cfg);
     let client = server.client();
 
@@ -506,6 +516,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "sentinel deviation".into(),
         format!("max |dev| {:.4} vs digital reference", m.sentinel_deviation),
     ]);
+    if shed_watermark > 0 {
+        t.row(vec![
+            "load shedding".into(),
+            format!(
+                "{} armed batches, {} tokens shed (watermark {shed_watermark})",
+                m.shed_batches, m.shed_tokens
+            ),
+        ]);
+    }
     for b in &m.backends {
         t.row(vec![
             format!("{} backend", b.name),
@@ -537,8 +556,38 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         format!("{:.1} tokens/J", m.simulated_tokens_per_joule()),
     ]);
     t.print();
+    print_routing_frequency(&m.traffic);
     println!("\n{}", m.report());
     Ok(())
+}
+
+/// Satellite of the traffic-aware placement work: the per-expert
+/// routed-token EWMA share (mean over MoE layers), hottest ten experts
+/// first. Printed by both `hetmoe serve` paths; the full vector lands
+/// in `BENCH_serve.json` under `routing_frequency`.
+fn print_routing_frequency(traffic: &hetmoe::moe::TrafficStats) {
+    if traffic.total_updates() == 0 {
+        return;
+    }
+    let freq = traffic.frequency();
+    let mut idx: Vec<usize> = (0..freq.len()).collect();
+    idx.sort_by(|&a, &b| {
+        freq[b].partial_cmp(&freq[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut ft = Table::new(
+        "routing frequency (EWMA token share per expert, top 10)",
+        &["rank", "expert", "share", "x uniform"],
+    );
+    let uniform = 1.0 / freq.len().max(1) as f64;
+    for (rank, &e) in idx.iter().take(10).enumerate() {
+        ft.row(vec![
+            (rank + 1).to_string(),
+            e.to_string(),
+            format!("{:.4}", freq[e]),
+            format!("{:.2}", freq[e] / uniform),
+        ]);
+    }
+    ft.print();
 }
 
 /// `hetmoe serve --replicas N` (N > 1): an expert-sharded cluster of
@@ -573,6 +622,11 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
     };
     let replace_every = cli.get_usize("replace-every");
     let budget = cli.get_usize("migration-budget");
+    let traffic_weight = cli.get_f64("traffic-weight");
+    if !traffic_weight.is_finite() || traffic_weight < 0.0 {
+        bail!("--traffic-weight must be finite and >= 0");
+    }
+    let shed_watermark = cli.get_usize("shed-watermark");
 
     // plan the global placement on clean parameters; each replica
     // worker then loads and perturbs its own shard-local copy
@@ -588,7 +642,7 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
     let owned: Vec<usize> = (0..replicas).map(|r| shard.owned_slots(r)).collect();
 
     let wi = ((share * 8.0).round() as u64).clamp(1, 7);
-    let server_cfg = ServerConfig::new(cfg.batch)
+    let mut server_cfg = ServerConfig::new(cfg.batch)
         .lane(
             Lane::Interactive,
             LaneParams { weight: wi, max_wait_ticks: 4, max_queue: cfg.batch * 4 },
@@ -598,6 +652,9 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
             LaneParams { weight: 8 - wi, max_wait_ticks: bulk_wait, max_queue: cfg.batch * 8 },
         )
         .maintenance(MaintenancePolicy::every(replace_every as u64));
+    if shed_watermark > 0 {
+        server_cfg = server_cfg.shed(ShedPolicy::watermark(shed_watermark));
+    }
 
     let mut execs: Vec<Box<dyn Executor>> = Vec::with_capacity(replicas);
     for r in 0..replicas {
@@ -615,7 +672,7 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
                 .aimc(aimc)
                 .placement(local)
                 .serve_cap(serve_cap)
-                .replacer(RePlacerOptions { budget, ..Default::default() });
+                .replacer(RePlacerOptions { budget, traffic_weight, ..Default::default() });
             if let Some(p) = &profile_r {
                 b = b.device_profile(p.clone());
             }
@@ -712,6 +769,8 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
         ]);
     }
     t.print();
+    // merged routing traffic (update-count-weighted across replicas)
+    print_routing_frequency(&cm.traffic);
     Ok(())
 }
 
@@ -805,6 +864,22 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
                     soak.get("demotions")?.as_f64()?,
                     soak.get("peak_sentinel_deviation")?.as_f64()?,
                     soak.get("sentinel_deviation")?.as_f64()?,
+                );
+                let ht = entry.get("hot_traffic")?;
+                println!(
+                    "  hot traffic: caching speedup {:.2}x, scratch hit rate \
+                     {:.2} → {:.2}, shed-disarmed identical: {}",
+                    ht.get("caching_speedup")?.as_f64()?,
+                    ht.get("baseline")?.get("scratch_hit_rate")?.as_f64()?,
+                    ht.get("traffic_aware")?.get("scratch_hit_rate")?.as_f64()?,
+                    ht.get("shed_disarmed_identical")?.as_bool()?,
+                );
+                println!(
+                    "  overload: shed fraction {:.3}, interactive wait p95 \
+                     {:.0} µs → {:.0} µs with shedding",
+                    ht.get("overload_shed")?.get("shed_fraction")?.as_f64()?,
+                    ht.get("overload")?.get("interactive_wait_us_p95")?.as_f64()?,
+                    ht.get("overload_shed")?.get("interactive_wait_us_p95")?.as_f64()?,
                 );
                 entries.push(entry);
             }

@@ -12,12 +12,19 @@
 //!   time when conductance drift degrades analog experts
 //!   (hysteresis-banded, budget-bounded — executed live by
 //!   `coordinator::Engine::maintenance`).
+//! - [`traffic`] — live per-expert routing-share EWMA
+//!   ([`traffic::TrafficStats`]) fed from the router's top-k output
+//!   every batch; the signal behind the re-placer's noise × traffic
+//!   scoring, prefetch staging, and the serve routing-frequency
+//!   reports.
 
 pub mod placement;
 pub mod score;
+pub mod traffic;
 
 pub use placement::{
     apply_placement, plan_placement, BackendId, Migration, Placement, PlacementOptions,
     RePlacer, RePlacerOptions, BACKEND_ANALOG, BACKEND_DIGITAL,
 };
 pub use score::{expert_scores, SelectionMetric};
+pub use traffic::TrafficStats;

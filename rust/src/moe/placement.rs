@@ -375,11 +375,25 @@ pub struct RePlacerOptions {
     /// Maximum migrations per maintenance step (promotions are planned
     /// first: they protect accuracy, demotions only recover capacity).
     pub budget: usize,
+    /// Weight of the live routing-traffic signal in candidate
+    /// *ordering* (`0.0`, the default, is the legacy deviation-only
+    /// planner). With a positive weight and a
+    /// [`TrafficStats`](crate::moe::traffic::TrafficStats) handed to
+    /// [`RePlacer::plan_with_traffic`], eligible promotion candidates
+    /// are ranked by the combined noise × traffic score
+    /// `deviation × (1 + weight × hotness)` — hot noise-sensitive
+    /// experts get first claim on the digital budget — and eligible
+    /// demotion candidates coldest-first, so cold digital residents
+    /// free capacity soonest. The promote/demote *eligibility* gates
+    /// and the hysteresis band are untouched: traffic can reorder the
+    /// budget, never open a migration the deviations alone would not,
+    /// which is what keeps the no-oscillation bound intact.
+    pub traffic_weight: f64,
 }
 
 impl Default for RePlacerOptions {
     fn default() -> Self {
-        RePlacerOptions { promote: 0.08, demote: 0.02, budget: 2 }
+        RePlacerOptions { promote: 0.08, demote: 0.02, budget: 2, traffic_weight: 0.0 }
     }
 }
 
@@ -411,6 +425,15 @@ impl Default for RePlacerOptions {
 /// wiggle smaller than the band (pinned by
 /// `prop_replacer_never_oscillates_within_band`). The per-step
 /// `budget` bounds migration work so a maintenance tick stays cheap.
+///
+/// With a positive [`RePlacerOptions::traffic_weight`] the planner is
+/// additionally **traffic-aware** ([`RePlacer::plan_with_traffic`]):
+/// live routing-share EWMAs ([`crate::moe::traffic::TrafficStats`])
+/// reorder the candidates — hot noise-sensitive experts claim the
+/// digital budget first, cold recovered residents are demoted first —
+/// while the eligibility gates, band, and budget stay exactly the
+/// deviation-only planner's, so every hysteresis property carries
+/// over unchanged.
 #[derive(Clone, Debug)]
 pub struct RePlacer {
     opts: RePlacerOptions,
@@ -428,6 +451,11 @@ impl RePlacer {
             "RePlacer needs promote ({}) > demote ({}) — the gap is the hysteresis band",
             opts.promote,
             opts.demote
+        );
+        assert!(
+            opts.traffic_weight >= 0.0 && opts.traffic_weight.is_finite(),
+            "RePlacer traffic_weight must be finite and >= 0, got {}",
+            opts.traffic_weight
         );
         RePlacer { opts, promoted: vec![vec![false; n_experts]; n_layers] }
     }
@@ -456,53 +484,99 @@ impl RePlacer {
     /// freshly migrated slots until they are re-probed, so a plan can
     /// never chain a second migration off pre-migration evidence.
     pub fn plan(&mut self, placement: &Placement, deviations: &[Vec<f64>]) -> Vec<Migration> {
-        let mut promote: Vec<Migration> = Vec::new();
-        let mut demote: Vec<Migration> = Vec::new();
+        self.plan_with_traffic(placement, deviations, None)
+    }
+
+    /// [`plan`](Self::plan) with the live routing-traffic signal: when
+    /// `traffic` is present and `traffic_weight > 0`, eligible
+    /// promotion candidates are ranked by the combined noise × traffic
+    /// score `deviation × (1 + weight × hotness)` (hotness is the
+    /// EWMA share normalized so uniform routing reads 1.0) and
+    /// eligible demotion candidates coldest-first — the *ordering*
+    /// within the same promote/demote gates and migration budget as
+    /// the deviation-only plan. With `traffic_weight == 0` or no
+    /// traffic handle this is exactly [`plan`](Self::plan) (pinned by
+    /// `prop_zero_traffic_weight_matches_deviation_only`), and
+    /// `Migration::deviation` always carries the raw sentinel
+    /// deviation, never the combined score, so the hysteresis
+    /// no-oscillation bound keeps its meaning under any weight.
+    pub fn plan_with_traffic(
+        &mut self,
+        placement: &Placement,
+        deviations: &[Vec<f64>],
+        traffic: Option<&crate::moe::traffic::TrafficStats>,
+    ) -> Vec<Migration> {
+        let weight = self.opts.traffic_weight;
+        let hotness = |l: usize, e: usize| -> f64 {
+            match traffic {
+                Some(t) if weight > 0.0 && l < t.n_layers() && e < t.n_experts() => {
+                    t.normalized_share(l, e)
+                }
+                _ => 0.0,
+            }
+        };
+        // candidates carry their ordering key; Migration.deviation
+        // stays the raw measurement
+        let mut promote: Vec<(f64, Migration)> = Vec::new();
+        let mut demote: Vec<(f64, Migration)> = Vec::new();
         for (l, layer) in deviations.iter().enumerate() {
             for (e, &dev) in layer.iter().enumerate() {
                 let owner = placement.backend_of(l, e);
                 if owner == BACKEND_ANALOG && dev >= self.opts.promote {
-                    promote.push(Migration {
-                        layer: l,
-                        expert: e,
-                        from: BACKEND_ANALOG,
-                        to: BACKEND_DIGITAL,
-                        deviation: dev,
-                    });
+                    // hot × noisy first: combined score orders the claim
+                    // on the digital budget
+                    let key = dev * (1.0 + weight * hotness(l, e));
+                    promote.push((
+                        key,
+                        Migration {
+                            layer: l,
+                            expert: e,
+                            from: BACKEND_ANALOG,
+                            to: BACKEND_DIGITAL,
+                            deviation: dev,
+                        },
+                    ));
                 } else if owner == BACKEND_DIGITAL
                     && self.promoted[l][e]
                     && dev <= self.opts.demote
                 {
-                    demote.push(Migration {
-                        layer: l,
-                        expert: e,
-                        from: BACKEND_DIGITAL,
-                        to: BACKEND_ANALOG,
-                        deviation: dev,
-                    });
+                    // coldest first: a recovered expert nobody routes to
+                    // frees digital capacity ahead of a recovered hot one
+                    // (band-scaled so the deviation term keeps its units)
+                    let key = dev + weight * hotness(l, e) * self.band();
+                    demote.push((
+                        key,
+                        Migration {
+                            layer: l,
+                            expert: e,
+                            from: BACKEND_DIGITAL,
+                            to: BACKEND_ANALOG,
+                            deviation: dev,
+                        },
+                    ));
                 }
             }
         }
-        // worst drift first; ties broken by (layer, expert) for
-        // determinism
+        // worst combined score first; ties broken by (layer, expert)
+        // for determinism (with weight 0 the key IS the deviation, so
+        // this is the legacy deviation-only order bit for bit)
         promote.sort_by(|a, b| {
-            b.deviation
-                .partial_cmp(&a.deviation)
+            b.0.partial_cmp(&a.0)
                 .unwrap()
-                .then_with(|| (a.layer, a.expert).cmp(&(b.layer, b.expert)))
+                .then_with(|| (a.1.layer, a.1.expert).cmp(&(b.1.layer, b.1.expert)))
         });
         demote.sort_by(|a, b| {
-            a.deviation
-                .partial_cmp(&b.deviation)
+            a.0.partial_cmp(&b.0)
                 .unwrap()
-                .then_with(|| (a.layer, a.expert).cmp(&(b.layer, b.expert)))
+                .then_with(|| (a.1.layer, a.1.expert).cmp(&(b.1.layer, b.1.expert)))
         });
-        promote.extend(demote);
-        promote.truncate(self.opts.budget);
-        for m in &promote {
+        let mut plan: Vec<Migration> = promote.into_iter().map(|(_, m)| m).collect();
+        plan.extend(demote.into_iter().map(|(_, m)| m));
+        plan.truncate(self.opts.budget);
+        for m in &plan {
             self.promoted[m.layer][m.expert] = m.is_promotion();
         }
-        promote
+        plan
     }
 }
 
@@ -1094,7 +1168,7 @@ mod tests {
     fn replacer_promotes_worst_drift_first_within_budget() {
         let c = cfg();
         let p = Placement::all_experts_analog(&c);
-        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 2 };
+        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 2, traffic_weight: 0.0 };
         let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
         let mut devs = dev_grid(&c, 0.0);
         devs[0][1] = 0.5;
@@ -1117,7 +1191,7 @@ mod tests {
         // expert (0,2) was placed digital by the planner at deployment —
         // a placement decision, not a drift rescue
         p.set_backend(0, 2, BACKEND_DIGITAL);
-        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 4 };
+        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 4, traffic_weight: 0.0 };
         let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
         // promote (1,1), then recover it
         let mut devs = dev_grid(&c, 0.0);
@@ -1137,7 +1211,7 @@ mod tests {
     fn replacer_holds_inside_the_band() {
         let c = cfg();
         let p = Placement::all_experts_analog(&c);
-        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 8 };
+        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 8, traffic_weight: 0.0 };
         let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
         // every deviation strictly inside (demote, promote): no moves
         let plan = rp.plan(&p, &dev_grid(&c, 0.05));
@@ -1147,7 +1221,11 @@ mod tests {
     #[test]
     #[should_panic(expected = "hysteresis band")]
     fn replacer_rejects_inverted_band() {
-        RePlacer::new(RePlacerOptions { promote: 0.02, demote: 0.1, budget: 1 }, 1, 1);
+        RePlacer::new(
+            RePlacerOptions { promote: 0.02, demote: 0.1, budget: 1, traffic_weight: 0.0 },
+            1,
+            1,
+        );
     }
 
     #[test]
@@ -1160,7 +1238,8 @@ mod tests {
         crate::util::proptest::check("replacer hysteresis", 50, |rng| {
             let c = cfg();
             let mut p = Placement::all_experts_analog(&c);
-            let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 64 };
+            let opts =
+                RePlacerOptions { promote: 0.1, demote: 0.02, budget: 64, traffic_weight: 0.0 };
             let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
             let band = rp.band();
             let mut last: Vec<Vec<Option<Migration>>> =
@@ -1191,6 +1270,212 @@ mod tests {
                         );
                     }
                     last[m.layer][m.expert] = Some(m);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // --- traffic-aware planning (noise × traffic) ---
+
+    use crate::moe::traffic::TrafficStats;
+
+    #[test]
+    fn traffic_orders_promotion_budget_toward_hot_experts() {
+        let c = cfg();
+        let p = Placement::all_experts_analog(&c);
+        // two eligible candidates, budget 1: deviation-only picks the
+        // worse drift, traffic-aware picks the hot expert
+        let mut devs = dev_grid(&c, 0.0);
+        devs[0][1] = 0.3; // cold, worst drift
+        devs[0][2] = 0.2; // hot, still past the promote gate
+        let mut traffic = TrafficStats::new(c.n_layers, c.n_experts);
+        traffic.update(0, &[0, 1, 9, 0]);
+
+        let cold_opts =
+            RePlacerOptions { promote: 0.1, demote: 0.02, budget: 1, traffic_weight: 0.0 };
+        let mut rp = RePlacer::new(cold_opts, c.n_layers, c.n_experts);
+        let plan = rp.plan_with_traffic(&p, &devs, Some(&traffic));
+        assert_eq!((plan[0].layer, plan[0].expert), (0, 1), "weight 0: worst drift first");
+
+        let hot_opts =
+            RePlacerOptions { promote: 0.1, demote: 0.02, budget: 1, traffic_weight: 4.0 };
+        let mut rp = RePlacer::new(hot_opts, c.n_layers, c.n_experts);
+        let plan = rp.plan_with_traffic(&p, &devs, Some(&traffic));
+        assert_eq!(plan.len(), 1, "budget still caps the step");
+        assert_eq!((plan[0].layer, plan[0].expert), (0, 2), "hot expert claims the budget");
+        assert_eq!(plan[0].deviation, 0.2, "Migration carries the raw deviation");
+    }
+
+    #[test]
+    fn traffic_demotes_cold_residents_first() {
+        let c = cfg();
+        let mut p = Placement::all_experts_analog(&c);
+        let opts = RePlacerOptions { promote: 0.1, demote: 0.02, budget: 2, traffic_weight: 2.0 };
+        let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
+        let mut traffic = TrafficStats::new(c.n_layers, c.n_experts);
+        traffic.update(0, &[0, 1, 9, 0]); // (0,2) hot, (0,1) cold
+        // promote both, execute, then let both recover fully
+        let mut devs = dev_grid(&c, 0.0);
+        devs[0][1] = 0.3;
+        devs[0][2] = 0.3;
+        for m in rp.plan_with_traffic(&p, &devs, Some(&traffic)) {
+            p.set_backend(m.layer, m.expert, m.to);
+        }
+        let devs = dev_grid(&c, 0.0);
+        let plan = rp.plan_with_traffic(&p, &devs, Some(&traffic));
+        assert_eq!(plan.len(), 2);
+        assert_eq!((plan[0].layer, plan[0].expert), (0, 1), "cold resident goes first");
+        assert_eq!((plan[1].layer, plan[1].expert), (0, 2));
+        assert!(plan.iter().all(|m| m.to == BACKEND_ANALOG));
+    }
+
+    #[test]
+    fn prop_traffic_plan_respects_budget_and_gates() {
+        // the combined planner may only *reorder* candidates: every
+        // migration still clears the deviation gates, the step never
+        // exceeds the budget, and Migration.deviation is always the
+        // raw measurement
+        crate::util::proptest::check("traffic plan budget+gates", 50, |rng| {
+            let c = cfg();
+            let mut p = Placement::all_experts_analog(&c);
+            let opts = RePlacerOptions {
+                promote: 0.1,
+                demote: 0.02,
+                budget: rng.range(1, 5),
+                traffic_weight: rng.uniform() * 8.0,
+            };
+            let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
+            let mut traffic = TrafficStats::new(c.n_layers, c.n_experts);
+            for _step in 0..rng.range(2, 15) {
+                for l in 0..c.n_layers {
+                    let counts: Vec<usize> =
+                        (0..c.n_experts).map(|_| rng.below(10)).collect();
+                    traffic.update(l, &counts);
+                }
+                let devs: Vec<Vec<f64>> = (0..c.n_layers)
+                    .map(|_| (0..c.n_experts).map(|_| rng.uniform() * 0.2).collect())
+                    .collect();
+                let plan = rp.plan_with_traffic(&p, &devs, Some(&traffic));
+                crate::prop_assert!(
+                    plan.len() <= opts.budget,
+                    "{} migrations exceed budget {}",
+                    plan.len(),
+                    opts.budget
+                );
+                for m in &plan {
+                    crate::prop_assert!(
+                        m.deviation == devs[m.layer][m.expert],
+                        "migration must carry the raw deviation"
+                    );
+                    if m.is_promotion() {
+                        crate::prop_assert!(
+                            m.deviation >= opts.promote,
+                            "promotion below the promote gate"
+                        );
+                    } else {
+                        crate::prop_assert!(
+                            m.deviation <= opts.demote,
+                            "demotion above the demote gate"
+                        );
+                    }
+                    p.set_backend(m.layer, m.expert, m.to);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_traffic_jitter_never_oscillates_within_band() {
+        // the oscillation bound survives traffic weighting: jittered
+        // routing shares every step may reorder migrations but can
+        // never re-migrate an expert on deviation wiggle inside the
+        // band (the gates, not the traffic, open migrations)
+        crate::util::proptest::check("traffic hysteresis", 50, |rng| {
+            let c = cfg();
+            let mut p = Placement::all_experts_analog(&c);
+            let opts =
+                RePlacerOptions { promote: 0.1, demote: 0.02, budget: 64, traffic_weight: 2.0 };
+            let mut rp = RePlacer::new(opts, c.n_layers, c.n_experts);
+            let band = rp.band();
+            let mut traffic = TrafficStats::new(c.n_layers, c.n_experts);
+            let mut last: Vec<Vec<Option<Migration>>> =
+                vec![vec![None; c.n_experts]; c.n_layers];
+            for _step in 0..rng.range(2, 30) {
+                for l in 0..c.n_layers {
+                    let counts: Vec<usize> =
+                        (0..c.n_experts).map(|_| rng.below(10)).collect();
+                    traffic.update(l, &counts);
+                }
+                let devs: Vec<Vec<f64>> = (0..c.n_layers)
+                    .map(|_| (0..c.n_experts).map(|_| rng.uniform() * 0.2).collect())
+                    .collect();
+                for m in rp.plan_with_traffic(&p, &devs, Some(&traffic)) {
+                    p.set_backend(m.layer, m.expert, m.to);
+                    if let Some(prev) = last[m.layer][m.expert] {
+                        crate::prop_assert!(
+                            prev.to == m.from,
+                            "({},{}) direction did not alternate",
+                            m.layer,
+                            m.expert
+                        );
+                        crate::prop_assert!(
+                            (prev.deviation - m.deviation).abs() >= band,
+                            "({},{}) re-migrated inside the band under jittered traffic",
+                            m.layer,
+                            m.expert
+                        );
+                    }
+                    last[m.layer][m.expert] = Some(m);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_zero_traffic_weight_matches_deviation_only() {
+        // backward compatibility pin: weight 0 (with any traffic) and
+        // weight > 0 without a traffic handle both reproduce the
+        // deviation-only plan exactly, step for step
+        crate::util::proptest::check("traffic weight 0 reduction", 50, |rng| {
+            let c = cfg();
+            let mut p_ref = Placement::all_experts_analog(&c);
+            let mut p_zero = p_ref.clone();
+            let mut p_blind = p_ref.clone();
+            let base =
+                RePlacerOptions { promote: 0.1, demote: 0.02, budget: 3, ..Default::default() };
+            let mut rp_ref = RePlacer::new(base, c.n_layers, c.n_experts);
+            let mut rp_zero = RePlacer::new(
+                RePlacerOptions { traffic_weight: 0.0, ..base },
+                c.n_layers,
+                c.n_experts,
+            );
+            let mut rp_blind = RePlacer::new(
+                RePlacerOptions { traffic_weight: 3.0, ..base },
+                c.n_layers,
+                c.n_experts,
+            );
+            let mut traffic = TrafficStats::new(c.n_layers, c.n_experts);
+            for _step in 0..rng.range(2, 12) {
+                for l in 0..c.n_layers {
+                    let counts: Vec<usize> =
+                        (0..c.n_experts).map(|_| rng.below(10)).collect();
+                    traffic.update(l, &counts);
+                }
+                let devs: Vec<Vec<f64>> = (0..c.n_layers)
+                    .map(|_| (0..c.n_experts).map(|_| rng.uniform() * 0.2).collect())
+                    .collect();
+                let want = rp_ref.plan(&p_ref, &devs);
+                let zero = rp_zero.plan_with_traffic(&p_zero, &devs, Some(&traffic));
+                let blind = rp_blind.plan_with_traffic(&p_blind, &devs, None);
+                crate::prop_assert!(zero == want, "weight-0 plan diverged: {zero:?} vs {want:?}");
+                crate::prop_assert!(blind == want, "traffic-less plan diverged");
+                for m in &want {
+                    p_ref.set_backend(m.layer, m.expert, m.to);
+                    p_zero.set_backend(m.layer, m.expert, m.to);
+                    p_blind.set_backend(m.layer, m.expert, m.to);
                 }
             }
             Ok(())

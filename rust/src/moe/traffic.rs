@@ -1,0 +1,383 @@
+//! Live routing-traffic statistics: a per-expert EWMA of routed-token
+//! share, fed from the router's existing top-k output every batch.
+//!
+//! The router already scores every expert on every batch; this module
+//! turns that free signal into a smoothed per-(layer, expert) traffic
+//! share the placement planner can consume ([`RePlacer`]'s noise ×
+//! traffic scoring), the maintenance tick can prefetch against, and the
+//! serve front-ends can report (`hetmoe serve` routing-frequency table,
+//! `BENCH_serve.json` `routing_frequency`). Updates are O(experts) per
+//! MoE layer per batch — no extra passes over the activations.
+//!
+//! [`RePlacer`]: crate::moe::placement::RePlacer
+
+/// Default EWMA smoothing factor: each batch contributes 20% of the
+/// new share, so the window is ~5 batches — fast enough to track a
+/// burst, slow enough to ride out single-batch jitter.
+pub const DEFAULT_TRAFFIC_ALPHA: f64 = 0.2;
+
+/// Per-(layer, expert) EWMA of routed-token share.
+///
+/// For one batch of a MoE layer the *share* of expert `e` is
+/// `tokens routed to e / total routed tokens` (totals `n · top_k`
+/// assignments, so a layer's shares always sum to 1). The first update
+/// of a layer seeds the EWMA directly; later updates fold in with
+/// factor `alpha`. Convex combinations preserve the sum, so the
+/// per-layer sum-to-one invariant holds at any point in the stream
+/// (property-tested below).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficStats {
+    alpha: f64,
+    /// `shares[layer][expert]` — EWMA of routed-token share.
+    shares: Vec<Vec<f64>>,
+    /// Per-layer update (batch) count; non-MoE layers stay 0.
+    updates: Vec<u64>,
+}
+
+impl Default for TrafficStats {
+    /// An empty tracker (zero layers) — the state of a [`Metrics`]
+    /// value before an engine is built around it.
+    ///
+    /// [`Metrics`]: crate::coordinator::Metrics
+    fn default() -> Self {
+        TrafficStats { alpha: DEFAULT_TRAFFIC_ALPHA, shares: Vec::new(), updates: Vec::new() }
+    }
+}
+
+impl TrafficStats {
+    /// A tracker for `n_layers × n_experts` with the default `alpha`.
+    pub fn new(n_layers: usize, n_experts: usize) -> TrafficStats {
+        TrafficStats::with_alpha(n_layers, n_experts, DEFAULT_TRAFFIC_ALPHA)
+    }
+
+    /// A tracker with an explicit EWMA factor `alpha ∈ (0, 1]`.
+    pub fn with_alpha(n_layers: usize, n_experts: usize, alpha: f64) -> TrafficStats {
+        assert!(
+            alpha > 0.0 && alpha <= 1.0,
+            "TrafficStats alpha must be in (0, 1], got {alpha}"
+        );
+        TrafficStats {
+            alpha,
+            shares: vec![vec![0.0; n_experts]; n_layers],
+            updates: vec![0; n_layers],
+        }
+    }
+
+    /// True when the tracker has no layers (a default-constructed
+    /// metrics value before engine build).
+    pub fn is_empty(&self) -> bool {
+        self.shares.is_empty()
+    }
+
+    /// Layers tracked.
+    pub fn n_layers(&self) -> usize {
+        self.shares.len()
+    }
+
+    /// Experts per layer.
+    pub fn n_experts(&self) -> usize {
+        self.shares.first().map_or(0, Vec::len)
+    }
+
+    /// The EWMA smoothing factor.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Batches folded into `layer`'s EWMA so far.
+    pub fn layer_updates(&self, layer: usize) -> u64 {
+        self.updates[layer]
+    }
+
+    /// Batches folded in across all layers.
+    pub fn total_updates(&self) -> u64 {
+        self.updates.iter().sum()
+    }
+
+    /// Fold one batch of routing counts into `layer`'s EWMA:
+    /// `counts[e]` is the number of (token, expert) assignments routed
+    /// to expert `e` this batch. A batch with zero routed tokens is a
+    /// no-op.
+    pub fn update(&mut self, layer: usize, counts: &[usize]) {
+        let total: usize = counts.iter().sum();
+        self.apply(layer, total, |e| counts[e]);
+    }
+
+    /// [`update`](Self::update) straight off the engine's per-expert
+    /// route groups — `groups[e].len()` tokens routed to expert `e` —
+    /// so the hot path never materializes a counts buffer.
+    pub fn update_from_groups<T>(&mut self, layer: usize, groups: &[Vec<T>]) {
+        let total: usize = groups.iter().map(Vec::len).sum();
+        self.apply(layer, total, |e| groups[e].len());
+    }
+
+    fn apply(&mut self, layer: usize, total: usize, count_of: impl Fn(usize) -> usize) {
+        if total == 0 {
+            return;
+        }
+        let row = &mut self.shares[layer];
+        let first = self.updates[layer] == 0;
+        for (e, slot) in row.iter_mut().enumerate() {
+            let share = count_of(e) as f64 / total as f64;
+            *slot = if first { share } else { (1.0 - self.alpha) * *slot + self.alpha * share };
+        }
+        self.updates[layer] += 1;
+    }
+
+    /// The EWMA routed-token share of `(layer, expert)` in `[0, 1]`.
+    pub fn share(&self, layer: usize, expert: usize) -> f64 {
+        self.shares[layer][expert]
+    }
+
+    /// One layer's full share row.
+    pub fn layer_shares(&self, layer: usize) -> &[f64] {
+        &self.shares[layer]
+    }
+
+    /// Share normalized so uniform routing reads 1.0: `share ×
+    /// n_experts`. >1 is hotter than uniform, <1 colder — the hotness
+    /// unit the planner's `traffic_weight` multiplies.
+    pub fn normalized_share(&self, layer: usize, expert: usize) -> f64 {
+        self.shares[layer][expert] * self.n_experts() as f64
+    }
+
+    /// Per-expert routing frequency pooled over the layers that have
+    /// seen traffic: the mean share of expert `e` across updated
+    /// layers (zeros when nothing has been routed yet). Sums to ~1
+    /// like a single layer's row, so it reads as a distribution.
+    pub fn frequency(&self) -> Vec<f64> {
+        let mut freq = vec![0.0; self.n_experts()];
+        let active = self.updates.iter().filter(|&&u| u > 0).count();
+        if active == 0 {
+            return freq;
+        }
+        for (l, row) in self.shares.iter().enumerate() {
+            if self.updates[l] == 0 {
+                continue;
+            }
+            for (e, &s) in row.iter().enumerate() {
+                freq[e] += s / active as f64;
+            }
+        }
+        freq
+    }
+
+    /// The `n` hottest `(layer, expert, share)` slots across updated
+    /// layers, hottest first (ties break on `(layer, expert)` so the
+    /// ranking is deterministic). Prefetch staging and the serve
+    /// top-10 table read this.
+    pub fn hottest(&self, n: usize) -> Vec<(usize, usize, f64)> {
+        let mut slots: Vec<(usize, usize, f64)> = Vec::new();
+        for (l, row) in self.shares.iter().enumerate() {
+            if self.updates[l] == 0 {
+                continue;
+            }
+            for (e, &s) in row.iter().enumerate() {
+                slots.push((l, e, s));
+            }
+        }
+        slots.sort_by(|a, b| {
+            b.2.partial_cmp(&a.2)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then((a.0, a.1).cmp(&(b.0, b.1)))
+        });
+        slots.truncate(n);
+        slots
+    }
+
+    /// Merge another replica's tracker into this one: per-layer shares
+    /// combine as the update-count-weighted mean (which preserves the
+    /// sum-to-one invariant), update counts add. Merging an empty
+    /// tracker is the identity; merging *into* an empty tracker
+    /// adopts the other side verbatim. Dimensions must match
+    /// otherwise — replicas of one cluster share a model config.
+    pub fn merge(&mut self, other: &TrafficStats) {
+        if other.is_empty() {
+            return;
+        }
+        if self.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(
+            (self.n_layers(), self.n_experts()),
+            (other.n_layers(), other.n_experts()),
+            "TrafficStats::merge dimension mismatch"
+        );
+        for l in 0..self.n_layers() {
+            let (a, b) = (self.updates[l], other.updates[l]);
+            if b == 0 {
+                continue;
+            }
+            if a == 0 {
+                self.shares[l].copy_from_slice(&other.shares[l]);
+            } else {
+                let wa = a as f64 / (a + b) as f64;
+                let wb = b as f64 / (a + b) as f64;
+                for e in 0..self.shares[l].len() {
+                    self.shares[l][e] = wa * self.shares[l][e] + wb * other.shares[l][e];
+                }
+            }
+            self.updates[l] = a + b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn first_update_seeds_shares_directly() {
+        let mut t = TrafficStats::new(2, 4);
+        t.update(0, &[3, 1, 0, 0]);
+        assert_eq!(t.layer_shares(0), &[0.75, 0.25, 0.0, 0.0]);
+        assert_eq!(t.layer_updates(0), 1);
+        assert_eq!(t.layer_updates(1), 0);
+    }
+
+    #[test]
+    fn ewma_matches_python_mirror_constants() {
+        // pinned against python/tests/test_traffic_mirror.py: alpha
+        // 0.25, seed [3,1]/4 then fold [1,3]/4 — exact in binary
+        let mut t = TrafficStats::with_alpha(1, 2, 0.25);
+        t.update(0, &[3, 1]);
+        t.update(0, &[1, 3]);
+        assert_eq!(t.layer_shares(0), &[0.625, 0.375]);
+    }
+
+    #[test]
+    fn zero_total_batch_is_a_noop() {
+        let mut t = TrafficStats::new(1, 3);
+        t.update(0, &[2, 1, 1]);
+        let before = t.layer_shares(0).to_vec();
+        t.update(0, &[0, 0, 0]);
+        assert_eq!(t.layer_shares(0), &before[..]);
+        assert_eq!(t.layer_updates(0), 1);
+    }
+
+    #[test]
+    fn update_from_groups_matches_counts_update() {
+        let mut a = TrafficStats::new(1, 3);
+        let mut b = TrafficStats::new(1, 3);
+        let groups: Vec<Vec<(usize, f32)>> =
+            vec![vec![(0, 1.0), (1, 0.5)], vec![(2, 0.25)], vec![]];
+        a.update_from_groups(0, &groups);
+        b.update(0, &[2, 1, 0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn normalized_share_reads_uniform_as_one() {
+        let mut t = TrafficStats::new(1, 4);
+        t.update(0, &[2, 2, 2, 2]);
+        for e in 0..4 {
+            assert!((t.normalized_share(0, e) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn frequency_pools_updated_layers_only() {
+        let mut t = TrafficStats::new(3, 2);
+        t.update(0, &[1, 0]);
+        t.update(2, &[0, 1]);
+        // layer 1 never updated: mean over layers 0 and 2 only
+        assert_eq!(t.frequency(), vec![0.5, 0.5]);
+        assert_eq!(TrafficStats::new(2, 2).frequency(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn hottest_ranks_and_truncates_deterministically() {
+        let mut t = TrafficStats::new(2, 3);
+        t.update(0, &[1, 2, 1]);
+        t.update(1, &[2, 1, 1]);
+        let hot = t.hottest(2);
+        assert_eq!(hot.len(), 2);
+        assert_eq!((hot[0].0, hot[0].1), (0, 1)); // share 0.5
+        assert_eq!((hot[1].0, hot[1].1), (1, 0)); // share 0.5, later layer
+        assert!(t.hottest(100).len() == 6);
+    }
+
+    #[test]
+    fn merge_is_update_count_weighted() {
+        let mut a = TrafficStats::with_alpha(1, 2, 1.0);
+        let mut b = TrafficStats::with_alpha(1, 2, 1.0);
+        a.update(0, &[1, 0]); // shares [1, 0], 1 update
+        b.update(0, &[0, 1]);
+        b.update(0, &[0, 1]); // shares [0, 1], 2 updates
+        a.merge(&b);
+        assert_eq!(a.layer_shares(0), &[1.0 / 3.0, 2.0 / 3.0]);
+        assert_eq!(a.layer_updates(0), 3);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let mut t = TrafficStats::new(1, 2);
+        t.update(0, &[1, 1]);
+        let snapshot = t.clone();
+        t.merge(&TrafficStats::default());
+        assert_eq!(t, snapshot);
+        let mut empty = TrafficStats::default();
+        empty.merge(&snapshot);
+        assert_eq!(empty, snapshot);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn rejects_out_of_range_alpha() {
+        let _ = TrafficStats::with_alpha(1, 1, 0.0);
+    }
+
+    #[test]
+    fn prop_layer_shares_sum_to_one_under_any_stream() {
+        check("traffic shares sum to 1", 200, |rng| {
+            let n_experts = rng.range(1, 8);
+            let mut t = TrafficStats::with_alpha(1, n_experts, 0.05 + 0.9 * rng.uniform());
+            let batches = rng.range(1, 20);
+            let mut updated = false;
+            for _ in 0..batches {
+                let counts: Vec<usize> =
+                    (0..n_experts).map(|_| rng.below(5)).collect();
+                updated |= counts.iter().sum::<usize>() > 0;
+                t.update(0, &counts);
+            }
+            if updated {
+                let sum: f64 = t.layer_shares(0).iter().sum();
+                crate::prop_assert!(
+                    (sum - 1.0).abs() < 1e-9,
+                    "layer shares sum {sum} != 1"
+                );
+                let fsum: f64 = t.frequency().iter().sum();
+                crate::prop_assert!(
+                    (fsum - 1.0).abs() < 1e-9,
+                    "pooled frequency sum {fsum} != 1"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_merge_preserves_sum_and_commutes_on_counts() {
+        check("traffic merge invariants", 100, |rng| {
+            let n = rng.range(1, 6);
+            let mut a = TrafficStats::new(1, n);
+            let mut b = TrafficStats::new(1, n);
+            for _ in 0..rng.range(1, 6) {
+                let counts: Vec<usize> = (0..n).map(|_| 1 + rng.below(4)).collect();
+                a.update(0, &counts);
+            }
+            for _ in 0..rng.range(1, 6) {
+                let counts: Vec<usize> = (0..n).map(|_| 1 + rng.below(4)).collect();
+                b.update(0, &counts);
+            }
+            let (ua, ub) = (a.layer_updates(0), b.layer_updates(0));
+            a.merge(&b);
+            crate::prop_assert!(a.layer_updates(0) == ua + ub, "updates must add");
+            let sum: f64 = a.layer_shares(0).iter().sum();
+            crate::prop_assert!((sum - 1.0).abs() < 1e-9, "merged shares sum {sum} != 1");
+            Ok(())
+        });
+    }
+}

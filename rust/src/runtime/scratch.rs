@@ -35,6 +35,7 @@ pub struct ScratchArena {
     takes: u64,
     hits: u64,
     alloc_bytes: u64,
+    reserved: u64,
 }
 
 impl ScratchArena {
@@ -90,9 +91,40 @@ impl ScratchArena {
         }
     }
 
+    /// Pre-warm the arena: ensure at least `count` parked buffers have
+    /// capacity ≥ `len`, allocating the shortfall now so upcoming
+    /// [`ScratchArena::take`]s of that size hit instead of allocating
+    /// on the hot path. The traffic-aware maintenance tick stages the
+    /// predicted-hot experts' pack buffers through this. Fresh
+    /// allocations count in [`ScratchArena::alloc_bytes`] (the cost is
+    /// paid, just off the batch path) and in
+    /// [`ScratchArena::reserved`]; a reserve is **not** a take, so it
+    /// never skews [`ScratchArena::hit_rate`]. Respects
+    /// [`MAX_RETAINED`] and ignores zero-length requests.
+    pub fn reserve(&mut self, len: usize, count: usize) {
+        if len == 0 {
+            return;
+        }
+        let fitting = self.free.iter().filter(|b| b.capacity() >= len).count();
+        for _ in fitting..count {
+            if self.free.len() >= MAX_RETAINED {
+                break;
+            }
+            self.alloc_bytes += (len * std::mem::size_of::<f32>()) as u64;
+            self.reserved += 1;
+            self.free.push(vec![0.0; len]);
+        }
+    }
+
+    /// Buffers allocated ahead of use by [`ScratchArena::reserve`].
+    pub fn reserved(&self) -> u64 {
+        self.reserved
+    }
+
     /// Cumulative bytes of *fresh* allocation performed by
-    /// [`ScratchArena::take`] (arena misses). Flat across batches once
-    /// the arena is warm — the serving metrics snapshot this per batch.
+    /// [`ScratchArena::take`] (arena misses) or staged ahead of use by
+    /// [`ScratchArena::reserve`]. Flat across batches once the arena is
+    /// warm — the serving metrics snapshot this per batch.
     pub fn alloc_bytes(&self) -> u64 {
         self.alloc_bytes
     }
@@ -184,6 +216,43 @@ mod tests {
         assert_eq!(b, vec![0.0; 4]);
         assert_eq!(a.alloc_bytes(), 0);
         assert_eq!(a.retained(), MAX_RETAINED - 1);
+    }
+
+    #[test]
+    fn reserve_prewarms_without_skewing_hit_rate() {
+        let mut a = ScratchArena::new();
+        a.reserve(16, 2);
+        assert_eq!(a.retained(), 2);
+        assert_eq!(a.reserved(), 2);
+        assert_eq!(a.alloc_bytes(), 128, "2 × 16 f32 staged up front");
+        assert_eq!(a.hit_rate(), 0.0, "a reserve is not a take");
+        // both prepared checkouts are hits — no hot-path allocation
+        let b1 = a.take(16);
+        let b2 = a.take(16);
+        assert_eq!((b1.len(), b2.len()), (16, 16));
+        assert_eq!(a.alloc_bytes(), 128);
+        assert!((a.hit_rate() - 1.0).abs() < 1e-12);
+        // fitting buffers satisfy a repeat reserve with no new alloc
+        a.give(b1);
+        a.give(b2);
+        a.reserve(10, 2);
+        assert_eq!(a.alloc_bytes(), 128);
+        assert_eq!(a.reserved(), 2);
+        // zero-length reserves are no-ops
+        a.reserve(0, 8);
+        assert_eq!(a.retained(), 2);
+    }
+
+    #[test]
+    fn reserve_respects_the_retention_cap() {
+        let mut a = ScratchArena::new();
+        for _ in 0..MAX_RETAINED {
+            a.give(a_buf(4));
+        }
+        a.reserve(64, 3);
+        assert_eq!(a.retained(), MAX_RETAINED, "reserve never grows past the cap");
+        assert_eq!(a.reserved(), 0);
+        assert_eq!(a.alloc_bytes(), 0);
     }
 
     #[test]

@@ -16,6 +16,13 @@ the current dump fails hard regardless of any baseline. The
 replica count, the cluster's ``tokens_per_s`` must not drop by more
 than the allowed fraction vs the baseline scale with the same replica
 count, and request conservation (``served == requests``) fails hard.
+The ``hot_traffic`` scenario (traffic-aware placement) is guarded too:
+per model and arm, ``tokens_per_s`` must not drop by more than the
+allowed fraction vs the baseline, and two correctness gates in the
+current dump fail hard regardless of any baseline —
+``shed_disarmed_identical`` must be true (a disarmed shed policy is a
+byte-identical no-op), and every non-shedding arm must conserve
+admissions (``served == admitted``).
 
 With ``--profiles-prev``/``--profiles-cur`` it also guards
 BENCH_profiles.json (the device-profile stress matrix): per model and
@@ -138,6 +145,82 @@ def guard_replica_scaling(prev_path, cur_path, max_regression):
                     f"{model}@{n} replicas: cluster tokens_per_s regressed "
                     f"{drop * 100:.1f}% (> {max_regression * 100:.0f}% allowed)")
     print(f"replica guard: {compared} scale(s) compared")
+    return failures
+
+
+def hot_traffic_entries(path):
+    """{model: hot_traffic_obj} for every hot_traffic block."""
+    with open(path) as f:
+        dump = json.load(f)
+    out = {}
+    for entry in dump.get("models", []):
+        ht = entry.get("hot_traffic")
+        if ht is not None:
+            out[entry.get("model", "?")] = ht
+    return out
+
+
+# hot_traffic arms whose tokens_per_s is guarded against the baseline;
+# overload/overload_shed are deliberately excluded (the flood pattern
+# is queue-bound, so its throughput is a property of the workload, not
+# the engine)
+HOT_ARMS = ["baseline", "traffic_aware"]
+
+
+def guard_hot_traffic(prev_path, cur_path, max_regression):
+    """Failures for the hot_traffic serve scenario (see module doc)."""
+    failures = []
+    cur = hot_traffic_entries(cur_path)
+    if not cur:
+        print(f"hot-traffic guard: {cur_path} has no hot_traffic blocks — skipped")
+        return failures
+
+    for model, ht in cur.items():
+        # gate 1: a disarmed shed policy must be a byte-identical no-op
+        if ht.get("shed_disarmed_identical") is not True:
+            failures.append(
+                f"{model}: shed_disarmed_identical is "
+                f"{ht.get('shed_disarmed_identical')!r} — a disarmed ShedPolicy "
+                f"changed serving output")
+        # gate 2: without shedding, every admitted request is served
+        for arm in ["baseline", "traffic_aware", "overload", "overload_shed"]:
+            obj = ht.get(arm)
+            if obj is None:
+                failures.append(f"{model}: hot_traffic arm '{arm}' missing")
+                continue
+            if obj.get("served") != obj.get("admitted"):
+                failures.append(
+                    f"{model}/{arm}: served {obj.get('served')} != admitted "
+                    f"{obj.get('admitted')} — requests lost")
+
+    if not os.path.exists(prev_path):
+        print(f"hot-traffic guard: no baseline at {prev_path} — warn-only "
+              f"first run ({len(cur)} model(s) recorded)")
+        return failures
+
+    prev = hot_traffic_entries(prev_path)
+    compared = 0
+    for model, ht in prev.items():
+        cur_ht = cur.get(model)
+        if cur_ht is None:
+            print(f"warn: no hot_traffic block to compare for {model}")
+            continue
+        for arm in HOT_ARMS:
+            old = float(ht.get(arm, {}).get("tokens_per_s", 0.0))
+            new = float(cur_ht.get(arm, {}).get("tokens_per_s", 0.0))
+            if old <= 0:
+                continue
+            compared += 1
+            drop = (old - new) / old
+            regressed = drop > max_regression
+            status = "FAIL" if regressed else "ok"
+            print(f"{status:>4} {model}/{arm} tokens_per_s: "
+                  f"{old:.3g} -> {new:.3g} ({-drop * 100:+.1f}%)")
+            if regressed:
+                failures.append(
+                    f"{model}/{arm}: hot_traffic tokens_per_s regressed "
+                    f"{drop * 100:.1f}% (> {max_regression * 100:.0f}% allowed)")
+    print(f"hot-traffic guard: {compared} arm(s) compared")
     return failures
 
 
@@ -284,6 +367,8 @@ def main():
                                      args.max_regression)
         if os.path.exists(args.serve_cur):
             serve_failures += guard_replica_scaling(
+                args.serve_prev or "", args.serve_cur, args.max_regression)
+            serve_failures += guard_hot_traffic(
                 args.serve_prev or "", args.serve_cur, args.max_regression)
     if args.profiles_cur:
         serve_failures += guard_profiles(args.profiles_prev or "",

@@ -16,7 +16,7 @@ use hetmoe::aimc::drift::DriftModel;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{
-    EngineBuilder, Lane, LaneParams, MaintenancePolicy, Request, Server, ServerConfig,
+    EngineBuilder, Lane, LaneParams, MaintenanceConfig, Request, Server, ServerConfig,
 };
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
@@ -204,30 +204,39 @@ fn main() -> Result<()> {
 
     // --- drift soak epilogue: the same deployment under aggressive
     // conductance drift; the server owns the maintenance cadence (one
-    // tick per compiled batch served) ---
+    // tick per compiled batch served), and the staged escalation
+    // ladder (probe → calibrate → plan → migrate, DESIGN.md §8) lets
+    // cheap router calibration absorb drift before migration budget
+    // is spent ---
     println!("\n--- drift soak (ν=0.4, server-owned maintenance every batch) ---");
     let print_tick = |rep: &hetmoe::coordinator::MaintenanceReport| {
         println!(
-            "@ {:>5} tokens: probed {} experts, max |dev| {:.4}, {} migrations",
+            "@ {:>5} tokens: probed {} experts, max |dev| {:.4}, {} calibrated \
+             (absorbed {:.4}), {} migrations",
             rep.drift_clock,
-            rep.probed,
-            rep.max_deviation,
-            rep.migrations.len()
+            rep.probed(),
+            rep.max_deviation(),
+            rep.calibrate.fitted,
+            rep.calibrate.absorbed,
+            rep.migrations().len()
         );
     };
+    let maint = MaintenanceConfig::new()
+        .every(cfg.batch.max(1) as u64)
+        .drift(DriftModel::with_nu(0.4))
+        .replacer(RePlacerOptions { budget: 4, ..Default::default() })
+        .calibrate(true);
     let engine = EngineBuilder::new()
         .model(cfg.clone())
         .aimc(meta.aimc)
         .placement(placement.clone())
         .serve_cap(meta.serve_cap)
-        .drift(DriftModel::with_nu(0.4))
-        .replacer(RePlacerOptions { budget: 4, ..Default::default() })
+        .maintenance(maint.clone())
         .build(&mut rt, &paths, &params)?;
     let mut soak = Server::new(
         &rt,
         engine,
-        ServerConfig::new(cfg.batch)
-            .maintenance(MaintenancePolicy::every(cfg.batch.max(1) as u64)),
+        ServerConfig::new(cfg.batch).maintenance_config(&maint),
     );
     let soak_client = soak.client();
     for (tk, tg, mk) in &stream {
@@ -258,9 +267,15 @@ fn main() -> Result<()> {
     }
     let m = &engine.metrics;
     println!(
-        "soak total: {} migrations ({} promoted, {} demoted), final sentinel \
-         max |dev| {:.4}",
-        m.migrations, m.promotions, m.demotions, m.sentinel_deviation
+        "soak total: {} migrations ({} promoted, {} demoted), {} calibrated \
+         experts (absorbed {:.4}, residual {:.4}), final sentinel max |dev| {:.4}",
+        m.migrations,
+        m.promotions,
+        m.demotions,
+        m.calibrated_experts,
+        m.deviation_absorbed,
+        m.calibration_residual,
+        m.sentinel_deviation
     );
     Ok(())
 }

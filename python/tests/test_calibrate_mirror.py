@@ -1,0 +1,188 @@
+"""Router-calibration fit mirror tests (issue 9 satellite).
+
+Pure-python port of ``rust/src/moe/calibrate.rs`` — the least-squares
+affine fit ``want ~= scale * got + offset``, the relative-l2 residual,
+the trust-region clamp, and the acceptance ladder (clamped residual must
+not exceed the raw deviation and must fall under the gate) — fuzzed for
+the invariants the Rust proptest asserts and pinned to the exact binary
+constants the Rust unit test ``fit_matches_python_mirror_constants``
+asserts. No numpy, no artifacts.
+"""
+
+import math
+import random
+
+# rust: CalibrationOptions::default() trust region
+MIN_SCALE = 0.25
+MAX_SCALE = 4.0
+MAX_OFFSET = 4.0
+# rust: least_squares_fit / fit_residual degeneracy guards
+VAR_EPS = 1e-12
+DEN_EPS = 1e-24
+
+
+def least_squares_fit(got, want):
+    """Line-for-line mirror of ``calibrate::least_squares_fit``."""
+    n = min(len(got), len(want))
+    if n == 0:
+        return (1.0, 0.0)
+    sg = sw = sgg = sgw = 0.0
+    for g, w in zip(got[:n], want[:n]):
+        sg += g
+        sw += w
+        sgg += g * g
+        sgw += g * w
+    var = sgg - sg * sg / n
+    if not var > VAR_EPS:  # mirrors rust's NaN-rejecting `!(var > eps)`
+        return (1.0, 0.0)
+    scale = (sgw - sg * sw / n) / var
+    offset = (sw - scale * sg) / n
+    return (scale, offset)
+
+
+def fit_residual(got, want, scale, offset):
+    """Line-for-line mirror of ``calibrate::fit_residual``."""
+    num = den = 0.0
+    for g, w in zip(got, want):
+        a = g * scale + offset
+        num += (a - w) * (a - w)
+        den += w * w
+    return math.sqrt(num / max(den, DEN_EPS))
+
+
+def clamp(scale, offset):
+    """Mirror of ``CalibrationOptions::clamp`` at the default region."""
+    return (
+        min(max(scale, MIN_SCALE), MAX_SCALE),
+        min(max(offset, -MAX_OFFSET), MAX_OFFSET),
+    )
+
+
+def fit(got, want, gate):
+    """Mirror of ``RouterCalibration::fit``'s acceptance ladder.
+
+    Returns ``(accepted, scale, offset, raw, residual)`` where a
+    rejected fit serves the identity at its raw deviation.
+    """
+    raw = fit_residual(got, want, 1.0, 0.0)
+    scale, offset = clamp(*least_squares_fit(got, want))
+    residual = fit_residual(got, want, scale, offset)
+    accepted = (
+        residual <= raw
+        and residual <= gate
+        and (scale != 1.0 or offset != 0.0)
+    )
+    if accepted:
+        return (True, scale, offset, raw, residual)
+    return (False, 1.0, 0.0, raw, raw)
+
+
+# ------------------------------------------------------ pinned constants
+
+
+def test_fit_pinned_constants_match_rust_unit_test():
+    # the exact scenario rust pins in fit_matches_python_mirror_constants:
+    # got = [1,2,3,4], want = 2*got + 0.5. Every operand is a dyadic
+    # rational, so the fit is exact in binary on both sides.
+    got = [1.0, 2.0, 3.0, 4.0]
+    want = [2.5, 4.5, 6.5, 8.5]
+    scale, offset = least_squares_fit(got, want)
+    assert scale == 2.0
+    assert offset == 0.5
+    assert fit_residual(got, want, scale, offset) == 0.0
+    assert fit_residual(got, want, 1.0, 0.0) > 0.0
+
+
+def test_degenerate_fits_return_identity():
+    # rust's degenerate_fits_return_identity, exactly
+    assert least_squares_fit([], []) == (1.0, 0.0)
+    assert least_squares_fit([0.5] * 6, [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]) == (
+        1.0,
+        0.0,
+    )
+
+
+def test_trust_region_clamps_scale_and_offset():
+    # true scale 8 and offset 6 both exceed the default region
+    got = [1.0, 2.0, 3.0, 4.0]
+    want = [8.0 * g + 6.0 for g in got]
+    assert least_squares_fit(got, want) == (8.0, 6.0)
+    assert clamp(8.0, 6.0) == (MAX_SCALE, MAX_OFFSET)
+    assert clamp(0.01, -100.0) == (MIN_SCALE, -MAX_OFFSET)
+
+
+# ------------------------------------------------------------ invariants
+
+
+def test_unclamped_optimum_never_exceeds_raw_deviation():
+    # the affine family contains the identity, so the (unclamped)
+    # least-squares optimum can never serve a worse residual than raw —
+    # only the trust-region clamp can break this, which is exactly why
+    # the rust acceptance ladder re-checks `residual <= raw` post-clamp.
+    rng = random.Random(0xCA11B)
+    for _ in range(100):
+        want = [rng.gauss(0.0, 1.0) for _ in range(rng.randint(2, 16))]
+        got = [0.7 * w + 0.05 * rng.gauss(0.0, 1.0) for w in want]
+        raw = fit_residual(got, want, 1.0, 0.0)
+        assert raw >= 0.0 and math.isfinite(raw)
+        scale, offset = least_squares_fit(got, want)
+        assert fit_residual(got, want, scale, offset) <= raw + 1e-12
+
+
+def test_fit_never_worsens_served_residual_fuzzed():
+    # the python side of rust's prop_fit_never_worsens_served_residual:
+    # either the fit stands with residual <= min(raw, gate), or the slot
+    # serves the identity at exactly its raw deviation.
+    rng = random.Random(0x5EED9)
+    accepted_some = rejected_some = False
+    for _ in range(300):
+        n = 2 + rng.randrange(14)
+        want = [rng.gauss(0.0, 1.0) for _ in range(n)]
+        f = 0.2 + 0.8 * rng.random()
+        noise = 0.2 * rng.random()
+        got = [f * w + noise * rng.gauss(0.0, 1.0) for w in want]
+        gate = 0.5 * rng.random()
+        ok, scale, offset, raw, residual = fit(got, want, gate)
+        if ok:
+            accepted_some = True
+            assert residual <= raw + 1e-12
+            assert residual <= gate + 1e-12
+            assert MIN_SCALE <= scale <= MAX_SCALE
+            assert abs(offset) <= MAX_OFFSET
+        else:
+            rejected_some = True
+            assert (scale, offset) == (1.0, 0.0)
+            assert residual == raw
+    assert accepted_some and rejected_some  # the fuzz exercises both arms
+
+
+def test_pure_decay_is_fully_absorbed_and_raw_grows():
+    # multiplicative decay (the drift law's local shape) is exactly
+    # affine-correctable: the fit must absorb ~all of it while the raw
+    # deviation grows monotonically with decay depth.
+    want = [0.8, -1.2, 2.0, 0.4, -0.6, 1.6]
+    last_raw = 0.0
+    for f in (0.9, 0.7, 0.5):
+        got = [f * w for w in want]
+        ok, scale, _offset, raw, residual = fit(got, want, 0.05)
+        assert ok
+        assert raw > last_raw
+        assert residual < 1e-9
+        assert abs(scale - 1.0 / f) < 1e-9
+        last_raw = raw
+
+
+def test_impossible_gate_rejects_and_serves_raw():
+    # mirrors the rust rejected_fit_resets_slot_to_identity refit: the
+    # perturbed pair is non-affine, so no fit reaches residual 0.0 and
+    # the 0.0 gate rejects (an exactly-affine pair would be fitted to
+    # 0.0 and pass even this gate — which is correct, and why the
+    # perturbation is there)
+    got = [0.4, -0.6, 1.0, 0.2]
+    want = [0.5 * g for g in got]
+    ok, *_ = fit(got, want, 0.0)
+    assert ok  # exactly affine: residual 0.0 passes even a 0.0 gate
+    want[0] += 0.25
+    ok, scale, offset, raw, residual = fit(got, want, 0.0)
+    assert not ok and (scale, offset) == (1.0, 0.0) and residual == raw
+    assert raw > 0.0

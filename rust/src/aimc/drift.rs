@@ -251,6 +251,39 @@ impl DriftMonitor {
         drifted: (&[f32], &[f32], &[f32]),
         reference: &ExpertHostWeights,
     ) -> f64 {
+        self.probe_inner(layer, expert, drifted, reference).0
+    }
+
+    /// [`DriftMonitor::probe`], additionally handing back the probe
+    /// sample pair — the drifted sentinel output (`got`) and the
+    /// memoized digital reference output (`want`) — so the calibrate
+    /// tier can least-squares fit a correction from exactly the
+    /// evidence the deviation was measured on
+    /// (see [`crate::moe::calibrate`]). Recording semantics are
+    /// identical to [`DriftMonitor::probe`].
+    pub fn probe_sampled(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        drifted: (&[f32], &[f32], &[f32]),
+        reference: &ExpertHostWeights,
+    ) -> (f64, Vec<f32>, Vec<f32>) {
+        let (dev, got) = self.probe_inner(layer, expert, drifted, reference);
+        let want = self.ref_cache[layer][expert]
+            .as_ref()
+            .expect("reference cache filled by probe_inner")
+            .0
+            .clone();
+        (dev, got, want)
+    }
+
+    fn probe_inner(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        drifted: (&[f32], &[f32], &[f32]),
+        reference: &ExpertHostWeights,
+    ) -> (f64, Vec<f32>) {
         let (d, m, n) = (self.d, self.m, self.rows);
         let (up, gate, down) = drifted;
         let got = tensor::gated_mlp(&self.sentinel, up, gate, down, n, d, m);
@@ -279,7 +312,7 @@ impl DriftMonitor {
         self.deviations[layer][expert] = dev;
         self.norm_ratios[layer][expert] = maxnn_score(up, gate, down, d, m) / ref_nn.max(1e-24);
         self.stale[layer][expert] = false;
-        dev
+        (dev, got)
     }
 
     /// Mark an expert as freshly migrated / reprogrammed: the slot is
@@ -437,6 +470,45 @@ mod tests {
         assert_eq!(dev, 0.0);
         assert!((mon.norm_ratios()[1][2] - 1.0).abs() < 1e-12);
         assert_eq!(mon.max_deviation(), 0.0);
+    }
+
+    #[test]
+    fn probe_sampled_matches_probe_and_returns_the_pair() {
+        let (d, m) = (6, 4);
+        let mut rng = Prng::new(13);
+        let reference = ExpertHostWeights {
+            up: (0..d * m).map(|_| rng.gaussian_f32() * 0.3).collect(),
+            gate: (0..d * m).map(|_| rng.gaussian_f32() * 0.3).collect(),
+            down: (0..m * d).map(|_| rng.gaussian_f32() * 0.3).collect(),
+        };
+        let drifted: ExpertHostWeights = ExpertHostWeights {
+            up: reference.up.iter().map(|v| v * 0.8).collect(),
+            gate: reference.gate.iter().map(|v| v * 0.8).collect(),
+            down: reference.down.iter().map(|v| v * 0.8).collect(),
+        };
+        let dr = (
+            drifted.up.as_slice(),
+            drifted.gate.as_slice(),
+            drifted.down.as_slice(),
+        );
+        let mut a = DriftMonitor::new(1, 1, d, m, 4, 7);
+        let mut b = DriftMonitor::new(1, 1, d, m, 4, 7);
+        let dev_plain = a.probe(0, 0, dr, &reference);
+        let (dev, got, want) = b.probe_sampled(0, 0, dr, &reference);
+        assert_eq!(dev, dev_plain, "sampled probe must record identically");
+        assert_eq!(got.len(), want.len());
+        assert_eq!(got.len(), 4 * d);
+        assert!(dev > 0.0);
+        // the pair really is (drifted output, reference output): the
+        // deviation recomputed from it matches the recorded one
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (g, w) in got.iter().zip(&want) {
+            num += ((g - w) as f64).powi(2);
+            den += (*w as f64).powi(2);
+        }
+        assert!(((num / den.max(1e-24)).sqrt() - dev).abs() < 1e-15);
+        assert_eq!(b.max_deviation(), dev);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::aimc::profile::{maxnn_score, selection_predictiveness, Clock, DeviceP
 use crate::aimc::program::NoiseModel;
 use crate::config::{AimcConfig, Meta, ModelConfig};
 use crate::coordinator::{
-    Cluster, EngineBuilder, Executor, Lane, LaneMetrics, LaneParams, MaintenancePolicy, Metrics,
+    Cluster, EngineBuilder, Executor, Lane, LaneMetrics, LaneParams, MaintenanceConfig, Metrics,
     Request, Response, Server, ServerConfig, ShedPolicy, ThreadExecutor,
 };
 use crate::eval::data::{load_rows, load_tasks, Task};
@@ -479,7 +479,11 @@ fn metrics_backends_json(m: &Metrics) -> Json {
 /// utilization ([`Metrics::utilization`]), the simulated Appendix-A
 /// clocks, and a byte-identity check between the two response streams.
 /// Four scenario blocks ride along: `drift_soak` (aggressive drift
-/// with the server-owned maintenance cadence), `mixed_priority`
+/// with the server-owned maintenance cadence; with `calibrate_arms`
+/// it grows the recovery-strategy comparison — no-maintenance vs
+/// calibrate-only vs calibrate+migrate vs the legacy migrate-only arm,
+/// each reporting deviation recovered per second of maintenance wall
+/// time), `mixed_priority`
 /// (bursty interactive over steady bulk through the [`Server`] lanes,
 /// with per-lane p50/p95/p99 wait ticks — the latency trajectory the
 /// CI guard watches), `replica_scaling` (the same mixed stream
@@ -490,7 +494,7 @@ fn metrics_backends_json(m: &Metrics) -> Json {
 /// overload flood with and without the [`ShedPolicy`] shed, and the
 /// shed-disarmed byte-identity regression flag). Requires the AOT
 /// artifact tree. Schema: `docs/BENCHMARKS.md`.
-pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
+pub fn run_serve_bench(model: &str, n_requests: usize, calibrate_arms: bool) -> Result<Json> {
     let artifacts = crate::artifacts_dir();
     let meta = Meta::load(&artifacts)?;
     let cfg = meta.config(model)?.clone();
@@ -566,25 +570,36 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
 
     // --- drift soak: the long-horizon serving scenario — aggressive
     // conductance drift with the server-owned maintenance cadence
-    // ticking after every compiled batch (docs/BENCHMARKS.md §Drift
-    // soak) ---
+    // ticking after every compiled batch. With `calibrate_arms`, the
+    // same stream runs through the recovery-strategy comparison:
+    // no-maintenance vs calibrate-only vs calibrate+migrate, plus the
+    // legacy migrate-only arm the flat fields report
+    // (docs/BENCHMARKS.md §Drift soak, §Drift recovery arms) ---
     let soak_nu = 0.4;
     let soak_budget = 4usize;
-    let soak = {
+    struct SoakOut {
+        m: Metrics,
+        peak_dev: f64,
+        /// Σ deviation of analog → digital promotions: the deviation
+        /// removed from service by migrating rather than calibrating.
+        promo_dev: f64,
+        wall: f64,
+    }
+    let mut soak_arm = |budget: usize, calibrate: bool| -> Result<SoakOut> {
+        let maint = MaintenanceConfig::new()
+            .every(cfg.batch.max(1) as u64)
+            .budget(budget)
+            .drift(DriftModel::with_nu(soak_nu))
+            .calibrate(calibrate);
         let engine = EngineBuilder::new()
             .model(cfg.clone())
             .aimc(meta.aimc)
             .placement(placement.clone())
             .serve_cap(meta.serve_cap)
-            .drift(DriftModel::with_nu(soak_nu))
-            .replacer(RePlacerOptions { budget: soak_budget, ..Default::default() })
+            .maintenance(maint.clone())
             .build(&mut rt, &paths, &params)?;
-        let mut server = Server::new(
-            &rt,
-            engine,
-            single_lane(cfg.batch)
-                .maintenance(MaintenancePolicy::every(cfg.batch.max(1) as u64)),
-        );
+        let mut server =
+            Server::new(&rt, engine, single_lane(cfg.batch).maintenance_config(&maint));
         let client = server.client();
         let t0 = Instant::now();
         for wave in reqs.chunks(cfg.batch.max(1)) {
@@ -598,24 +613,75 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         }
         let wall = t0.elapsed().as_secs_f64();
         let (report, engine) = server.shutdown()?;
-        let mut peak_dev = report.maintenance.max_deviation;
-        for rep in &report.maintenance_log {
-            peak_dev = peak_dev.max(rep.max_deviation);
+        let mut peak_dev = 0.0f64;
+        let mut promo_dev = 0.0f64;
+        for rep in report.maintenance_log.iter().chain(std::iter::once(&report.maintenance)) {
+            peak_dev = peak_dev.max(rep.max_deviation());
+            for mg in rep.migrations() {
+                if mg.is_promotion() {
+                    promo_dev += mg.deviation;
+                }
+            }
         }
-        let m = engine.metrics.clone();
+        Ok(SoakOut { m: engine.metrics.clone(), peak_dev, promo_dev, wall })
+    };
+    // deviation recovered per second of maintenance wall time: the
+    // figure of merit the recovery-arm comparison ranks strategies by
+    let soak_arm_json = |a: &SoakOut| {
+        let recovered = a.m.deviation_absorbed + a.promo_dev;
         Json::obj(vec![
+            ("migrations", Json::num(a.m.migrations as f64)),
+            ("promotions", Json::num(a.m.promotions as f64)),
+            ("demotions", Json::num(a.m.demotions as f64)),
+            ("calibrated_experts", Json::num(a.m.calibrated_experts as f64)),
+            ("deviation_absorbed", Json::num(recovered)),
+            ("calibration_residual", Json::num(a.m.calibration_residual)),
+            ("peak_sentinel_deviation", Json::num(a.peak_dev)),
+            ("sentinel_deviation", Json::num(a.m.sentinel_deviation)),
+            ("maintenance_wall_s", Json::num(a.m.maintenance_wall.as_secs_f64())),
+            (
+                "recovery_per_maint_s",
+                Json::num(recovered / a.m.maintenance_wall.as_secs_f64().max(1e-9)),
+            ),
+            ("tokens_per_s", Json::num((n_requests * t) as f64 / a.wall.max(1e-12))),
+        ])
+    };
+    let soak = {
+        // the legacy migrate-only arm feeds the flat drift_soak fields,
+        // keeping the pre-calibration schema stable
+        let legacy = soak_arm(soak_budget, false)?;
+        let arms = if calibrate_arms {
+            let none = soak_arm(0, false)?;
+            let cal_only = soak_arm(0, true)?;
+            let cal_mig = soak_arm(soak_budget, true)?;
+            Some(Json::obj(vec![
+                ("no_maintenance", soak_arm_json(&none)),
+                ("calibrate_only", soak_arm_json(&cal_only)),
+                ("calibrate_migrate", soak_arm_json(&cal_mig)),
+                ("migrate_only", soak_arm_json(&legacy)),
+            ]))
+        } else {
+            None
+        };
+        let m = &legacy.m;
+        let mut fields = vec![
             ("nu", Json::num(soak_nu)),
             ("replace_every_requests", Json::num(cfg.batch as f64)),
             ("migration_budget", Json::num(soak_budget as f64)),
+            ("promote_gate", Json::num(RePlacerOptions::default().promote)),
             ("drift_clock", Json::num(m.drift_clock as f64)),
             ("migrations", Json::num(m.migrations as f64)),
             ("promotions", Json::num(m.promotions as f64)),
             ("demotions", Json::num(m.demotions as f64)),
             ("migrated", Json::Bool(m.migrations > 0)),
-            ("peak_sentinel_deviation", Json::num(peak_dev)),
+            ("peak_sentinel_deviation", Json::num(legacy.peak_dev)),
             ("sentinel_deviation", Json::num(m.sentinel_deviation)),
-            ("tokens_per_s", Json::num((n_requests * t) as f64 / wall.max(1e-12))),
-        ])
+            ("tokens_per_s", Json::num((n_requests * t) as f64 / legacy.wall.max(1e-12))),
+        ];
+        if let Some(arms) = arms {
+            fields.push(("arms", arms));
+        }
+        Json::obj(fields)
     };
 
     // --- mixed-priority traffic: bursty interactive over steady bulk
@@ -835,20 +901,19 @@ pub fn run_serve_bench(model: &str, n_requests: usize) -> Result<Json> {
         // interactive queue (poll only on rejection) so a shed
         // watermark is actually crossed.
         let mut arm = |weight: f64, flood: bool, shed: Option<ShedPolicy>| -> Result<ArmOut> {
+            let maint = MaintenanceConfig::new()
+                .every(cfg.batch.max(1) as u64)
+                .budget(hot_budget)
+                .traffic_weight(weight)
+                .drift(DriftModel::with_nu(hot_nu));
             let engine = EngineBuilder::new()
                 .model(cfg.clone())
                 .aimc(meta.aimc)
                 .placement(placement.clone())
                 .serve_cap(meta.serve_cap)
-                .drift(DriftModel::with_nu(hot_nu))
-                .replacer(RePlacerOptions {
-                    budget: hot_budget,
-                    traffic_weight: weight,
-                    ..Default::default()
-                })
+                .maintenance(maint.clone())
                 .build(&mut rt, &paths, &params)?;
-            let mut server_cfg = single_lane(cfg.batch)
-                .maintenance(MaintenancePolicy::every(cfg.batch.max(1) as u64));
+            let mut server_cfg = single_lane(cfg.batch).maintenance_config(&maint);
             if let Some(p) = shed {
                 server_cfg = server_cfg.shed(p);
             }
@@ -1158,21 +1223,23 @@ pub fn run_profile_bench(model: &str, n_requests: usize) -> Result<Json> {
             )?;
             apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0)?;
             for every in PROFILE_BENCH_EVERY {
+                let maint = MaintenanceConfig::new()
+                    .every((every * cfg.batch.max(1)) as u64)
+                    .budget(budget)
+                    .device_profile(profile.clone());
                 let engine = EngineBuilder::new()
                     .model(cfg.clone())
                     .aimc(meta.aimc)
                     .placement(placement.clone())
                     .serve_cap(meta.serve_cap)
-                    .device_profile(profile.clone())
-                    .replacer(RePlacerOptions { budget, ..Default::default() })
+                    .maintenance(maint.clone())
                     .build(&mut rt, &paths, &params)?;
                 let analog_before = engine.placement.n_analog_experts();
                 let mut server = Server::new(
                     &rt,
                     engine,
-                    ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4).maintenance(
-                        MaintenancePolicy::every((every * cfg.batch.max(1)) as u64),
-                    ),
+                    ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4)
+                        .maintenance_config(&maint),
                 );
                 let client = server.client();
                 let t0 = Instant::now();
@@ -1187,9 +1254,9 @@ pub fn run_profile_bench(model: &str, n_requests: usize) -> Result<Json> {
                 }
                 let wall = t0.elapsed().as_secs_f64();
                 let (report, engine) = server.shutdown()?;
-                let mut peak_dev = report.maintenance.max_deviation;
+                let mut peak_dev = report.maintenance.max_deviation();
                 for rep in &report.maintenance_log {
-                    peak_dev = peak_dev.max(rep.max_deviation);
+                    peak_dev = peak_dev.max(rep.max_deviation());
                 }
                 let m = engine.metrics.clone();
                 rows.push(Json::obj(vec![

@@ -87,6 +87,28 @@ impl ClusterMetrics {
     pub fn utilization_per_replica(&self) -> Vec<f64> {
         self.per_replica.iter().map(Metrics::utilization).collect()
     }
+
+    /// Experts carrying a standing router-logit correction across all
+    /// replicas. Each replica fits its own [`RouterCalibration`]
+    /// against its own drift trajectory, so the cluster view is a sum,
+    /// not a shared table.
+    ///
+    /// [`RouterCalibration`]: crate::moe::calibrate::RouterCalibration
+    pub fn calibrated_experts(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.calibrated_experts).sum()
+    }
+
+    /// Cumulative sentinel deviation absorbed by calibration fits
+    /// across all replicas.
+    pub fn deviation_absorbed(&self) -> f64 {
+        self.per_replica.iter().map(|m| m.deviation_absorbed).sum()
+    }
+
+    /// Worst standing post-fit residual across all replicas (the
+    /// cluster's calibration health is its weakest replica's).
+    pub fn calibration_residual(&self) -> f64 {
+        self.per_replica.iter().map(|m| m.calibration_residual).fold(0.0, f64::max)
+    }
 }
 
 /// One replica's slice of a [`Cluster::shutdown`]: its name plus the
@@ -426,12 +448,16 @@ mod tests {
                 maintenance: Default::default(),
                 maintenance_log: Vec::new(),
             };
-            // every mock replica reports the same small routing EWMA so
-            // rollup tests can pin the cluster-wide merge
+            // every mock replica reports the same small routing EWMA
+            // and calibration footprint so rollup tests can pin the
+            // cluster-wide merge
             let mut metrics = Metrics::default();
             let mut traffic = TrafficStats::new(1, 2);
             traffic.update(0, &[3, 1]);
             metrics.traffic = traffic;
+            metrics.calibrated_experts = 2;
+            metrics.deviation_absorbed = 0.25;
+            metrics.calibration_residual = 0.01;
             Ok(ExecutorReport { report, metrics })
         }
     }
@@ -561,5 +587,9 @@ mod tests {
         assert!(!t.is_empty(), "cluster rollup must carry the merged traffic");
         assert!((t.share(0, 0) - 0.75).abs() < 1e-12);
         assert!((t.share(0, 1) - 0.25).abs() < 1e-12);
+        // calibration rolls up as sum / sum / max over replicas
+        assert_eq!(report.metrics.calibrated_experts(), 4);
+        assert!((report.metrics.deviation_absorbed() - 0.5).abs() < 1e-12);
+        assert!((report.metrics.calibration_residual() - 0.01).abs() < 1e-12);
     }
 }

@@ -1,0 +1,291 @@
+//! The staged maintenance API: one [`MaintenanceConfig`] for every
+//! knob of the tick, and the per-stage [`MaintenanceReport`].
+//!
+//! Maintenance grew organically — drift model on the builder, device
+//! profile on the builder, re-placer thresholds on the builder, cadence
+//! on [`ServerConfig`](super::ServerConfig), five CLI flags — and the
+//! calibration tier (`moe::calibrate`) would have added a sixth seam.
+//! This module is the consolidation:
+//!
+//! - [`MaintenanceConfig`] — one builder owning the re-placer options,
+//!   the cadence, the drift model, the device profile, and the
+//!   calibration knobs. `EngineBuilder::maintenance` /
+//!   `ServerConfig::maintenance_config` consume it; the scattered
+//!   legacy setters survive as thin deprecated forwards.
+//! - [`MaintenanceReport`] — the tick's result, structured by the
+//!   escalation ladder's stages (`materialize+probe → calibrate → plan
+//!   → migrate`), each with its own counts and wall time, so serving
+//!   loops and `soak_check.py` can attribute maintenance cost to the
+//!   stage that incurred it. The flat pre-redesign fields survive as
+//!   accessors ([`MaintenanceReport::probed`] /
+//!   [`MaintenanceReport::max_deviation`] /
+//!   [`MaintenanceReport::migrations`]).
+//!
+//! The ladder itself executes in `Engine::maintenance` (DESIGN.md §8).
+
+use crate::aimc::drift::DriftModel;
+use crate::aimc::profile::DeviceProfile;
+use crate::moe::calibrate::CalibrationOptions;
+use crate::moe::placement::{Migration, RePlacerOptions};
+
+/// Every knob of the maintenance tick, in one builder.
+///
+/// ```no_run
+/// # use hetmoe::coordinator::MaintenanceConfig;
+/// # use hetmoe::aimc::drift::DriftModel;
+/// let maint = MaintenanceConfig::new()
+///     .every(8)                       // tick after every 8 served requests
+///     .drift(DriftModel::with_nu(0.4))
+///     .budget(4)                      // migrations per tick
+///     .calibrate(true);               // absorb mild drift before migrating
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct MaintenanceConfig {
+    /// Thresholds + migration budget of the live re-placement policy.
+    pub replacer: RePlacerOptions,
+    /// Server-owned cadence: tick after every N served requests
+    /// (0 = no automatic cadence; shutdown still runs one final tick).
+    pub every_n_requests: u64,
+    /// The conductance-drift model (None = disabled).
+    pub drift: Option<DriftModel>,
+    /// The device nonideality profile replayed at each tick
+    /// (None = ideal). Composes with `drift`: an enabled drift model is
+    /// appended to the profile's stack at build time.
+    pub profile: Option<DeviceProfile>,
+    /// The calibration tier's knobs (off by default — the uncalibrated
+    /// path stays byte-identical to pre-calibration builds).
+    pub calibration: CalibrationOptions,
+}
+
+impl MaintenanceConfig {
+    /// A config with every tier at its default: default re-placer
+    /// policy, no cadence, no drift, ideal profile, calibration off.
+    pub fn new() -> MaintenanceConfig {
+        MaintenanceConfig::default()
+    }
+
+    /// Tick after every `n` served requests (0 disables the cadence).
+    pub fn every(mut self, n: u64) -> Self {
+        self.every_n_requests = n;
+        self
+    }
+
+    /// Migration budget per tick (shorthand into
+    /// [`MaintenanceConfig::replacer`]).
+    pub fn budget(mut self, k: usize) -> Self {
+        self.replacer.budget = k;
+        self
+    }
+
+    /// Traffic weight of the re-placement planner (shorthand into
+    /// [`MaintenanceConfig::replacer`]; 0.0 keeps the deviation-only
+    /// planner).
+    pub fn traffic_weight(mut self, w: f64) -> Self {
+        self.replacer.traffic_weight = w;
+        self
+    }
+
+    /// Replace the full re-placer policy.
+    pub fn replacer(mut self, opts: RePlacerOptions) -> Self {
+        self.replacer = opts;
+        self
+    }
+
+    /// The conductance-drift model the engine advances on its
+    /// token-count clock.
+    pub fn drift(mut self, model: DriftModel) -> Self {
+        self.drift = Some(model);
+        self
+    }
+
+    /// The device nonideality profile replayed at every tick.
+    pub fn device_profile(mut self, profile: DeviceProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    /// Switch the calibration tier on or off (keeps the configured
+    /// trust region / gate).
+    pub fn calibrate(mut self, on: bool) -> Self {
+        self.calibration.calibrate = on;
+        self
+    }
+
+    /// Replace the full calibration options (trust region, residual
+    /// gate, on/off).
+    pub fn calibration(mut self, opts: CalibrationOptions) -> Self {
+        self.calibration = opts;
+        self
+    }
+}
+
+/// The materialize + probe stage: sentinel probes replayed and analog
+/// serving buffers re-materialized at the current clock.
+#[derive(Clone, Debug, Default)]
+pub struct ProbeReport {
+    /// Experts sentinel-probed (analog residents + promoted shadows).
+    pub probed: usize,
+    /// Analog experts whose serving buffers were re-materialized from
+    /// the perturbed host weights.
+    pub materialized: usize,
+    /// Largest raw sentinel deviation measured this tick.
+    pub max_deviation: f64,
+    /// Wall time of the stage, seconds.
+    pub wall_s: f64,
+}
+
+/// The calibrate stage: affine logit corrections fitted from the probe
+/// samples (skipped entirely when the tier is off).
+#[derive(Clone, Debug, Default)]
+pub struct CalibrateReport {
+    /// Fits accepted this tick (correction now standing).
+    pub fitted: usize,
+    /// Slots reset to identity this tick (rejected refits).
+    pub reset: usize,
+    /// Deviation absorbed by this tick's accepted fits
+    /// (Σ raw − residual).
+    pub absorbed: f64,
+    /// Largest post-fit residual among the standing corrections.
+    pub max_residual: f64,
+    /// Wall time of the stage, seconds.
+    pub wall_s: f64,
+}
+
+/// The plan stage: residual deviations handed to the re-placer.
+#[derive(Clone, Debug, Default)]
+pub struct PlanReport {
+    /// Migrations the planner proposed (all executed by the migrate
+    /// stage).
+    pub planned: usize,
+    /// Wall time of the stage, seconds.
+    pub wall_s: f64,
+}
+
+/// The migrate stage: planned migrations executed live.
+#[derive(Clone, Debug, Default)]
+pub struct MigrateReport {
+    /// Migrations executed live by this tick.
+    pub migrations: Vec<Migration>,
+    /// Wall time of the stage, seconds.
+    pub wall_s: f64,
+}
+
+/// What one `Engine::maintenance` tick did, stage by stage.
+#[derive(Clone, Debug, Default)]
+pub struct MaintenanceReport {
+    /// Token-count drift clock at the tick.
+    pub drift_clock: u64,
+    /// Materialize + sentinel-probe stage.
+    pub probe: ProbeReport,
+    /// Calibration-fit stage.
+    pub calibrate: CalibrateReport,
+    /// Re-placement planning stage.
+    pub plan: PlanReport,
+    /// Live-migration stage.
+    pub migrate: MigrateReport,
+}
+
+impl MaintenanceReport {
+    /// Experts sentinel-probed (the pre-redesign flat field).
+    pub fn probed(&self) -> usize {
+        self.probe.probed
+    }
+
+    /// Largest raw sentinel deviation measured this tick (the
+    /// pre-redesign flat field).
+    pub fn max_deviation(&self) -> f64 {
+        self.probe.max_deviation
+    }
+
+    /// Migrations executed live by this tick (the pre-redesign flat
+    /// field).
+    pub fn migrations(&self) -> &[Migration] {
+        &self.migrate.migrations
+    }
+
+    /// Total wall time of the tick across all stages, seconds.
+    pub fn wall_s(&self) -> f64 {
+        self.probe.wall_s + self.calibrate.wall_s + self.plan.wall_s + self.migrate.wall_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::placement::{BACKEND_ANALOG, BACKEND_DIGITAL};
+
+    #[test]
+    fn config_builder_round_trips_every_tier() {
+        let m = MaintenanceConfig::new()
+            .every(8)
+            .budget(4)
+            .traffic_weight(0.5)
+            .drift(DriftModel::with_nu(0.4))
+            .device_profile(DeviceProfile::preset("reram-noisy").unwrap())
+            .calibrate(true);
+        assert_eq!(m.every_n_requests, 8);
+        assert_eq!(m.replacer.budget, 4);
+        assert!((m.replacer.traffic_weight - 0.5).abs() < 1e-12);
+        assert!((m.drift.as_ref().unwrap().nu - 0.4).abs() < 1e-12);
+        assert_eq!(m.profile.as_ref().unwrap().name(), "reram-noisy");
+        assert!(m.calibration.calibrate);
+
+        // full-policy setters replace, shorthands compose
+        let m = MaintenanceConfig::new()
+            .replacer(RePlacerOptions { budget: 2, ..Default::default() })
+            .budget(7)
+            .calibration(CalibrationOptions { residual_gate: Some(0.02), ..Default::default() })
+            .calibrate(true);
+        assert_eq!(m.replacer.budget, 7);
+        assert_eq!(m.calibration.residual_gate, Some(0.02));
+        assert!(m.calibration.calibrate);
+    }
+
+    #[test]
+    fn config_default_is_fully_off() {
+        let m = MaintenanceConfig::default();
+        assert_eq!(m.every_n_requests, 0);
+        assert!(m.drift.is_none());
+        assert!(m.profile.is_none());
+        assert!(!m.calibration.calibrate);
+        assert_eq!(m.replacer.budget, RePlacerOptions::default().budget);
+    }
+
+    #[test]
+    fn staged_report_default_is_empty_and_accessors_flatten() {
+        let r = MaintenanceReport::default();
+        assert_eq!(r.probed(), 0);
+        assert_eq!(r.max_deviation(), 0.0);
+        assert!(r.migrations().is_empty());
+        assert_eq!(r.calibrate.fitted, 0);
+        assert_eq!(r.calibrate.absorbed, 0.0);
+        assert_eq!(r.wall_s(), 0.0);
+
+        let r = MaintenanceReport {
+            drift_clock: 4096,
+            probe: ProbeReport { probed: 6, materialized: 5, max_deviation: 0.25, wall_s: 0.5 },
+            calibrate: CalibrateReport {
+                fitted: 3,
+                reset: 1,
+                absorbed: 0.5,
+                max_residual: 0.01,
+                wall_s: 0.25,
+            },
+            plan: PlanReport { planned: 1, wall_s: 0.125 },
+            migrate: MigrateReport {
+                migrations: vec![Migration {
+                    layer: 0,
+                    expert: 1,
+                    from: BACKEND_ANALOG,
+                    to: BACKEND_DIGITAL,
+                    deviation: 0.25,
+                }],
+                wall_s: 0.125,
+            },
+        };
+        assert_eq!(r.probed(), 6);
+        assert_eq!(r.max_deviation(), 0.25);
+        assert_eq!(r.migrations().len(), 1);
+        assert_eq!(r.wall_s(), 1.0);
+    }
+}

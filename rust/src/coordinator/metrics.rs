@@ -249,8 +249,19 @@ pub struct Metrics {
     /// token-count drift clock: tokens served since deployment (the
     /// proxy clock `aimc::drift::DriftModel` decays on)
     pub drift_clock: u64,
+    /// experts currently carrying a non-identity router-logit
+    /// correction (the calibrate tier of `Engine::maintenance`;
+    /// 0 = routing is bitwise uncalibrated)
+    pub calibrated_experts: u64,
+    /// cumulative sentinel deviation absorbed by accepted calibration
+    /// fits (Σ over ticks of raw − residual; the recovery the migrate
+    /// tier never had to pay for)
+    pub deviation_absorbed: f64,
+    /// largest post-fit residual among the standing corrections at the
+    /// last maintenance tick (0.0 when nothing is calibrated)
+    pub calibration_residual: f64,
     /// maintenance wall time (sentinel probes, drift materialization,
-    /// migrations)
+    /// calibration fits, migrations)
     pub maintenance_wall: Duration,
 
     // routing-traffic + load-shedding accounting
@@ -388,12 +399,22 @@ impl Metrics {
         } else {
             String::new()
         };
+        // gated like the traffic line: a build that never calibrated
+        // renders the exact pre-calibration drift line
+        let calibration_line = if self.calibrated_experts > 0 || self.deviation_absorbed > 0.0 {
+            format!(
+                " calibrated={} absorbed={:.4} residual={:.4}",
+                self.calibrated_experts, self.deviation_absorbed, self.calibration_residual
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests={} batches={} tokens={}\n\
              dispatches: {dispatch_line} utilization={:.2}\n\
              transfers:{transfer_line} alloc={} B\n\
              drift: clock={} tokens migrations={} ({} promoted, {} demoted) \
-             sentinel max |dev|={:.4}{traffic_line}\n\
+             sentinel max |dev|={:.4}{calibration_line}{traffic_line}\n\
              wall: total={:.3}s attn={:.3}s route={:.3}s pack={:.3}s \
              scatter={:.3}s{backend_wall} \
              shared={:.3}s lm={:.3}s maint={:.3}s → {:.0} tok/s\n\
@@ -515,6 +536,23 @@ mod tests {
         assert!(r.contains("clock=4096 tokens"));
         assert!(r.contains("sentinel max |dev|=0.1250"));
         assert!(r.contains("maint="));
+        // calibration never ran → the drift line is the pre-calibration
+        // rendering, no `calibrated=` segment
+        assert!(!r.contains("calibrated="));
+
+        let m = Metrics {
+            migrations: 3,
+            promotions: 2,
+            demotions: 1,
+            sentinel_deviation: 0.125,
+            drift_clock: 4096,
+            calibrated_experts: 5,
+            deviation_absorbed: 0.5,
+            calibration_residual: 0.0125,
+            ..Default::default()
+        };
+        let r = m.report();
+        assert!(r.contains("sentinel max |dev|=0.1250 calibrated=5 absorbed=0.5000 residual=0.0125"));
     }
 
     #[test]

@@ -43,9 +43,11 @@
 //!   depth. Off by default; while disarmed the dispatch path is
 //!   byte-identical to a shed-free build.
 //! - **The server owns the maintenance cadence.** With
-//!   [`MaintenancePolicy::every`], the drift tick
+//!   [`ServerConfig::maintenance_config`] (one
+//!   [`MaintenanceConfig`](super::MaintenanceConfig) shared with the
+//!   builder), the staged drift tick
 //!   ([`Engine::maintenance`]) runs between batches after every N
-//!   served requests — call sites no longer hand-roll `--replace-every`
+//!   served requests — call sites no longer hand-roll `--maint-every`
 //!   counters. [`Server::shutdown`] drains every lane, runs one final
 //!   tick, and returns a [`DrainReport`] plus the engine.
 //!
@@ -273,7 +275,18 @@ impl ServerConfig {
         self
     }
 
+    /// Adopt the cadence of a [`MaintenanceConfig`](super::MaintenanceConfig)
+    /// — the consolidated maintenance surface shared with
+    /// `EngineBuilder::maintenance`. The engine-side knobs (drift,
+    /// profile, re-placer, calibration) take effect at engine build;
+    /// only the cadence lives server-side.
+    pub fn maintenance_config(mut self, maint: &super::MaintenanceConfig) -> ServerConfig {
+        self.maintenance = MaintenancePolicy::every(maint.every_n_requests);
+        self
+    }
+
     /// Set the server-owned maintenance cadence.
+    #[deprecated(note = "use .maintenance_config(&MaintenanceConfig::new().every(n))")]
     pub fn maintenance(mut self, policy: MaintenancePolicy) -> ServerConfig {
         self.maintenance = policy;
         self
@@ -615,6 +628,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // pins the deprecated .maintenance() forward
     fn server_config_defaults_and_overrides() {
         let cfg = ServerConfig::new(8);
         assert_eq!(cfg.max_batch, 8);
@@ -632,6 +646,11 @@ mod tests {
             .maintenance(MaintenancePolicy::every(16));
         assert_eq!(cfg.lanes[Lane::Bulk.index()].weight, 2);
         assert_eq!(cfg.lanes[Lane::Bulk.index()].max_wait_ticks, 9);
+        assert_eq!(cfg.maintenance.every_n_requests, 16);
+
+        // the consolidated surface sets the same cadence
+        let cfg = ServerConfig::new(8)
+            .maintenance_config(&super::super::MaintenanceConfig::new().every(16));
         assert_eq!(cfg.maintenance.every_n_requests, 16);
     }
 

@@ -48,10 +48,11 @@
 //!   bounded priority lanes (interactive/bulk), weighted-deficit batch
 //!   composition with a starvation bound, completions consumed via
 //!   `try_recv`/`recv_all`, and a server-owned drift-maintenance
-//!   cadence ([`coordinator::MaintenancePolicy`]: sentinel probes →
-//!   live expert re-placement, no rebuild; see `DESIGN.md` §serving
-//!   API). The legacy [`coordinator::Session`] survives as a
-//!   single-lane adapter.
+//!   cadence ([`coordinator::MaintenanceConfig`]: the staged
+//!   escalation ladder probe → calibrate → plan → migrate — cheap
+//!   router calibration absorbs drift before any migration budget is
+//!   spent; see `DESIGN.md` §8). The legacy [`coordinator::Session`]
+//!   survives as a single-lane adapter.
 //! - [`theory`] — §4 analytical setup (Lemma 4.1, Theorem 4.2)
 //! - [`bench`] — shared bench machinery + the `BENCH_*.json` harness
 //!   (`docs/BENCHMARKS.md`)

@@ -22,13 +22,13 @@ use hetmoe::aimc::profile::DeviceProfile;
 use hetmoe::aimc::program::NoiseModel;
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{
-    Cluster, EngineBuilder, Executor, Lane, LaneParams, MaintenancePolicy, Request, Server,
+    Cluster, EngineBuilder, Executor, Lane, LaneParams, MaintenanceConfig, Request, Server,
     ServerConfig, ShedPolicy, ThreadExecutor,
 };
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
 use hetmoe::moe::placement::{
-    apply_placement, plan_placement, Placement, PlacementOptions, RePlacerOptions, ShardPlan,
+    apply_placement, plan_placement, Placement, PlacementOptions, ShardPlan,
 };
 use hetmoe::moe::score::SelectionMetric;
 use hetmoe::runtime::{ArtifactPaths, ParamStore, Runtime};
@@ -57,12 +57,13 @@ const SERVE_FLAGS: &[FlagSpec] = &[
     ("lanes", "2", "priority lanes: 2 = interactive + bulk, 1 = interactive only"),
     ("interactive-share", "0.75", "weighted-deficit share of the interactive lane (0-1)"),
     ("bulk-wait", "64", "bulk-lane aging bound in arrival ticks (starvation bound)"),
-    ("drift-nu", "0.0", "conductance-drift exponent ν (0 = no drift)"),
-    ("profile", "", "device nonideality profile: pcm-drift|reram-noisy|adc-limited|worst-case (empty = none; stacks with --drift-nu)"),
-    ("replace-every", "0", "server maintenance tick every N served requests (0 = shutdown only)"),
-    ("migration-budget", "2", "max live migrations per maintenance tick"),
+    ("maint-nu", "0.0", "conductance-drift exponent ν (0 = no drift)"),
+    ("maint-profile", "", "device nonideality profile: pcm-drift|reram-noisy|adc-limited|worst-case (empty = none; stacks with --maint-nu)"),
+    ("maint-every", "0", "server maintenance tick every N served requests (0 = shutdown only)"),
+    ("maint-budget", "2", "max live migrations per maintenance tick"),
+    ("maint-calibrate", "0", "router-calibration tier: fit per-expert logit corrections before migrating (1 = on)"),
     ("replicas", "1", "engine replicas (1 = tick-driven server; >1 = expert-sharded worker threads)"),
-    ("traffic-weight", "0.0", "traffic-aware placement weight (0 = deviation-only planner)"),
+    ("maint-traffic-weight", "0.0", "traffic-aware placement weight (0 = deviation-only planner)"),
     ("shed-watermark", "0", "interactive queue depth that arms load-shedding (0 = off)"),
 ];
 const BENCH_FLAGS: &[FlagSpec] = &[
@@ -71,6 +72,18 @@ const BENCH_FLAGS: &[FlagSpec] = &[
     ("reps", "8", "timing repetitions per kernel case (overrides $HETMOE_BENCH_REPS)"),
     ("requests", "64", "scoring requests per model in the serve bench"),
     ("models", "olmoe_mini,dsmoe_mini", "serve-bench models (overrides $HETMOE_BENCH_MODELS)"),
+    ("maint-calibrate", "1", "run the calibration arms of the drift-soak serve bench (0 = migrate-only soak)"),
+];
+
+/// Deprecated flag spellings from the pre-`--maint-*` CLI, resolved in
+/// [`Cli::parse`] before the unknown-key check. Hidden from the flag
+/// tables; `--help` prints them as a deprecation note.
+const FLAG_ALIASES: &[(&str, &str)] = &[
+    ("drift-nu", "maint-nu"),
+    ("profile", "maint-profile"),
+    ("replace-every", "maint-every"),
+    ("migration-budget", "maint-budget"),
+    ("traffic-weight", "maint-traffic-weight"),
 ];
 const TRAIN_FLAGS: &[FlagSpec] = &[
     ("model", "olmoe_mini", "model config name"),
@@ -109,6 +122,13 @@ impl Cli {
                      (flags are --key value pairs; try 'hetmoe {cmd} --help')"
                 );
             };
+            // deprecated pre-`--maint-*` spellings keep working as
+            // hidden aliases of the new keys
+            let k = FLAG_ALIASES
+                .iter()
+                .find(|(old, new)| *old == k && spec.iter().any(|(s, _, _)| s == new))
+                .map(|(_, new)| *new)
+                .unwrap_or(k);
             if !spec.iter().any(|(s, _, _)| *s == k) {
                 bail!(
                     "unknown flag '--{k}' for '{cmd}' (known: {}; try 'hetmoe {cmd} --help')",
@@ -156,6 +176,10 @@ impl Cli {
             .and_then(|v| v.parse().ok())
             .unwrap_or_else(|| self.default_of(k).parse().unwrap_or(0))
     }
+
+    fn get_bool(&self, k: &str) -> bool {
+        matches!(self.get(k).as_str(), "1" | "true" | "on" | "yes")
+    }
 }
 
 fn print_usage(cmd: &str, spec: &[FlagSpec]) {
@@ -166,6 +190,17 @@ fn print_usage(cmd: &str, spec: &[FlagSpec]) {
     }
     for (key, default, help) in spec {
         println!("  --{key:<10} {help} (default: {default})");
+    }
+    let aliased: Vec<String> = FLAG_ALIASES
+        .iter()
+        .filter(|(_, new)| spec.iter().any(|(s, _, _)| s == new))
+        .map(|(old, new)| format!("--{old} → --{new}"))
+        .collect();
+    if !aliased.is_empty() {
+        println!(
+            "  deprecated aliases (still accepted): {}",
+            aliased.join(", ")
+        );
     }
 }
 
@@ -304,7 +339,7 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
 /// Print one maintenance tick's migrations (the greppable `maintenance
 /// @ … tokens` lines of `hetmoe serve`).
 fn print_migrations(label: &str, rep: &hetmoe::coordinator::MaintenanceReport) {
-    for mg in &rep.migrations {
+    for mg in rep.migrations() {
         println!(
             "  {label} @ {} tokens: expert ({},{}) {} (|dev| {:.4})",
             rep.drift_clock,
@@ -341,20 +376,35 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         bail!("--interactive-share must be in 0..1");
     }
     let bulk_wait = cli.get_usize("bulk-wait").max(1) as u64;
-    let drift_nu = cli.get_f64("drift-nu");
-    let profile_name = cli.get("profile");
+    let drift_nu = cli.get_f64("maint-nu");
+    let profile_name = cli.get("maint-profile");
     let profile = if profile_name.is_empty() {
         None
     } else {
         Some(DeviceProfile::preset(&profile_name)?)
     };
-    let replace_every = cli.get_usize("replace-every");
-    let budget = cli.get_usize("migration-budget");
-    let traffic_weight = cli.get_f64("traffic-weight");
+    let replace_every = cli.get_usize("maint-every");
+    let budget = cli.get_usize("maint-budget");
+    let calibrate = cli.get_bool("maint-calibrate");
+    let traffic_weight = cli.get_f64("maint-traffic-weight");
     if !traffic_weight.is_finite() || traffic_weight < 0.0 {
-        bail!("--traffic-weight must be finite and >= 0");
+        bail!("--maint-traffic-weight must be finite and >= 0");
     }
     let shed_watermark = cli.get_usize("shed-watermark");
+
+    // one staged-maintenance config feeds both the engine builder and
+    // the server cadence (the escalation ladder of DESIGN.md §8)
+    let mut maint = MaintenanceConfig::new()
+        .every(replace_every as u64)
+        .budget(budget)
+        .traffic_weight(traffic_weight)
+        .calibrate(calibrate);
+    if let Some(p) = &profile {
+        maint = maint.device_profile(p.clone());
+    }
+    if drift_nu > 0.0 {
+        maint = maint.drift(DriftModel::with_nu(drift_nu));
+    }
 
     let placement = plan_placement(
         &cfg,
@@ -363,24 +413,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         None,
     )?;
     apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(noise), 0)?;
-    let mut builder = EngineBuilder::new()
+    let engine = EngineBuilder::new()
         .model(cfg.clone())
         .aimc(meta.aimc)
         .placement(placement)
         .serve_cap(meta.serve_cap)
-        .replacer(RePlacerOptions { budget, traffic_weight, ..Default::default() });
-    if let Some(p) = &profile {
-        builder = builder.device_profile(p.clone());
-    }
-    if drift_nu > 0.0 {
-        builder = builder.drift(DriftModel::with_nu(drift_nu));
-    }
-    let engine = builder.build(&mut rt, &paths, &params)?;
+        .maintenance(maint.clone())
+        .build(&mut rt, &paths, &params)?;
 
     // multi-tenant front-end: interactive-share splits 8 deficit
     // credits between the lanes; the server owns the maintenance
-    // cadence (drift decay → sentinel probes → live re-placement every
-    // `replace-every` served requests, plus a final tick at shutdown)
+    // cadence (drift decay → sentinel probes → calibration fits → live
+    // re-placement every `maint-every` served requests, plus a final
+    // tick at shutdown)
     let wi = ((share * 8.0).round() as u64).clamp(1, 7);
     let mut server_cfg = ServerConfig::new(cfg.batch)
         .lane(
@@ -391,7 +436,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             Lane::Bulk,
             LaneParams { weight: 8 - wi, max_wait_ticks: bulk_wait, max_queue: cfg.batch * 8 },
         )
-        .maintenance(MaintenancePolicy::every(replace_every as u64));
+        .maintenance_config(&maint);
     if shed_watermark > 0 {
         server_cfg = server_cfg.shed(ShedPolicy::watermark(shed_watermark));
     }
@@ -516,6 +561,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "sentinel deviation".into(),
         format!("max |dev| {:.4} vs digital reference", m.sentinel_deviation),
     ]);
+    if calibrate {
+        t.row(vec![
+            "router calibration".into(),
+            format!(
+                "{} experts calibrated, {:.4} deviation absorbed, residual {:.4}",
+                m.calibrated_experts, m.deviation_absorbed, m.calibration_residual
+            ),
+        ]);
+    }
     if shed_watermark > 0 {
         t.row(vec![
             "load shedding".into(),
@@ -613,20 +667,35 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
         bail!("--interactive-share must be in 0..1");
     }
     let bulk_wait = cli.get_usize("bulk-wait").max(1) as u64;
-    let drift_nu = cli.get_f64("drift-nu");
-    let profile_name = cli.get("profile");
+    let drift_nu = cli.get_f64("maint-nu");
+    let profile_name = cli.get("maint-profile");
     let profile = if profile_name.is_empty() {
         None
     } else {
         Some(DeviceProfile::preset(&profile_name)?)
     };
-    let replace_every = cli.get_usize("replace-every");
-    let budget = cli.get_usize("migration-budget");
-    let traffic_weight = cli.get_f64("traffic-weight");
+    let replace_every = cli.get_usize("maint-every");
+    let budget = cli.get_usize("maint-budget");
+    let calibrate = cli.get_bool("maint-calibrate");
+    let traffic_weight = cli.get_f64("maint-traffic-weight");
     if !traffic_weight.is_finite() || traffic_weight < 0.0 {
-        bail!("--traffic-weight must be finite and >= 0");
+        bail!("--maint-traffic-weight must be finite and >= 0");
     }
     let shed_watermark = cli.get_usize("shed-watermark");
+
+    // every replica runs the same staged-maintenance config but fits
+    // its own calibration against its own drift trajectory
+    let mut maint = MaintenanceConfig::new()
+        .every(replace_every as u64)
+        .budget(budget)
+        .traffic_weight(traffic_weight)
+        .calibrate(calibrate);
+    if let Some(p) = &profile {
+        maint = maint.device_profile(p.clone());
+    }
+    if drift_nu > 0.0 {
+        maint = maint.drift(DriftModel::with_nu(drift_nu));
+    }
 
     // plan the global placement on clean parameters; each replica
     // worker then loads and perturbs its own shard-local copy
@@ -651,7 +720,7 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
             Lane::Bulk,
             LaneParams { weight: 8 - wi, max_wait_ticks: bulk_wait, max_queue: cfg.batch * 8 },
         )
-        .maintenance(MaintenancePolicy::every(replace_every as u64));
+        .maintenance_config(&maint);
     if shed_watermark > 0 {
         server_cfg = server_cfg.shed(ShedPolicy::watermark(shed_watermark));
     }
@@ -663,23 +732,17 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
         let serve_cap = meta.serve_cap;
         let paths_r = paths.clone();
         let local = shard.replica_placement(&placement, r);
-        let profile_r = profile.clone();
+        let maint_r = maint.clone();
         let factory = Box::new(move |rt: &mut Runtime| {
             let mut params = ParamStore::load(&paths_r.manifest(), &paths_r.params_bin())?;
             apply_placement(&cfg_r, &mut params, &local, &NoiseModel::with_scale(noise), 0)?;
-            let mut b = EngineBuilder::new()
+            EngineBuilder::new()
                 .model(cfg_r.clone())
                 .aimc(aimc)
                 .placement(local)
                 .serve_cap(serve_cap)
-                .replacer(RePlacerOptions { budget, traffic_weight, ..Default::default() });
-            if let Some(p) = &profile_r {
-                b = b.device_profile(p.clone());
-            }
-            if drift_nu > 0.0 {
-                b = b.drift(DriftModel::with_nu(drift_nu));
-            }
-            b.build(rt, &paths_r, &params)
+                .maintenance(maint_r.clone())
+                .build(rt, &paths_r, &params)
         });
         let exec = ThreadExecutor::new(format!("replica{r}"), server_cfg.clone(), factory)?;
         execs.push(Box::new(exec));
@@ -755,6 +818,18 @@ fn cmd_serve_cluster(cli: &Cli, replicas: usize) -> Result<()> {
         "wall throughput".into(),
         format!("{:.0} tokens/s over {wall_s:.2}s", cm.tokens() as f64 / wall_s.max(1e-9)),
     ]);
+    if calibrate {
+        t.row(vec![
+            "router calibration".into(),
+            format!(
+                "{} experts calibrated across replicas, {:.4} deviation absorbed, \
+                 worst residual {:.4}",
+                cm.calibrated_experts(),
+                cm.deviation_absorbed(),
+                cm.calibration_residual()
+            ),
+        ]);
+    }
     for (r, rep) in report.replicas.iter().enumerate() {
         let m = &rep.metrics;
         t.row(vec![
@@ -792,6 +867,7 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or_else(hetmoe::bench::bench_reps);
     let requests = cli.get_usize("requests");
+    let calibrate_arms = cli.get_bool("maint-calibrate");
     let models: Vec<String> = match cli.kv.get("models") {
         Some(m) => m
             .split(',')
@@ -820,7 +896,7 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
             let mut entries = Vec::new();
             for model in &models {
                 println!("serve bench: {model} ({requests} requests, Γ=0.25)…");
-                let entry = hetmoe::bench::run_serve_bench(model, requests)?;
+                let entry = hetmoe::bench::run_serve_bench(model, requests, calibrate_arms)?;
                 println!(
                     "  {:.0} tok/s sequential → {:.0} tok/s parallel \
                      (identical outputs: {})",
@@ -865,6 +941,22 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
                     soak.get("peak_sentinel_deviation")?.as_f64()?,
                     soak.get("sentinel_deviation")?.as_f64()?,
                 );
+                if calibrate_arms {
+                    let arms = soak.get("arms")?;
+                    for name in ["no_maintenance", "calibrate_only", "calibrate_migrate"] {
+                        let arm = arms.get(name)?;
+                        println!(
+                            "    arm {name}: {:.0} migrations, {:.0} calibrated, \
+                             absorbed {:.3}, final |dev| {:.3}, \
+                             recovery {:.3}/maint-s",
+                            arm.get("migrations")?.as_f64()?,
+                            arm.get("calibrated_experts")?.as_f64()?,
+                            arm.get("deviation_absorbed")?.as_f64()?,
+                            arm.get("sentinel_deviation")?.as_f64()?,
+                            arm.get("recovery_per_maint_s")?.as_f64()?,
+                        );
+                    }
+                }
                 let ht = entry.get("hot_traffic")?;
                 println!(
                     "  hot traffic: caching speedup {:.2}x, scratch hit rate \

@@ -1,0 +1,493 @@
+//! Router calibration — the maintenance tier between probing and
+//! migration.
+//!
+//! ROMER (arXiv 2605.11800) observes that mild analog degradation does
+//! not need a weight migration at all: because conductance drift is
+//! close to a per-tile *affine* distortion of the expert's output, a
+//! per-expert logit correction fitted from the measured degradation
+//! absorbs most of the deviation at a tiny fraction of a migration's
+//! cost. This module is that tier:
+//!
+//! - [`least_squares_fit`] — fit `want ≈ scale · got + offset` from the
+//!   sentinel-probe sample pair the [`DriftMonitor`] already measures
+//!   (`got` = drifted analog output, `want` = digital reference).
+//! - [`CalibrationOptions`] — the knobs: on/off, the trust region the
+//!   fitted affine terms are clamped into, and the residual gate below
+//!   which a calibrated expert is considered *recovered* (and therefore
+//!   consumes no migration budget).
+//! - [`RouterCalibration`] — per-(layer, expert) `scale`/`offset`
+//!   state, identity by default, applied in the router hot path between
+//!   scoring and top-k. Identity entries are skipped outright, so an
+//!   uncalibrated engine's routing stays **byte-identical** to a build
+//!   without this module (`score · 1.0 + 0.0` is *not* a bitwise no-op
+//!   for `-0.0`, hence the per-entry skip, pinned by
+//!   `identity_apply_is_bitwise_noop`).
+//!
+//! The escalation ladder (`materialize → probe → calibrate → plan →
+//! migrate`, see `coordinator::Engine::maintenance`) only lets a fit
+//! stand when it provably helps: the clamped fit's residual must not
+//! exceed the raw deviation (clamping can break the least-squares
+//! optimum, so this is checked, not assumed) and must fall under the
+//! residual gate — otherwise the entry resets to identity and the
+//! expert escalates to the migration planner on its *raw* deviation.
+//!
+//! [`DriftMonitor`]: crate::aimc::drift::DriftMonitor
+
+/// Knobs of the calibration tier (part of
+/// `coordinator::MaintenanceConfig`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationOptions {
+    /// Fit per-expert logit corrections at each maintenance tick
+    /// (default `false`: the ladder skips straight from probe to plan
+    /// and routing is byte-identical to pre-calibration builds).
+    pub calibrate: bool,
+    /// Trust region: smallest multiplicative term a fit may program.
+    pub min_scale: f64,
+    /// Trust region: largest multiplicative term a fit may program.
+    pub max_scale: f64,
+    /// Trust region: largest |offset| a fit may program.
+    pub max_offset: f64,
+    /// Residual gate: a fit only stands when its post-fit residual
+    /// falls at or below this. `None` (default) borrows the
+    /// re-placer's `promote` threshold, so "calibrated" means exactly
+    /// "no longer promotable".
+    pub residual_gate: Option<f64>,
+}
+
+impl Default for CalibrationOptions {
+    fn default() -> CalibrationOptions {
+        CalibrationOptions {
+            calibrate: false,
+            min_scale: 0.25,
+            max_scale: 4.0,
+            max_offset: 4.0,
+            residual_gate: None,
+        }
+    }
+}
+
+impl CalibrationOptions {
+    /// The default trust region with the tier switched on.
+    pub fn enabled() -> CalibrationOptions {
+        CalibrationOptions { calibrate: true, ..Default::default() }
+    }
+
+    /// The effective residual gate, borrowing `promote_gate` when no
+    /// explicit gate is configured.
+    pub fn gate(&self, promote_gate: f64) -> f64 {
+        self.residual_gate.unwrap_or(promote_gate)
+    }
+
+    /// Clamp a fitted `(scale, offset)` into the trust region.
+    pub fn clamp(&self, scale: f64, offset: f64) -> (f64, f64) {
+        (
+            scale.clamp(self.min_scale, self.max_scale),
+            offset.clamp(-self.max_offset, self.max_offset),
+        )
+    }
+}
+
+/// Ordinary least squares of `want ≈ scale · got + offset` over the
+/// paired sentinel samples. Degenerate inputs (empty, or `got` with
+/// ~zero variance, where the slope is unidentifiable) return the
+/// identity `(1.0, 0.0)`.
+///
+/// Mirrored line-for-line by `python/tests/test_calibrate_mirror.py`;
+/// the shared pinned constants live in
+/// `fit_matches_python_mirror_constants`.
+pub fn least_squares_fit(got: &[f32], want: &[f32]) -> (f64, f64) {
+    let n = got.len().min(want.len());
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    let (mut sg, mut sw, mut sgg, mut sgw) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..n {
+        let (g, w) = (got[i] as f64, want[i] as f64);
+        sg += g;
+        sw += w;
+        sgg += g * g;
+        sgw += g * w;
+    }
+    let nf = n as f64;
+    let var = sgg - sg * sg / nf;
+    if !(var > 1e-12) {
+        // constant (or NaN) probe output: the slope is unidentifiable
+        return (1.0, 0.0);
+    }
+    let scale = (sgw - sg * sw / nf) / var;
+    let offset = (sw - scale * sg) / nf;
+    (scale, offset)
+}
+
+/// Relative ℓ2 residual of the corrected output `scale · got + offset`
+/// against `want` — the same normalization as
+/// [`DriftMonitor::probe`](crate::aimc::drift::DriftMonitor::probe),
+/// so residuals are directly comparable to raw sentinel deviations
+/// (and to the re-placer's promote gate). `(1.0, 0.0)` recovers the
+/// raw deviation.
+pub fn fit_residual(got: &[f32], want: &[f32], scale: f64, offset: f64) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (g, w) in got.iter().zip(want) {
+        let a = *g as f64 * scale + offset;
+        let b = *w as f64;
+        num += (a - b) * (a - b);
+        den += b * b;
+    }
+    (num / den.max(1e-24)).sqrt()
+}
+
+/// What one [`RouterCalibration::fit`] decided for one expert.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FitOutcome {
+    /// Does a (non-identity) correction now stand on the slot?
+    pub accepted: bool,
+    /// Raw deviation of the uncorrected probe sample.
+    pub raw: f64,
+    /// Post-fit residual when accepted; equals `raw` when rejected
+    /// (the slot serves uncorrected).
+    pub residual: f64,
+}
+
+impl FitOutcome {
+    /// Deviation this fit absorbed (0.0 when rejected).
+    pub fn absorbed(&self) -> f64 {
+        (self.raw - self.residual).max(0.0)
+    }
+}
+
+/// Per-(layer, expert) affine logit correction, identity by default,
+/// applied between router scoring and top-k (see the module docs for
+/// the byte-identity contract).
+#[derive(Clone, Debug)]
+pub struct RouterCalibration {
+    n_experts: usize,
+    /// multiplicative term per flattened `[layer][expert]` slot
+    scale: Vec<f32>,
+    /// additive term per flattened `[layer][expert]` slot
+    offset: Vec<f32>,
+    /// post-fit residual per slot (0.0 on identity slots)
+    residuals: Vec<f64>,
+    /// non-identity entries per layer — the hot-path early-out
+    active: Vec<usize>,
+}
+
+impl RouterCalibration {
+    /// An all-identity calibration for an `n_layers × n_experts` model.
+    pub fn identity(n_layers: usize, n_experts: usize) -> RouterCalibration {
+        RouterCalibration {
+            n_experts,
+            scale: vec![1.0; n_layers * n_experts],
+            offset: vec![0.0; n_layers * n_experts],
+            residuals: vec![0.0; n_layers * n_experts],
+            active: vec![0; n_layers],
+        }
+    }
+
+    /// Layers this calibration covers.
+    pub fn n_layers(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Experts per layer.
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    /// Is every slot the identity (the hot path untouched everywhere)?
+    pub fn is_identity(&self) -> bool {
+        self.active.iter().all(|&a| a == 0)
+    }
+
+    /// Experts currently carrying a non-identity correction.
+    pub fn calibrated_experts(&self) -> usize {
+        self.active.iter().sum()
+    }
+
+    /// The `(scale, offset)` correction of one slot.
+    pub fn entry(&self, layer: usize, expert: usize) -> (f32, f32) {
+        let i = layer * self.n_experts + expert;
+        (self.scale[i], self.offset[i])
+    }
+
+    /// Post-fit residual of one slot (0.0 when identity).
+    pub fn residual(&self, layer: usize, expert: usize) -> f64 {
+        self.residuals[layer * self.n_experts + expert]
+    }
+
+    /// Largest post-fit residual across the calibrated slots (0.0 when
+    /// fully identity).
+    pub fn max_residual(&self) -> f64 {
+        self.residuals.iter().copied().fold(0.0, f64::max)
+    }
+
+    fn is_identity_slot(&self, i: usize) -> bool {
+        self.scale[i] == 1.0 && self.offset[i] == 0.0
+    }
+
+    /// Fit one expert's correction from a probe sample pair, enforcing
+    /// the acceptance ladder: clamp into the trust region, then accept
+    /// only if the clamped residual (a) does not exceed the raw
+    /// deviation and (b) falls at or below `gate`. A rejected fit
+    /// resets the slot to identity — the expert escalates to the
+    /// migration planner on its raw deviation.
+    pub fn fit(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        got: &[f32],
+        want: &[f32],
+        opts: &CalibrationOptions,
+        gate: f64,
+    ) -> FitOutcome {
+        let raw = fit_residual(got, want, 1.0, 0.0);
+        let (scale, offset) = least_squares_fit(got, want);
+        let (scale, offset) = opts.clamp(scale, offset);
+        let residual = fit_residual(got, want, scale, offset);
+        // clamping may have broken the least-squares optimum, and a
+        // sub-gate raw deviation needs no correction at all — never
+        // program a fit that is not a strict improvement under the gate
+        let accepted =
+            residual <= raw && residual <= gate && (scale != 1.0 || offset != 0.0);
+        if accepted {
+            let i = layer * self.n_experts + expert;
+            if self.is_identity_slot(i) {
+                self.active[layer] += 1;
+            }
+            self.scale[i] = scale as f32;
+            self.offset[i] = offset as f32;
+            self.residuals[i] = residual;
+            FitOutcome { accepted: true, raw, residual }
+        } else {
+            self.reset(layer, expert);
+            FitOutcome { accepted: false, raw, residual: raw }
+        }
+    }
+
+    /// Reset one slot to identity (a demoted / migrated expert's
+    /// correction no longer describes its weights). Returns whether the
+    /// slot was carrying a correction.
+    pub fn reset(&mut self, layer: usize, expert: usize) -> bool {
+        let i = layer * self.n_experts + expert;
+        let was_active = !self.is_identity_slot(i);
+        if was_active {
+            self.active[layer] -= 1;
+        }
+        self.scale[i] = 1.0;
+        self.offset[i] = 0.0;
+        self.residuals[i] = 0.0;
+        was_active
+    }
+
+    /// Apply the layer's corrections to a raw router score row, in
+    /// place, between scoring and top-k. Zero-cost when the layer is
+    /// identity; identity slots in a calibrated layer are skipped
+    /// per-entry so their scores stay bitwise untouched.
+    #[inline]
+    pub fn apply(&self, layer: usize, scores: &mut [f32]) {
+        if self.active[layer] == 0 {
+            return;
+        }
+        let base = layer * self.n_experts;
+        for (e, s) in scores.iter_mut().enumerate() {
+            let sc = self.scale[base + e];
+            let of = self.offset[base + e];
+            if sc == 1.0 && of == 0.0 {
+                continue;
+            }
+            *s = *s * sc + of;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_matches_python_mirror_constants() {
+        // the exact scenario python/tests/test_calibrate_mirror.py pins:
+        // got = [1,2,3,4], want = 2·got + 0.5. Every operand is a dyadic
+        // rational, so the fit is exact in binary on both sides.
+        let got = [1.0f32, 2.0, 3.0, 4.0];
+        let want = [2.5f32, 4.5, 6.5, 8.5];
+        let (scale, offset) = least_squares_fit(&got, &want);
+        assert_eq!(scale, 2.0);
+        assert_eq!(offset, 0.5);
+        assert_eq!(fit_residual(&got, &want, scale, offset), 0.0);
+        // and the raw (identity) residual is strictly positive
+        assert!(fit_residual(&got, &want, 1.0, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn degenerate_fits_return_identity() {
+        assert_eq!(least_squares_fit(&[], &[]), (1.0, 0.0));
+        // constant got: slope unidentifiable
+        let got = [0.5f32; 6];
+        let want = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(least_squares_fit(&got, &want), (1.0, 0.0));
+    }
+
+    #[test]
+    fn identity_apply_is_bitwise_noop() {
+        // -0.0 is the trap: (-0.0)·1.0 + 0.0 = +0.0 flips the sign bit,
+        // which would break the byte-identical routing contract. Both
+        // the layer early-out and the per-entry skip must protect it.
+        let cal = RouterCalibration::identity(2, 4);
+        let scores = [-0.0f32, 0.0, f32::MIN_POSITIVE, -3.5];
+        let mut out = scores;
+        cal.apply(0, &mut out);
+        cal.apply(1, &mut out);
+        for (a, b) in scores.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // a calibrated slot elsewhere in the layer must not disturb
+        // identity slots either (the per-entry skip)
+        let mut cal = RouterCalibration::identity(1, 4);
+        let got = [1.0f32, 2.0, 3.0, 4.0];
+        let want = [2.5f32, 4.5, 6.5, 8.5];
+        let out1 = cal.fit(0, 1, &got, &want, &CalibrationOptions::enabled(), 1.0);
+        assert!(out1.accepted);
+        let mut out = scores;
+        cal.apply(0, &mut out);
+        for (e, (a, b)) in scores.iter().zip(&out).enumerate() {
+            if e == 1 {
+                assert_eq!(*b, *a * 2.0 + 0.5);
+            } else {
+                assert_eq!(a.to_bits(), b.to_bits(), "identity slot {e} touched");
+            }
+        }
+    }
+
+    #[test]
+    fn trust_region_clamps_scale_and_offset() {
+        let opts = CalibrationOptions::enabled();
+        // true scale 8 and offset 6 both exceed the default region
+        let got = [1.0f32, 2.0, 3.0, 4.0];
+        let want: Vec<f32> = got.iter().map(|g| 8.0 * g + 6.0).collect();
+        let (scale, offset) = least_squares_fit(&got, &want);
+        assert_eq!((scale, offset), (8.0, 6.0));
+        let (cs, co) = opts.clamp(scale, offset);
+        assert_eq!((cs, co), (opts.max_scale, opts.max_offset));
+        let (cs, co) = opts.clamp(0.01, -100.0);
+        assert_eq!((cs, co), (opts.min_scale, -opts.max_offset));
+    }
+
+    #[test]
+    fn accepted_fit_reduces_residual_on_synthetic_drift() {
+        // pure multiplicative decay — the drift law's local shape — is
+        // exactly affine-correctable, so the fit must absorb ~all of it,
+        // and deeper decay must keep the post-fit residual at ~zero
+        // while the raw deviation grows (the monotone-recovery story).
+        let mut cal = RouterCalibration::identity(1, 1);
+        let opts = CalibrationOptions::enabled();
+        let want = [0.8f32, -1.2, 2.0, 0.4, -0.6, 1.6];
+        let mut last_raw = 0.0f64;
+        for f in [0.9f32, 0.7, 0.5] {
+            let got: Vec<f32> = want.iter().map(|w| f * w).collect();
+            let out = cal.fit(0, 0, &got, &want, &opts, 0.05);
+            assert!(out.accepted, "decay {f} not absorbed");
+            assert!(out.raw > last_raw, "raw deviation must grow with decay");
+            assert!(out.residual < 1e-6, "residual {} not absorbed", out.residual);
+            assert!(out.absorbed() > 0.0);
+            last_raw = out.raw;
+        }
+        assert_eq!(cal.calibrated_experts(), 1);
+        // the programmed scale is ~1/0.5 (f32-rounded)
+        let (scale, _) = cal.entry(0, 0);
+        assert!((scale - 2.0).abs() < 1e-5, "scale {scale}");
+    }
+
+    #[test]
+    fn rejected_fit_resets_slot_to_identity() {
+        let mut cal = RouterCalibration::identity(1, 2);
+        let opts = CalibrationOptions::enabled();
+        let got = [0.4f32, -0.6, 1.0, 0.2];
+        let want: Vec<f32> = got.iter().map(|g| 0.5 * g).collect();
+        assert!(cal.fit(0, 0, &got, &want, &opts, 0.5).accepted);
+        assert_eq!(cal.calibrated_experts(), 1);
+        assert!(!cal.is_identity());
+
+        // an impossible gate rejects the refit and resets the slot —
+        // the perturbation makes the pair non-affine, so no fit can
+        // reach residual 0.0 (an exactly-affine pair would be fitted
+        // to 0.0 and pass even this gate)
+        let mut want = want;
+        want[0] += 0.25;
+        let out = cal.fit(0, 0, &got, &want, &opts, 0.0);
+        assert!(!out.accepted);
+        assert_eq!(out.residual, out.raw);
+        assert_eq!(out.absorbed(), 0.0);
+        assert_eq!(cal.entry(0, 0), (1.0, 0.0));
+        assert_eq!(cal.residual(0, 0), 0.0);
+        assert!(cal.is_identity());
+        assert_eq!(cal.calibrated_experts(), 0);
+    }
+
+    #[test]
+    fn reset_clears_entry_and_active_count() {
+        let mut cal = RouterCalibration::identity(2, 3);
+        let got = [1.0f32, 2.0, 3.0, 4.0];
+        let want = [2.5f32, 4.5, 6.5, 8.5];
+        cal.fit(1, 2, &got, &want, &CalibrationOptions::enabled(), 1.0);
+        assert_eq!(cal.calibrated_experts(), 1);
+        assert!(cal.max_residual() >= 0.0);
+        assert!(cal.reset(1, 2), "reset must report the cleared correction");
+        assert!(!cal.reset(1, 2), "double reset is a no-op");
+        assert!(cal.is_identity());
+        assert_eq!(cal.max_residual(), 0.0);
+    }
+
+    #[test]
+    fn options_gate_borrows_promote_threshold() {
+        let opts = CalibrationOptions::default();
+        assert!(!opts.calibrate);
+        assert_eq!(opts.gate(0.1), 0.1);
+        let opts = CalibrationOptions { residual_gate: Some(0.02), ..opts };
+        assert_eq!(opts.gate(0.1), 0.02);
+        assert!(CalibrationOptions::enabled().calibrate);
+    }
+
+    #[test]
+    fn prop_fit_never_worsens_served_residual() {
+        // over random probe pairs: either the fit stands with
+        // residual <= min(raw, gate), or the slot is identity and the
+        // expert serves its raw deviation — never anything worse.
+        crate::util::proptest::check("calibration fit acceptance", 200, |rng| {
+            let n = 2 + rng.below(14);
+            let want: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let f = 0.2 + 0.8 * rng.uniform() as f32;
+            let noise = 0.2 * rng.uniform() as f32;
+            let got: Vec<f32> = want
+                .iter()
+                .map(|w| f * w + noise * rng.gaussian_f32())
+                .collect();
+            let gate = 0.5 * rng.uniform();
+            let opts = CalibrationOptions::enabled();
+            let mut cal = RouterCalibration::identity(1, 1);
+            let out = cal.fit(0, 0, &got, &want, &opts, gate);
+            let raw = fit_residual(&got, &want, 1.0, 0.0);
+            if out.accepted {
+                crate::prop_assert!(
+                    out.residual <= raw + 1e-12 && out.residual <= gate + 1e-12,
+                    "accepted fit violates the ladder: residual {} raw {raw} gate {gate}",
+                    out.residual
+                );
+                let (s, o) = cal.entry(0, 0);
+                crate::prop_assert!(
+                    (opts.min_scale..=opts.max_scale).contains(&(s as f64))
+                        && (s as f64).abs() <= opts.max_scale
+                        && (o as f64).abs() <= opts.max_offset,
+                    "programmed terms escape the trust region: ({s}, {o})"
+                );
+            } else {
+                crate::prop_assert!(
+                    cal.entry(0, 0) == (1.0, 0.0) && out.residual == raw,
+                    "rejected fit must leave the slot identity at raw deviation"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -17,11 +17,19 @@
 //!   every batch; the signal behind the re-placer's noise × traffic
 //!   scoring, prefetch staging, and the serve routing-frequency
 //!   reports.
+//! - [`calibrate`] — the maintenance tier *before* migration: per-
+//!   (layer, expert) affine logit corrections
+//!   ([`calibrate::RouterCalibration`]) fitted from the sentinel-probe
+//!   deviations and applied between router scoring and top-k, so mild
+//!   drift is absorbed without spending migration budget (DESIGN.md
+//!   §8's escalation ladder).
 
+pub mod calibrate;
 pub mod placement;
 pub mod score;
 pub mod traffic;
 
+pub use calibrate::{least_squares_fit, CalibrationOptions, FitOutcome, RouterCalibration};
 pub use placement::{
     apply_placement, plan_placement, BackendId, Migration, Placement, PlacementOptions,
     RePlacer, RePlacerOptions, BACKEND_ANALOG, BACKEND_DIGITAL,

@@ -13,8 +13,8 @@ use hetmoe::aimc::quant::{adc_quant, dac_quant};
 use hetmoe::config::Meta;
 use hetmoe::coordinator::{
     AnalogBackend, Batcher, Cluster, DigitalBackend, EngineBuilder, Executor, ExpertBackend,
-    ExpertOutput, ExpertWeights, Lane, MaintenancePolicy, Request, Response, Server,
-    ServerConfig, Session, StageCost, ThreadExecutor,
+    ExpertOutput, ExpertWeights, Lane, MaintenanceConfig, MaintenancePolicy, Request, Response,
+    Server, ServerConfig, Session, StageCost, ThreadExecutor,
 };
 use hetmoe::eval::data::load_tasks;
 use hetmoe::eval::{pack_choice, Evaluator};
@@ -1138,7 +1138,7 @@ fn live_migration_preserves_unrouted_outputs() {
 #[test]
 fn drift_soak_migrates_and_deviation_recovers() {
     // Long-horizon soak through the SERVER-OWNED maintenance cadence:
-    // aggressive drift + MaintenancePolicy::every(batch) must (a) tick
+    // aggressive drift + a MaintenanceConfig::every(batch) must (a) tick
     // automatically between batches and detect sentinel deviation,
     // (b) perform at least one live analog → digital promotion, and
     // (c) keep the deviation of every migrated expert at zero
@@ -1157,20 +1157,22 @@ fn drift_soak_migrates_and_deviation_recovers() {
     .unwrap();
     apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
 
+    let maint = MaintenanceConfig::new()
+        .every(cfg.batch as u64)
+        .budget(8)
+        .drift(DriftModel::with_nu(0.5));
     let engine = EngineBuilder::new()
         .model(cfg.clone())
         .aimc(meta.aimc)
         .placement(placement.clone())
         .serve_cap(meta.serve_cap)
-        .drift(DriftModel::with_nu(0.5))
-        .replacer(RePlacerOptions { budget: 8, ..Default::default() })
+        .maintenance(maint.clone())
         .build(&mut rt, &paths, &params)
         .unwrap();
     let mut server = Server::new(
         &rt,
         engine,
-        ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4)
-            .maintenance(MaintenancePolicy::every(cfg.batch as u64)),
+        ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4).maintenance_config(&maint),
     );
     let client = server.client();
 
@@ -1210,16 +1212,16 @@ fn drift_soak_migrates_and_deviation_recovers() {
         let reports = server.take_maintenance_reports();
         assert!(!reports.is_empty(), "maintenance cadence must have ticked");
         for rep in reports {
-            assert!(rep.probed > 0, "drift-enabled maintenance must probe");
-            peak_dev = peak_dev.max(rep.max_deviation);
-            all_migrations.extend(rep.migrations);
+            assert!(rep.probed() > 0, "drift-enabled maintenance must probe");
+            peak_dev = peak_dev.max(rep.max_deviation());
+            all_migrations.extend_from_slice(rep.migrations());
         }
     }
 
     let (report, engine) = server.shutdown().unwrap();
     // shutdown always runs one final tick
-    peak_dev = peak_dev.max(report.maintenance.max_deviation);
-    all_migrations.extend(report.maintenance.migrations.iter().copied());
+    peak_dev = peak_dev.max(report.maintenance.max_deviation());
+    all_migrations.extend_from_slice(report.maintenance.migrations());
     let m = &engine.metrics;
     assert_eq!(m.drift_clock, m.tokens, "drift clock ticks in served tokens");
     assert!(peak_dev > 0.0, "aggressive drift must register on the sentinel");
@@ -1510,21 +1512,28 @@ fn replacer_responds_to_read_noise() {
     .unwrap();
     apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
 
+    let maint = MaintenanceConfig::new()
+        .every(cfg.batch as u64)
+        .device_profile(DeviceProfile::preset("reram-noisy").unwrap())
+        .replacer(RePlacerOptions {
+            promote: 0.05,
+            demote: 0.01,
+            budget: 4,
+            ..Default::default()
+        });
     let engine = EngineBuilder::new()
         .model(cfg.clone())
         .aimc(meta.aimc)
         .placement(placement.clone())
         .serve_cap(meta.serve_cap)
-        .device_profile(DeviceProfile::preset("reram-noisy").unwrap())
-        .replacer(RePlacerOptions { promote: 0.05, demote: 0.01, budget: 4 })
+        .maintenance(maint.clone())
         .build(&mut rt, &paths, &params)
         .unwrap();
     assert_eq!(engine.device_profile().name(), "reram-noisy");
     let mut server = Server::new(
         &rt,
         engine,
-        ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4)
-            .maintenance(MaintenancePolicy::every(cfg.batch as u64)),
+        ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4).maintenance_config(&maint),
     );
     let client = server.client();
 
@@ -1558,12 +1567,12 @@ fn replacer_responds_to_read_noise() {
         }
         server.drain().unwrap();
         for rep in server.take_maintenance_reports() {
-            assert!(rep.probed > 0, "profile-enabled maintenance must probe");
-            peak_dev = peak_dev.max(rep.max_deviation);
+            assert!(rep.probed() > 0, "profile-enabled maintenance must probe");
+            peak_dev = peak_dev.max(rep.max_deviation());
         }
     }
     let (report, engine) = server.shutdown().unwrap();
-    peak_dev = peak_dev.max(report.maintenance.max_deviation);
+    peak_dev = peak_dev.max(report.maintenance.max_deviation());
     let m = &engine.metrics;
     assert!(peak_dev > 0.0, "read noise must register on the sentinel without drift");
     assert!(
@@ -1581,6 +1590,180 @@ fn replacer_responds_to_read_noise() {
     assert!(
         engine.placement.n_analog_experts() < placement.n_analog_experts(),
         "at least one noise-sensitive expert must have left the analog chip"
+    );
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_maintenance_setters_match_staged_config() {
+    // Issue 9 acceptance pin: the staged-maintenance API redesign must
+    // be behavior-preserving. The same drifting deployment built twice
+    // — once through the deprecated flat setters (drift / device
+    // profile / replacer on the builder, MaintenancePolicy on the
+    // server), once through one MaintenanceConfig — must produce
+    // byte-identical response streams and identical migration
+    // accounting. Calibration stays off on both sides: the default
+    // (identity) calibration must cost nothing and change nothing.
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+    let reqs = fixture_requests(&cfg, cfg.batch * 2 + 1);
+    let opts = RePlacerOptions { budget: 4, ..Default::default() };
+
+    let run = |rt: &mut Runtime, legacy: bool| -> (Vec<Response>, u64) {
+        let base = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap);
+        let (builder, server_cfg) = if legacy {
+            (
+                base.drift(DriftModel::with_nu(0.5))
+                    .device_profile(DeviceProfile::preset("reram-noisy").unwrap())
+                    .replacer(opts),
+                ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4)
+                    .maintenance(MaintenancePolicy::every(cfg.batch as u64)),
+            )
+        } else {
+            let maint = MaintenanceConfig::new()
+                .every(cfg.batch as u64)
+                .drift(DriftModel::with_nu(0.5))
+                .device_profile(DeviceProfile::preset("reram-noisy").unwrap())
+                .replacer(opts);
+            (
+                base.maintenance(maint.clone()),
+                ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4)
+                    .maintenance_config(&maint),
+            )
+        };
+        let engine = builder.build(rt, &paths, &params).unwrap();
+        let mut server = Server::new(&*rt, engine, server_cfg);
+        let client = server.client();
+        for r in &reqs {
+            server.enqueue(&client, r.clone(), Lane::Interactive).unwrap();
+            server.poll().unwrap();
+        }
+        server.drain().unwrap();
+        let (report, engine) = server.shutdown().unwrap();
+        let mut responses: Vec<Response> =
+            report.completions.into_iter().map(|c| c.response).collect();
+        responses.sort_by_key(|r| r.id);
+        (responses, engine.metrics.migrations)
+    };
+
+    let (old_r, old_migrations) = run(&mut rt, true);
+    let (new_r, new_migrations) = run(&mut rt, false);
+    assert_eq!(old_r.len(), new_r.len());
+    for (a, b) in old_r.iter().zip(&new_r) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "request {}: staged-config build {} != deprecated-setter build {}",
+            a.id,
+            b.score,
+            a.score
+        );
+    }
+    assert_eq!(
+        old_migrations, new_migrations,
+        "migration decisions must be unchanged by the API redesign"
+    );
+}
+
+#[test]
+fn calibration_absorbs_drift_and_spares_migration_budget() {
+    // The issue-9 tentpole acceptance: under the aggressive-drift soak,
+    // turning the calibrate tier on must (a) fit at least one standing
+    // router correction, (b) absorb measurable sentinel deviation,
+    // (c) spend strictly fewer migrations than the migrate-only ladder
+    // on the identical stream, and (d) keep every standing correction's
+    // residual within the promote gate (calibrated experts are exactly
+    // the ones the planner no longer sees above threshold).
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+    let reqs = fixture_requests(&cfg, cfg.batch * 3);
+
+    let run = |rt: &mut Runtime, calibrate: bool| -> hetmoe::coordinator::Metrics {
+        let maint = MaintenanceConfig::new()
+            .every(cfg.batch as u64)
+            .budget(8)
+            .drift(DriftModel::with_nu(0.5))
+            .calibrate(calibrate);
+        let engine = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .maintenance(maint.clone())
+            .build(rt, &paths, &params)
+            .unwrap();
+        let mut server = Server::new(
+            &*rt,
+            engine,
+            ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4).maintenance_config(&maint),
+        );
+        let client = server.client();
+        for wave in reqs.chunks(cfg.batch) {
+            for r in wave {
+                server.enqueue(&client, r.clone(), Lane::Interactive).unwrap();
+                server.poll().unwrap();
+            }
+            server.drain().unwrap();
+        }
+        let (_report, engine) = server.shutdown().unwrap();
+        engine.metrics.clone()
+    };
+
+    let migrate_only = run(&mut rt, false);
+    let calibrated = run(&mut rt, true);
+
+    assert!(
+        migrate_only.migrations >= 1,
+        "the soak must force migrations when calibration is off (got {})",
+        migrate_only.migrations
+    );
+    assert_eq!(migrate_only.calibrated_experts, 0, "calibration off fits nothing");
+    assert_eq!(migrate_only.deviation_absorbed, 0.0);
+
+    assert!(
+        calibrated.calibrated_experts > 0,
+        "calibration enabled under drift must fit at least one expert"
+    );
+    assert!(
+        calibrated.deviation_absorbed > 0.0,
+        "accepted fits must absorb measurable sentinel deviation"
+    );
+    assert!(
+        calibrated.migrations < migrate_only.migrations,
+        "the calibrate tier must spare migration budget: {} (calibrated) \
+         vs {} (migrate-only)",
+        calibrated.migrations,
+        migrate_only.migrations
+    );
+    let gate = RePlacerOptions::default().promote;
+    assert!(
+        calibrated.calibration_residual <= gate + 1e-9,
+        "standing corrections must sit within the promote gate: residual {} > {}",
+        calibrated.calibration_residual,
+        gate
     );
 }
 

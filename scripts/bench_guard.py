@@ -24,6 +24,19 @@ current dump fail hard regardless of any baseline —
 byte-identical no-op), and every non-shedding arm must conserve
 admissions (``served == admitted``).
 
+The ``drift_soak`` recovery arms (router calibration, issue 9) are
+guarded when present: on a calibration-armed dump the calibrate arms
+must report standing corrections (``calibrated_experts == 0`` with
+calibration enabled under drift fails hard), the full escalation ladder
+must absorb at least as much deviation as calibrate-only
+(``calibrate_migrate.deviation_absorbed >=
+calibrate_only.deviation_absorbed``), calibration must spare migration
+budget (``calibrate_migrate.migrations < migrate_only.migrations``),
+and every standing correction must sit within the dump's
+``promote_gate``. Against a baseline with arms, the deviation recovered
+per unit maintenance wall time (``recovery_per_maint_s``) of each
+calibrate arm must not drop by more than the allowed fraction.
+
 With ``--profiles-prev``/``--profiles-cur`` it also guards
 BENCH_profiles.json (the device-profile stress matrix): per model and
 profile, the selection-rule **predictiveness** (Spearman ρ between
@@ -224,6 +237,107 @@ def guard_hot_traffic(prev_path, cur_path, max_regression):
     return failures
 
 
+def drift_soak_entries(path):
+    """{model: drift_soak_obj} for every drift_soak block."""
+    with open(path) as f:
+        dump = json.load(f)
+    out = {}
+    for entry in dump.get("models", []):
+        ds = entry.get("drift_soak")
+        if ds is not None:
+            out[entry.get("model", "?")] = ds
+    return out
+
+
+# drift-recovery arms whose recovery_per_maint_s is guarded against the
+# baseline; no_maintenance/migrate_only are excluded (no_maintenance
+# recovers nothing by construction, migrate_only's recovery is already
+# pinned by the flat drift_soak gates)
+RECOVERY_ARMS = ["calibrate_only", "calibrate_migrate"]
+
+
+def guard_drift_recovery(prev_path, cur_path, max_regression):
+    """Failures for the drift_soak recovery arms (see module doc)."""
+    failures = []
+    cur = drift_soak_entries(cur_path)
+    armed = {m: ds for m, ds in cur.items() if ds.get("arms")}
+    if not armed:
+        print(f"drift-recovery guard: {cur_path} has no drift_soak arms — "
+              f"skipped (bench run without --maint-calibrate?)")
+        return failures
+
+    for model, ds in armed.items():
+        arms = ds["arms"]
+        missing = [a for a in ["no_maintenance", "calibrate_only",
+                               "calibrate_migrate", "migrate_only"]
+                   if a not in arms]
+        if missing:
+            failures.append(f"{model}: drift_soak arms missing {missing}")
+            continue
+        cal_only, cal_mig = arms["calibrate_only"], arms["calibrate_migrate"]
+        mig_only = arms["migrate_only"]
+        gate = float(ds.get("promote_gate", 0.0))
+
+        # gate 1: calibration enabled under aggressive drift must fit
+        # standing corrections — 0 means the tier silently did nothing
+        for name, arm in [("calibrate_only", cal_only),
+                          ("calibrate_migrate", cal_mig)]:
+            if int(arm.get("calibrated_experts", 0)) < 1:
+                failures.append(
+                    f"{model}/{name}: calibrated_experts=0 with calibration "
+                    f"enabled under drift — the calibrate tier never engaged")
+        # gate 2: the full ladder absorbs at least what calibrate-only does
+        if float(cal_mig.get("deviation_absorbed", 0.0)) < \
+                float(cal_only.get("deviation_absorbed", 0.0)):
+            failures.append(
+                f"{model}: calibrate_migrate absorbed "
+                f"{cal_mig.get('deviation_absorbed')} < calibrate_only's "
+                f"{cal_only.get('deviation_absorbed')}")
+        # gate 3: calibration must spare migration budget (strict — the
+        # issue-9 acceptance criterion)
+        if int(cal_mig.get("migrations", 0)) >= int(mig_only.get("migrations", 0)):
+            failures.append(
+                f"{model}: calibrate_migrate spent {cal_mig.get('migrations')} "
+                f"migrations, not fewer than migrate_only's "
+                f"{mig_only.get('migrations')}")
+        # gate 4: standing corrections sit within the promote gate
+        if float(cal_mig.get("calibration_residual", 0.0)) > gate + 1e-9:
+            failures.append(
+                f"{model}/calibrate_migrate: calibration residual "
+                f"{cal_mig.get('calibration_residual')} exceeds the promote "
+                f"gate {gate}")
+
+    if not os.path.exists(prev_path):
+        print(f"drift-recovery guard: no baseline at {prev_path} — warn-only "
+              f"first run ({len(armed)} model(s) recorded)")
+        return failures
+
+    prev = drift_soak_entries(prev_path)
+    compared = 0
+    for model, ds in prev.items():
+        arms, cur_arms = ds.get("arms"), armed.get(model, {}).get("arms")
+        if not arms or not cur_arms:
+            continue
+        for arm in RECOVERY_ARMS:
+            old = float(arms.get(arm, {}).get("recovery_per_maint_s", 0.0))
+            new = float(cur_arms.get(arm, {}).get("recovery_per_maint_s", 0.0))
+            if old <= 0:
+                continue
+            compared += 1
+            drop = (old - new) / old
+            regressed = drop > max_regression
+            status = "FAIL" if regressed else "ok"
+            print(f"{status:>4} {model}/{arm} recovery_per_maint_s: "
+                  f"{old:.3g} -> {new:.3g} ({-drop * 100:+.1f}%)")
+            if regressed:
+                failures.append(
+                    f"{model}/{arm}: deviation recovered per maintenance "
+                    f"second regressed {drop * 100:.1f}% "
+                    f"(> {max_regression * 100:.0f}% allowed)")
+    print(f"drift-recovery guard: {compared} arm(s) compared")
+    return failures
+
+
 def guard_serve(prev_path, cur_path, max_regression):
     """Failures for the mixed_priority serve scenario (see module doc)."""
     failures = []
@@ -369,6 +483,8 @@ def main():
             serve_failures += guard_replica_scaling(
                 args.serve_prev or "", args.serve_cur, args.max_regression)
             serve_failures += guard_hot_traffic(
+                args.serve_prev or "", args.serve_cur, args.max_regression)
+            serve_failures += guard_drift_recovery(
                 args.serve_prev or "", args.serve_cur, args.max_regression)
     if args.profiles_cur:
         serve_failures += guard_profiles(args.profiles_prev or "",

@@ -3,14 +3,25 @@
 
 Parses the ``hetmoe serve`` report line
 
-    drift: clock=N tokens migrations=M (P promoted, D demoted) sentinel max |dev|=X
+    drift: clock=N tokens migrations=M (P promoted, D demoted) \
+sentinel max |dev|=X[ calibrated=C absorbed=A residual=R]
 
-and fails unless the run performed at least one live migration (with at
-least one analog → digital promotion) and the post-maintenance sentinel
-deviation is finite and bounded. Used by the weekly ``drift-soak`` CI
-job against ``hetmoe serve --drift-nu … --replace-every …`` output.
+(the ``calibrated=…`` segment only appears once the router-calibration
+maintenance tier has fitted a correction — an uncalibrated run renders
+the legacy line byte-for-byte) and fails unless the run performed at
+least one live migration (with at least one analog → digital promotion)
+and the post-maintenance sentinel deviation is finite and bounded. With
+``--require-calibrated`` the check additionally fails unless the
+calibration tier reports at least one standing per-expert correction —
+use it on serve runs launched with ``--maint-calibrate 1``. In that
+mode a migration-free run is accepted when a calibration stands (the
+escalation ladder recovered the drift one tier before migration, which
+is the point of the tier). Used by the
+weekly ``drift-soak`` CI job against
+``hetmoe serve --maint-nu … --maint-every …`` output.
 
 Usage: python3 scripts/soak_check.py SERVE_LOG [--max-deviation 2.0]
+       [--require-calibrated]
 """
 
 import argparse
@@ -22,6 +33,8 @@ PATTERN = re.compile(
     r"drift: clock=(?P<clock>\d+) tokens migrations=(?P<mig>\d+) "
     r"\((?P<pro>\d+) promoted, (?P<dem>\d+) demoted\) "
     r"sentinel max \|dev\|=(?P<dev>[0-9.eE+-]+)"
+    r"(?: calibrated=(?P<cal>\d+) absorbed=(?P<abs>[0-9.eE+-]+)"
+    r" residual=(?P<res>[0-9.eE+-]+))?"
 )
 
 
@@ -30,6 +43,9 @@ def main():
     ap.add_argument("log", help="captured `hetmoe serve` stdout")
     ap.add_argument("--max-deviation", type=float, default=2.0,
                     help="bound on the post-maintenance sentinel deviation")
+    ap.add_argument("--require-calibrated", action="store_true",
+                    help="fail unless the calibration tier fitted at least "
+                         "one standing router correction")
     args = ap.parse_args()
 
     with open(args.log) as f:
@@ -44,19 +60,34 @@ def main():
     migrations = int(m.group("mig"))
     promoted = int(m.group("pro"))
     deviation = float(m.group("dev"))
+    calibrated = int(m.group("cal")) if m.group("cal") is not None else 0
+    absorbed = float(m.group("abs")) if m.group("abs") is not None else 0.0
     print(f"soak check: clock={clock} tokens, migrations={migrations} "
-          f"({promoted} promoted), sentinel max |dev|={deviation}")
+          f"({promoted} promoted), sentinel max |dev|={deviation}, "
+          f"calibrated={calibrated} absorbed={absorbed}")
 
     errors = []
     if clock <= 0:
         errors.append("drift clock never advanced")
     if migrations < 1 or promoted < 1:
-        errors.append(
-            f"expected ≥1 live analog → digital migration, got {migrations} "
-            f"({promoted} promoted)")
+        if args.require_calibrated and calibrated >= 1:
+            # the escalation ladder recovered the drift one tier early:
+            # a standing router calibration is the desired outcome, so a
+            # migration-free calibrated soak is a pass, not a failure
+            print("soak check: no migration needed — calibration absorbed "
+                  "the drift below the promote gate")
+        else:
+            errors.append(
+                f"expected ≥1 live analog → digital migration, got {migrations} "
+                f"({promoted} promoted)")
     if not math.isfinite(deviation) or deviation > args.max_deviation:
         errors.append(
             f"sentinel deviation {deviation} not bounded by {args.max_deviation}")
+    if args.require_calibrated and calibrated < 1:
+        errors.append(
+            "calibration was required but the serve run reports no standing "
+            "router correction (calibrated=0 — did the run pass "
+            "--maint-calibrate 1 under drift?)")
     for e in errors:
         print(f"FAIL soak check: {e}", file=sys.stderr)
     return 1 if errors else 0

@@ -1,0 +1,211 @@
+"""The determinism lint must catch seeded violations and stay green on
+the real tree.
+
+Runs ``scripts/lint_determinism.py`` as a subprocess (the same way CI
+invokes it) against both the actual repository and synthetic trees with
+planted nondeterminism, covering: every rule fires, the ``lint:allow``
+escape hatch works, the baseline suppresses only what it lists, the
+test-region heuristic skips ``#[cfg(test)]`` code, and ``--mirrors``
+detects Rust↔Python constant drift.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent.parent
+SCRIPT = REPO / "scripts" / "lint_determinism.py"
+
+
+def run_lint(*args):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), *args],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+
+
+def plant(root, rel, text):
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text, encoding="utf-8")
+
+
+def empty_baseline(root):
+    plant(root, "scripts/lint_determinism_baseline.json", "[]\n")
+
+
+def test_real_tree_is_clean():
+    res = run_lint()
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_real_tree_mirrors_in_sync():
+    res = run_lint("--mirrors")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "in sync" in res.stdout
+
+
+def test_seeded_hash_iter_violation_fails(tmp_path):
+    empty_baseline(tmp_path)
+    plant(
+        tmp_path,
+        "rust/src/moe/router.rs",
+        "use std::collections::HashMap;\n",
+    )
+    res = run_lint("--root", str(tmp_path))
+    assert res.returncode == 1, res.stdout
+    assert "[hash-iter]" in res.stdout
+    assert "rust/src/moe/router.rs:1" in res.stdout
+
+
+def test_hash_outside_planning_paths_is_fine(tmp_path):
+    empty_baseline(tmp_path)
+    plant(
+        tmp_path,
+        "rust/src/util/cache.rs",
+        "use std::collections::HashMap;\n",
+    )
+    res = run_lint("--root", str(tmp_path))
+    assert res.returncode == 0, res.stdout
+
+
+def test_wallclock_respects_whitelist(tmp_path):
+    empty_baseline(tmp_path)
+    plant(tmp_path, "rust/src/moe/router.rs", "let t0 = Instant::now();\n")
+    plant(tmp_path, "rust/src/bench.rs", "let t0 = Instant::now();\n")
+    res = run_lint("--root", str(tmp_path))
+    assert res.returncode == 1, res.stdout
+    assert "[wallclock]" in res.stdout
+    assert "moe/router.rs" in res.stdout
+    assert "bench.rs" not in res.stdout
+
+
+def test_extern_rng_and_float_reduce_fire(tmp_path):
+    empty_baseline(tmp_path)
+    plant(
+        tmp_path,
+        "rust/src/util/noise.rs",
+        "let x = thread_rng().gen::<f32>();\n"
+        "let s = v.iter().sum::<f32>();\n",
+    )
+    res = run_lint("--root", str(tmp_path))
+    assert res.returncode == 1, res.stdout
+    assert "[extern-rng]" in res.stdout
+    assert "[float-reduce]" in res.stdout
+
+
+def test_lint_allow_escape_hatch(tmp_path):
+    empty_baseline(tmp_path)
+    plant(
+        tmp_path,
+        "rust/src/moe/router.rs",
+        "// sound: map is drained sorted two lines down\n"
+        "use std::collections::HashMap; // lint:allow(hash-iter)\n",
+    )
+    res = run_lint("--root", str(tmp_path))
+    assert res.returncode == 0, res.stdout
+
+
+def test_cfg_test_region_is_skipped(tmp_path):
+    empty_baseline(tmp_path)
+    plant(
+        tmp_path,
+        "rust/src/moe/router.rs",
+        "pub fn route() {}\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    use std::collections::HashMap;\n"
+        "    fn timing() { let t = Instant::now(); }\n"
+        "}\n",
+    )
+    res = run_lint("--root", str(tmp_path))
+    assert res.returncode == 0, res.stdout
+
+
+def test_comment_mentions_do_not_fire(tmp_path):
+    empty_baseline(tmp_path)
+    plant(
+        tmp_path,
+        "rust/src/moe/router.rs",
+        "// a HashMap would be wrong here, so we use a Vec\n",
+    )
+    res = run_lint("--root", str(tmp_path))
+    assert res.returncode == 0, res.stdout
+
+
+def test_update_baseline_then_clean(tmp_path):
+    empty_baseline(tmp_path)
+    plant(
+        tmp_path,
+        "rust/src/moe/router.rs",
+        "use std::collections::HashMap;\n",
+    )
+    assert run_lint("--root", str(tmp_path)).returncode == 1
+    res = run_lint("--root", str(tmp_path), "--update-baseline")
+    assert res.returncode == 0, res.stdout
+    baseline = json.loads(
+        (tmp_path / "scripts/lint_determinism_baseline.json").read_text()
+    )
+    assert len(baseline) == 1
+    assert baseline[0]["rule"] == "hash-iter"
+    # baselined finding no longer fails; a *new* one still does
+    assert run_lint("--root", str(tmp_path)).returncode == 0
+    plant(
+        tmp_path,
+        "rust/src/coordinator/fresh.rs",
+        "use std::collections::HashSet;\n",
+    )
+    res = run_lint("--root", str(tmp_path))
+    assert res.returncode == 1, res.stdout
+    assert "fresh.rs" in res.stdout
+
+
+MIRROR_RUST_TRAFFIC = "pub const DEFAULT_TRAFFIC_ALPHA: f64 = 0.2;\n"
+MIRROR_RUST_CALIB = (
+    "            min_scale: 0.25,\n"
+    "            max_scale: 4.0,\n"
+    "            max_offset: 4.0,\n"
+)
+MIRROR_RUST_METRICS = "    counts: [u64; 32],\n"
+MIRROR_PY_TRAFFIC = "DEFAULT_ALPHA = 0.2\n"
+MIRROR_PY_CALIB = "MIN_SCALE = 0.25\nMAX_SCALE = 4.0\nMAX_OFFSET = 4.0\n"
+MIRROR_PY_METRICS = "HISTOGRAM_BUCKETS = 32\n"
+
+
+def plant_mirror_tree(root):
+    plant(root, "rust/src/moe/traffic.rs", MIRROR_RUST_TRAFFIC)
+    plant(root, "rust/src/moe/calibrate.rs", MIRROR_RUST_CALIB)
+    plant(root, "rust/src/coordinator/metrics.rs", MIRROR_RUST_METRICS)
+    plant(root, "python/tests/test_traffic_mirror.py", MIRROR_PY_TRAFFIC)
+    plant(root, "python/tests/test_calibrate_mirror.py", MIRROR_PY_CALIB)
+    plant(root, "python/tests/test_metrics_mirror.py", MIRROR_PY_METRICS)
+
+
+def test_mirrors_pass_on_matching_tree(tmp_path):
+    plant_mirror_tree(tmp_path)
+    res = run_lint("--root", str(tmp_path), "--mirrors")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_mirrors_detect_drift(tmp_path):
+    plant_mirror_tree(tmp_path)
+    plant(
+        tmp_path,
+        "rust/src/moe/traffic.rs",
+        "pub const DEFAULT_TRAFFIC_ALPHA: f64 = 0.3;\n",
+    )
+    res = run_lint("--root", str(tmp_path), "--mirrors")
+    assert res.returncode == 1, res.stdout
+    assert "traffic-ewma-alpha" in res.stdout
+    assert "MIRROR DRIFT" in res.stdout
+
+
+def test_mirrors_detect_missing_pin(tmp_path):
+    plant_mirror_tree(tmp_path)
+    plant(tmp_path, "python/tests/test_metrics_mirror.py", "# pin removed\n")
+    res = run_lint("--root", str(tmp_path), "--mirrors")
+    assert res.returncode == 1, res.stdout
+    assert "wait-histogram-buckets" in res.stdout

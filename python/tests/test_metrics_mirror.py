@@ -1,0 +1,118 @@
+"""Mirror of the WaitHistogram bucketing in rust/src/coordinator/metrics.rs.
+
+The Rust histogram buckets queueing waits into ``HISTOGRAM_BUCKETS``
+log2 buckets: bucket ``b`` covers waits ``[2^b - 1, 2^(b+1) - 2]``
+(bucket 0 is exactly wait 0), and quantile estimates interpolate
+linearly inside a bucket. This mirror re-derives both from the paper's
+serving-metrics description and pins the arithmetic with integer-exact
+cases, so a silent change to the Rust constants breaks a test here.
+
+``HISTOGRAM_BUCKETS`` is additionally cross-checked against the Rust
+source by ``scripts/lint_determinism.py --mirrors`` (the constant must
+be defined once on each side, and agree).
+"""
+
+HISTOGRAM_BUCKETS = 32
+
+
+def bucket(wait):
+    """Mirror of WaitHistogram::bucket: floor(log2(wait + 1)), capped."""
+    assert wait >= 0
+    return min((wait + 1).bit_length() - 1, HISTOGRAM_BUCKETS - 1)
+
+
+class HistogramMirror:
+    """Pure-python WaitHistogram: record + merge + quantile."""
+
+    def __init__(self):
+        self.counts = [0] * HISTOGRAM_BUCKETS
+        self.total = 0
+        self.sum = 0
+        self.max = 0
+
+    def record(self, wait):
+        self.counts[bucket(wait)] += 1
+        self.total += 1
+        self.sum += wait
+        self.max = max(self.max, wait)
+
+    def merge(self, other):
+        for b in range(HISTOGRAM_BUCKETS):
+            self.counts[b] += other.counts[b]
+        self.total += other.total
+        self.sum += other.sum
+        self.max = max(self.max, other.max)
+
+    def quantile(self, q):
+        if self.total == 0:
+            return 0.0
+        rank = min(max(q, 0.0), 1.0) * (self.total - 1)
+        cum = 0
+        for b, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if rank < cum + c:
+                lo = (1 << b) - 1
+                hi = max(min((1 << (b + 1)) - 2, self.max), lo)
+                frac = min((rank - cum) / (c - 1), 1.0) if c > 1 else 1.0
+                return lo + (hi - lo) * frac
+            cum += c
+        return float(self.max)
+
+
+def test_bucket_edges_match_rust_doc():
+    # bucket b covers [2^b - 1, 2^(b+1) - 2]; spot-check the first few
+    # and the generic edge identity for every bucket
+    assert bucket(0) == 0
+    assert bucket(1) == 1
+    assert bucket(2) == 1
+    assert bucket(3) == 2
+    assert bucket(6) == 2
+    assert bucket(7) == 3
+    for b in range(HISTOGRAM_BUCKETS - 1):
+        lo = (1 << b) - 1
+        hi = (1 << (b + 1)) - 2
+        assert bucket(lo) == b
+        assert bucket(hi) == b
+    # the top bucket is saturating
+    assert bucket((1 << 40) + 5) == HISTOGRAM_BUCKETS - 1
+
+
+def test_quantile_interpolation_is_exact_on_uniform_bucket():
+    # four waits in bucket 2 (3..=6): ranks 0..3 span lo=3 to hi=6
+    h = HistogramMirror()
+    for w in (3, 4, 5, 6):
+        h.record(w)
+    assert h.quantile(0.0) == 3.0
+    assert h.quantile(1.0) == 6.0
+    assert h.quantile(0.5) == 4.5
+
+
+def test_quantile_monotone_across_bucket_gaps():
+    # the regression shape from the Rust suite: {3, 3, 7, 7} must not
+    # extrapolate past the bucket edge and break monotonicity
+    h = HistogramMirror()
+    for w in (3, 3, 7, 7):
+        h.record(w)
+    qs = [h.quantile(q / 20.0) for q in range(21)]
+    assert all(a <= b for a, b in zip(qs, qs[1:]))
+    assert h.quantile(0.95) <= h.max
+
+
+def test_merge_equals_union_stream():
+    # merging two histograms must quantile-match one histogram fed the
+    # union of both wait streams
+    a, b, u = HistogramMirror(), HistogramMirror(), HistogramMirror()
+    left = [0, 1, 1, 4, 9]
+    right = [2, 2, 30, 100]
+    for w in left:
+        a.record(w)
+        u.record(w)
+    for w in right:
+        b.record(w)
+        u.record(w)
+    a.merge(b)
+    assert a.counts == u.counts
+    assert a.total == u.total and a.sum == u.sum and a.max == u.max
+    for q in (0.0, 0.25, 0.5, 0.9, 1.0):
+        assert a.quantile(q) == u.quantile(q)

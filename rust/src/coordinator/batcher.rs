@@ -164,8 +164,18 @@ impl Batcher {
         } else {
             return None;
         };
+        let _depth_before = self.queue.len();
         let take = self.queue.len().min(self.max_batch);
         out.extend(self.queue.drain(..take));
+        crate::invariant!(
+            out.len() <= self.max_batch && out.len() + self.queue.len() == _depth_before,
+            "batcher release lost or duplicated requests: {} released + {} queued != {} \
+             admitted (max_batch {})",
+            out.len(),
+            self.queue.len(),
+            _depth_before,
+            self.max_batch
+        );
         self.released_requests += take as u64;
         self.released_batches += 1;
         Some(reason)
@@ -288,6 +298,12 @@ impl<T> LaneScheduler<T> {
     /// load explicitly.
     pub fn submit(&mut self, lane: usize, item: T) -> Result<(), T> {
         let l = &mut self.lanes[lane];
+        crate::invariant!(
+            l.queue.len() <= l.params.max_queue,
+            "lane {lane} oversubscribed: {} queued past its bound {}",
+            l.queue.len(),
+            l.params.max_queue
+        );
         if l.queue.len() >= l.params.max_queue {
             return Err(item);
         }
@@ -401,6 +417,29 @@ impl<T> LaneScheduler<T> {
             l.deficit = l.deficit.min(l.params.weight);
         }
 
+        crate::invariant!(
+            out.len() <= self.max_batch && out.len() + self.depth() == total,
+            "lane release lost or duplicated requests: {} released + {} queued != {} \
+             admitted (max_batch {})",
+            out.len(),
+            self.depth(),
+            total,
+            self.max_batch
+        );
+        // aged-first starvation bound: a release only leaves an aged
+        // request queued when the batch filled completely
+        if crate::util::invariant::ACTIVE && out.len() < self.max_batch {
+            for l in &self.lanes {
+                if let Some(front) = l.queue.front() {
+                    crate::invariant!(
+                        now - front.arrived < l.params.max_wait_ticks,
+                        "partial release ({} of {}) left an aged request queued",
+                        out.len(),
+                        self.max_batch
+                    );
+                }
+            }
+        }
         self.released_requests += out.len() as u64;
         self.released_batches += 1;
         Some(reason)
@@ -431,6 +470,27 @@ mod tests {
 
     fn req(id: u64) -> Request {
         Request { id, tokens: vec![0; 4], targets: vec![0; 4], mask: vec![0.0; 4], arrived: 0 }
+    }
+
+    #[test]
+    fn invariant_fires_on_oversubscribed_lane() {
+        use crate::util::invariant;
+        if !invariant::ACTIVE {
+            return;
+        }
+        let params = vec![LaneParams { weight: 1, max_wait_ticks: 8, max_queue: 2 }];
+        let mut s: LaneScheduler<u64> = LaneScheduler::new(2, params);
+        // corrupt: stuff the lane past its admission bound, bypassing
+        // submit()'s backpressure check
+        for i in 0..5 {
+            s.lanes[0].queue.push_back(Queued { item: i, arrived: 0 });
+        }
+        let before = invariant::violation_count();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = s.submit(0, 99);
+        }));
+        assert!(res.is_err(), "an oversubscribed lane must trip the invariant");
+        assert!(invariant::violation_count() > before, "violation counter must advance");
     }
 
     #[test]

@@ -81,6 +81,14 @@ impl ClusterMetrics {
         self.per_replica.iter().map(|m| m.requests).sum()
     }
 
+    /// Process-wide `invariant!` violations observed by any replica.
+    /// The counter is shared across the process (see `util::invariant`)
+    /// so each replica snapshots the same total — read it as a max,
+    /// not a sum. Always 0 in a correct run.
+    pub fn invariant_violations(&self) -> u64 {
+        self.per_replica.iter().map(|m| m.invariant_violations).max().unwrap_or(0)
+    }
+
     /// Each replica's expert-batch padding utilization — the load
     /// balance view: a starved replica shows up as low utilization
     /// next to its siblings.
@@ -233,6 +241,11 @@ impl<'rt> Cluster<'rt> {
         req.id = id;
         self.requests += 1;
         let owner = self.shard.route(&req.tokens);
+        crate::invariant!(
+            owner < self.execs.len(),
+            "shard routing picked replica {owner} of {}",
+            self.execs.len()
+        );
         match lane {
             Lane::Interactive => self.execs[owner].submit(req, lane)?,
             Lane::Bulk => self.backlog[owner].push_back(req),
@@ -313,6 +326,30 @@ impl<'rt> Cluster<'rt> {
                 }
             }
         }
+        // every request admitted by the cluster was served exactly once
+        // somewhere — the conservation side of the stealing protocol
+        crate::invariant!(
+            lanes.iter().map(|lm| lm.served).sum::<u64>() == self.requests,
+            "cluster served {} requests but admitted {}",
+            lanes.iter().map(|lm| lm.served).sum::<u64>(),
+            self.requests
+        );
+        // ticket↔completion attribution: surfaced completions echo one
+        // cluster-assigned id on ticket and response, with no duplicates
+        if crate::util::invariant::ACTIVE {
+            let mut ids: Vec<u64> = completions.iter().map(|c| c.ticket.id).collect();
+            ids.sort_unstable();
+            crate::invariant!(
+                completions
+                    .iter()
+                    .all(|c| c.ticket.id == c.response.id && c.ticket.id < self.next_id),
+                "a completion escaped the cluster id space or lost its attribution"
+            );
+            crate::invariant!(
+                ids.windows(2).all(|w| w[0] != w[1]),
+                "duplicate completion ids at cluster shutdown"
+            );
+        }
         let mut traffic = TrafficStats::default();
         for rep in &reports {
             traffic.merge(&rep.metrics.traffic);
@@ -350,6 +387,10 @@ impl<'rt> Cluster<'rt> {
                 .filter(|&r| !self.backlog[r].is_empty())
                 .max_by_key(|&r| self.backlog[r].len());
             let Some(victim) = victim else { break };
+            crate::invariant!(
+                thief != victim,
+                "work stealing picked replica {thief} as both thief and victim"
+            );
             let req = self.backlog[victim].pop_back().expect("victim backlog non-empty");
             self.steals += 1;
             self.execs[thief].submit(req, Lane::Bulk)?;

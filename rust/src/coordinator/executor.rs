@@ -10,7 +10,8 @@
 //!   a plain [`Server`] (`cluster_single_replica_matches_server`).
 //! - [`ThreadExecutor`] — one dedicated worker thread per replica, fed
 //!   through a real [`std::sync::mpsc`] request channel, completions
-//!   surfaced through a `Mutex`-guarded queue (std-only; no crossbeam).
+//!   surfaced through a [`Mailbox`](super::mailbox::Mailbox) — the
+//!   loom-model-checked worker↔front protocol (std-only; no crossbeam).
 //!   PJRT handles are raw pointers (`Runtime` is not `Send`), so the
 //!   worker builds its *own* runtime and engine in-thread from a
 //!   `Send` [`EngineFactory`] closure and drops them there too.
@@ -21,18 +22,79 @@
 //! replicas while each replica keeps its private ticket space.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
 use super::batcher::Request;
+use super::mailbox::Mailbox;
 use super::metrics::Metrics;
 use super::server::{ClientHandle, Completion, DrainReport, Lane, Server, ServerConfig};
 use super::Engine;
 use crate::runtime::Runtime;
+
+/// Structured failure of a [`ThreadExecutor`] replica worker, carried
+/// as the source of the `anyhow` errors the executor surface returns.
+/// Callers that need to distinguish a panic from a serving error (e.g.
+/// to decide whether the replica's partial metrics are trustworthy)
+/// can `downcast_ref::<ExecutorError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecutorError {
+    /// The worker thread panicked; `message` is the stringified panic
+    /// payload (from the `JoinHandle` at shutdown/construction).
+    WorkerPanicked {
+        /// The replica's display name.
+        replica: String,
+        /// Stringified panic payload.
+        message: String,
+    },
+    /// The worker recorded a serving error and exited cleanly.
+    WorkerFailed {
+        /// The replica's display name.
+        replica: String,
+        /// The worker's recorded error.
+        message: String,
+    },
+    /// The worker exited without recording anything (e.g. its channel
+    /// closed before readiness).
+    WorkerVanished {
+        /// The replica's display name.
+        replica: String,
+    },
+}
+
+impl std::fmt::Display for ExecutorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecutorError::WorkerPanicked { replica, message } => {
+                write!(f, "replica '{replica}' worker panicked: {message}")
+            }
+            ExecutorError::WorkerFailed { replica, message } => {
+                write!(f, "replica '{replica}' worker failed: {message}")
+            }
+            ExecutorError::WorkerVanished { replica } => {
+                write!(f, "replica '{replica}' worker exited unexpectedly")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecutorError {}
+
+/// Stringify a panic payload (the `Box<dyn Any>` a `JoinHandle::join`
+/// error carries): `&str` and `String` payloads pass through, anything
+/// else gets a placeholder.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
 
 /// A `Send` recipe for building one replica's engine against a runtime
 /// the replica owns. [`ThreadExecutor`] invokes it once, inside the
@@ -231,27 +293,18 @@ enum Command {
     Shutdown(Sender<Result<ExecutorReport>>),
 }
 
-/// State shared between the front handle and the worker thread.
-struct Shared {
-    /// Completions the worker has served, ids already remapped.
-    done: Mutex<VecDeque<Completion>>,
-    /// Submitted minus completed — the stealing load signal.
-    inflight: AtomicUsize,
-    /// First worker-side error; the worker parks after setting it.
-    error: Mutex<Option<String>>,
-}
-
 /// Threaded executor: a dedicated worker thread owns this replica's
 /// [`Runtime`] + [`Engine`] + [`Server`] (none of which are `Send`) and
 /// drains a std [`mpsc`] command channel; completions cross back
-/// through a `Mutex`-guarded queue. [`Executor::submit`] never blocks
+/// through a [`Mailbox`] (the model-checked worker↔front protocol —
+/// see `coordinator::mailbox`). [`Executor::submit`] never blocks
 /// on serving — backpressure is absorbed by the worker's own
 /// poll-and-retry loop — and [`Executor::drain`] round-trips a reply
 /// channel, making it a true barrier.
 pub struct ThreadExecutor {
     name: String,
     tx: Option<Sender<Command>>,
-    shared: Arc<Shared>,
+    shared: Arc<Mailbox<Completion>>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -265,11 +318,7 @@ impl ThreadExecutor {
         factory: EngineFactory,
     ) -> Result<ThreadExecutor> {
         let name = name.into();
-        let shared = Arc::new(Shared {
-            done: Mutex::new(VecDeque::new()),
-            inflight: AtomicUsize::new(0),
-            error: Mutex::new(None),
-        });
+        let shared: Arc<Mailbox<Completion>> = Arc::new(Mailbox::new());
         let (tx, rx) = mpsc::channel();
         let (ready_tx, ready_rx) = mpsc::channel();
         let worker_shared = shared.clone();
@@ -285,8 +334,17 @@ impl ThreadExecutor {
                 return Err(e.context("building replica engine in worker thread"));
             }
             Err(_) => {
-                let _ = handle.join();
-                return Err(anyhow!("replica worker died before reporting readiness"));
+                // the readiness channel dropped without a verdict: the
+                // worker either panicked (surface the payload) or died
+                // some other way
+                return Err(match handle.join() {
+                    Err(payload) => anyhow::Error::new(ExecutorError::WorkerPanicked {
+                        replica: name,
+                        message: panic_message(payload.as_ref()),
+                    })
+                    .context("building replica engine in worker thread"),
+                    Ok(()) => anyhow::Error::new(ExecutorError::WorkerVanished { replica: name }),
+                });
             }
         }
         Ok(ThreadExecutor { name, tx: Some(tx), shared, handle: Some(handle) })
@@ -294,10 +352,12 @@ impl ThreadExecutor {
 
     /// The worker's recorded error, if it failed.
     fn error(&self) -> anyhow::Error {
-        match self.shared.error.lock().unwrap().clone() {
-            Some(msg) => anyhow!("replica '{}' worker failed: {msg}", self.name),
-            None => anyhow!("replica '{}' worker exited unexpectedly", self.name),
-        }
+        anyhow::Error::new(match self.shared.error_message() {
+            Some(message) => {
+                ExecutorError::WorkerFailed { replica: self.name.clone(), message }
+            }
+            None => ExecutorError::WorkerVanished { replica: self.name.clone() },
+        })
     }
 }
 
@@ -308,13 +368,13 @@ impl Executor for ThreadExecutor {
 
     fn submit(&mut self, req: Request, lane: Lane) -> Result<()> {
         let tx = self.tx.as_ref().ok_or_else(|| anyhow!("executor already shut down"))?;
-        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        self.shared.submitted();
         tx.send(Command::Submit(req, lane)).map_err(|_| self.error())
     }
 
     fn pump(&mut self) -> Result<()> {
         // the worker serves autonomously; surface its error if it died
-        if self.shared.error.lock().unwrap().is_some() {
+        if self.shared.has_error() {
             return Err(self.error());
         }
         Ok(())
@@ -331,30 +391,52 @@ impl Executor for ThreadExecutor {
     }
 
     fn try_recv(&mut self) -> Option<Completion> {
-        self.shared.done.lock().unwrap().pop_front()
+        self.shared.pop()
     }
 
     fn inflight(&self) -> usize {
-        self.shared.inflight.load(Ordering::SeqCst)
+        self.shared.inflight()
     }
 
     fn shutdown(mut self: Box<Self>) -> Result<ExecutorReport> {
         let tx = self.tx.take().ok_or_else(|| anyhow!("executor already shut down"))?;
         let (reply_tx, reply_rx) = mpsc::channel();
-        tx.send(Command::Shutdown(reply_tx)).map_err(|_| self.error())?;
-        let out = match reply_rx.recv() {
-            Ok(res) => res,
-            Err(_) => Err(self.error()),
+        // a dead worker fails the send; fall through to the join below
+        // so a panic payload beats the generic channel-closed error
+        let sent = tx.send(Command::Shutdown(reply_tx)).is_ok();
+        let out = if sent {
+            match reply_rx.recv() {
+                Ok(res) => res,
+                Err(_) => Err(anyhow!("replica worker dropped the shutdown reply")),
+            }
+        } else {
+            Err(anyhow!("replica worker command channel closed"))
         };
         drop(tx);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-        let mut out = out?;
+        // join the worker: a panic over there must surface here as a
+        // structured error, not poison-propagate into our Drop
+        let joined = match self.handle.take() {
+            Some(h) => h.join(),
+            None => Ok(()),
+        };
+        let mut out = match (out, joined) {
+            (out, Ok(())) => out.map_err(|e| match e.downcast::<ExecutorError>() {
+                Ok(structured) => anyhow::Error::new(structured),
+                Err(e) => anyhow::Error::new(ExecutorError::WorkerFailed {
+                    replica: self.name.clone(),
+                    message: self.shared.error_message().unwrap_or_else(|| format!("{e:#}")),
+                }),
+            })?,
+            (_, Err(payload)) => {
+                return Err(anyhow::Error::new(ExecutorError::WorkerPanicked {
+                    replica: self.name.clone(),
+                    message: panic_message(payload.as_ref()),
+                }));
+            }
+        };
         // completions served but never consumed through try_recv come
         // first — they predate anything still in the server queue
-        let mut completions: Vec<Completion> =
-            self.shared.done.lock().unwrap().drain(..).collect();
+        let mut completions: Vec<Completion> = self.shared.take_all();
         completions.extend(out.report.completions);
         out.report.completions = completions;
         Ok(out)
@@ -372,26 +454,21 @@ impl Drop for ThreadExecutor {
     }
 }
 
-/// Move every served completion into the shared queue, remapping inner
+/// Move every served completion into the mailbox, remapping inner
 /// ticket ids back to the submitted request ids.
-fn harvest(server: &mut Server<'_>, ids: &mut HashMap<u64, u64>, shared: &Shared) {
-    let served = server.recv_all();
+fn harvest(server: &mut Server<'_>, ids: &mut HashMap<u64, u64>, shared: &Mailbox<Completion>) {
+    let mut served = server.recv_all();
     if served.is_empty() {
         return;
     }
-    let mut done = shared.done.lock().unwrap();
-    for mut c in served {
-        remap(&mut c, ids);
-        shared.inflight.fetch_sub(1, Ordering::SeqCst);
-        done.push_back(c);
+    for c in &mut served {
+        remap(c, ids);
     }
+    shared.push_served(served);
 }
 
-fn set_error(shared: &Shared, e: &anyhow::Error) {
-    let mut slot = shared.error.lock().unwrap();
-    if slot.is_none() {
-        *slot = Some(format!("{e:#}"));
-    }
+fn set_error(shared: &Mailbox<Completion>, e: &anyhow::Error) {
+    shared.record_error(&format!("{e:#}"));
 }
 
 /// The replica worker loop. Owns runtime, engine, and server for the
@@ -399,7 +476,7 @@ fn set_error(shared: &Shared, e: &anyhow::Error) {
 /// (none of it is `Send`).
 fn worker(
     rx: Receiver<Command>,
-    shared: Arc<Shared>,
+    shared: Arc<Mailbox<Completion>>,
     cfg: ServerConfig,
     factory: EngineFactory,
     ready: Sender<Result<()>>,
@@ -500,6 +577,28 @@ mod tests {
         .expect_err("factory failure must fail construction");
         let msg = format!("{err:#}");
         assert!(msg.contains("no artifacts"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn thread_executor_surfaces_factory_panics_as_structured_errors() {
+        // a panicking EngineFactory must not poison-propagate: the
+        // constructor joins the worker and hands back the payload as a
+        // typed ExecutorError::WorkerPanicked
+        let cfg = ServerConfig::new(4);
+        let res = ThreadExecutor::new("replica0", cfg, Box::new(|_rt| panic!("boom in factory")));
+        let err = res.expect_err("factory panic must fail construction");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("boom in factory"), "panic payload lost: {msg}");
+        let structured = err
+            .downcast_ref::<ExecutorError>()
+            .expect("error must downcast to ExecutorError");
+        match structured {
+            ExecutorError::WorkerPanicked { replica, message } => {
+                assert_eq!(replica, "replica0");
+                assert!(message.contains("boom in factory"));
+            }
+            other => panic!("expected WorkerPanicked, got {other:?}"),
+        }
     }
 
     // End-to-end Executor behavior (byte identity of a single-replica

@@ -1,0 +1,186 @@
+//! The completion mailbox: the one piece of shared mutable state
+//! between a replica worker thread and its front handle.
+//!
+//! [`ThreadExecutor`](super::executor::ThreadExecutor) hands requests
+//! to its worker over a plain `mpsc` channel; everything coming *back*
+//! — served completions, the submitted-minus-served load signal the
+//! cluster's work stealing reads, and the worker's first error — flows
+//! through a [`Mailbox`]. Extracting the protocol into its own type
+//! does two things:
+//!
+//! - **Model checking.** Under `RUSTFLAGS="--cfg loom"` the sync
+//!   primitives below swap for [loom]'s model-checked versions, and
+//!   `rust/tests/loom_models.rs` exhaustively explores the
+//!   submit→serve→drain interleavings of this exact type — not a
+//!   re-implementation that could drift from production.
+//! - **Panic safety.** Every lock acquisition recovers from poisoning
+//!   with [`PoisonError::into_inner`]: a worker that panics mid-harvest
+//!   leaves the done queue merely truncated (items not yet pushed are
+//!   lost with the worker, which the inflight counter still reports),
+//!   never logically corrupt — so the front handle can still drain
+//!   completions and report the failure instead of double-panicking in
+//!   `Drop`.
+//!
+//! [loom]: https://docs.rs/loom
+
+use std::collections::VecDeque;
+use std::sync::PoisonError;
+
+#[cfg(loom)]
+use loom::sync::{
+    atomic::{AtomicUsize, Ordering},
+    Mutex,
+};
+#[cfg(not(loom))]
+use std::sync::{
+    atomic::{AtomicUsize, Ordering},
+    Mutex,
+};
+
+/// Shared worker↔front state: a served-item queue, the inflight
+/// counter, and a first-error slot. All methods take `&self`; the type
+/// is `Sync` and lives behind an `Arc`.
+#[derive(Debug)]
+pub struct Mailbox<T> {
+    /// Items the worker has served, awaiting consumption by the front.
+    done: Mutex<VecDeque<T>>,
+    /// Submitted minus served — the stealing load signal.
+    inflight: AtomicUsize,
+    /// First recorded worker-side error; later errors are dropped.
+    error: Mutex<Option<String>>,
+}
+
+impl<T> Default for Mailbox<T> {
+    fn default() -> Self {
+        Mailbox::new()
+    }
+}
+
+impl<T> Mailbox<T> {
+    /// An empty mailbox with nothing inflight.
+    pub fn new() -> Mailbox<T> {
+        Mailbox {
+            done: Mutex::new(VecDeque::new()),
+            inflight: AtomicUsize::new(0),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Record one submission: the matching [`Mailbox::push_served`]
+    /// will balance it. Called by the front *before* the request
+    /// crosses to the worker, so `inflight` never under-reports.
+    pub fn submitted(&self) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Park served items for the front and balance their submissions.
+    /// One lock acquisition per harvest, not per item.
+    pub fn push_served(&self, items: impl IntoIterator<Item = T>) {
+        let mut done = self.done.lock().unwrap_or_else(PoisonError::into_inner);
+        for item in items {
+            let prev = self.inflight.fetch_sub(1, Ordering::SeqCst);
+            crate::invariant!(
+                prev > 0,
+                "mailbox served an item that was never submitted (inflight underflow)"
+            );
+            done.push_back(item);
+        }
+    }
+
+    /// Pop the oldest unconsumed served item, if any.
+    pub fn pop(&self) -> Option<T> {
+        self.done.lock().unwrap_or_else(PoisonError::into_inner).pop_front()
+    }
+
+    /// Take every unconsumed served item, in serve order.
+    pub fn take_all(&self) -> Vec<T> {
+        self.done.lock().unwrap_or_else(PoisonError::into_inner).drain(..).collect()
+    }
+
+    /// Submitted items whose serve has not been made visible yet.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Record the worker's error; only the first ever recorded sticks.
+    pub fn record_error(&self, msg: &str) {
+        let mut slot = self.error.lock().unwrap_or_else(PoisonError::into_inner);
+        if slot.is_none() {
+            *slot = Some(msg.to_string());
+        }
+    }
+
+    /// The first recorded worker error, if any.
+    pub fn error_message(&self) -> Option<String> {
+        self.error.lock().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Has a worker error been recorded?
+    pub fn has_error(&self) -> bool {
+        self.error.lock().unwrap_or_else(PoisonError::into_inner).is_some()
+    }
+}
+
+// Plain (non-loom) unit tests; the interleaving exploration lives in
+// rust/tests/loom_models.rs behind --cfg loom.
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_balances_inflight() {
+        let mb: Mailbox<u64> = Mailbox::new();
+        mb.submitted();
+        mb.submitted();
+        assert_eq!(mb.inflight(), 2);
+        mb.push_served([7]);
+        assert_eq!(mb.inflight(), 1);
+        assert_eq!(mb.pop(), Some(7));
+        assert_eq!(mb.pop(), None);
+        mb.push_served([8]);
+        assert_eq!(mb.inflight(), 0);
+        assert_eq!(mb.take_all(), vec![8]);
+    }
+
+    #[test]
+    fn first_error_wins() {
+        let mb: Mailbox<u64> = Mailbox::new();
+        assert!(!mb.has_error());
+        mb.record_error("first");
+        mb.record_error("second");
+        assert_eq!(mb.error_message().as_deref(), Some("first"));
+    }
+
+    #[test]
+    fn poisoned_lock_still_drains() {
+        // a worker panicking while holding the done queue must not
+        // brick the front handle — into_inner recovery keeps shutdown
+        // able to collect what was served
+        let mb = std::sync::Arc::new(Mailbox::<u64>::new());
+        mb.submitted();
+        mb.push_served([1]);
+        let poisoner = mb.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.done.lock().unwrap();
+            panic!("poison the mailbox");
+        })
+        .join();
+        assert_eq!(mb.pop(), Some(1), "poisoned queue must still serve");
+        assert!(!mb.has_error());
+    }
+
+    #[test]
+    fn invariant_fires_on_unbalanced_serve() {
+        use crate::util::invariant;
+        if !invariant::ACTIVE {
+            return;
+        }
+        let mb: Mailbox<u64> = Mailbox::new();
+        let before = invariant::violation_count();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            mb.push_served([1]); // nothing was ever submitted
+        }));
+        assert!(res.is_err(), "inflight underflow must trip the invariant");
+        assert!(invariant::violation_count() > before, "violation counter must advance");
+    }
+}

@@ -274,6 +274,12 @@ pub struct Metrics {
     pub traffic: TrafficStats,
     /// batches served with the load-shed policy armed (overload mode)
     pub shed_batches: u64,
+    /// process-wide `invariant!` violations observed so far (see
+    /// `util::invariant`) — snapshotted at each batch and maintenance
+    /// tick. Always 0 in a correct run, and always 0 in plain release
+    /// builds (the checks compile out). Shared across every engine in
+    /// the process, so cluster rollups read it as a max, not a sum.
+    pub invariant_violations: u64,
     /// (token, expert) routing assignments dropped by the armed shed
     /// policy (adaptive top-k cuts + cold-expert skips)
     pub shed_tokens: u64,
@@ -399,6 +405,13 @@ impl Metrics {
         } else {
             String::new()
         };
+        // gated on a violation so correct runs (and release builds,
+        // where checks compile out) render the exact pre-PR report
+        let invariant_line = if self.invariant_violations > 0 {
+            format!("\nINVARIANT VIOLATIONS: {}", self.invariant_violations)
+        } else {
+            String::new()
+        };
         // gated like the traffic line: a build that never calibrated
         // renders the exact pre-calibration drift line
         let calibration_line = if self.calibrated_experts > 0 || self.deviation_absorbed > 0.0 {
@@ -414,7 +427,7 @@ impl Metrics {
              dispatches: {dispatch_line} utilization={:.2}\n\
              transfers:{transfer_line} alloc={} B\n\
              drift: clock={} tokens migrations={} ({} promoted, {} demoted) \
-             sentinel max |dev|={:.4}{calibration_line}{traffic_line}\n\
+             sentinel max |dev|={:.4}{calibration_line}{traffic_line}{invariant_line}\n\
              wall: total={:.3}s attn={:.3}s route={:.3}s pack={:.3}s \
              scatter={:.3}s{backend_wall} \
              shared={:.3}s lm={:.3}s maint={:.3}s → {:.0} tok/s\n\

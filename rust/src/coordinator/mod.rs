@@ -100,6 +100,7 @@ pub mod backend;
 pub mod batcher;
 pub mod cluster;
 pub mod executor;
+pub mod mailbox;
 pub mod maintenance;
 pub mod metrics;
 pub mod server;
@@ -113,7 +114,10 @@ pub use batcher::{
     Batcher, LaneParams, LaneScheduler, Released, ReleaseReason, Request, RequestId, Response,
 };
 pub use cluster::{Cluster, ClusterMetrics, ClusterReport, ReplicaReport};
-pub use executor::{EngineFactory, Executor, ExecutorReport, ThreadExecutor, TickExecutor};
+pub use executor::{
+    EngineFactory, Executor, ExecutorError, ExecutorReport, ThreadExecutor, TickExecutor,
+};
+pub use mailbox::Mailbox;
 pub use maintenance::{
     CalibrateReport, MaintenanceConfig, MaintenanceReport, MigrateReport, PlanReport, ProbeReport,
 };
@@ -721,6 +725,7 @@ impl Engine {
         self.drift_tokens += batch_tokens as u64;
         self.metrics.drift_clock = self.drift_tokens;
         self.metrics.alloc_bytes = self.scratch.alloc_bytes();
+        self.metrics.invariant_violations = crate::util::invariant::violation_count();
         self.metrics.total_wall += t0.elapsed();
         Ok(responses)
     }
@@ -925,6 +930,7 @@ impl Engine {
         self.metrics.calibrated_experts = self.calibration.calibrated_experts() as u64;
         self.metrics.deviation_absorbed += cal_rep.absorbed;
         self.metrics.calibration_residual = self.calibration.max_residual();
+        self.metrics.invariant_violations = crate::util::invariant::violation_count();
         self.metrics.maintenance_wall += t0.elapsed();
         Ok(MaintenanceReport {
             drift_clock: self.drift_tokens,
@@ -993,6 +999,17 @@ impl Engine {
                 mg.to,
             )?;
             self.placement.set_backend(l, e, mg.to);
+            // post-migration consistency: the placement table and the
+            // live expert slot must agree on where (l, e) now serves
+            crate::invariant!(
+                self.placement.backend_of(l, e) == mg.to
+                    && self.experts[l][e].backend == mg.to,
+                "migrated expert ({l},{e}) left placement/slot disagreeing \
+                 (placement {}, slot {}, wanted {})",
+                self.placement.backend_of(l, e),
+                self.experts[l][e].backend,
+                mg.to
+            );
             self.birth[l][e] = self.drift_tokens;
             self.monitor.record_migrated(l, e);
             // any move invalidates the standing logit correction: a

@@ -484,7 +484,12 @@ impl<'rt> Server<'rt> {
                 }
             };
             for (resp, &(ticket, wait, admitted)) in responses.iter().zip(&self.meta) {
-                debug_assert_eq!(resp.id, ticket.id, "engine must echo the ticket id");
+                crate::invariant!(
+                    resp.id == ticket.id,
+                    "engine must echo the ticket id: response {} against ticket {}",
+                    resp.id,
+                    ticket.id
+                );
                 let wait_us = admitted.elapsed().as_micros().min(u64::MAX as u128) as u64;
                 let lm = &mut self.lanes[ticket.lane.index()];
                 lm.served += 1;
@@ -600,6 +605,16 @@ impl<'rt> Server<'rt> {
         // completion queue: anything a maintenance hook released late is
         // counted in the report instead of dropped with the scheduler
         drained += self.pump(true)?;
+        crate::invariant!(
+            self.sched.depth() == 0,
+            "graceful shutdown left {} requests queued after the final drain",
+            self.sched.depth()
+        );
+        crate::invariant!(
+            self.lanes.iter().all(|lm| lm.served == lm.admitted),
+            "shutdown lane accounting: served != admitted ({:?})",
+            self.lanes.iter().map(|lm| (lm.admitted, lm.served)).collect::<Vec<_>>()
+        );
         let occupancy = self.sched.occupancy();
         let report = DrainReport {
             drained,

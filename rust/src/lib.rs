@@ -58,6 +58,105 @@
 //!   (`docs/BENCHMARKS.md`)
 
 #![warn(missing_docs)]
+#![deny(unsafe_code)]
+#![warn(clippy::pedantic)]
+// Allow-list names from several clippy generations; unknown names must
+// not fail older/newer toolchains under `-D warnings`.
+#![allow(unknown_lints)]
+// Curated pedantic carve-outs. The numeric-cast family is endemic to a
+// numerics crate that moves between usize indices, u64 counters and
+// f32/f64 math with full-range values known small; the doc lints would
+// demand boilerplate on ~every Result-returning API; the rest are
+// style calls where the existing codebase idiom wins. Anything not
+// listed here is enforced at `-D warnings` by CI's clippy step.
+#![allow(
+    clippy::bool_to_int_with_if,
+    clippy::cast_lossless,
+    clippy::cast_possible_truncation,
+    clippy::cast_possible_wrap,
+    clippy::cast_precision_loss,
+    clippy::cast_sign_loss,
+    clippy::checked_conversions,
+    clippy::cloned_instead_of_copied,
+    clippy::default_trait_access,
+    clippy::doc_markdown,
+    clippy::enum_glob_use,
+    clippy::explicit_iter_loop,
+    clippy::filter_map_next,
+    clippy::flat_map_option,
+    clippy::float_cmp,
+    clippy::fn_params_excessive_bools,
+    clippy::from_iter_instead_of_collect,
+    clippy::if_not_else,
+    clippy::ignored_unit_patterns,
+    clippy::implicit_clone,
+    clippy::implicit_hasher,
+    clippy::inconsistent_struct_constructor,
+    clippy::index_refutable_slice,
+    clippy::inefficient_to_string,
+    clippy::inline_always,
+    clippy::invalid_upcast_comparisons,
+    clippy::items_after_statements,
+    clippy::iter_not_returning_iterator,
+    clippy::large_stack_arrays,
+    clippy::large_types_passed_by_value,
+    clippy::manual_assert,
+    clippy::manual_instant_elapsed,
+    clippy::manual_is_variant_and,
+    clippy::manual_let_else,
+    clippy::manual_ok_or,
+    clippy::manual_string_new,
+    clippy::many_single_char_names,
+    clippy::map_flatten,
+    clippy::map_unwrap_or,
+    clippy::match_bool,
+    clippy::match_same_arms,
+    clippy::match_wildcard_for_single_variants,
+    clippy::maybe_infinite_iter,
+    clippy::mismatching_type_param_order,
+    clippy::missing_errors_doc,
+    clippy::missing_panics_doc,
+    clippy::module_name_repetitions,
+    clippy::must_use_candidate,
+    clippy::mut_mut,
+    clippy::naive_bytecount,
+    clippy::needless_continue,
+    clippy::needless_for_each,
+    clippy::needless_pass_by_value,
+    clippy::needless_range_loop,
+    clippy::no_effect_underscore_binding,
+    clippy::option_option,
+    clippy::range_plus_one,
+    clippy::ref_binding_to_reference,
+    clippy::ref_option_ref,
+    clippy::redundant_closure_for_method_calls,
+    clippy::redundant_else,
+    clippy::return_self_not_must_use,
+    clippy::same_functions_in_if_condition,
+    clippy::semicolon_if_nothing_returned,
+    clippy::should_panic_without_expect,
+    clippy::similar_names,
+    clippy::single_match_else,
+    clippy::stable_sort_primitive,
+    clippy::struct_excessive_bools,
+    clippy::struct_field_names,
+    clippy::too_many_arguments,
+    clippy::too_many_lines,
+    clippy::trivially_copy_pass_by_ref,
+    clippy::unchecked_duration_subtraction,
+    clippy::unicode_not_nfc,
+    clippy::uninlined_format_args,
+    clippy::unnecessary_box_returns,
+    clippy::unnecessary_join,
+    clippy::unnecessary_wraps,
+    clippy::unnested_or_patterns,
+    clippy::unreadable_literal,
+    clippy::unused_self,
+    clippy::used_underscore_binding,
+    clippy::verbose_bit_mask,
+    clippy::wildcard_imports,
+    clippy::zero_sized_map_values
+)]
 
 pub mod aimc;
 pub mod bench;

@@ -243,6 +243,14 @@ impl RouterCalibration {
         let raw = fit_residual(got, want, 1.0, 0.0);
         let (scale, offset) = least_squares_fit(got, want);
         let (scale, offset) = opts.clamp(scale, offset);
+        crate::invariant!(
+            (opts.min_scale..=opts.max_scale).contains(&scale) && offset.abs() <= opts.max_offset,
+            "clamped fit ({scale}, {offset}) escapes the trust region \
+             scale∈[{}, {}], |offset|≤{}",
+            opts.min_scale,
+            opts.max_scale,
+            opts.max_offset
+        );
         let residual = fit_residual(got, want, scale, offset);
         // clamping may have broken the least-squares optimum, and a
         // sub-gate raw deviation needs no correction at all — never
@@ -260,6 +268,11 @@ impl RouterCalibration {
             FitOutcome { accepted: true, raw, residual }
         } else {
             self.reset(layer, expert);
+            crate::invariant!(
+                self.is_identity_slot(layer * self.n_experts + expert)
+                    && self.residual(layer, expert) == 0.0,
+                "rejected fit for (L{layer}, E{expert}) must leave the slot identity"
+            );
             FitOutcome { accepted: false, raw, residual: raw }
         }
     }

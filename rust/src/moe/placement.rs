@@ -622,7 +622,9 @@ impl ShardPlan {
                     .collect()
             })
             .collect();
-        ShardPlan { owner, n_replicas }
+        let plan = ShardPlan { owner, n_replicas };
+        plan.check_partition();
+        plan
     }
 
     /// Norm-balanced plan: greedily assign experts (heaviest first) to
@@ -660,7 +662,28 @@ impl ShardPlan {
             owner[l][e] = r;
             load[r] += w;
         }
-        ShardPlan { owner, n_replicas }
+        let plan = ShardPlan { owner, n_replicas };
+        plan.check_partition();
+        plan
+    }
+
+    /// Check the disjoint-and-covering contract: a rectangular owner
+    /// grid whose every entry names a replica `< n_replicas`. One
+    /// owner per slot makes disjointness structural, so what a
+    /// corrupted plan can actually break — and what this guards — is
+    /// replica bounds and grid rectangularity.
+    fn check_partition(&self) {
+        crate::invariant!(self.n_replicas > 0, "shard plan with zero replicas");
+        let width = self.owner.first().map_or(0, Vec::len);
+        crate::invariant!(
+            self.owner.iter().all(|l| l.len() == width),
+            "shard plan owner grid is ragged (expected every layer to own {width} experts)"
+        );
+        crate::invariant!(
+            self.owner.iter().flatten().all(|&r| r < self.n_replicas),
+            "shard plan names a replica outside 0..{}",
+            self.n_replicas
+        );
     }
 
     /// Number of replicas this plan shards across.
@@ -707,6 +730,16 @@ impl ShardPlan {
                 }
             }
         }
+        if crate::util::invariant::ACTIVE {
+            for (l, layer) in self.owner.iter().enumerate() {
+                for (e, &o) in layer.iter().enumerate() {
+                    crate::invariant!(
+                        o == replica || !p.is_analog(l, e),
+                        "replica {replica} kept analog expert (L{l}, E{e}) owned by {o}"
+                    );
+                }
+            }
+        }
         p
     }
 }
@@ -722,6 +755,23 @@ mod tests {
     use super::*;
     use crate::moe::score::SelectionMetric;
     use std::io::Write;
+
+    #[test]
+    fn invariant_fires_on_corrupted_shard_plan() {
+        use crate::util::invariant;
+        if !invariant::ACTIVE {
+            return;
+        }
+        // corrupt: a slot names replica 2 of a 2-replica plan — the
+        // partition no longer covers (nobody serves that expert)
+        let plan = ShardPlan { owner: vec![vec![0, 2], vec![1, 0]], n_replicas: 2 };
+        let before = invariant::violation_count();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.check_partition();
+        }));
+        assert!(res.is_err(), "out-of-range owner must trip the invariant");
+        assert!(invariant::violation_count() > before, "violation counter must advance");
+    }
 
     fn cfg() -> ModelConfig {
         ModelConfig {

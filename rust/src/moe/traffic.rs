@@ -122,6 +122,12 @@ impl TrafficStats {
             *slot = if first { share } else { (1.0 - self.alpha) * *slot + self.alpha * share };
         }
         self.updates[layer] += 1;
+        crate::invariant!(
+            (self.shares[layer].iter().sum::<f64>() - 1.0).abs() < 1e-6,
+            "layer {layer} EWMA shares sum to {} after update {}, not 1",
+            self.shares[layer].iter().sum::<f64>(),
+            self.updates[layer]
+        );
     }
 
     /// The EWMA routed-token share of `(layer, expert)` in `[0, 1]`.
@@ -219,6 +225,11 @@ impl TrafficStats {
                 }
             }
             self.updates[l] = a + b;
+            crate::invariant!(
+                (self.shares[l].iter().sum::<f64>() - 1.0).abs() < 1e-6,
+                "layer {l} shares sum to {} after merge, not 1",
+                self.shares[l].iter().sum::<f64>()
+            );
         }
     }
 }
@@ -321,6 +332,25 @@ mod tests {
         let mut empty = TrafficStats::default();
         empty.merge(&snapshot);
         assert_eq!(empty, snapshot);
+    }
+
+    #[test]
+    fn invariant_fires_on_corrupted_shares() {
+        use crate::util::invariant;
+        if !invariant::ACTIVE {
+            return;
+        }
+        let mut t = TrafficStats::new(1, 2);
+        t.update(0, &[1, 1]);
+        // corrupt: break the row's sum-to-one; the next EWMA fold is a
+        // convex combination and cannot restore it
+        t.shares[0][0] = 0.9;
+        let before = invariant::violation_count();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.update(0, &[1, 1]);
+        }));
+        assert!(res.is_err(), "corrupted shares must trip the invariant");
+        assert!(invariant::violation_count() > before, "violation counter must advance");
     }
 
     #[test]

@@ -89,6 +89,11 @@ impl ScratchArena {
         if buf.capacity() > 0 && self.free.len() < MAX_RETAINED {
             self.free.push(buf);
         }
+        crate::invariant!(
+            self.free.len() <= MAX_RETAINED,
+            "scratch arena parked {} buffers past the cap {MAX_RETAINED}",
+            self.free.len()
+        );
     }
 
     /// Pre-warm the arena: ensure at least `count` parked buffers have
@@ -105,6 +110,7 @@ impl ScratchArena {
         if len == 0 {
             return;
         }
+        let (_takes_before, _hits_before) = (self.takes, self.hits);
         let fitting = self.free.iter().filter(|b| b.capacity() >= len).count();
         for _ in fitting..count {
             if self.free.len() >= MAX_RETAINED {
@@ -114,6 +120,17 @@ impl ScratchArena {
             self.reserved += 1;
             self.free.push(vec![0.0; len]);
         }
+        crate::invariant!(
+            self.takes == _takes_before && self.hits == _hits_before,
+            "a reserve is not a take: takes {_takes_before}->{} hits {_hits_before}->{}",
+            self.takes,
+            self.hits
+        );
+        crate::invariant!(
+            self.free.len() <= MAX_RETAINED,
+            "reserve grew the arena to {} buffers past the cap {MAX_RETAINED}",
+            self.free.len()
+        );
     }
 
     /// Buffers allocated ahead of use by [`ScratchArena::reserve`].
@@ -290,6 +307,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn invariant_fires_on_corrupted_retention() {
+        use crate::util::invariant;
+        if !invariant::ACTIVE {
+            return;
+        }
+        let mut a = ScratchArena::new();
+        // corrupt: bypass give()'s cap by stuffing the free list
+        // directly — the double-release class of bug give() guards
+        for _ in 0..=MAX_RETAINED {
+            a.free.push(a_buf(2));
+        }
+        let before = invariant::violation_count();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| a.give(a_buf(2))));
+        assert!(res.is_err(), "over-retention must trip the invariant");
+        assert!(invariant::violation_count() > before, "violation counter must advance");
     }
 
     fn a_buf(cap: usize) -> Vec<f32> {

@@ -1,0 +1,99 @@
+//! Runtime invariant checking: the enforcement layer behind the
+//! DESIGN.md §5 invariant catalog (see §9 for the full site table).
+//!
+//! The [`invariant!`](crate::invariant) macro is the crate's one way to
+//! state a "this must always hold" condition on the serving path:
+//!
+//! - **Debug / `strict-invariants` builds** — the condition is
+//!   evaluated; a violation bumps the process-wide counter and panics
+//!   with the module, file, line and a formatted message.
+//! - **Plain release builds** — [`ACTIVE`] is `false`, the whole check
+//!   (condition *and* message formatting) sits behind an
+//!   `if false`-style constant branch and is compiled out, so release
+//!   binaries stay byte-identical to a tree without the checks.
+//!
+//! The counter exists so tests can assert a violation actually fired
+//! (negative tests unwind past the panic and read
+//! [`violation_count`]), and so long-running serving surfaces the tally
+//! through `coordinator::Metrics::invariant_violations`.
+//!
+//! The checks guard *internal consistency*, not caller input: a firing
+//! invariant is a bug in this crate, never a user error. Precondition
+//! validation on public APIs stays `assert!`/`Result` as before.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Whether invariant checks are compiled into this build: `true` under
+/// `debug_assertions` or the `strict-invariants` cargo feature, `false`
+/// otherwise (plain release).
+pub const ACTIVE: bool = cfg!(any(debug_assertions, feature = "strict-invariants"));
+
+/// Process-wide count of fired invariants. An `AtomicU64` (not a
+/// `Cell`) because violations can fire on replica worker threads.
+static VIOLATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Invariant violations observed process-wide so far. Stays 0 for the
+/// life of any correct run; negative tests read it across a
+/// `catch_unwind` to prove their seeded corruption was caught.
+pub fn violation_count() -> u64 {
+    VIOLATIONS.load(Ordering::Relaxed)
+}
+
+/// Record a violation and panic. Only ever called by the
+/// [`invariant!`](crate::invariant) macro; `#[cold]` keeps the
+/// formatting/panic machinery off the hot path's happy branch.
+#[cold]
+pub fn violated(module: &str, file: &str, line: u32, msg: &str) -> ! {
+    VIOLATIONS.fetch_add(1, Ordering::Relaxed);
+    panic!("invariant violated in {module} ({file}:{line}): {msg}");
+}
+
+/// Assert a documented invariant on the serving path.
+///
+/// `invariant!(cond, "format", args...)` — when [`ACTIVE`] the
+/// condition is checked and a violation increments the global counter
+/// then panics; otherwise the entire expression (including the
+/// condition) compiles away. Use it for DESIGN.md §5 consistency
+/// properties; keep `assert!` for caller-facing precondition checks
+/// that must hold in every build.
+#[macro_export]
+macro_rules! invariant {
+    ($cond:expr, $($arg:tt)+) => {
+        if $crate::util::invariant::ACTIVE && !$cond {
+            $crate::util::invariant::violated(
+                module_path!(),
+                file!(),
+                line!(),
+                &format!($($arg)+),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn holding_invariant_is_silent() {
+        let before = violation_count();
+        invariant!(1 + 1 == 2, "arithmetic broke");
+        assert_eq!(violation_count(), before);
+    }
+
+    #[test]
+    fn violated_invariant_counts_and_panics() {
+        if !ACTIVE {
+            return; // release without strict-invariants: compiled out
+        }
+        let before = violation_count();
+        let err = std::panic::catch_unwind(|| {
+            invariant!(2 + 2 == 5, "seeded violation x={}", 42);
+        })
+        .expect_err("a false invariant must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("invariant violated"), "bad message: {msg}");
+        assert!(msg.contains("seeded violation x=42"), "bad message: {msg}");
+        assert!(violation_count() > before, "counter must advance");
+    }
+}

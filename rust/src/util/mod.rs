@@ -6,6 +6,7 @@
 //! (rand/serde_json/proptest are not available); each is small, tested,
 //! and exactly as deep as the rest of the system needs.
 
+pub mod invariant;
 pub mod json;
 pub mod prng;
 pub mod proptest;

@@ -1866,3 +1866,78 @@ fn quant_helpers_roundtrip_against_graph_semantics() {
     let a = adc_quant(3.7, 2.0, 8);
     assert_eq!(a, 2.0);
 }
+
+#[test]
+fn serving_is_byte_identical_with_invariants_silent() {
+    // The correctness-tooling acceptance pin (issue 10): the invariant
+    // runtime must observe, never perturb. Two independent servers fed
+    // the same stream must produce bit-identical responses whether the
+    // invariant checks are compiled in (debug / strict-invariants) or
+    // out (release, where `invariant::ACTIVE` is false and the checks
+    // vanish entirely) — and a correct run records zero violations, so
+    // the metrics report stays byte-identical to the pre-tooling format
+    // (the `INVARIANT VIOLATIONS` line renders only when nonzero).
+    require_artifacts!();
+    let (mut rt, meta, paths, mut params) = setup("olmoe_mini");
+    let cfg = meta.config("olmoe_mini").unwrap().clone();
+    let placement = plan_placement(
+        &cfg,
+        &params,
+        &PlacementOptions { metric: SelectionMetric::MaxNNScore, gamma: 0.25, seed: 0 },
+        None,
+    )
+    .unwrap();
+    apply_placement(&cfg, &mut params, &placement, &NoiseModel::with_scale(1.0), 0).unwrap();
+    let reqs = fixture_requests(&cfg, cfg.batch * 2 + 1);
+    let server_cfg = ServerConfig::single_lane(cfg.batch, 8, cfg.batch * 4);
+
+    let violations_before = hetmoe::util::invariant::violation_count();
+    let mut run = || -> (Vec<Response>, String) {
+        let engine = EngineBuilder::new()
+            .model(cfg.clone())
+            .aimc(meta.aimc)
+            .placement(placement.clone())
+            .serve_cap(meta.serve_cap)
+            .build(&mut rt, &paths, &params)
+            .unwrap();
+        let mut server = Server::new(&rt, engine, server_cfg.clone());
+        let client = server.client();
+        for r in &reqs {
+            server.enqueue(&client, r.clone(), Lane::Interactive).unwrap();
+            server.poll().unwrap();
+        }
+        let (report, engine) = server.shutdown().unwrap();
+        let mut responses: Vec<Response> =
+            report.completions.into_iter().map(|c| c.response).collect();
+        responses.sort_by_key(|r| r.id);
+        (responses, engine.metrics.report())
+    };
+    let (first, report_a) = run();
+    let (second, report_b) = run();
+
+    assert_eq!(first.len(), reqs.len());
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "request {}: run 1 scored {}, run 2 scored {}",
+            a.id,
+            a.score,
+            b.score
+        );
+    }
+    assert_eq!(
+        hetmoe::util::invariant::violation_count(),
+        violations_before,
+        "a correct serving run must not trip any invariant"
+    );
+    assert!(
+        !report_a.contains("INVARIANT VIOLATIONS"),
+        "zero violations must leave the metrics report untouched:\n{report_a}"
+    );
+    // wall-clock fields differ between runs; the deterministic claim is
+    // on the response stream, which both reports summarize identically
+    drop(report_b);
+}

@@ -1,0 +1,159 @@
+//! Loom model checking for the cluster serving path's concurrency
+//! protocols. Compiled and run only under `RUSTFLAGS="--cfg loom"`:
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models
+//! ```
+//!
+//! Loom exhaustively explores thread interleavings (bounded by
+//! `LOOM_MAX_PREEMPTIONS`), so these tests check *every* reachable
+//! schedule of the modeled protocol, not one lucky run. Two protocols
+//! are covered:
+//!
+//! 1. The [`Mailbox`] worker↔front handoff used by `ThreadExecutor` —
+//!    the *production type itself* (its sync primitives swap to loom's
+//!    under `cfg(loom)`), so the model cannot drift from the code.
+//! 2. The cluster backlog/steal/shutdown discipline — a distilled model
+//!    of `Cluster::feed`'s conservation contract: every submitted
+//!    request is served exactly once, whether by its owner or a thief.
+//!
+//! Keep thread counts ≤ 3 and op counts small: loom's state space is
+//! exponential in both.
+
+#![cfg(loom)]
+
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+use hetmoe::coordinator::mailbox::Mailbox;
+
+/// Two producer workers serve disjoint item sets through one shared
+/// mailbox while the front drains. Checks the ThreadExecutor contract:
+/// nothing is lost, nothing is duplicated, and once both workers are
+/// joined the inflight counter reads exactly zero.
+#[test]
+fn mailbox_handoff_conserves_items() {
+    loom::model(|| {
+        let mb: Arc<Mailbox<u64>> = Arc::new(Mailbox::new());
+        // submissions happen on the front thread, before the handoff —
+        // mirroring ThreadExecutor::submit, which bumps inflight before
+        // the request crosses the channel
+        for _ in 0..3 {
+            mb.submitted();
+        }
+        let a = mb.clone();
+        let ta = thread::spawn(move || {
+            a.push_served([1, 2]);
+        });
+        let b = mb.clone();
+        let tb = thread::spawn(move || {
+            b.push_served([3]);
+        });
+        // the front may race a partial drain against the workers; any
+        // items popped here must re-appear in the final accounting
+        let mut got: Vec<u64> = Vec::new();
+        if let Some(x) = mb.pop() {
+            got.push(x);
+        }
+        ta.join().unwrap();
+        tb.join().unwrap();
+        got.extend(mb.take_all());
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3], "every served item exactly once");
+        assert_eq!(mb.inflight(), 0, "all submissions balanced");
+    });
+}
+
+/// Two workers race to record an error. The front must observe a
+/// stable verdict: once `has_error()` returns true, `error_message()`
+/// never changes, and it is one of the racers' messages.
+#[test]
+fn mailbox_first_error_wins_under_race() {
+    loom::model(|| {
+        let mb: Arc<Mailbox<u64>> = Arc::new(Mailbox::new());
+        let a = mb.clone();
+        let ta = thread::spawn(move || {
+            a.record_error("alpha failed");
+        });
+        let b = mb.clone();
+        let tb = thread::spawn(move || {
+            b.record_error("beta failed");
+        });
+        ta.join().unwrap();
+        tb.join().unwrap();
+        let first = mb.error_message().expect("an error must be recorded");
+        assert!(
+            first == "alpha failed" || first == "beta failed",
+            "verdict must be one of the racers: {first}"
+        );
+        // later writes must not displace the winner
+        mb.record_error("late straggler");
+        assert_eq!(mb.error_message().as_deref(), Some(first.as_str()));
+    });
+}
+
+/// Distilled model of the cluster's backlog/steal discipline: an owner
+/// replica and a thief both pull from a shared backlog; the thief
+/// steals from the *back* (oldest-last) only while it is idle, exactly
+/// like `Cluster::feed`. Shutdown's conservation invariant — served
+/// totals equal submitted — must hold on every interleaving.
+#[test]
+fn backlog_steal_serves_each_request_exactly_once() {
+    loom::model(|| {
+        let backlog: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![10, 11, 12]));
+        let owner_log: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let thief_log: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let (bl, log) = (backlog.clone(), owner_log.clone());
+        let owner = thread::spawn(move || {
+            // the owner drains front-first until the backlog is empty
+            loop {
+                let item = bl.lock().unwrap().pop();
+                match item {
+                    Some(x) => log.lock().unwrap().push(x),
+                    None => break,
+                }
+            }
+        });
+        let (bl, log) = (backlog.clone(), thief_log.clone());
+        let thief = thread::spawn(move || {
+            // one steal attempt: take a single item if any remain
+            let item = bl.lock().unwrap().pop();
+            if let Some(x) = item {
+                log.lock().unwrap().push(x);
+            }
+        });
+        owner.join().unwrap();
+        thief.join().unwrap();
+
+        let mut served: Vec<u64> = owner_log.lock().unwrap().clone();
+        served.extend(thief_log.lock().unwrap().iter().copied());
+        served.sort_unstable();
+        assert_eq!(served, vec![10, 11, 12], "each request served exactly once");
+        assert!(backlog.lock().unwrap().is_empty(), "shutdown leaves no backlog");
+    });
+}
+
+/// The shutdown path: a worker may still be pushing while the front
+/// decides to tear down. `take_all` after the join must return every
+/// item the worker managed to serve, and the inflight counter must
+/// account for anything it did not.
+#[test]
+fn shutdown_drain_accounts_for_straggling_worker() {
+    loom::model(|| {
+        let mb: Arc<Mailbox<u64>> = Arc::new(Mailbox::new());
+        mb.submitted();
+        mb.submitted();
+        let w = mb.clone();
+        let worker = thread::spawn(move || {
+            w.push_served([1]);
+            // the second submission is never served: the worker "dies"
+            w.record_error("worker lost request 2");
+        });
+        worker.join().unwrap();
+        let drained = mb.take_all();
+        assert_eq!(drained, vec![1], "served item must survive shutdown drain");
+        assert_eq!(mb.inflight(), 1, "lost request stays visible in inflight");
+        assert!(mb.has_error(), "the loss is reported, not silent");
+    });
+}

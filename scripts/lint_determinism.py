@@ -1,0 +1,297 @@
+#!/usr/bin/env python3
+"""Determinism lint pass over rust/src.
+
+The serving path must be replayable: same requests, same placement,
+same outputs, run over run. That dies quietly — someone iterates a
+HashMap in a planning loop, or keys a decision off wall-clock time —
+so this script greps the Rust tree for the nondeterminism sources the
+type system cannot see and fails CI on new ones:
+
+- ``wallclock``   — `Instant` / `SystemTime` outside the whitelist of
+                    files that legitimately measure wall time (metrics
+                    accounting, benches, the CLI driver).
+- ``hash-iter``   — `HashMap` / `HashSet` anywhere in the dispatch and
+                    planning modules (`moe/`, `coordinator/`), where
+                    iteration order would leak into routing, placement,
+                    or batch composition. Use `BTreeMap` / `Vec` there,
+                    or sort before iterating and allow the line.
+- ``extern-rng``  — any RNG besides the repo's own deterministic
+                    `util::prng` (thread_rng, rand::, fastrand, ...).
+- ``float-reduce``— f32 reductions (`.sum::<f32>()`, `.fold(0.0f32`,
+                    `.product::<f32>()`) whose result depends on
+                    operand order; accumulate in f64 or use the blessed
+                    `_into` kernels instead.
+
+Escapes, in order of preference:
+
+1. Fix the code.
+2. Inline ``// lint:allow(<rule>)`` on the offending line, with a
+   neighboring comment saying why it is sound.
+3. The checked-in baseline (``scripts/lint_determinism_baseline.json``)
+   — pre-existing findings only; regenerate with ``--update-baseline``
+   and justify additions in review.
+
+Lines inside a file's trailing ``#[cfg(test)]`` region are skipped:
+tests may time things and build scratch maps freely.
+
+``--mirrors`` runs a different check: constants that exist in both the
+Rust source and its Python mirror tests (EWMA alpha, calibration trust
+region, histogram bucket count) are extracted from both sides and must
+agree — the mirror suite pins semantics only while the constants match.
+
+Exit codes: 0 clean, 1 findings or mirror mismatch, 2 usage error.
+"""
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# files allowed to read wall-clock time: serving metrics account real
+# latency there, benches measure it, and the CLI reports it
+WALLCLOCK_WHITELIST = {
+    "rust/src/bench.rs",
+    "rust/src/main.rs",
+    "rust/src/coordinator/mod.rs",
+    "rust/src/coordinator/server.rs",
+    "rust/src/runtime/params.rs",
+}
+
+# dispatch/planning modules where hash-iteration order would leak into
+# routing, placement, or batch composition
+HASH_SENSITIVE_PREFIXES = ("rust/src/moe/", "rust/src/coordinator/")
+
+RULES = {
+    "wallclock": re.compile(r"\b(Instant|SystemTime)\b"),
+    "hash-iter": re.compile(r"\bHash(Map|Set)\b"),
+    "extern-rng": re.compile(
+        r"\b(thread_rng|fastrand|getrandom|StdRng|SmallRng|OsRng)\b|\brand\s*::"
+    ),
+    "float-reduce": re.compile(
+        r"\.(sum|product)::<f32>\(\)|\.fold\(\s*0(\.0)?_?f32\b"
+    ),
+}
+
+ALLOW_RE = re.compile(r"lint:allow\(([a-z-]+(?:\s*,\s*[a-z-]+)*)\)")
+TEST_REGION_RE = re.compile(r"^\s*#\[cfg\((all\()?\s*(test|loom)\b")
+
+# --mirrors manifest: (name, rust file, rust regex, python file, python
+# regex). Each regex must capture the literal in group 1; the two
+# literals must parse to the same float.
+MIRRORS = [
+    (
+        "traffic-ewma-alpha",
+        "rust/src/moe/traffic.rs",
+        r"DEFAULT_TRAFFIC_ALPHA:\s*f64\s*=\s*([0-9.]+)",
+        "python/tests/test_traffic_mirror.py",
+        r"DEFAULT_ALPHA\s*=\s*([0-9.]+)",
+    ),
+    (
+        "calibration-min-scale",
+        "rust/src/moe/calibrate.rs",
+        r"min_scale:\s*([0-9.]+)",
+        "python/tests/test_calibrate_mirror.py",
+        r"MIN_SCALE\s*=\s*([0-9.]+)",
+    ),
+    (
+        "calibration-max-scale",
+        "rust/src/moe/calibrate.rs",
+        r"max_scale:\s*([0-9.]+)",
+        "python/tests/test_calibrate_mirror.py",
+        r"MAX_SCALE\s*=\s*([0-9.]+)",
+    ),
+    (
+        "calibration-max-offset",
+        "rust/src/moe/calibrate.rs",
+        r"max_offset:\s*([0-9.]+)",
+        "python/tests/test_calibrate_mirror.py",
+        r"MAX_OFFSET\s*=\s*([0-9.]+)",
+    ),
+    (
+        "wait-histogram-buckets",
+        "rust/src/coordinator/metrics.rs",
+        r"counts:\s*\[u64;\s*([0-9]+)\]",
+        "python/tests/test_metrics_mirror.py",
+        r"HISTOGRAM_BUCKETS\s*=\s*([0-9]+)",
+    ),
+]
+
+
+def strip_comment(line):
+    """Best-effort removal of a trailing // comment (no string parsing)."""
+    idx = line.find("//")
+    return line if idx < 0 else line[:idx]
+
+
+def scan_file(path, rel):
+    """Yield (rule, lineno, stripped_content) findings for one file."""
+    try:
+        text = path.read_text(encoding="utf-8")
+    except (OSError, UnicodeDecodeError):
+        return
+    in_tests = False
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if TEST_REGION_RE.match(line):
+            # repo convention keeps the tests mod at the bottom of the
+            # file; everything after the attribute is test-only
+            in_tests = True
+        if in_tests:
+            continue
+        allow = ALLOW_RE.search(line)
+        allowed = set()
+        if allow:
+            allowed = {r.strip() for r in allow.group(1).split(",")}
+        code = strip_comment(line)
+        if not code.strip():
+            continue
+        for rule, pattern in RULES.items():
+            if rule in allowed or "all" in allowed:
+                continue
+            if rule == "wallclock" and rel in WALLCLOCK_WHITELIST:
+                continue
+            if rule == "hash-iter" and not rel.startswith(HASH_SENSITIVE_PREFIXES):
+                continue
+            if pattern.search(code):
+                yield rule, lineno, code.strip()
+
+
+def scan_tree(root):
+    findings = []
+    src = root / "rust" / "src"
+    if not src.is_dir():
+        sys.exit(f"lint_determinism: no rust/src under {root}")
+    for path in sorted(src.rglob("*.rs")):
+        rel = path.relative_to(root).as_posix()
+        for rule, lineno, content in scan_file(path, rel):
+            findings.append(
+                {"rule": rule, "file": rel, "line": lineno, "content": content}
+            )
+    return findings
+
+
+def load_baseline(path):
+    if not path.is_file():
+        return set()
+    entries = json.loads(path.read_text(encoding="utf-8"))
+    return {(e["rule"], e["file"], e["content"]) for e in entries}
+
+
+def write_baseline(path, findings):
+    entries = sorted(
+        {(f["rule"], f["file"], f["content"]) for f in findings}
+    )
+    payload = [
+        {"rule": rule, "file": file, "content": content}
+        for rule, file, content in entries
+    ]
+    path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+
+def check_mirrors(root):
+    """Compare Rust constants against their Python mirror pins."""
+    failures = []
+    for name, rust_file, rust_re, py_file, py_re in MIRRORS:
+        values = {}
+        for side, rel, regex in (
+            ("rust", rust_file, rust_re),
+            ("python", py_file, py_re),
+        ):
+            path = root / rel
+            if not path.is_file():
+                failures.append(f"{name}: missing {side} file {rel}")
+                break
+            matches = re.findall(regex, path.read_text(encoding="utf-8"))
+            if not matches:
+                failures.append(f"{name}: no match for /{regex}/ in {rel}")
+                break
+            first = matches[0] if isinstance(matches[0], str) else matches[0][0]
+            if any(
+                (m if isinstance(m, str) else m[0]) != first for m in matches
+            ):
+                failures.append(
+                    f"{name}: {rel} defines conflicting values {matches}"
+                )
+                break
+            values[side] = (rel, first)
+        if len(values) < 2:
+            continue
+        (r_rel, r_val), (p_rel, p_val) = values["rust"], values["python"]
+        if float(r_val) != float(p_val):
+            failures.append(
+                f"{name}: {r_rel} has {r_val} but {p_rel} pins {p_val}"
+            )
+    return failures
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repository root to scan (default: this script's repo)",
+    )
+    parser.add_argument(
+        "--baseline",
+        type=Path,
+        default=None,
+        help="baseline JSON (default: <root>/scripts/lint_determinism_baseline.json)",
+    )
+    parser.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline from current findings and exit 0",
+    )
+    parser.add_argument(
+        "--mirrors",
+        action="store_true",
+        help="check Rust constants against their Python mirror pins instead",
+    )
+    args = parser.parse_args(argv)
+    root = args.root.resolve()
+    baseline_path = args.baseline or root / "scripts" / "lint_determinism_baseline.json"
+
+    if args.mirrors:
+        failures = check_mirrors(root)
+        for f in failures:
+            print(f"MIRROR DRIFT {f}")
+        if failures:
+            print(f"lint_determinism --mirrors: {len(failures)} drifted constant(s)")
+            return 1
+        print(f"lint_determinism --mirrors: {len(MIRRORS)} constant(s) in sync")
+        return 0
+
+    findings = scan_tree(root)
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(
+            f"lint_determinism: baseline rewritten with "
+            f"{len(findings)} finding(s) at {baseline_path}"
+        )
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    fresh = [
+        f
+        for f in findings
+        if (f["rule"], f["file"], f["content"]) not in baseline
+    ]
+    for f in fresh:
+        print(f"{f['file']}:{f['line']}: [{f['rule']}] {f['content']}")
+    if fresh:
+        print(
+            f"lint_determinism: {len(fresh)} new finding(s) "
+            f"({len(findings) - len(fresh)} baselined). Fix, "
+            "lint:allow with justification, or --update-baseline."
+        )
+        return 1
+    print(
+        f"lint_determinism: clean ({len(findings)} baselined finding(s), "
+        f"{len(baseline)} baseline entr(ies))"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
